@@ -1,0 +1,116 @@
+//! Scenario: cluster capacity planning for an MLLM training job — the
+//! §1 motivation ("healthcare: medical images + patient records; robotics:
+//! visual + auditory inputs") expressed as a planning question: *given 24
+//! GPUs, which parallelization should I use for my model, and what does
+//! each policy cost me?*
+//!
+//! Sweeps every Table-1 composition through the three policies plus
+//! Algorithm 1's automatic search and prints a recommendation.
+//!
+//! ```bash
+//! cargo run --release --example capacity_planner
+//! ```
+
+use cornstarch::cost::Device;
+use cornstarch::modality::{
+    auto_parallelize, planner, MultimodalModule, MultimodalParallelSpec,
+    Strategy,
+};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::util::table::Table;
+
+fn main() {
+    let device = Device::a40();
+    let mut t = Table::new(
+        "24-GPU capacity plan (tp=2, cp=2 -> 6 device groups), input/s/GPU",
+        &[
+            "model", "replicated", "colocated", "cornstarch (auto)",
+            "auto config (llm|encs)", "gain",
+        ],
+    );
+
+    let mut specs: Vec<MllmSpec> = Vec::new();
+    for e in Size::ALL {
+        specs.push(MllmSpec::vlm(Size::M, e));
+        specs.push(MllmSpec::alm(Size::M, e));
+    }
+    for v in Size::ALL {
+        for a in Size::ALL {
+            specs.push(MllmSpec::valm(Size::M, v, a));
+        }
+    }
+
+    for spec in &specs {
+        let mm = MultimodalModule::from_spec(spec);
+        let n_enc = mm.encoders.len();
+        // Encoders-colocated, tuned the way its users tune it (§2.2): pick
+        // the stage split that best balances *forward* time between the
+        // encoder stages and the LLM stages ("bwd = 2x fwd" assumed).
+        let enc_fwd: f64 = mm
+            .encoders
+            .iter()
+            .map(|e| e.layer_fwd_ms(device, 4) * e.geom.n_layers as f64)
+            .sum();
+        let llm_fwd =
+            mm.llm.layer_fwd_ms(device, 4) * mm.llm.geom.n_layers as f64;
+        let mut best_split = (1usize, 5usize);
+        let mut best_gap = f64::INFINITY;
+        for enc_pp in 1..=5usize {
+            let llm_pp = 6 - enc_pp;
+            let gap =
+                (enc_fwd / enc_pp as f64 - llm_fwd / llm_pp as f64).abs();
+            if gap < best_gap {
+                best_gap = gap;
+                best_split = (enc_pp, llm_pp);
+            }
+        }
+        let col = {
+            let ps = MultimodalParallelSpec::paper_default(
+                &vec![best_split.0; n_enc],
+                best_split.1,
+                2,
+                2,
+            );
+            planner::plan(Strategy::Colocated, &mm, &ps, device)
+                .simulate()
+                .throughput_per_gpu
+        };
+        // Encoders-replicated always uses 6 LLM stages (paper §B.1).
+        let rep = {
+            let ps = MultimodalParallelSpec::paper_default(
+                &vec![1; n_enc],
+                6,
+                2,
+                2,
+            );
+            planner::plan(Strategy::Replicated, &mm, &ps, device)
+                .simulate()
+                .throughput_per_gpu
+        };
+        // Cornstarch via Algorithm 1; select the frontier point with the
+        // best per-GPU throughput (the capacity-planning objective).
+        let auto = auto_parallelize(&mm, 6, 2, 2, 6, device);
+        let (llm_pp, enc_pps, _, cs) = auto
+            .frontier
+            .iter()
+            .max_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+            .unwrap()
+            .clone();
+        let (best_col, best_rep) = (col, rep);
+        let gain = cs / best_col.max(best_rep);
+        t.row(&[
+            spec.name(),
+            format!("{best_rep:.2}"),
+            format!("{best_col:.2}"),
+            format!("{cs:.2}"),
+            format!("{llm_pp} | {enc_pps:?}"),
+            format!("{gain:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Reading the table: `gain` > 1 means modality parallelism + \
+         frozen-aware partitioning beats the best hand-tuned baseline; the \
+         advantage grows with encoder size (the paper's §6.2 observation)."
+    );
+}

@@ -1,0 +1,208 @@
+"""AOT export: lower every per-stage program to HLO *text* + manifest.
+
+Python runs ONCE here (``make artifacts``); the rust coordinator is
+self-contained afterwards. HLO text — not ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Per model config this writes, under ``artifacts/<model>/``:
+
+* ``<comp>.<role>.hlo.txt`` for role in {fwd, bwd, bwdin, upd} (head has no
+  upd — it shares the last LLM stage's parameters),
+* ``params/<comp>.f32.bin`` — deterministic flat f32 init (little-endian),
+* ``manifest.txt`` — line-based description (models, components, artifact
+  I/O specs, segment/BAM layout, graph edges) parsed by
+  ``rust/src/runtime/manifest.rs``.
+
+Also exports standalone BAM-attention artifacts (``attn<T>``) used by the
+context-parallelism benches to cross-check the workload model with real
+PJRT execution.
+
+Manifest grammar (one record per line, ``#`` comments):
+
+    model <name>
+    tokens <total> text <text_len> insert <insert_at> vocab <vocab>
+    segment <name> <start> <end> <bits>
+    component <name> <kind> <n_params> shares=<other|->
+    params <comp> <relpath> <n_elems>
+    artifact <comp> <role> <relpath> ins=<n:d:s,...;...> outs=<...>
+    edge <from> <to>
+    attn <name> <relpath> <T> <H> <D>
+
+where an I/O spec is ``name:dtype:dims`` with dims ``AxBxC`` (scalar = "_").
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.bam_attention import bam_attention_fwd_kernel
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(name: str, aval) -> str:
+    dt = {"float32": "f32", "int32": "i32"}[str(aval.dtype)]
+    dims = "x".join(str(d) for d in aval.shape) if aval.shape else "_"
+    return f"{name}:{dt}:{dims}"
+
+
+def _abstract(dtype: str, shape: tuple[int, ...]):
+    jdt = {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    return jax.ShapeDtypeStruct(shape, jdt)
+
+
+def lower_and_write(fn, example_args, names, out_path: str) -> list[str]:
+    """Lower fn at the example avals, write HLO text, return the in-specs."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return [_spec_str(n, a) for n, a in zip(names, example_args)]
+
+
+def _out_specs(fn, example_args) -> list[str]:
+    outs = jax.eval_shape(fn, *example_args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return [_spec_str(f"o{i}", a) for i, a in enumerate(outs)]
+
+
+def export_model(cfg: M.MllmConfig, out_root: str, manifest: list[str]) -> None:
+    mdir = os.path.join(out_root, cfg.name)
+    os.makedirs(os.path.join(mdir, "params"), exist_ok=True)
+    t0 = time.time()
+
+    manifest.append(f"model {cfg.name}")
+    manifest.append(
+        f"tokens {cfg.total_tokens} text {cfg.text_len} "
+        f"insert {cfg.insert_at} vocab {cfg.llm.vocab}")
+    for name, s, e, b in cfg.segments():
+        manifest.append(f"segment {name} {s} {e} {b}")
+
+    comps = M.components(cfg)
+    for comp in comps:
+        lo = comp.layout
+        shares = comp.shares_params_with or "-"
+        manifest.append(
+            f"component {comp.name} {comp.kind} {lo.total} shares={shares}")
+
+        safe = comp.name.replace(":", "_")
+        # ---- params init (only for components that own their params)
+        if comp.shares_params_with is None:
+            flat = M.init_flat(lo, seed=hash(comp.name) % (2**31))
+            rel = f"params/{safe}.f32.bin"
+            flat.tofile(os.path.join(mdir, rel))
+            manifest.append(f"params {comp.name} {cfg.name}/{rel} {lo.total}")
+
+        flat_aval = _abstract("f32", (lo.total,))
+        in_avals = [_abstract(dt, sh) for (_, dt, sh, _) in comp.inputs]
+        in_names = [n for (n, _, _, _) in comp.inputs]
+        g_aval = _abstract("f32", comp.out_shape)
+
+        def emit(role: str, fn, args, names):
+            rel = f"{cfg.name}/{safe}.{role}.hlo.txt"
+            ins = lower_and_write(fn, args, names,
+                                  os.path.join(out_root, rel))
+            outs = _out_specs(fn, args)
+            manifest.append(
+                f"artifact {comp.name} {role} {rel} "
+                f"ins={';'.join(ins)} outs={';'.join(outs)}")
+
+        # ---- fwd
+        emit("fwd", comp.fwd, [flat_aval, *in_avals], ["flat", *in_names])
+
+        # ---- bwd / bwdin
+        bwd_full = M.make_bwd(comp, with_params=True)
+        bwd_in = M.make_bwd(comp, with_params=False)
+        if comp.kind == "llm_head":
+            bwd_args = [flat_aval, *in_avals]
+            bwd_names = ["flat", *in_names]
+        else:
+            bwd_args = [flat_aval, *in_avals, g_aval]
+            bwd_names = ["flat", *in_names, "g"]
+        emit("bwd", bwd_full, bwd_args, bwd_names)
+        emit("bwdin", bwd_in, bwd_args, bwd_names)
+
+        # ---- optimizer update
+        if comp.shares_params_with is None:
+            p = _abstract("f32", (lo.total,))
+            s = _abstract("f32", ())
+            emit("upd", M.adamw_update, [p, p, p, p, s, s],
+                 ["flat", "grad", "m", "v", "step", "lr"])
+
+    for e in cfg.encoders:
+        manifest.append(f"edge enc:{e.name} proj:{e.name}")
+        manifest.append(f"edge proj:{e.name} llm:0")
+    for s in range(1, len(cfg.llm_stage_layers)):
+        manifest.append(f"edge llm:{s-1} llm:{s}")
+    manifest.append(f"edge llm:{len(cfg.llm_stage_layers)-1} llm:head")
+    print(f"  exported {cfg.name} in {time.time()-t0:.1f}s")
+
+
+def export_attn(out_root: str, manifest: list[str],
+                sizes=((128, 4, 32), (512, 8, 64))) -> None:
+    """Standalone BAM attention artifacts for the CP benches/tests."""
+    adir = os.path.join(out_root, "attn")
+    os.makedirs(adir, exist_ok=True)
+    for t, h, d in sizes:
+        name = f"attn{t}"
+        rel = f"attn/{name}.fwd.hlo.txt"
+
+        def fn(q, k, v, bits_q, pos_q, bits_k, pos_k):
+            return bam_attention_fwd_kernel(q, k, v, bits_q, pos_q,
+                                            bits_k, pos_k)
+
+        qa = _abstract("f32", (t, h, d))
+        ia = _abstract("i32", (t,))
+        ins = lower_and_write(
+            fn, [qa, qa, qa, ia, ia, ia, ia],
+            ["q", "k", "v", "bits_q", "pos_q", "bits_k", "pos_k"],
+            os.path.join(out_root, rel))
+        manifest.append(f"attn {name} {rel} {t} {h} {d}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts root directory")
+    ap.add_argument("--models", default="tiny,tiny_va,mini",
+                    help="comma list of configs (or 'all'); e2e100m is "
+                         "exported by examples/train_vlm via ARTIFACT_MODELS")
+    args = ap.parse_args()
+
+    models = list(M.CONFIGS) if args.models == "all" else \
+        [m for m in args.models.split(",") if m]
+    env = os.environ.get("ARTIFACT_MODELS")
+    if env:
+        models = sorted(set(models) | {m for m in env.split(",") if m})
+
+    out_root = args.out
+    os.makedirs(out_root, exist_ok=True)
+    manifest: list[str] = ["# generated by python/compile/aot.py"]
+    for name in models:
+        export_model(M.CONFIGS[name], out_root, manifest)
+    export_attn(out_root, manifest)
+    with open(os.path.join(out_root, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(out_root, 'manifest.txt')} "
+          f"({len(manifest)} records)")
+
+
+if __name__ == "__main__":
+    main()

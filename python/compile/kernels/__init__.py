@@ -1,0 +1,9 @@
+"""L1 Pallas kernels + pure-jnp oracle.
+
+Import submodules explicitly (``from compile.kernels import ref,
+bam_attention``); the kernel entrypoints live on
+``bam_attention.bam_attention`` (custom-vjp wrapped) and
+``bam_attention.bam_attention_fwd_kernel``.
+"""
+from . import ref  # noqa: F401
+from . import bam_attention  # noqa: F401

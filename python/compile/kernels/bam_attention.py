@@ -1,0 +1,202 @@
+"""L1: Pallas blockwise BAM (Bitfield Attention Mask) attention kernel.
+
+The paper's context-parallel attention rides PyTorch FlexAttention (CUDA
+block-sparse masking in SRAM). TPU rethink (DESIGN.md §Hardware-Adaptation):
+
+* Q is tiled into ``BLK_Q``-row blocks (one grid step per (head, q-block)),
+  K/V stream through VMEM in ``BLK_K``-column tiles inside an on-chip loop
+  — BlockSpec expresses the HBM↔VMEM schedule the paper expressed with
+  threadblocks.
+* The BAM predicate is evaluated per (BLK_Q, BLK_K) tile from two tiny 1-D
+  int32 vectors (bits, pos) that stay resident in VMEM; the [T,T] mask is
+  **never** materialized, which is the entire point of BAM (§4.3.1).
+* Online softmax (flash-style): running row-max ``m`` and row-sum ``l``
+  carried across K tiles; the MXU sees plain (BLK_Q, D) x (D, BLK_K)
+  matmuls in f32 (bf16 on real TPU).
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; interpret mode lowers the kernel to plain HLO so the same
+  artifact runs under the rust runtime. Block sizes are still chosen for
+  the TPU VMEM budget (see ``vmem_bytes``).
+
+Autodiff: ``pallas_call`` has no VJP rule; ``bam_attention`` is wrapped in
+``jax.custom_vjp`` whose backward recomputes scores with pure-jnp ops
+(gradient checkpointing style — no residual softmax stats are shipped).
+On a real TPU deployment the backward would be a second Pallas kernel; the
+artifact interface is unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+NEG_INF = -1e30
+
+
+def _bam_fwd_kernel(bits_q_ref, pos_q_ref, bits_k_ref, pos_k_ref,
+                    q_ref, k_ref, v_ref, o_ref, *, blk_k: int, tk: int,
+                    scale: float):
+    """One (head, q-block) grid step.
+
+    Refs (per BlockSpec):
+      bits_q_ref/pos_q_ref: i32[BLK_Q]   — bitfields/positions of this q tile
+      bits_k_ref/pos_k_ref: i32[Tk]      — full key metadata (tiny, stays in VMEM)
+      q_ref: f32[BLK_Q, D]
+      k_ref: f32[Tk, D]   — full K for this head (VMEM-resident at these sizes;
+                            a production TPU kernel double-buffers HBM tiles)
+      v_ref: f32[Tk, D]
+      o_ref: f32[BLK_Q, D]
+    """
+    blk_q, d = q_ref.shape
+    q = q_ref[...] * scale
+    bq = bits_q_ref[...]
+    pq = pos_q_ref[...]
+
+    is_text = (bq & ref.TEXT_BIT) != 0  # [BLK_Q]
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        start = i * blk_k
+        k_tile = jax.lax.dynamic_slice(k_ref[...], (start, 0), (blk_k, d))
+        v_tile = jax.lax.dynamic_slice(v_ref[...], (start, 0), (blk_k, d))
+        bk = jax.lax.dynamic_slice(bits_k_ref[...], (start,), (blk_k,))
+        pk = jax.lax.dynamic_slice(pos_k_ref[...], (start,), (blk_k,))
+
+        s = q @ k_tile.T  # [BLK_Q, BLK_K] — the MXU tile
+
+        # BAM predicate, evaluated on the integer metadata tiles only.
+        text_rule = (pk[None, :] <= pq[:, None]) & ((bq[:, None] & bk[None, :]) != 0)
+        mod_rule = bk[None, :] == bq[:, None]
+        mask = jnp.where(is_text[:, None], text_rule, mod_rule)
+
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        # exp of masked-out lanes is exp(NEG_INF - m) == 0: no NaN leakage.
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((blk_q, d), dtype=jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((blk_q,), dtype=jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, tk // blk_k, body, (acc0, m0, l0))
+    # Every token attends at least itself, so l_i > 0 whenever the q tile is
+    # real; padded tail rows (pos == -1, bits == 0) divide by max(l, 1).
+    o_ref[...] = acc / jnp.maximum(l_i, 1e-30)[:, None]
+
+
+def _pad_to(x, mult, axis, fill):
+    t = x.shape[axis]
+    rem = (-t) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def bam_attention_fwd_kernel(q, k, v, bits_q, pos_q, bits_k, pos_k,
+                             blk_q: int = DEFAULT_BLK_Q,
+                             blk_k: int = DEFAULT_BLK_K):
+    """Blockwise BAM attention forward via Pallas.
+
+    Args:
+      q: f32[Tq, H, D]; k, v: f32[Tk, H, D]; bits/pos as in ref.can_attend.
+
+    Returns f32[Tq, H, D].
+    """
+    tq, h, d = q.shape
+    tk = k.shape[0]
+    blk_q = min(blk_q, max(8, tq))
+    blk_k = min(blk_k, max(8, tk))
+    scale = 1.0 / float(d) ** 0.5
+
+    # Pad so the grid divides evenly. Padded q rows have bits=0/pos=-1 (they
+    # produce garbage rows that are sliced off); padded k columns have
+    # bits=0/pos=2^30 so no real token ever attends them (text rule fails on
+    # bits&0==0, modality rule fails on bits!=0 segments).
+    qp = _pad_to(q, blk_q, 0, 0.0)
+    bqp = _pad_to(bits_q, blk_q, 0, 0)
+    pqp = _pad_to(pos_q, blk_q, 0, -1)
+    kp = _pad_to(k, blk_k, 0, 0.0)
+    vp = _pad_to(v, blk_k, 0, 0.0)
+    bkp = _pad_to(bits_k, blk_k, 0, 0)
+    pkp = _pad_to(pos_k, blk_k, 0, 1 << 30)
+    tqp, tkp = qp.shape[0], kp.shape[0]
+
+    # [T, H, D] -> [H, T, D] so each grid step sees one head's tile.
+    qh = jnp.transpose(qp, (1, 0, 2))
+    kh = jnp.transpose(kp, (1, 0, 2))
+    vh = jnp.transpose(vp, (1, 0, 2))
+
+    grid = (h, tqp // blk_q)
+    kernel = functools.partial(_bam_fwd_kernel, blk_k=blk_k, tk=tkp,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_q,), lambda hh, iq: (iq,)),     # bits_q tile
+            pl.BlockSpec((blk_q,), lambda hh, iq: (iq,)),     # pos_q tile
+            pl.BlockSpec((tkp,), lambda hh, iq: (0,)),        # bits_k (full)
+            pl.BlockSpec((tkp,), lambda hh, iq: (0,)),        # pos_k (full)
+            pl.BlockSpec((None, blk_q, d), lambda hh, iq: (hh, iq, 0)),
+            pl.BlockSpec((None, tkp, d), lambda hh, iq: (hh, 0, 0)),
+            pl.BlockSpec((None, tkp, d), lambda hh, iq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, d), lambda hh, iq: (hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tqp, d), jnp.float32),
+        interpret=True,
+    )(bqp, pqp, bkp, pkp,
+      qh.reshape(h, tqp // blk_q * blk_q, d),
+      kh, vh)
+    out = jnp.transpose(out, (1, 0, 2))[:tq]
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def bam_attention(q, k, v, bits_q, pos_q, bits_k, pos_k,
+                  blk_q: int = DEFAULT_BLK_Q, blk_k: int = DEFAULT_BLK_K):
+    """Differentiable BAM attention: Pallas fwd, recompute-jnp bwd."""
+    return bam_attention_fwd_kernel(q, k, v, bits_q, pos_q, bits_k, pos_k,
+                                    blk_q, blk_k)
+
+
+def _fwd(q, k, v, bits_q, pos_q, bits_k, pos_k, blk_q, blk_k):
+    out = bam_attention_fwd_kernel(q, k, v, bits_q, pos_q, bits_k, pos_k,
+                                   blk_q, blk_k)
+    return out, (q, k, v, bits_q, pos_q, bits_k, pos_k)
+
+
+def _bwd(blk_q, blk_k, res, g):
+    q, k, v, bits_q, pos_q, bits_k, pos_k = res
+    dq, dk, dv = ref.attention_ref_vjp(q, k, v, bits_q, pos_q, bits_k,
+                                       pos_k, g)
+    zero_bits = jnp.zeros_like(bits_q), jnp.zeros_like(pos_q), \
+        jnp.zeros_like(bits_k), jnp.zeros_like(pos_k)
+    return (dq, dk, dv) + zero_bits
+
+
+bam_attention.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(blk_q: int, blk_k: int, d: int, tk: int) -> int:
+    """Estimated VMEM working set of one grid step, used by the perf pass
+    (DESIGN.md §Perf) to keep tiles inside a 16 MB TPU VMEM budget."""
+    f32 = 4
+    q_tile = blk_q * d * f32
+    kv = 2 * tk * d * f32
+    acc = blk_q * d * f32
+    stats = 2 * blk_q * f32
+    meta = 2 * (blk_q + tk) * 4
+    score = blk_q * blk_k * f32
+    return q_tile + kv + acc + stats + meta + score

@@ -1,0 +1,141 @@
+"""Pure-jnp oracle for Bitfield Attention Mask (BAM) attention.
+
+This module is the *normative* definition of BAM semantics for the whole
+repo (L1 Pallas kernel, L2 model, L3 rust `bam` module all match it, and
+DESIGN.md documents the same rule):
+
+Token ``i`` carries an integer bitfield ``bits[i]``; bit 0 is the text
+modality, bits ``1..`` are modality encoders (paper: 64-bit, ~60 usable
+modalities; this artifact build carries them as int32 lanes — see
+DESIGN.md "Hardware-Adaptation").
+
+``can_attend(i, j)``:
+
+* text token (bit0 of ``bits[i]`` set): attends ``j`` iff ``pos[j] <=
+  pos[i]`` and ``bits[i] & bits[j] != 0`` — causal over every modality its
+  field enables (the paper's t6..t8 example).
+* modality token: attends ``j`` iff ``bits[j] == bits[i]`` — full
+  bidirectional attention within its own modality segment (ViT/Whisper
+  encoder-output style).
+
+Positions are explicit so that a context-parallel rank holding an
+arbitrary subset of query tokens can still evaluate the predicate against
+the full gathered key/value set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TEXT_BIT = 1  # bit 0
+
+
+def can_attend(bits_q: jax.Array, pos_q: jax.Array, bits_k: jax.Array,
+               pos_k: jax.Array) -> jax.Array:
+    """Materialize the [Tq, Tk] boolean BAM mask from bitfield vectors.
+
+    Args:
+      bits_q: int32[Tq] bitfields of query tokens.
+      pos_q:  int32[Tq] global positions of query tokens.
+      bits_k: int32[Tk] bitfields of key tokens.
+      pos_k:  int32[Tk] global positions of key tokens.
+
+    Returns:
+      bool[Tq, Tk] where ``[i, j]`` is True iff query i attends key j.
+    """
+    bq = bits_q[:, None]
+    pq = pos_q[:, None]
+    bk = bits_k[None, :]
+    pk = pos_k[None, :]
+    is_text = (bq & TEXT_BIT) != 0
+    text_rule = (pk <= pq) & ((bq & bk) != 0)
+    modality_rule = bk == bq
+    return jnp.where(is_text, text_rule, modality_rule)
+
+
+def token_workloads(bits: jax.Array, pos: jax.Array) -> jax.Array:
+    """Per-token attention workload W_i = row-sum of the BAM mask.
+
+    The rust ``bam::workloads`` must produce identical numbers (tested via
+    the ``table4``/``fig12`` fixtures).
+    """
+    mask = can_attend(bits, pos, bits, pos)
+    return jnp.sum(mask.astype(jnp.int32), axis=1)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  bits_q: jax.Array, pos_q: jax.Array,
+                  bits_k: jax.Array, pos_k: jax.Array) -> jax.Array:
+    """Reference BAM attention.
+
+    Args:
+      q: f32[Tq, H, D] queries.
+      k: f32[Tk, H, D] keys.
+      v: f32[Tk, H, D] values.
+      bits_*/pos_*: bitfield/position vectors as in :func:`can_attend`.
+
+    Returns:
+      f32[Tq, H, D] attention output. Rows are never fully masked because
+      every token can attend itself under both rules.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    # [H, Tq, Tk]
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    mask = can_attend(bits_q, pos_q, bits_k, pos_k)  # [Tq, Tk]
+    scores = jnp.where(mask[None, :, :], scores, jnp.asarray(-1e30, q.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def attention_ref_vjp(q, k, v, bits_q, pos_q, bits_k, pos_k, g):
+    """Gradients of :func:`attention_ref` w.r.t. (q, k, v).
+
+    Used as the backward rule of the Pallas kernel's ``jax.custom_vjp``:
+    the forward hot path runs the blockwise kernel, the backward runs
+    these XLA ops (recomputing scores — gradient checkpointing style). On
+    a real TPU this would be a second Pallas kernel; the interchange
+    contract (same HLO artifact, no residual shipping) is identical.
+    """
+    def f(q, k, v):
+        return attention_ref(q, k, v, bits_q, pos_q, bits_k, pos_k)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+# ---------------------------------------------------------------------------
+# Convenience mask builders mirrored in rust (bam::generators). These are
+# used by tests only; the rust side is the one used by benches.
+# ---------------------------------------------------------------------------
+
+def make_bits_ep(text_len: int, seg_lens: list[int]) -> tuple[jax.Array, jax.Array]:
+    """'Encoder outputs Prepended' layout: [mod_1 .. mod_k, text]."""
+    bits = []
+    for m, L in enumerate(seg_lens):
+        bits += [1 << (m + 1)] * L
+    text_bits = TEXT_BIT
+    for m in range(len(seg_lens)):
+        text_bits |= 1 << (m + 1)
+    bits += [text_bits] * text_len
+    b = jnp.asarray(bits, dtype=jnp.int32)
+    return b, jnp.arange(b.shape[0], dtype=jnp.int32)
+
+
+def make_bits_ee(text_lens: list[int], seg_lens: list[int]) -> tuple[jax.Array, jax.Array]:
+    """'Encoder outputs Embedded': text_0, mod_1, text_1, mod_2, ..., text_k.
+
+    ``len(text_lens) == len(seg_lens) + 1``. Text tokens attend every
+    modality segment (all bits set), matching the paper's Figure 11b.
+    """
+    assert len(text_lens) == len(seg_lens) + 1
+    text_bits = TEXT_BIT
+    for m in range(len(seg_lens)):
+        text_bits |= 1 << (m + 1)
+    bits = [text_bits] * text_lens[0]
+    for m, L in enumerate(seg_lens):
+        bits += [1 << (m + 1)] * L
+        bits += [text_bits] * text_lens[m + 1]
+    b = jnp.asarray(bits, dtype=jnp.int32)
+    return b, jnp.arange(b.shape[0], dtype=jnp.int32)

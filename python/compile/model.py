@@ -1,0 +1,535 @@
+"""L2: the modular MLLM compute graph (JAX, build-time only).
+
+This is the JAX half of the paper's programming model: an MLLM is a DAG of
+*components* — modality encoders, projectors, and an LLM split into pipeline
+stages — mirroring Cornstarch's ``ModalityModule`` / ``MultimodalModule``
+(§3.2). The rust L3 coordinator owns the graph, schedule, and parallelism;
+this module only defines the per-component math and exports it per stage.
+
+Artifact contract (what `aot.py` lowers, what rust loads):
+
+Every component ``c`` with forward ``f_c(flat_params, *inputs) -> out``
+exports up to four HLO programs:
+
+* ``fwd``    : ``(flat, *ins) -> out``
+* ``bwd``    : ``(flat, *ins, g) -> (dflat, dins...)``   (trainable path,
+  recomputes activations inside — gradient checkpointing, §4.2)
+* ``bwdin``  : ``(flat, *ins, g) -> (dins...)``          (frozen-but-must-
+  propagate path: the paper's ``T_bwd = 1×T_fwd`` case as a literal program)
+* ``upd``    : ``(flat, g, m, v, step, lr) -> (flat', m', v')``  (AdamW)
+
+Parameters travel as ONE flat f32 vector per component (stable layout
+recorded in the manifest), so the rust side holds exactly one resident
+device buffer per component for params and one per optimizer slot, and the
+``0 / 1x / 2x`` frozen rule of §4.2 becomes a choice between artifacts
+rather than a modeling assumption.
+
+Token layout is the paper's "encoder outputs embedded" (EE) style: modality
+segments are spliced into the text stream at a fixed position; the BAM bits
+vector for the layout is reconstructed by rust from manifest ``segment``
+records and fed to the attention kernel at run time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.bam_attention import bam_attention
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """A modality encoder (ViT/Whisper-like transformer over pre-patchified
+    features). ``d_input`` is the per-token raw feature width (e.g. flattened
+    image patch or audio frame stack)."""
+    name: str
+    d_input: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    n_tokens: int  # tokens this encoder contributes to the LLM sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class LlmConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MllmConfig:
+    """A full MLLM: encoders + projectors + pipeline-staged LLM."""
+    name: str
+    llm: LlmConfig
+    encoders: tuple[EncoderConfig, ...]
+    text_len: int
+    insert_at: int            # modality segments spliced before this text pos
+    llm_stage_layers: tuple[int, ...]  # layers per LLM pipeline stage
+
+    @property
+    def total_tokens(self) -> int:
+        return self.text_len + sum(e.n_tokens for e in self.encoders)
+
+    def segments(self) -> list[tuple[str, int, int, int]]:
+        """(kind, start, end, bit) records; mirrored by rust bam::generators."""
+        segs = []
+        text_bits = ref.TEXT_BIT
+        for m, _ in enumerate(self.encoders):
+            text_bits |= 1 << (m + 1)
+        cur = 0
+        if self.insert_at > 0:
+            segs.append(("text", 0, self.insert_at, text_bits))
+            cur = self.insert_at
+        for m, e in enumerate(self.encoders):
+            segs.append((e.name, cur, cur + e.n_tokens, 1 << (m + 1)))
+            cur += e.n_tokens
+        segs.append(("text", cur, cur + self.text_len - self.insert_at, text_bits))
+        return segs
+
+    def bits_pos(self) -> tuple[jax.Array, jax.Array]:
+        bits = np.zeros(self.total_tokens, dtype=np.int32)
+        for _, s, e, b in self.segments():
+            bits[s:e] = b
+        pos = np.arange(self.total_tokens, dtype=np.int32)
+        return jnp.asarray(bits), jnp.asarray(pos)
+
+
+# Registry of model configs used by tests / examples / e2e.
+# "tiny"  : sub-1M params, used by pytest and rust integration tests.
+# "mini"  : ~35M params, quickstart example.
+# "e2e100m": ~100M-class params, the mandated end-to-end training driver.
+CONFIGS: dict[str, MllmConfig] = {
+    "tiny": MllmConfig(
+        name="tiny",
+        llm=LlmConfig(vocab=512, d_model=64, n_layers=4, n_heads=4, d_ff=128),
+        encoders=(EncoderConfig("vision", d_input=48, d_model=48, n_layers=2,
+                                n_heads=4, d_ff=96, n_tokens=8),),
+        text_len=24, insert_at=4, llm_stage_layers=(2, 2),
+    ),
+    "tiny_va": MllmConfig(
+        name="tiny_va",
+        llm=LlmConfig(vocab=512, d_model=64, n_layers=4, n_heads=4, d_ff=128),
+        encoders=(
+            EncoderConfig("vision", d_input=48, d_model=48, n_layers=2,
+                          n_heads=4, d_ff=96, n_tokens=8),
+            EncoderConfig("audio", d_input=32, d_model=40, n_layers=2,
+                          n_heads=4, d_ff=80, n_tokens=6),
+        ),
+        text_len=24, insert_at=4, llm_stage_layers=(2, 2),
+    ),
+    "mini": MllmConfig(
+        name="mini",
+        llm=LlmConfig(vocab=8192, d_model=512, n_layers=8, n_heads=8,
+                      d_ff=2048),
+        encoders=(EncoderConfig("vision", d_input=192, d_model=256,
+                                n_layers=4, n_heads=4, d_ff=1024,
+                                n_tokens=16),),
+        text_len=96, insert_at=8, llm_stage_layers=(4, 4),
+    ),
+    "e2e100m": MllmConfig(
+        name="e2e100m",
+        llm=LlmConfig(vocab=16384, d_model=768, n_layers=12, n_heads=12,
+                      d_ff=3072),
+        encoders=(EncoderConfig("vision", d_input=192, d_model=384,
+                                n_layers=4, n_heads=6, d_ff=1536,
+                                n_tokens=16),),
+        text_len=112, insert_at=8, llm_stage_layers=(6, 6),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+class Layout:
+    """Deterministic name->(offset, shape) layout of a parameter tree.
+
+    The manifest records it so rust (and tests) can slice individual
+    parameters out of the flat vector for inspection / checkpointing.
+    """
+
+    def __init__(self):
+        self.entries: list[tuple[str, int, tuple[int, ...]]] = []
+        self.total = 0
+
+    def add(self, name: str, shape: tuple[int, ...]) -> None:
+        n = int(np.prod(shape)) if shape else 1
+        self.entries.append((name, self.total, shape))
+        self.total += n
+
+    def slice(self, flat: jax.Array, name: str) -> jax.Array:
+        for n, off, shape in self.entries:
+            if n == name:
+                size = int(np.prod(shape)) if shape else 1
+                return jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        raise KeyError(name)
+
+
+def _transformer_layout(prefix: str, d: int, n_layers: int, d_ff: int,
+                        layout: Layout, layers: range | None = None) -> None:
+    rng = layers if layers is not None else range(n_layers)
+    for i in rng:
+        p = f"{prefix}.blocks.{i}"
+        layout.add(f"{p}.ln1.scale", (d,))
+        layout.add(f"{p}.ln1.bias", (d,))
+        layout.add(f"{p}.attn.wq", (d, d))
+        layout.add(f"{p}.attn.wk", (d, d))
+        layout.add(f"{p}.attn.wv", (d, d))
+        layout.add(f"{p}.attn.wo", (d, d))
+        layout.add(f"{p}.ln2.scale", (d,))
+        layout.add(f"{p}.ln2.bias", (d,))
+        layout.add(f"{p}.mlp.w1", (d, d_ff))
+        layout.add(f"{p}.mlp.w2", (d_ff, d))
+
+
+def encoder_layout(e: EncoderConfig) -> Layout:
+    lo = Layout()
+    lo.add("in_proj.w", (e.d_input, e.d_model))
+    lo.add("in_proj.b", (e.d_model,))
+    lo.add("pos_embed", (e.n_tokens, e.d_model))
+    _transformer_layout("enc", e.d_model, e.n_layers, e.d_ff, lo)
+    lo.add("ln_f.scale", (e.d_model,))
+    lo.add("ln_f.bias", (e.d_model,))
+    return lo
+
+
+def projector_layout(e: EncoderConfig, llm: LlmConfig) -> Layout:
+    lo = Layout()
+    lo.add("w", (e.d_model, llm.d_model))
+    lo.add("b", (llm.d_model,))
+    return lo
+
+
+def llm_stage_layout(cfg: MllmConfig, stage: int) -> Layout:
+    """LLM stage `stage`: first stage owns embed (+pos), last owns ln_f+head."""
+    llm = cfg.llm
+    lo = Layout()
+    lo_layers = _stage_layer_range(cfg, stage)
+    if stage == 0:
+        lo.add("embed", (llm.vocab, llm.d_model))
+        lo.add("pos_embed", (cfg.total_tokens, llm.d_model))
+    _transformer_layout("llm", llm.d_model, llm.n_layers, llm.d_ff, lo,
+                        layers=lo_layers)
+    if stage == len(cfg.llm_stage_layers) - 1:
+        lo.add("ln_f.scale", (llm.d_model,))
+        lo.add("ln_f.bias", (llm.d_model,))
+        lo.add("head", (llm.d_model, llm.vocab))
+    return lo
+
+
+def _stage_layer_range(cfg: MllmConfig, stage: int) -> range:
+    start = sum(cfg.llm_stage_layers[:stage])
+    return range(start, start + cfg.llm_stage_layers[stage])
+
+
+# ---------------------------------------------------------------------------
+# Core math
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+
+def _full_attention(x: jax.Array, wq, wk, wv, wo, n_heads: int) -> jax.Array:
+    """Bidirectional full attention (encoder blocks)."""
+    t, d = x.shape
+    dh = d // n_heads
+    q = (x @ wq).reshape(t, n_heads, dh)
+    k = (x @ wk).reshape(t, n_heads, dh)
+    v = (x @ wv).reshape(t, n_heads, dh)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hqk,khd->qhd", p, v).reshape(t, d)
+    return o @ wo
+
+
+def _bam_block_attention(x, wq, wk, wv, wo, n_heads, bits, pos):
+    """LLM self-attention through the L1 Pallas BAM kernel."""
+    t, d = x.shape
+    dh = d // n_heads
+    q = (x @ wq).reshape(t, n_heads, dh)
+    k = (x @ wk).reshape(t, n_heads, dh)
+    v = (x @ wv).reshape(t, n_heads, dh)
+    o = bam_attention(q, k, v, bits, pos, bits, pos)
+    return o.reshape(t, d) @ wo
+
+
+def _block(x, lo: Layout, flat, prefix: str, n_heads: int,
+           attn: Callable) -> jax.Array:
+    h = _layer_norm(x, lo.slice(flat, f"{prefix}.ln1.scale"),
+                    lo.slice(flat, f"{prefix}.ln1.bias"))
+    x = x + attn(h,
+                 lo.slice(flat, f"{prefix}.attn.wq"),
+                 lo.slice(flat, f"{prefix}.attn.wk"),
+                 lo.slice(flat, f"{prefix}.attn.wv"),
+                 lo.slice(flat, f"{prefix}.attn.wo"),
+                 n_heads)
+    h = _layer_norm(x, lo.slice(flat, f"{prefix}.ln2.scale"),
+                    lo.slice(flat, f"{prefix}.ln2.bias"))
+    x = x + jax.nn.gelu(h @ lo.slice(flat, f"{prefix}.mlp.w1")) @ \
+        lo.slice(flat, f"{prefix}.mlp.w2")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Component forwards (flat-param signatures, exported per stage)
+# ---------------------------------------------------------------------------
+
+
+def encoder_fwd(e: EncoderConfig) -> Callable:
+    lo = encoder_layout(e)
+
+    def f(flat: jax.Array, x: jax.Array) -> jax.Array:
+        """x: f32[n_tokens, d_input] pre-patchified modality features."""
+        h = x @ lo.slice(flat, "in_proj.w") + lo.slice(flat, "in_proj.b")
+        h = h + lo.slice(flat, "pos_embed")
+        for i in range(e.n_layers):
+            h = _block(h, lo, flat, f"enc.blocks.{i}", e.n_heads,
+                       _full_attention)
+        return _layer_norm(h, lo.slice(flat, "ln_f.scale"),
+                           lo.slice(flat, "ln_f.bias"))
+
+    return f
+
+
+def projector_fwd(e: EncoderConfig, llm: LlmConfig) -> Callable:
+    lo = projector_layout(e, llm)
+
+    def f(flat: jax.Array, feats: jax.Array) -> jax.Array:
+        return feats @ lo.slice(flat, "w") + lo.slice(flat, "b")
+
+    return f
+
+
+def llm_stage_fwd(cfg: MllmConfig, stage: int) -> Callable:
+    """First stage: (flat, text_ids, *mod_h, bits, pos) -> h.
+    Middle stages: (flat, h, bits, pos) -> h.
+    Last stage also computes ln_f (head/loss live in llm_head_fwd)."""
+    lo = llm_stage_layout(cfg, stage)
+    llm = cfg.llm
+    layers = _stage_layer_range(cfg, stage)
+    is_first = stage == 0
+    is_last = stage == len(cfg.llm_stage_layers) - 1
+
+    def run_layers(flat, h, bits, pos):
+        for i in layers:
+            h = _block(
+                h, lo, flat, f"llm.blocks.{i}", llm.n_heads,
+                lambda x, wq, wk, wv, wo, nh: _bam_block_attention(
+                    x, wq, wk, wv, wo, nh, bits, pos))
+        if is_last:
+            h = _layer_norm(h, lo.slice(flat, "ln_f.scale"),
+                            lo.slice(flat, "ln_f.bias"))
+        return h
+
+    if is_first:
+        def f(flat, text_ids, *rest):
+            mod_hs = rest[:len(cfg.encoders)]
+            bits, pos = rest[len(cfg.encoders):]
+            embed = lo.slice(flat, "embed")
+            text_emb = embed[text_ids]  # [text_len, d]
+            pieces = [text_emb[:cfg.insert_at]]
+            pieces.extend(mod_hs)
+            pieces.append(text_emb[cfg.insert_at:])
+            h = jnp.concatenate(pieces, axis=0)
+            h = h + lo.slice(flat, "pos_embed")
+            return run_layers(flat, h, bits, pos)
+        return f
+
+    def f(flat, h, bits, pos):
+        return run_layers(flat, h, bits, pos)
+
+    return f
+
+
+def llm_head_fwd(cfg: MllmConfig) -> Callable:
+    """Loss head: (flat_of_last_stage, h, labels) -> mean CE over labels>=0.
+
+    Shares the last LLM stage's flat vector (the head weights live there);
+    exported as its own artifact so the coordinator can place loss
+    computation at the pipeline tail, as in the paper's execution graph.
+    """
+    lo = llm_stage_layout(cfg, len(cfg.llm_stage_layers) - 1)
+
+    def f(flat, h, labels):
+        logits = h @ lo.slice(flat, "head")  # [T, vocab]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = labels >= 0
+        safe = jnp.where(valid, labels, 0)
+        tok_ll = jnp.take_along_axis(logp, safe[:, None], axis=1)[:, 0]
+        n = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+        return -jnp.sum(jnp.where(valid, tok_ll, 0.0)) / n
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (for tests and the loss oracle)
+# ---------------------------------------------------------------------------
+
+
+def mllm_forward(cfg: MllmConfig, flats: dict[str, jax.Array],
+                 text_ids: jax.Array, mod_inputs: dict[str, jax.Array],
+                 labels: jax.Array) -> jax.Array:
+    """End-to-end loss computed by chaining the exact stage functions that
+    get exported — the oracle for the rust executor's numerics."""
+    bits, pos = cfg.bits_pos()
+    mod_hs = []
+    for e in cfg.encoders:
+        feats = encoder_fwd(e)(flats[f"enc:{e.name}"], mod_inputs[e.name])
+        mod_hs.append(projector_fwd(e, cfg.llm)(flats[f"proj:{e.name}"], feats))
+    h = llm_stage_fwd(cfg, 0)(flats["llm:0"], text_ids, *mod_hs, bits, pos)
+    for s in range(1, len(cfg.llm_stage_layers)):
+        h = llm_stage_fwd(cfg, s)(flats[f"llm:{s}"], h, bits, pos)
+    return llm_head_fwd(cfg)(flats[f"llm:{len(cfg.llm_stage_layers)-1}"],
+                             h, labels)
+
+
+# ---------------------------------------------------------------------------
+# Components registry: name -> (layout, fwd, input_specs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Component:
+    """One exported pipeline component."""
+    name: str
+    kind: str  # encoder | projector | llm_stage | llm_head
+    layout: Layout
+    fwd: Callable
+    # (name, dtype, shape, differentiable) per non-param input
+    inputs: list[tuple[str, str, tuple[int, ...], bool]]
+    out_shape: tuple[int, ...]
+    shares_params_with: str | None = None  # llm_head shares the last stage
+
+
+def components(cfg: MllmConfig) -> list[Component]:
+    comps: list[Component] = []
+    t = cfg.total_tokens
+    d = cfg.llm.d_model
+    for e in cfg.encoders:
+        comps.append(Component(
+            name=f"enc:{e.name}", kind="encoder", layout=encoder_layout(e),
+            fwd=encoder_fwd(e),
+            inputs=[("x", "f32", (e.n_tokens, e.d_input), True)],
+            out_shape=(e.n_tokens, e.d_model)))
+        comps.append(Component(
+            name=f"proj:{e.name}", kind="projector",
+            layout=projector_layout(e, cfg.llm),
+            fwd=projector_fwd(e, cfg.llm),
+            inputs=[("feats", "f32", (e.n_tokens, e.d_model), True)],
+            out_shape=(e.n_tokens, d)))
+    n_stages = len(cfg.llm_stage_layers)
+    for s in range(n_stages):
+        if s == 0:
+            ins = [("text_ids", "i32", (cfg.text_len,), False)]
+            ins += [(f"mod_h_{e.name}", "f32", (e.n_tokens, d), True)
+                    for e in cfg.encoders]
+            ins += [("bits", "i32", (t,), False), ("pos", "i32", (t,), False)]
+        else:
+            ins = [("h", "f32", (t, d), True),
+                   ("bits", "i32", (t,), False), ("pos", "i32", (t,), False)]
+        comps.append(Component(
+            name=f"llm:{s}", kind="llm_stage",
+            layout=llm_stage_layout(cfg, s), fwd=llm_stage_fwd(cfg, s),
+            inputs=ins, out_shape=(t, d)))
+    comps.append(Component(
+        name="llm:head", kind="llm_head",
+        layout=llm_stage_layout(cfg, n_stages - 1), fwd=llm_head_fwd(cfg),
+        inputs=[("h", "f32", (t, d), True), ("labels", "i32", (t,), False)],
+        out_shape=(), shares_params_with=f"llm:{n_stages-1}"))
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Init + AdamW
+# ---------------------------------------------------------------------------
+
+
+def init_flat(layout: Layout, seed: int) -> np.ndarray:
+    """Deterministic init: truncated-normal-ish scaled by fan-in for
+    matrices, ones for ln scales, zeros for biases."""
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(layout.total, dtype=np.float32)
+    for name, off, shape in layout.entries:
+        n = int(np.prod(shape)) if shape else 1
+        if name.endswith(".scale"):
+            flat[off:off + n] = 1.0
+        elif name.endswith(".bias") or name.endswith(".b"):
+            pass  # zeros
+        elif len(shape) >= 2:
+            std = 1.0 / math.sqrt(shape[0])
+            flat[off:off + n] = rng.normal(0.0, std, size=n).astype(np.float32)
+        else:
+            flat[off:off + n] = rng.normal(0.0, 0.02, size=n).astype(np.float32)
+    return flat
+
+
+def adamw_update(flat, grad, m, v, step, lr,
+                 beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.01):
+    """One AdamW step over a flat parameter vector (exported as ``upd``)."""
+    m = beta1 * m + (1 - beta1) * grad
+    v = beta2 * v + (1 - beta2) * grad * grad
+    mhat = m / (1 - beta1 ** step)
+    vhat = v / (1 - beta2 ** step)
+    new = flat - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * flat)
+    return new, m, v
+
+
+# ---------------------------------------------------------------------------
+# bwd wrappers used by aot.py
+# ---------------------------------------------------------------------------
+
+
+def make_bwd(comp: Component, with_params: bool) -> Callable:
+    """Build the backward program for a component.
+
+    ``with_params=True``  -> ``bwd``   (dflat, d(diff inputs)...)
+    ``with_params=False`` -> ``bwdin`` (d(diff inputs)...)
+
+    The forward is recomputed inside (gradient checkpointing): only
+    (flat, inputs, g) cross the wire, never residuals.
+    """
+    diff_idx = [i for i, (_, _, _, dble) in enumerate(comp.inputs) if dble]
+    is_head = comp.kind == "llm_head"
+
+    def bwd(flat, *args):
+        # head: loss is the scalar root, so no incoming cotangent g.
+        ins, g = (args, None) if is_head else (args[:-1], args[-1])
+
+        def f(flat, *diff_ins):
+            full = list(ins)
+            for j, i in enumerate(diff_idx):
+                full[i] = diff_ins[j]
+            return comp.fwd(flat, *full)
+
+        diff_ins = tuple(ins[i] for i in diff_idx)
+        if is_head:
+            argnums = tuple(range(0 if with_params else 1, 1 + len(diff_idx)))
+            return jax.grad(f, argnums=argnums)(flat, *diff_ins)
+        _, vjp = jax.vjp(f, flat, *diff_ins)
+        grads = vjp(g)
+        return grads if with_params else grads[1:]
+
+    return bwd

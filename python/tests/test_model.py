@@ -1,0 +1,240 @@
+"""L2 correctness: modular MLLM stages, flat-param layout, backward
+programs, optimizer — everything `aot.py` exports."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.CONFIGS["tiny"]
+CFG_VA = M.CONFIGS["tiny_va"]
+
+
+def init_all(cfg, seed=0):
+    return {c.name: jnp.asarray(M.init_flat(c.layout, seed + i))
+            for i, c in enumerate(M.components(cfg))
+            if c.shares_params_with is None}
+
+
+def sample_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    text = jnp.asarray(rng.integers(0, cfg.llm.vocab, cfg.text_len), jnp.int32)
+    mods = {e.name: jnp.asarray(rng.normal(size=(e.n_tokens, e.d_input)),
+                                jnp.float32) for e in cfg.encoders}
+    # next-token labels over the spliced layout (mirrors rust train::data)
+    labels = np.full(cfg.total_tokens, -1, dtype=np.int32)
+    tpos = [i for (kind, s, e, _) in cfg.segments() if kind == "text"
+            for i in range(s, e)]
+    for j in range(len(tpos) - 1):
+        labels[tpos[j]] = int(text[j + 1])
+    return text, mods, jnp.asarray(labels)
+
+
+class TestLayout:
+    def test_layout_offsets_contiguous(self):
+        for c in M.components(CFG_VA):
+            off = 0
+            for name, o, shape in c.layout.entries:
+                assert o == off
+                off += int(np.prod(shape)) if shape else 1
+            assert off == c.layout.total
+
+    def test_layout_slice_roundtrip(self):
+        lo = M.encoder_layout(CFG.encoders[0])
+        flat = jnp.arange(lo.total, dtype=jnp.float32)
+        w = lo.slice(flat, "in_proj.w")
+        assert w.shape == (48, 48)
+        assert float(w[0, 0]) == 0.0
+        b = lo.slice(flat, "in_proj.b")
+        assert float(b[0]) == 48 * 48
+
+    def test_head_shares_last_stage_layout(self):
+        comps = {c.name: c for c in M.components(CFG)}
+        assert comps["llm:head"].shares_params_with == "llm:1"
+        assert comps["llm:head"].layout.total == comps["llm:1"].layout.total
+
+    def test_param_counts_scale(self):
+        tiny = sum(c.layout.total for c in M.components(CFG)
+                   if c.shares_params_with is None)
+        mini = sum(c.layout.total for c in M.components(M.CONFIGS["mini"])
+                   if c.shares_params_with is None)
+        e2e = sum(c.layout.total for c in M.components(M.CONFIGS["e2e100m"])
+                  if c.shares_params_with is None)
+        assert tiny < 1_000_000
+        assert 20_000_000 < mini < 80_000_000
+        assert 85_000_000 < e2e < 160_000_000
+
+
+class TestForward:
+    def test_component_shapes(self):
+        flats = init_all(CFG)
+        text, mods, labels = sample_batch(CFG)
+        bits, pos = CFG.bits_pos()
+        e = CFG.encoders[0]
+        feats = M.encoder_fwd(e)(flats["enc:vision"], mods["vision"])
+        assert feats.shape == (e.n_tokens, e.d_model)
+        mh = M.projector_fwd(e, CFG.llm)(flats["proj:vision"], feats)
+        assert mh.shape == (e.n_tokens, CFG.llm.d_model)
+        h = M.llm_stage_fwd(CFG, 0)(flats["llm:0"], text, mh, bits, pos)
+        assert h.shape == (CFG.total_tokens, CFG.llm.d_model)
+        h = M.llm_stage_fwd(CFG, 1)(flats["llm:1"], h, bits, pos)
+        loss = M.llm_head_fwd(CFG)(flats["llm:1"], h, labels)
+        assert loss.shape == ()
+        assert np.isfinite(float(loss))
+
+    def test_loss_near_log_vocab_at_init(self):
+        flats = init_all(CFG)
+        text, mods, labels = sample_batch(CFG)
+        loss = M.mllm_forward(CFG, flats, text, mods, labels)
+        assert abs(float(loss) - np.log(CFG.llm.vocab)) < 1.0
+
+    def test_two_encoder_model(self):
+        flats = init_all(CFG_VA)
+        text, mods, labels = sample_batch(CFG_VA)
+        loss = M.mllm_forward(CFG_VA, flats, text, mods, labels)
+        assert np.isfinite(float(loss))
+
+    def test_segments_cover_sequence(self):
+        for cfg in (CFG, CFG_VA, M.CONFIGS["mini"]):
+            segs = cfg.segments()
+            assert segs[0][1] == 0
+            for (_, _, e1, _), (_, s2, _, _) in zip(segs, segs[1:]):
+                assert e1 == s2
+            assert segs[-1][2] == cfg.total_tokens
+
+    def test_bits_pos_match_ref_builder(self):
+        bits, pos = CFG.bits_pos()
+        # tiny: text[0:4], vision[4:12], text[12:32] == EE layout
+        bits2, pos2 = ref.make_bits_ee([4, 20], [8])
+        np.testing.assert_array_equal(np.asarray(bits), np.asarray(bits2))
+        np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos2))
+
+
+class TestBackward:
+    def test_bwd_matches_whole_model_grad(self):
+        """Chained per-stage bwd artifacts == jax.grad of the monolithic
+        model: the pipeline executor's numerics contract."""
+        flats = init_all(CFG)
+        text, mods, labels = sample_batch(CFG)
+        bits, pos = CFG.bits_pos()
+        comps = {c.name: c for c in M.components(CFG)}
+
+        # forward chain, saving stage inputs
+        e = CFG.encoders[0]
+        feats = comps["enc:vision"].fwd(flats["enc:vision"], mods["vision"])
+        mh = comps["proj:vision"].fwd(flats["proj:vision"], feats)
+        h0 = comps["llm:0"].fwd(flats["llm:0"], text, mh, bits, pos)
+        h1 = comps["llm:1"].fwd(flats["llm:1"], h0, bits, pos)
+
+        # backward chain (all trainable -> bwd everywhere)
+        dflat_head, dh1 = M.make_bwd(comps["llm:head"], True)(
+            flats["llm:1"], h1, labels)
+        dflat1, dh0 = M.make_bwd(comps["llm:1"], True)(
+            flats["llm:1"], h0, bits, pos, dh1)
+        dflat0, dmh = M.make_bwd(comps["llm:0"], True)(
+            flats["llm:0"], text, mh, bits, pos, dh0)
+        dflat_proj, dfeats = M.make_bwd(comps["proj:vision"], True)(
+            flats["proj:vision"], feats, dmh)
+        dflat_enc, _ = M.make_bwd(comps["enc:vision"], True)(
+            flats["enc:vision"], mods["vision"], dfeats)
+
+        # oracle: grad of the whole model wrt each flat
+        def whole(f_enc, f_proj, f_l0, f_l1):
+            return M.mllm_forward(
+                CFG, {"enc:vision": f_enc, "proj:vision": f_proj,
+                      "llm:0": f_l0, "llm:1": f_l1}, text, mods, labels)
+
+        g = jax.grad(whole, argnums=(0, 1, 2, 3))(
+            flats["enc:vision"], flats["proj:vision"], flats["llm:0"],
+            flats["llm:1"])
+        np.testing.assert_allclose(np.asarray(dflat_enc), np.asarray(g[0]),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dflat_proj), np.asarray(g[1]),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(dflat0), np.asarray(g[2]),
+                                   atol=1e-4)
+        # llm:1 receives grads from both its own stage AND the head
+        np.testing.assert_allclose(np.asarray(dflat1 + dflat_head),
+                                   np.asarray(g[3]), atol=1e-4)
+
+    def test_bwdin_equals_bwd_input_part(self):
+        """The frozen path (bwdin) returns exactly the input-grad slice of
+        the full backward — the §4.2 '1×T_fwd' program."""
+        flats = init_all(CFG)
+        text, mods, labels = sample_batch(CFG)
+        bits, pos = CFG.bits_pos()
+        comps = {c.name: c for c in M.components(CFG)}
+        h0 = comps["llm:0"].fwd(flats["llm:0"], text,
+                                comps["proj:vision"].fwd(
+                                    flats["proj:vision"],
+                                    comps["enc:vision"].fwd(
+                                        flats["enc:vision"], mods["vision"])),
+                                bits, pos)
+        g = jnp.ones((CFG.total_tokens, CFG.llm.d_model), jnp.float32)
+        full = M.make_bwd(comps["llm:1"], True)(flats["llm:1"], h0, bits,
+                                                pos, g)
+        only = M.make_bwd(comps["llm:1"], False)(flats["llm:1"], h0, bits,
+                                                 pos, g)
+        np.testing.assert_allclose(np.asarray(full[1]), np.asarray(only[0]),
+                                   atol=0)
+
+
+class TestOptimizer:
+    def test_adamw_decreases_loss_on_quadratic(self):
+        target = jnp.asarray(np.linspace(-1, 1, 32), jnp.float32)
+        flat = jnp.zeros(32)
+        m = jnp.zeros(32)
+        v = jnp.zeros(32)
+        for step in range(1, 200):
+            g = 2 * (flat - target)
+            flat, m, v = M.adamw_update(flat, g, m, v, float(step), 0.05)
+        assert float(jnp.max(jnp.abs(flat - target))) < 0.15
+
+    def test_adamw_bias_correction_first_step(self):
+        g = jnp.ones(4)
+        flat, m, v = M.adamw_update(jnp.zeros(4), g, jnp.zeros(4),
+                                    jnp.zeros(4), 1.0, 0.1)
+        # mhat = g, vhat = g^2 -> step ~= -lr * 1.0
+        np.testing.assert_allclose(np.asarray(flat), -0.1 * np.ones(4),
+                                   atol=1e-5)
+
+    def test_init_flat_deterministic(self):
+        lo = M.encoder_layout(CFG.encoders[0])
+        a = M.init_flat(lo, 7)
+        b = M.init_flat(lo, 7)
+        np.testing.assert_array_equal(a, b)
+
+    def test_init_flat_ln_scales_are_one(self):
+        lo = M.encoder_layout(CFG.encoders[0])
+        flat = jnp.asarray(M.init_flat(lo, 3))
+        s = lo.slice(flat, "enc.blocks.0.ln1.scale")
+        np.testing.assert_array_equal(np.asarray(s), np.ones(48, np.float32))
+        b = lo.slice(flat, "enc.blocks.0.ln1.bias")
+        np.testing.assert_array_equal(np.asarray(b), np.zeros(48, np.float32))
+
+
+class TestTraining:
+    def test_few_steps_reduce_loss(self):
+        """Projector-only training (the paper's default setting) on a fixed
+        batch reduces loss — the frozen path still propagates grads
+        through the LLM (the 1x rule) to reach the projector."""
+        flats = init_all(CFG)
+        text, mods, labels = sample_batch(CFG)
+
+        def loss_fn(f_proj):
+            d = dict(flats)
+            d["proj:vision"] = f_proj
+            return M.mllm_forward(CFG, d, text, mods, labels)
+
+        f = flats["proj:vision"]
+        m = jnp.zeros_like(f)
+        v = jnp.zeros_like(f)
+        l0 = float(loss_fn(f))
+        for step in range(1, 25):
+            g = jax.grad(loss_fn)(f)
+            f, m, v = M.adamw_update(f, g, m, v, float(step), 1e-2)
+        l1 = float(loss_fn(f))
+        assert l1 < l0

@@ -1,0 +1,57 @@
+//! Bench: REAL PJRT execution of the L1 BAM-attention kernel artifact
+//! (the cross-check behind Table 4's workload model — interpret-mode
+//! Pallas on CPU, so absolute times are not TPU times, but the *ordering*
+//! across mask types must track unmasked-pair counts).
+
+use cornstarch::bench::Bencher;
+use cornstarch::coordinator::experiments::MaskType;
+use cornstarch::runtime::{AttnRuntime, Manifest};
+use cornstarch::util::rng::Rng;
+
+fn main() {
+    let manifest = match Manifest::load(Manifest::default_root()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping attention bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    for art in ["attn128", "attn512"] {
+        let rt = match AttnRuntime::load(&manifest, art) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping {art}: {e:#}");
+                continue;
+            }
+        };
+        let t = rt.spec.tokens;
+        let n = t * rt.spec.heads * rt.spec.head_dim;
+        let mut rng = Rng::new(1);
+        let mk = |rng: &mut Rng| -> Vec<f32> {
+            (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect()
+        };
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+
+        let mut b = Bencher::new(&format!(
+            "PJRT BAM attention {art} (T={t}, H={}, D={})",
+            rt.spec.heads, rt.spec.head_dim
+        ));
+        let mut pair_counts = Vec::new();
+        for mt in MaskType::ALL {
+            let mut mrng = Rng::new(0x5EED ^ t as u64);
+            let mask = mt.random(&mut mrng, t);
+            let mut bits = mask.bits.clone();
+            bits.resize(t, *bits.last().unwrap());
+            let bam = cornstarch::bam::Bam::new(bits, mask.text_mask);
+            let pairs: u64 = bam.workloads().iter().sum();
+            pair_counts.push((mt.name(), pairs));
+            let bi = bam.bits_i32();
+            let pi = bam.pos_i32();
+            b.bench(mt.name(), || {
+                let (_, _ms) = rt.run(&q, &k, &v, &bi, &pi).unwrap();
+            });
+        }
+        b.report();
+        println!("unmasked (q,k) pairs per mask: {pair_counts:?}\n");
+    }
+}

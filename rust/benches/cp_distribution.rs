@@ -1,0 +1,68 @@
+//! Bench: context-parallel token distribution (paper Table 4 + Figure 12
+//! + the §4.3.2 "1 M tokens in under a millisecond" claim).
+//!
+//! Prints (a) the Table 4 reproduction (model-predicted attention step
+//! times per algorithm/mask/length), (b) Figure 12's per-rank balance
+//! sample, and (c) measured wall times of the distribution algorithms
+//! themselves at 64k and 1M tokens.
+
+use cornstarch::bam;
+use cornstarch::bench::Bencher;
+use cornstarch::coordinator::experiments;
+use cornstarch::cp::Algorithm;
+use cornstarch::util::rng::Rng;
+
+fn main() {
+    // (a) Table 4 — the paper's numbers are ms per attention layer step.
+    let (table4, rows) = experiments::table4(20);
+    println!("{}", table4.render());
+    // Sanity: LPT never loses to zigzag on EE/MP (the paper's claim).
+    for (len, mt, alg, ms) in &rows {
+        if *mt == experiments::MaskType::Ee && alg == "LPT" {
+            let zz = rows
+                .iter()
+                .find(|(l, m, a, _)| l == len && *m == *mt && a == "Zigzag")
+                .unwrap()
+                .3;
+            assert!(
+                *ms <= zz * 1.02,
+                "{len}/EE: LPT {ms:.2} vs zigzag {zz:.2}"
+            );
+        }
+    }
+
+    // (b) Figure 12 — per-rank execution times, one 64k sample.
+    println!("{}", experiments::fig12().render());
+
+    // (c) algorithm wall time: the paper claims LPT distributes 1M tokens
+    // (128-token blocks) in < 1 ms.
+    let mut b = Bencher::new("distribution algorithm wall time");
+    for &(t, label) in
+        &[(65_536usize, "64k"), (1_048_576usize, "1M")]
+    {
+        let mut rng = Rng::new(7);
+        let mask = bam::generators::random_ee(&mut rng, t, 3);
+        let w = bam::block_workloads(&mask.workloads(), 128);
+        for alg in [
+            Algorithm::Lpt,
+            Algorithm::Random { seed: 3 },
+            Algorithm::Zigzag,
+            Algorithm::Ring,
+        ] {
+            b.bench(&format!("{} {} tokens", alg.name(), label), || {
+                std::hint::black_box(alg.assign(&w, 8));
+            });
+        }
+        // workload computation itself (O(T·V), never materializes [T,T])
+        b.bench(&format!("BAM workloads {label}"), || {
+            std::hint::black_box(mask.workloads());
+        });
+    }
+    b.report();
+
+    // The paper's <1 ms claim for 1M-token LPT distribution.
+    if let Some(ms) = b.median_of("LPT 1M tokens") {
+        println!("LPT @ 1M tokens, 128-block: {ms:.3} ms (paper: < 1 ms)");
+        assert!(ms < 10.0, "LPT at 1M tokens took {ms:.1} ms");
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench: pipeline-parallel planning + discrete-event simulation for every
+//! end-to-end table/figure of the paper (Figures 2, 9, 10, 13, 14, 15 and
+//! Tables 2, 3, 7, 8, 10, 11), plus wall-time of the planner and the
+//! simulator themselves.
+
+use cornstarch::bench::Bencher;
+use cornstarch::coordinator::experiments;
+use cornstarch::cost::Device;
+use cornstarch::modality::{
+    planner, MultimodalModule, MultimodalParallelSpec, Strategy,
+};
+use cornstarch::model::{MllmSpec, Size};
+
+fn main() {
+    // ---- the paper's tables/figures, printed in full ----
+    println!("{}", experiments::fig2().0.render());
+    for s in Size::ALL {
+        let (t, rows) = experiments::fig9_13_14(s);
+        println!("{}", t.render());
+        let best = rows
+            .iter()
+            .map(|r| r.speedup_vs_best_baseline())
+            .fold(0.0f64, f64::max);
+        println!("  max Cornstarch speedup (LLM-{}): {best:.2}x\n", s.letter());
+    }
+    for s in Size::ALL {
+        println!("{}", experiments::fig10_15(s).0.render());
+    }
+    for s in Size::ALL {
+        println!("{}", experiments::table2_7_8(s).0.render());
+    }
+    for s in Size::ALL {
+        println!("{}", experiments::table3_10_11(s).0.render());
+    }
+
+    // ---- wall time of plan + simulate (the L3 "control plane") ----
+    let mut b = Bencher::new("planner + 1F1B simulation wall time");
+    let spec = MllmSpec::valm(Size::M, Size::M, Size::M);
+    let mm = MultimodalModule::from_spec(&spec);
+    for (name, strategy, enc, llm) in [
+        ("cornstarch VALM-MM", Strategy::Cornstarch, 1usize, 4usize),
+        ("colocated VALM-MM", Strategy::Colocated, 3, 3),
+        ("replicated VALM-MM", Strategy::Replicated, 1, 6),
+    ] {
+        let ps = MultimodalParallelSpec::paper_default(&[enc, enc], llm, 2, 2);
+        b.bench(name, || {
+            let p = planner::plan(strategy, &mm, &ps, Device::a40());
+            std::hint::black_box(p.simulate());
+        });
+    }
+    // Algorithm 1 search
+    b.bench("auto-parallelize VALM-MM (6 groups)", || {
+        std::hint::black_box(cornstarch::modality::auto_parallelize(
+            &mm,
+            6,
+            2,
+            2,
+            6,
+            Device::a40(),
+        ));
+    });
+    b.report();
+}

@@ -1,0 +1,63 @@
+//! Bench: REAL training steps over PJRT artifacts — single-process vs the
+//! thread-per-stage pipeline executor (modality parallelism made
+//! measurable: the pipeline executor overlaps encoder work across threads
+//! and should not be slower than sequential once per-step overheads are
+//! amortized).
+
+use cornstarch::bench::Bencher;
+use cornstarch::runtime::Manifest;
+use cornstarch::train::{
+    FrozenPolicy, PipelineTrainer, SyntheticDataset, Trainer,
+};
+
+fn main() {
+    let manifest = match Manifest::load(Manifest::default_root()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping train bench (no artifacts): {e:#}");
+            return;
+        }
+    };
+    let fast = std::env::var_os("CORNSTARCH_BENCH_FAST").is_some();
+    let steps = if fast { 3 } else { 10 };
+
+    for model in ["tiny", "tiny_va"] {
+        let mm = manifest.model(model).unwrap().clone();
+        let ds = SyntheticDataset::new(&mm, 42);
+        let batch: Vec<_> = (0..4).map(|i| ds.sample(i)).collect();
+        let mut b = Bencher::new(&format!("train step — {model} (4 microbatches)"));
+
+        let mut single =
+            Trainer::new(&manifest, model, FrozenPolicy::paper(), 1e-3)
+                .unwrap();
+        let mut samples = Vec::new();
+        for _ in 0..steps {
+            let s = single.train_step(&batch).unwrap();
+            samples.push(s.wall_ms);
+        }
+        b.record("single-process", samples);
+
+        let mut pipe =
+            PipelineTrainer::new(&manifest, model, FrozenPolicy::paper(), 1e-3)
+                .unwrap();
+        let mut samples = Vec::new();
+        for _ in 0..steps {
+            let s = pipe.train_step(&batch).unwrap();
+            samples.push(s.wall_ms);
+        }
+        b.record("pipeline (thread/stage)", samples);
+
+        // all-trainable: the 2x backward path everywhere
+        let mut full =
+            Trainer::new(&manifest, model, FrozenPolicy::all_trainable(), 1e-3)
+                .unwrap();
+        let mut samples = Vec::new();
+        for _ in 0..steps {
+            let s = full.train_step(&batch).unwrap();
+            samples.push(s.wall_ms);
+        }
+        b.record("single, all-trainable (2x bwd)", samples);
+
+        b.report();
+    }
+}

@@ -1,0 +1,275 @@
+//! BAM mask generators for the three layouts of the paper's Figure 11:
+//!
+//! * **EP** — encoder outputs prepended: `[mod_1 .. mod_k, text]`;
+//! * **EE** — encoder outputs embedded: modality segments spliced between
+//!   text runs (LLaVA-Next / Qwen2-VL style);
+//! * **MP** — multimodal packing: several independent samples packed in
+//!   one sequence, each with its own text stream and modality segments
+//!   (tokens of one sample never attend another sample).
+//!
+//! Plus randomized variants used by Table 4 / Figure 12 ("an attention
+//! mask is randomly generated for every run").
+
+use super::{Bam, TEXT_BIT};
+use crate::util::rng::Rng;
+
+/// Declarative mask description (mirrors `ref.make_bits_*`).
+#[derive(Clone, Debug)]
+pub enum MaskSpec {
+    /// (text_len, modality segment lengths)
+    Ep(usize, Vec<usize>),
+    /// (text run lengths [k+1], modality segment lengths [k])
+    Ee(Vec<usize>, Vec<usize>),
+    /// packed samples: (text_len, modality segment lengths) each
+    Mp(Vec<(usize, Vec<usize>)>),
+}
+
+impl MaskSpec {
+    pub fn build(&self) -> Bam {
+        match self {
+            MaskSpec::Ep(t, segs) => ep(*t, segs),
+            MaskSpec::Ee(texts, segs) => ee(texts, segs),
+            MaskSpec::Mp(samples) => mp(samples),
+        }
+    }
+}
+
+/// Encoder outputs prepended (Figure 11a).
+pub fn ep(text_len: usize, seg_lens: &[usize]) -> Bam {
+    let mut bits = Vec::with_capacity(text_len + seg_lens.iter().sum::<usize>());
+    let mut text_bits = TEXT_BIT;
+    for (m, &l) in seg_lens.iter().enumerate() {
+        let b = 1u64 << (m + 1);
+        text_bits |= b;
+        bits.extend(std::iter::repeat(b).take(l));
+    }
+    bits.extend(std::iter::repeat(text_bits).take(text_len));
+    Bam::new(bits, TEXT_BIT)
+}
+
+/// Encoder outputs embedded (Figure 11b). `text_lens.len() ==
+/// seg_lens.len() + 1`.
+pub fn ee(text_lens: &[usize], seg_lens: &[usize]) -> Bam {
+    assert_eq!(text_lens.len(), seg_lens.len() + 1, "EE layout shape");
+    let mut text_bits = TEXT_BIT;
+    for m in 0..seg_lens.len() {
+        text_bits |= 1u64 << (m + 1);
+    }
+    let mut bits = Vec::new();
+    bits.extend(std::iter::repeat(text_bits).take(text_lens[0]));
+    for (m, &l) in seg_lens.iter().enumerate() {
+        bits.extend(std::iter::repeat(1u64 << (m + 1)).take(l));
+        bits.extend(std::iter::repeat(text_bits).take(text_lens[m + 1]));
+    }
+    Bam::new(bits, TEXT_BIT)
+}
+
+/// Multimodal packing (Figure 11c): each sample gets a disjoint bit range
+/// (its own text bit + its modality bits), so cross-sample attention is
+/// structurally impossible. `text_mask` is the union of all text bits.
+pub fn mp(samples: &[(usize, Vec<usize>)]) -> Bam {
+    let mut bits = Vec::new();
+    let mut text_mask = 0u64;
+    let mut next_bit = 0u32;
+    for (text_len, seg_lens) in samples {
+        let need = 1 + seg_lens.len() as u32;
+        assert!(
+            next_bit + need <= 62,
+            "multimodal packing exceeds the 64-bit field (paper: ~60 modalities)"
+        );
+        let tbit = 1u64 << next_bit;
+        text_mask |= tbit;
+        let mut tfield = tbit;
+        let mut seg_bits = Vec::new();
+        for (m, _) in seg_lens.iter().enumerate() {
+            let b = 1u64 << (next_bit + 1 + m as u32);
+            tfield |= b;
+            seg_bits.push(b);
+        }
+        next_bit += need;
+        // Layout inside a sample: text/2, segments, text - text/2 (EE-ish).
+        let pre = text_len / 2;
+        bits.extend(std::iter::repeat(tfield).take(pre));
+        for (m, &l) in seg_lens.iter().enumerate() {
+            bits.extend(std::iter::repeat(seg_bits[m]).take(l));
+        }
+        bits.extend(std::iter::repeat(tfield).take(text_len - pre));
+    }
+    Bam::new(bits, text_mask)
+}
+
+/// Randomized EE-style mask with total length `t`: random number of
+/// modality segments at random offsets — what Table 4 draws per run.
+pub fn random_ee(rng: &mut Rng, t: usize, max_modalities: usize) -> Bam {
+    let n_mod = rng.range(1, max_modalities + 1);
+    // Each modality gets 5%..25% of the sequence.
+    let mut seg_lens = Vec::new();
+    let mut used = 0usize;
+    for _ in 0..n_mod {
+        let l = rng.range(t / 20 + 1, t / 4 + 2).min(t.saturating_sub(used + n_mod));
+        seg_lens.push(l.max(1));
+        used += l.max(1);
+    }
+    let text_total = t.saturating_sub(used).max(n_mod + 1);
+    // Split text into n_mod+1 random runs.
+    let mut text_lens = vec![1usize; n_mod + 1];
+    let mut rem = text_total - (n_mod + 1);
+    for i in 0..n_mod {
+        let take = rng.range(0, rem + 1);
+        text_lens[i] += take;
+        rem -= take;
+    }
+    text_lens[n_mod] += rem;
+    ee(&text_lens, &seg_lens)
+}
+
+/// Randomized MP mask: pack samples of random size until `t` is filled.
+pub fn random_mp(rng: &mut Rng, t: usize) -> Bam {
+    let mut samples = Vec::new();
+    let mut used = 0usize;
+    let mut bit_budget = 62usize;
+    while used < t && bit_budget >= 2 {
+        let remaining = t - used;
+        let sample_len = if remaining < 32 {
+            remaining
+        } else {
+            rng.range(remaining / 4 + 1, remaining + 1).max(16)
+        }
+        .min(remaining);
+        let n_mod = rng.range(0, (bit_budget - 1).min(3) + 1).min(2);
+        let mut seg_lens = Vec::new();
+        let mut seg_total = 0usize;
+        for _ in 0..n_mod {
+            let l = (sample_len / 4).max(1);
+            if seg_total + l < sample_len {
+                seg_lens.push(l);
+                seg_total += l;
+            }
+        }
+        let text_len = sample_len - seg_total;
+        bit_budget -= 1 + seg_lens.len();
+        samples.push((text_len, seg_lens));
+        used += sample_len;
+    }
+    mp(&samples)
+}
+
+/// Randomized EP mask with total length `t`.
+pub fn random_ep(rng: &mut Rng, t: usize, max_modalities: usize) -> Bam {
+    let n_mod = rng.range(1, max_modalities + 1);
+    let mut seg_lens = Vec::new();
+    let mut used = 0usize;
+    for _ in 0..n_mod {
+        let l = rng.range(t / 20 + 1, t / 4 + 2);
+        seg_lens.push(l);
+        used += l;
+    }
+    let text_len = t.saturating_sub(used).max(1);
+    ep(text_len, &seg_lens)
+}
+
+/// Build the Bam for an exported model config from its manifest segment
+/// records `(start, end, bits)`.
+pub fn from_segments(total: usize, segments: &[(usize, usize, u64)]) -> Bam {
+    let mut bits = vec![0u64; total];
+    for &(s, e, b) in segments {
+        assert!(e <= total && s <= e, "segment out of range");
+        for slot in &mut bits[s..e] {
+            *slot = b;
+        }
+    }
+    assert!(bits.iter().all(|&b| b != 0), "segments must cover the sequence");
+    Bam::new(bits, TEXT_BIT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bam::workload::workloads_naive;
+    use crate::util::check::check;
+
+    #[test]
+    fn ep_structure() {
+        let m = ep(4, &[2, 3]);
+        assert_eq!(m.len(), 9);
+        assert_eq!(m.bits[0], 2); // modality 1
+        assert_eq!(m.bits[2], 4); // modality 2
+        assert_eq!(m.bits[5], 0b111); // text sees both
+    }
+
+    #[test]
+    fn ee_structure() {
+        let m = ee(&[1, 2], &[3]);
+        assert_eq!(m.bits, vec![0b11, 0b10, 0b10, 0b10, 0b11, 0b11]);
+    }
+
+    #[test]
+    fn mp_samples_are_isolated() {
+        let m = mp(&[(4, vec![2]), (4, vec![2])]);
+        let t = m.len();
+        assert_eq!(t, 12);
+        // No token of sample 1 attends any token of sample 2 and vice versa.
+        for i in 0..6 {
+            for j in 6..t {
+                assert!(!m.can_attend(i, j), "{i} -> {j}");
+                assert!(!m.can_attend(j, i), "{j} -> {i}");
+            }
+        }
+        // Inside a sample attention still works.
+        assert!(m.can_attend(1, 0));
+        assert!(m.can_attend(7, 6));
+    }
+
+    #[test]
+    fn mp_text_mask_covers_all_samples() {
+        let m = mp(&[(4, vec![1]), (4, vec![1, 1]), (4, vec![])]);
+        assert_eq!(m.text_mask.count_ones(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mp_rejects_bit_overflow() {
+        let samples: Vec<(usize, Vec<usize>)> =
+            (0..40).map(|_| (2, vec![1])).collect();
+        mp(&samples);
+    }
+
+    #[test]
+    fn random_generators_satisfy_invariants() {
+        check("random masks well-formed", 30, |g| {
+            let t = g.usize(16, 512);
+            let mut rng = crate::util::rng::Rng::new(g.seed);
+            for m in [
+                random_ep(&mut rng, t, 3),
+                random_ee(&mut rng, t, 3),
+                random_mp(&mut rng, t),
+            ] {
+                assert!(!m.is_empty());
+                assert!(m.bits.iter().all(|&b| b != 0));
+                // workloads via fast path == naive on a sample
+                if m.len() <= 256 {
+                    assert_eq!(
+                        m.workloads(),
+                        workloads_naive(&m.bits, m.text_mask)
+                    );
+                }
+                // every token attends itself
+                for i in 0..m.len() {
+                    assert!(m.can_attend(i, i));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn from_segments_roundtrip() {
+        let m = from_segments(8, &[(0, 2, 0b11), (2, 5, 2), (5, 8, 0b11)]);
+        assert_eq!(m.bits, vec![3, 3, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_segments_rejects_gaps() {
+        from_segments(8, &[(0, 2, 3), (4, 8, 3)]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Bitfield Attention Mask (BAM) — §4.3.1.
+//!
+//! A full multimodal attention mask over `T` tokens is `O(T²)` memory (1 M
+//! tokens ⇒ 1 TB); BAM compresses it to a 1-D vector of 64-bit integers:
+//! bit 0 is the text modality, bits `1..` are modality encoders. The mask
+//! semantics here are byte-identical to the normative oracle in
+//! `python/compile/kernels/ref.py` (and the L1 Pallas kernel):
+//!
+//! * **text token** (`bits & text_mask != 0`): attends `j` iff
+//!   `pos[j] <= pos[i]` and `bits[i] & bits[j] != 0` — causal over every
+//!   modality its field enables;
+//! * **modality token**: attends `j` iff `bits[j] == bits[i]` — full
+//!   bidirectional attention within its own modality segment.
+//!
+//! `text_mask` is `TEXT_BIT` (bit 0) for single-sample sequences; the
+//! multimodal-packing generator (`generators::mp`) assigns each packed
+//! sample its own text bit, so `text_mask` is the union (the paper's
+//! "control bits" headroom).
+
+pub mod workload;
+pub mod generators;
+
+pub use generators::{ep, ee, mp, MaskSpec};
+pub use workload::{block_workloads, workloads, workloads_naive};
+
+/// Bit 0: the text modality (single-sample sequences).
+pub const TEXT_BIT: u64 = 1;
+
+/// A BAM sequence: per-token bitfields plus global positions.
+///
+/// Positions are explicit so context-parallel shards of the sequence can
+/// still evaluate the predicate against gathered keys (§4.3.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bam {
+    pub bits: Vec<u64>,
+    pub pos: Vec<u32>,
+    /// Union of all text bits in this sequence (bit 0 unless packed).
+    pub text_mask: u64,
+}
+
+impl Bam {
+    pub fn new(bits: Vec<u64>, text_mask: u64) -> Self {
+        let pos = (0..bits.len() as u32).collect();
+        Bam { bits, pos, text_mask }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// The normative predicate: does query token `i` attend key token `j`?
+    #[inline]
+    pub fn can_attend(&self, i: usize, j: usize) -> bool {
+        can_attend(
+            self.bits[i],
+            self.pos[i],
+            self.bits[j],
+            self.pos[j],
+            self.text_mask,
+        )
+    }
+
+    /// Materialize the full `[T, T]` mask. **Test-only** helper: the whole
+    /// point of BAM is to never do this on the hot path.
+    pub fn materialize(&self) -> Vec<Vec<bool>> {
+        let t = self.len();
+        (0..t)
+            .map(|i| (0..t).map(|j| self.can_attend(i, j)).collect())
+            .collect()
+    }
+
+    /// Row-sums of the mask (per-token workloads W_i), O(T·V).
+    pub fn workloads(&self) -> Vec<u64> {
+        workload::workloads(&self.bits, self.text_mask)
+    }
+
+    /// The i32 lowering fed to the L1 kernel artifacts (the kernel carries
+    /// bitfields as 32-bit lanes; see DESIGN.md §Hardware-Adaptation).
+    /// Panics if any bitfield needs more than 31 bits.
+    pub fn bits_i32(&self) -> Vec<i32> {
+        self.bits
+            .iter()
+            .map(|&b| {
+                assert!(
+                    b <= i32::MAX as u64,
+                    "bitfield {b:#x} exceeds the kernel's 32-bit lanes"
+                );
+                b as i32
+            })
+            .collect()
+    }
+
+    pub fn pos_i32(&self) -> Vec<i32> {
+        self.pos.iter().map(|&p| p as i32).collect()
+    }
+}
+
+/// Scalar BAM predicate (identical to `ref.can_attend`).
+#[inline]
+pub fn can_attend(bq: u64, pq: u32, bk: u64, pk: u32, text_mask: u64) -> bool {
+    if bq & text_mask != 0 {
+        pk <= pq && (bq & bk) != 0
+    } else {
+        bk == bq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure 8 example: t0..t1 text, t2..t3 encoder A,
+    /// t4..t5 encoder B, t6..t8 text.
+    fn fig8() -> Bam {
+        let a = 1u64 << 1;
+        let b = 1u64 << 2;
+        let txt = TEXT_BIT | a | b;
+        Bam::new(vec![txt, txt, a, a, b, b, txt, txt, txt], TEXT_BIT)
+    }
+
+    #[test]
+    fn text_attends_previous_including_modalities() {
+        let m = fig8();
+        // t6 attends everything at pos <= 6
+        for j in 0..=6 {
+            assert!(m.can_attend(6, j), "t6 should attend t{j}");
+        }
+        assert!(!m.can_attend(6, 7));
+        assert!(!m.can_attend(6, 8));
+    }
+
+    #[test]
+    fn modality_tokens_attend_own_segment_bidirectionally() {
+        let m = fig8();
+        assert!(m.can_attend(2, 3)); // A attends forward inside A
+        assert!(m.can_attend(3, 2));
+        assert!(!m.can_attend(2, 4)); // A does not attend B
+        assert!(!m.can_attend(2, 0)); // A does not attend text
+    }
+
+    #[test]
+    fn self_attention_always_allowed() {
+        let m = fig8();
+        for i in 0..m.len() {
+            assert!(m.can_attend(i, i), "token {i} must attend itself");
+        }
+    }
+
+    #[test]
+    fn early_text_does_not_attend_later_modalities() {
+        let m = fig8();
+        assert!(m.can_attend(1, 0));
+        assert!(!m.can_attend(1, 2)); // pos 2 > 1: causal
+    }
+
+    #[test]
+    fn memory_footprint_is_linear() {
+        // 1M tokens: 8 bytes each = 8MB, vs 1TB for the full mask (paper).
+        let t = 1_000_000usize;
+        let bytes = t * std::mem::size_of::<u64>();
+        assert!(bytes <= 8 * (1 << 20));
+    }
+
+    #[test]
+    fn bits_i32_rejects_wide_fields() {
+        let m = Bam::new(vec![1u64 << 40], TEXT_BIT);
+        let r = std::panic::catch_unwind(|| m.bits_i32());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn workloads_match_materialized_rows() {
+        let m = fig8();
+        let w = m.workloads();
+        let full = m.materialize();
+        for (i, row) in full.iter().enumerate() {
+            let row_sum = row.iter().filter(|&&b| b).count() as u64;
+            assert_eq!(w[i], row_sum, "row {i}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! The bench harness for `cargo bench` (`rust/benches/*`, `harness =
+//! false` — the vendored offline crate set has no criterion, so this is a
+//! small warmup+repeat timer with median/p10/p90 reporting). The benches
+//! regenerate the paper's tables/figures; the heavy lifting lives in
+//! [`crate::coordinator::experiments`].
+
+use std::time::Instant;
+
+/// A named benchmark group: warms up, runs `iters` samples per case, and
+/// prints a stats table at the end.
+pub struct Bencher {
+    title: String,
+    warmup: usize,
+    iters: usize,
+    rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Bencher {
+    pub fn new(title: &str) -> Self {
+        // CORNSTARCH_BENCH_FAST=1 trims iterations (used by `make test`
+        // smoke runs); default matches a criterion-ish sample count.
+        let fast = std::env::var_os("CORNSTARCH_BENCH_FAST").is_some();
+        Bencher {
+            title: title.to_string(),
+            warmup: if fast { 1 } else { 3 },
+            iters: if fast { 3 } else { 15 },
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f` and record under `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let samples = time_n(self.iters, f);
+        self.rows.push((name.to_string(), samples));
+    }
+
+    /// Record externally-collected samples (e.g. per-step wall times).
+    pub fn record(&mut self, name: &str, samples: Vec<f64>) {
+        self.rows.push((name.to_string(), samples));
+    }
+
+    /// Median of a recorded row (for cross-row assertions in benches).
+    pub fn median_of(&self, name: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| median(s))
+    }
+
+    /// Print the stats table.
+    pub fn report(&self) {
+        let mut t = crate::util::table::Table::new(
+            &self.title,
+            &["case", "n", "median (ms)", "p10", "p90"],
+        );
+        for (name, samples) in &self.rows {
+            let mut s = samples.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let p = |q: f64| s[((s.len() - 1) as f64 * q) as usize];
+            t.row(&[
+                name.clone(),
+                s.len().to_string(),
+                format!("{:.3}", median(&s)),
+                format!("{:.3}", p(0.10)),
+                format!("{:.3}", p(0.90)),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+}
+
+/// Run `f` `n` times, return per-run wall milliseconds.
+pub fn time_n<F: FnMut()>(n: usize, mut f: F) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    out
+}
+
+/// Median of a sample (sorts a copy).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[s.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_n_returns_n_samples() {
+        let t = time_n(5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(t.len(), 5);
+        assert!(t.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 3.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! The paper's manually-profiled parallelism configurations (Appendix B–D,
+//! Tables 5, 6, and 9) plus the modality-parallelism comparison configs
+//! (Tables 2, 7, 8). Transcribed verbatim so the reproduce harness sweeps
+//! exactly the paper's grid.
+//!
+//! All end-to-end configs use TP=2, CP=2 (§6.1 / Table 5-6). The pipeline
+//! ablation (Table 9) uses TP=2, CP=1 except LLM-L which needs TP=4.
+
+use crate::model::Size;
+
+/// Single-encoder e2e config (Table 5): stage counts per strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct SingleEncCfg {
+    pub llm: Size,
+    /// true = VLM (EVA-CLIP), false = ALM (Whisper).
+    pub vision: bool,
+    pub enc: Size,
+    /// (llm_pp, enc_pp) for encoders-colocated.
+    pub colocated: (usize, usize),
+    /// (llm_pp, enc_pp) for Cornstarch.
+    pub cornstarch: (usize, usize),
+}
+
+/// Table 5 — parallelism configurations for VLM/ALM end-to-end comparison.
+pub const TABLE5: &[SingleEncCfg] = &{
+    use Size::*;
+    const fn c(
+        llm: Size,
+        vision: bool,
+        enc: Size,
+        colocated: (usize, usize),
+        cornstarch: (usize, usize),
+    ) -> SingleEncCfg {
+        SingleEncCfg { llm, vision, enc, colocated, cornstarch }
+    }
+    [
+        // LLM-S
+        c(S, true, S, (5, 2), (4, 2)),
+        c(S, true, M, (2, 3), (3, 3)),
+        c(S, true, L, (1, 4), (2, 4)),
+        c(S, false, S, (3, 2), (3, 1)),
+        c(S, false, M, (3, 5), (2, 3)),
+        c(S, false, L, (2, 6), (3, 5)),
+        // LLM-M
+        c(M, true, S, (3, 1), (5, 1)),
+        c(M, true, M, (3, 2), (3, 1)),
+        c(M, true, L, (2, 3), (3, 2)),
+        c(M, false, S, (4, 2), (5, 1)),
+        c(M, false, M, (3, 3), (4, 2)),
+        c(M, false, L, (2, 4), (4, 2)),
+        // LLM-L
+        c(L, true, S, (5, 1), (5, 1)),
+        c(L, true, M, (4, 1), (5, 1)),
+        c(L, true, L, (3, 2), (4, 1)),
+        c(L, false, S, (5, 1), (5, 1)),
+        c(L, false, M, (5, 1), (5, 1)),
+        c(L, false, L, (5, 2), (5, 1)),
+    ]
+};
+
+/// Two-encoder (VALM) e2e config (Table 6).
+#[derive(Clone, Copy, Debug)]
+pub struct ValmCfg {
+    pub llm: Size,
+    pub vis: Size,
+    pub aud: Size,
+    /// (llm_pp, colocated_enc_pp).
+    pub colocated: (usize, usize),
+    /// (llm_pp, vision_pp, audio_pp).
+    pub cornstarch: (usize, usize, usize),
+}
+
+/// Table 6 — parallelism configurations for VALM end-to-end comparison.
+pub const TABLE6: &[ValmCfg] = &{
+    use Size::*;
+    const fn c(
+        llm: Size,
+        vis: Size,
+        aud: Size,
+        colocated: (usize, usize),
+        cornstarch: (usize, usize, usize),
+    ) -> ValmCfg {
+        ValmCfg { llm, vis, aud, colocated, cornstarch }
+    }
+    [
+        // LLM-S
+        c(S, S, S, (3, 4), (3, 1, 1)),
+        c(S, S, M, (1, 3), (3, 1, 4)),
+        c(S, S, L, (1, 4), (3, 1, 5)),
+        c(S, M, S, (2, 4), (3, 3, 1)),
+        c(S, M, M, (1, 4), (3, 2, 3)),
+        c(S, M, L, (1, 5), (3, 2, 4)),
+        c(S, L, S, (1, 4), (3, 5, 1)),
+        c(S, L, M, (1, 6), (2, 4, 3)),
+        c(S, L, L, (5, 2), (2, 3, 3)),
+        // LLM-M
+        c(M, S, S, (5, 2), (5, 1, 1)),
+        c(M, S, M, (4, 3), (5, 1, 1)),
+        c(M, S, L, (3, 4), (4, 1, 2)),
+        c(M, M, S, (4, 4), (4, 2, 1)),
+        c(M, M, M, (3, 4), (4, 1, 1)),
+        c(M, M, L, (2, 4), (3, 1, 1)),
+        c(M, L, S, (2, 4), (4, 2, 1)),
+        c(M, L, M, (2, 4), (4, 2, 2)),
+        c(M, L, L, (2, 5), (5, 1, 1)),
+        // LLM-L
+        c(L, S, S, (5, 1), (5, 1, 1)),
+        c(L, S, M, (5, 2), (5, 1, 1)),
+        c(L, S, L, (5, 2), (5, 1, 1)),
+        c(L, M, S, (4, 1), (5, 1, 1)),
+        c(L, M, M, (4, 2), (5, 1, 1)),
+        c(L, M, L, (4, 3), (5, 1, 1)),
+        c(L, L, S, (4, 2), (5, 1, 1)),
+        c(L, L, M, (4, 3), (5, 1, 1)),
+        c(L, L, L, (4, 3), (5, 1, 1)),
+    ]
+};
+
+/// Modality-parallelism comparison configs (Tables 2, 7, 8): stage counts
+/// per strategy at fixed LLM stages.
+#[derive(Clone, Copy, Debug)]
+pub struct ModalityCfg {
+    pub llm: Size,
+    pub vis: Size,
+    pub aud: Size,
+    /// (llm_pp, colocated_enc_pp).
+    pub colocated: (usize, usize),
+    /// (llm_pp, vision_pp, audio_pp).
+    pub modality: (usize, usize, usize),
+}
+
+/// Tables 2 (LLM-M), 7 (LLM-S), 8 (LLM-L).
+pub const TABLE2_7_8: &[ModalityCfg] = &{
+    use Size::*;
+    const fn c(
+        llm: Size,
+        vis: Size,
+        aud: Size,
+        colocated: (usize, usize),
+        modality: (usize, usize, usize),
+    ) -> ModalityCfg {
+        ModalityCfg { llm, vis, aud, colocated, modality }
+    }
+    [
+        // Table 7: LLM-S
+        c(S, S, S, (3, 4), (3, 1, 1)),
+        c(S, S, M, (1, 3), (3, 1, 4)),
+        c(S, S, L, (1, 4), (3, 1, 5)),
+        c(S, M, S, (2, 4), (3, 3, 1)),
+        c(S, M, M, (1, 4), (3, 2, 3)),
+        c(S, M, L, (1, 5), (3, 2, 4)),
+        c(S, L, S, (1, 4), (3, 5, 1)),
+        c(S, L, M, (1, 6), (2, 4, 3)),
+        c(S, L, L, (1, 6), (2, 3, 3)),
+        // Table 2: LLM-M (fixed 6 LLM stages)
+        c(M, S, S, (6, 1), (6, 1, 1)),
+        c(M, S, M, (6, 2), (6, 1, 1)),
+        c(M, S, L, (6, 2), (6, 1, 2)),
+        c(M, M, S, (6, 2), (6, 2, 1)),
+        c(M, M, M, (6, 3), (6, 1, 1)),
+        c(M, M, L, (6, 4), (6, 2, 2)),
+        c(M, L, S, (6, 4), (6, 3, 1)),
+        c(M, L, M, (6, 4), (6, 3, 1)),
+        c(M, L, L, (6, 5), (6, 3, 2)),
+        // Table 8: LLM-L
+        c(L, S, S, (5, 1), (5, 1, 1)),
+        c(L, S, M, (5, 2), (5, 1, 1)),
+        c(L, S, L, (5, 2), (5, 1, 1)),
+        c(L, M, S, (4, 1), (5, 1, 1)),
+        c(L, M, M, (4, 2), (5, 1, 1)),
+        c(L, M, L, (6, 1), (5, 1, 1)),
+        c(L, L, S, (4, 2), (5, 1, 1)),
+        c(L, L, M, (4, 3), (5, 1, 1)),
+        c(L, L, L, (4, 3), (5, 1, 1)),
+    ]
+};
+
+/// Frozen-awareness ablation config (Table 9): (llm_pp, enc_pp) per
+/// policy, TP per LLM size, CP = 1.
+#[derive(Clone, Copy, Debug)]
+pub struct FrozenCfg {
+    pub llm: Size,
+    pub vision: bool,
+    pub enc: Size,
+    /// frozen-UNAWARE (colocated-style fwd-balanced) stage counts.
+    pub unaware: (usize, usize),
+    /// frozen-AWARE (Cornstarch) stage counts.
+    pub aware: (usize, usize),
+    pub tp: usize,
+}
+
+/// Table 9 — pipeline-parallel configs for the §6.4 ablation.
+pub const TABLE9: &[FrozenCfg] = &{
+    use Size::*;
+    const fn c(
+        llm: Size,
+        vision: bool,
+        enc: Size,
+        unaware: (usize, usize),
+        aware: (usize, usize),
+        tp: usize,
+    ) -> FrozenCfg {
+        FrozenCfg { llm, vision, enc, unaware, aware, tp }
+    }
+    [
+        // LLM-S (tp=2)
+        c(S, true, S, (4, 4), (4, 2), 2),
+        c(S, true, M, (1, 4), (2, 4), 2),
+        c(S, true, L, (1, 5), (1, 4), 2),
+        c(S, false, S, (3, 2), (5, 1), 2),
+        c(S, false, M, (2, 3), (4, 2), 2),
+        c(S, false, L, (2, 4), (4, 3), 2),
+        // LLM-M (tp=2)
+        c(M, true, S, (3, 1), (6, 1), 2),
+        c(M, true, M, (4, 3), (5, 2), 2),
+        c(M, true, L, (3, 5), (5, 4), 2),
+        c(M, false, S, (5, 1), (6, 1), 2),
+        c(M, false, M, (4, 4), (6, 1), 2),
+        c(M, false, L, (5, 5), (4, 2), 2),
+        // LLM-L (tp=4: CP off would OOM per Appendix D)
+        c(L, true, S, (3, 5), (5, 1), 4),
+        c(L, true, M, (5, 1), (5, 1), 4),
+        c(L, true, L, (4, 2), (4, 1), 4),
+        c(L, false, S, (5, 1), (5, 1), 4),
+        c(L, false, M, (3, 1), (5, 1), 4),
+        c(L, false, L, (4, 2), (5, 1), 4),
+    ]
+};
+
+/// Human name of a single-encoder model (`VLM-L`, `ALM-S`...).
+pub fn single_enc_name(vision: bool, enc: Size) -> String {
+    format!("{}-{}", if vision { "VLM" } else { "ALM" }, enc.letter())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_covers_the_grid() {
+        assert_eq!(TABLE5.len(), 18); // 3 llm x {VLM,ALM} x 3 enc
+        for llm in Size::ALL {
+            for vision in [true, false] {
+                for enc in Size::ALL {
+                    assert!(
+                        TABLE5.iter().any(|c| c.llm == llm
+                            && c.vision == vision
+                            && c.enc == enc),
+                        "missing {llm:?} {vision} {enc:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table6_covers_the_grid() {
+        assert_eq!(TABLE6.len(), 27); // 3 llm x 3 vis x 3 aud
+    }
+
+    #[test]
+    fn stage_counts_fit_the_testbed() {
+        // 24 GPUs / (tp=2 x cp=2) = 6 device groups max per module config
+        for c in TABLE5 {
+            assert!(c.colocated.0 <= 6 && c.colocated.1 <= 6);
+            assert!(c.cornstarch.0 <= 6 && c.cornstarch.1 <= 6);
+        }
+        for c in TABLE9 {
+            assert!(c.aware.0 + c.aware.1 <= 12);
+        }
+    }
+
+    #[test]
+    fn table2_7_8_has_three_llm_sizes() {
+        for llm in Size::ALL {
+            assert_eq!(
+                TABLE2_7_8.iter().filter(|c| c.llm == llm).count(),
+                9,
+                "{llm:?}"
+            );
+        }
+    }
+}

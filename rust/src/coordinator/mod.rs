@@ -1,0 +1,285 @@
+//! Leader entrypoint: glue from CLI → plan → build → run, plus the
+//! `reproduce` harness that regenerates every table and figure of the
+//! paper's evaluation (see [`experiments`]).
+
+pub mod configs;
+pub mod experiments;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{MllmSpec, Size};
+use crate::runtime::Manifest;
+use crate::train::{
+    FrozenPolicy, PipelineTrainer, SyntheticDataset, Trainer,
+};
+use crate::util::json::Json;
+
+pub use experiments::{E2eRow, FrozenRow, MaskType};
+
+/// Run one named experiment (or `all`). Returns the rendered report.
+pub fn reproduce(which: &str) -> Result<String> {
+    let mut out = String::new();
+    let mut push = |t: crate::util::table::Table| {
+        out.push_str(&t.render());
+        out.push('\n');
+    };
+    let all = which == "all";
+    let mut known = false;
+    if all || which == "table1" {
+        known = true;
+        push(experiments::table1());
+    }
+    if all || which == "fig2" {
+        known = true;
+        push(experiments::fig2().0);
+    }
+    if all || which == "fig3b" {
+        known = true;
+        push(experiments::fig3b());
+    }
+    if all || which == "fig9" || which == "fig13" || which == "fig14" {
+        known = true;
+        let sizes: &[Size] = if all {
+            &[Size::S, Size::M, Size::L]
+        } else {
+            match which {
+                "fig9" => &[Size::M],
+                "fig13" => &[Size::S],
+                _ => &[Size::L],
+            }
+        };
+        for &s in sizes {
+            push(experiments::fig9_13_14(s).0);
+        }
+    }
+    if all || which == "fig10" || which == "fig15" {
+        known = true;
+        let sizes: &[Size] = if all {
+            &[Size::S, Size::M, Size::L]
+        } else if which == "fig10" {
+            &[Size::M]
+        } else {
+            &[Size::S, Size::L]
+        };
+        for &s in sizes {
+            push(experiments::fig10_15(s).0);
+        }
+    }
+    if all || which == "table2" || which == "table7" || which == "table8" {
+        known = true;
+        let sizes: &[Size] = if all {
+            &[Size::S, Size::M, Size::L]
+        } else {
+            match which {
+                "table7" => &[Size::S],
+                "table8" => &[Size::L],
+                _ => &[Size::M],
+            }
+        };
+        for &s in sizes {
+            push(experiments::table2_7_8(s).0);
+        }
+    }
+    if all || which == "table3" || which == "table10" || which == "table11" {
+        known = true;
+        let sizes: &[Size] = if all {
+            &[Size::S, Size::M, Size::L]
+        } else {
+            match which {
+                "table10" => &[Size::S],
+                "table11" => &[Size::L],
+                _ => &[Size::M],
+            }
+        };
+        for &s in sizes {
+            push(experiments::table3_10_11(s).0);
+        }
+    }
+    if all || which == "table4" {
+        known = true;
+        let runs = if all { 20 } else { 50 };
+        push(experiments::table4(runs).0);
+    }
+    if all || which == "fig12" {
+        known = true;
+        push(experiments::fig12());
+    }
+    if all || which == "auto" {
+        known = true;
+        push(experiments::auto_frontier(
+            &MllmSpec::valm(Size::M, Size::M, Size::M),
+            6,
+        ));
+    }
+    if !known {
+        bail!(
+            "unknown experiment {which:?}; known: all, table1, fig2, fig3b, \
+             fig9, fig10, fig13, fig14, fig15, table2, table3, table4, \
+             table7, table8, table10, table11, fig12, auto"
+        );
+    }
+    Ok(out)
+}
+
+/// Training driver options.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub model: String,
+    pub steps: usize,
+    pub microbatches: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub policy: FrozenPolicy,
+    /// true = thread-per-stage pipeline executor; false = single process.
+    pub pipelined: bool,
+    /// Optional JSON path for the loss curve.
+    pub log_json: Option<String>,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            model: "tiny".to_string(),
+            steps: 20,
+            microbatches: 4,
+            lr: 1e-3,
+            seed: 42,
+            policy: FrozenPolicy::paper(),
+            pipelined: true,
+            log_json: None,
+        }
+    }
+}
+
+/// Run a training job against the AOT artifacts; returns the loss curve.
+pub fn train(opts: &TrainOpts) -> Result<Vec<f32>> {
+    let manifest = Manifest::load(Manifest::default_root())
+        .context("loading artifacts (run `make artifacts` first)")?;
+    let model = manifest.model(&opts.model)?.clone();
+    let ds = SyntheticDataset::new(&model, opts.seed);
+    let mut losses = Vec::with_capacity(opts.steps);
+    let mut wall = Vec::with_capacity(opts.steps);
+
+    let mut run = |stats: crate::train::StepStats| {
+        println!(
+            "step {:>4}  loss {:.4}  ({:.0} ms, {} mb)",
+            stats.step, stats.loss, stats.wall_ms, stats.microbatches
+        );
+        losses.push(stats.loss);
+        wall.push(stats.wall_ms);
+    };
+
+    if opts.pipelined {
+        let mut tr =
+            PipelineTrainer::new(&manifest, &opts.model, opts.policy, opts.lr)?;
+        println!(
+            "pipeline executor: {} stages (modality-parallel encoders + LLM chain)",
+            tr.n_stages()
+        );
+        for step in 0..opts.steps {
+            let batch: Vec<_> = (0..opts.microbatches)
+                .map(|i| ds.sample((step * opts.microbatches + i) as u64))
+                .collect();
+            run(tr.train_step(&batch)?);
+        }
+    } else {
+        let mut tr =
+            Trainer::new(&manifest, &opts.model, opts.policy, opts.lr)?;
+        for step in 0..opts.steps {
+            let batch: Vec<_> = (0..opts.microbatches)
+                .map(|i| ds.sample((step * opts.microbatches + i) as u64))
+                .collect();
+            run(tr.train_step(&batch)?);
+        }
+    }
+
+    if let Some(path) = &opts.log_json {
+        let loss64: Vec<f64> = losses.iter().map(|&x| x as f64).collect();
+        let j = Json::obj(vec![
+            ("model", Json::Str(opts.model.clone())),
+            ("steps", Json::Int(opts.steps as i64)),
+            ("microbatches", Json::Int(opts.microbatches as i64)),
+            ("lr", Json::Num(opts.lr as f64)),
+            ("loss", Json::arr_f64(&loss64)),
+            ("wall_ms", Json::arr_f64(&wall)),
+        ]);
+        std::fs::write(path, j.render())?;
+        println!("wrote {path}");
+    }
+    Ok(losses)
+}
+
+/// Cross-check the CP workload model against real PJRT execution of the
+/// BAM-attention artifact: the measured time ordering across mask types
+/// must match the workload ordering (the quantity both the paper's Table 4
+/// and our model measure is unmasked (q,k) pairs).
+pub fn attn_crosscheck(artifact: &str, repeats: usize) -> Result<String> {
+    use crate::runtime::AttnRuntime;
+    use crate::util::rng::Rng;
+
+    let manifest = Manifest::load(Manifest::default_root())?;
+    let rt = AttnRuntime::load(&manifest, artifact)?;
+    let t = rt.spec.tokens;
+    let h = rt.spec.heads;
+    let d = rt.spec.head_dim;
+    let mut rng = Rng::new(0xA77);
+    let n = t * h * d;
+    let mk = |rng: &mut Rng| -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect()
+    };
+    let q = mk(&mut rng);
+    let k = mk(&mut rng);
+    let v = mk(&mut rng);
+
+    let mut table = crate::util::table::Table::new(
+        &format!("PJRT cross-check — {artifact} (T={t}, H={h}, D={d})"),
+        &["mask", "unmasked pairs", "measured ms (median)"],
+    );
+    for mt in MaskType::ALL {
+        let mut mask_rng = Rng::new(0xBEE ^ t as u64);
+        let mask = mt.random(&mut mask_rng, t);
+        // pad/trim mask to exactly t tokens (generators may round)
+        let mut bits = mask.bits.clone();
+        bits.resize(t, *bits.last().unwrap());
+        let bam = crate::bam::Bam::new(bits, mask.text_mask);
+        let pairs: u64 = bam.workloads().iter().sum();
+        let bits_i32 = bam.bits_i32();
+        let pos_i32 = bam.pos_i32();
+        let mut times = Vec::new();
+        for _ in 0..repeats {
+            let (_, ms) = rt.run(&q, &k, &v, &bits_i32, &pos_i32)?;
+            times.push(ms);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = times[times.len() / 2];
+        table.row(&[
+            mt.name().to_string(),
+            pairs.to_string(),
+            format!("{med:.2}"),
+        ]);
+    }
+    Ok(table.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduce_rejects_unknown() {
+        assert!(reproduce("figNaN").is_err());
+    }
+
+    #[test]
+    fn reproduce_fig2_renders() {
+        let r = reproduce("fig2").unwrap();
+        assert!(r.contains("Cornstarch"));
+        assert!(r.contains("Encoders-replicated"));
+    }
+
+    #[test]
+    fn reproduce_fig12_renders() {
+        let r = reproduce("fig12").unwrap();
+        assert!(r.contains("Zigzag"));
+    }
+}

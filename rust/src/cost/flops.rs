@@ -1,0 +1,55 @@
+//! Dense-transformer flop counting.
+
+use crate::model::ModuleGeom;
+
+/// Forward flops of ONE transformer layer over `tokens` tokens.
+///
+/// * QKV/O projections: `8·T·h²`  (4 matmuls, 2 flops/MAC)
+/// * attention scores + weighted values: `4·T²·h·density`
+/// * MLP: `4·T·h·d_ff` (2 matmuls)
+pub fn layer_flops_fwd(geom: &ModuleGeom, tokens: usize, attn_density: f64) -> f64 {
+    let t = tokens as f64;
+    let h = geom.hidden as f64;
+    let f = geom.d_ff as f64;
+    8.0 * t * h * h + 4.0 * t * t * h * attn_density + 4.0 * t * h * f
+}
+
+/// Forward flops of the whole module.
+pub fn module_flops_fwd(geom: &ModuleGeom, tokens: usize, attn_density: f64) -> f64 {
+    geom.n_layers as f64 * layer_flops_fwd(geom, tokens, attn_density)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_nd_rule_of_thumb() {
+        // For T << h the projections dominate: fwd flops ≈ 2·params·T
+        // (the classic 6ND rule has fwd = 2ND, bwd = 4ND).
+        let g = ModuleGeom::new("x", 32, 4096);
+        let t = 128; // T << h
+        let flops = module_flops_fwd(&g, t, 0.5);
+        let rule = 2.0 * g.params() as f64 * t as f64;
+        let ratio = flops / rule;
+        assert!((0.9..1.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn quadratic_term_appears_at_long_context() {
+        let g = ModuleGeom::new("x", 1, 1024);
+        let f1 = layer_flops_fwd(&g, 1024, 1.0);
+        let f2 = layer_flops_fwd(&g, 2048, 1.0);
+        // more than 2x because of the T² attention term
+        assert!(f2 / f1 > 2.0);
+    }
+
+    #[test]
+    fn density_halves_attention_only() {
+        let g = ModuleGeom::new("x", 1, 512);
+        let full = layer_flops_fwd(&g, 4096, 1.0);
+        let causal = layer_flops_fwd(&g, 4096, 0.5);
+        let attn = 4.0 * 4096.0f64 * 4096.0 * 512.0;
+        assert!((full - causal - attn / 2.0).abs() < 1.0);
+    }
+}

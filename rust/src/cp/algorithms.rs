@@ -1,0 +1,159 @@
+//! The four token-distribution algorithms compared in Table 4.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Distribution;
+use crate::util::rng::Rng;
+
+/// Enum-dispatch over the distribution algorithms (object safety not
+/// needed; benches iterate a `Vec<Algorithm>`).
+#[derive(Clone, Debug)]
+pub enum Algorithm {
+    Lpt,
+    Random { seed: u64 },
+    Zigzag,
+    Ring,
+}
+
+impl Algorithm {
+    pub fn assign(&self, w: &[u64], g: usize) -> Vec<usize> {
+        match self {
+            Algorithm::Lpt => lpt(w, g),
+            Algorithm::Random { seed } => random(w, g, *seed),
+            Algorithm::Zigzag => zigzag(w, g),
+            Algorithm::Ring => ring(w, g),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Lpt => "LPT",
+            Algorithm::Random { .. } => "Random",
+            Algorithm::Zigzag => "Zigzag",
+            Algorithm::Ring => "Naive Ring",
+        }
+    }
+}
+
+impl Distribution for Algorithm {
+    fn assign(&self, w: &[u64], g: usize) -> Vec<usize> {
+        Algorithm::assign(self, w, g)
+    }
+    fn name(&self) -> &'static str {
+        Algorithm::name(self)
+    }
+}
+
+/// Greedy Longest-Processing-Time-First (the paper's Algorithm 2).
+///
+/// Sort blocks by workload descending; pop the least-loaded rank from a
+/// min-heap for each block. `O(B log B + B log G)`; Graham's bound puts
+/// the result within `(4/3 − 1/3G)·OPT`, and within `mean + t_max` of
+/// perfect balance — negligible as `T` grows (§4.3.2).
+pub fn lpt(w: &[u64], g: usize) -> Vec<usize> {
+    assert!(g > 0);
+    let mut order: Vec<usize> = (0..w.len()).collect();
+    order.sort_unstable_by_key(|&i| Reverse(w[i]));
+    // Min-heap of (load, rank); Reverse for min-ordering. Ties broken by
+    // rank id for determinism.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..g).map(|r| Reverse((0u64, r))).collect();
+    let mut assign = vec![0usize; w.len()];
+    for i in order {
+        let Reverse((load, r)) = heap.pop().expect("g > 0");
+        assign[i] = r;
+        heap.push(Reverse((load + w[i], r)));
+    }
+    assign
+}
+
+/// Uniform random rank per block (§5.3). For `T >> G²` the Chernoff bound
+/// keeps the deviation from perfect balance negligible, and assignment is
+/// O(B) with no sort — the paper recommends it when a non-all-gather CP
+/// backend makes LPT's bookkeeping impractical.
+pub fn random(w: &[u64], g: usize, seed: u64) -> Vec<usize> {
+    assert!(g > 0);
+    let mut rng = Rng::new(seed);
+    (0..w.len()).map(|_| rng.below(g as u64) as usize).collect()
+}
+
+/// Zigzag distribution (Figure 4a): split into `2G` contiguous chunks;
+/// rank `i` takes chunks `i` and `2G−1−i`. Perfect for causal masks.
+pub fn zigzag(w: &[u64], g: usize) -> Vec<usize> {
+    assert!(g > 0);
+    let b = w.len();
+    let chunks = 2 * g;
+    let mut assign = vec![0usize; b];
+    for (i, a) in assign.iter_mut().enumerate() {
+        // chunk of block i with ceil-balanced chunk sizes
+        let c = i * chunks / b.max(1);
+        let c = c.min(chunks - 1);
+        *a = if c < g { c } else { chunks - 1 - c };
+    }
+    assign
+}
+
+/// Naive ring attention placement: `G` contiguous equal chunks.
+pub fn ring(w: &[u64], g: usize) -> Vec<usize> {
+    assert!(g > 0);
+    let b = w.len();
+    (0..b).map(|i| (i * g / b.max(1)).min(g - 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lpt_two_ranks_classic() {
+        // workloads 7,6,5,4 -> LPT gives {7,4} and {6,5}: makespan 11.
+        let a = lpt(&[7, 6, 5, 4], 2);
+        let loads = crate::cp::rank_loads(&[7, 6, 5, 4], &a, 2);
+        let mut l = loads.clone();
+        l.sort_unstable();
+        assert_eq!(l, vec![11, 11]);
+    }
+
+    #[test]
+    fn lpt_is_deterministic() {
+        let w = [3, 1, 4, 1, 5, 9, 2, 6];
+        assert_eq!(lpt(&w, 3), lpt(&w, 3));
+    }
+
+    #[test]
+    fn zigzag_pairs_head_and_tail() {
+        // 8 blocks, 2 ranks -> chunks [0,1,2,3] of 2 blocks each;
+        // rank0 = chunks 0,3; rank1 = chunks 1,2.
+        let a = zigzag(&[1; 8], 2);
+        assert_eq!(a, vec![0, 0, 1, 1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn ring_contiguous() {
+        let a = ring(&[1; 6], 3);
+        assert_eq!(a, vec![0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn ring_uneven_lengths() {
+        let a = ring(&[1; 7], 3);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "{a:?}");
+        assert_eq!(*a.last().unwrap(), 2);
+    }
+
+    #[test]
+    fn random_deterministic_per_seed() {
+        let w = [1u64; 100];
+        assert_eq!(random(&w, 4, 9), random(&w, 4, 9));
+        assert_ne!(random(&w, 4, 9), random(&w, 4, 10));
+    }
+
+    #[test]
+    fn single_rank_degenerates() {
+        let w = [5u64, 3, 8];
+        for alg in [Algorithm::Lpt, Algorithm::Zigzag, Algorithm::Ring] {
+            assert_eq!(alg.assign(&w, 1), vec![0, 0, 0], "{}", alg.name());
+        }
+    }
+}

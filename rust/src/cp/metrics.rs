@@ -1,0 +1,129 @@
+//! Assignment metrics: per-rank loads, makespan, and the attention-time
+//! model used by the Table 4 / Figure 12 reproductions.
+
+/// A block→rank assignment together with its block workloads.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    pub rank_of_block: Vec<usize>,
+    pub g: usize,
+}
+
+/// Sum of block workloads per rank.
+pub fn rank_loads(w: &[u64], assign: &[usize], g: usize) -> Vec<u64> {
+    assert_eq!(w.len(), assign.len());
+    let mut loads = vec![0u64; g];
+    for (i, &r) in assign.iter().enumerate() {
+        loads[r] += w[i];
+    }
+    loads
+}
+
+/// Max per-rank load — the quantity `C` the §4.3.2 ILP minimizes.
+pub fn makespan(w: &[u64], assign: &[usize], g: usize) -> u64 {
+    rank_loads(w, assign, g).into_iter().max().unwrap_or(0)
+}
+
+/// Attention execution-time model for a context-parallel step, ms.
+///
+/// The all-gather CP implementation (§5.3, Llama-3 style) computes
+/// row-wise attention for local tokens against all gathered keys: a rank's
+/// time is proportional to its summed row workloads (unmasked (q,k)
+/// pairs), plus a per-local-token linear term (projections, softmax
+/// normalization) and a fixed launch/collective overhead. Calibrated
+/// against the paper's Table 4 (Llama-3.1-70B geometry on A40s); the
+/// *relative* numbers are what the reproduction checks.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnTimeModel {
+    /// ms per unmasked (q,k) pair per head-dim-normalized unit.
+    pub ms_per_pair: f64,
+    /// ms per local query token (projection + rescale work).
+    pub ms_per_token: f64,
+    /// fixed per-step overhead (launches, all-gather latency), ms.
+    pub overhead_ms: f64,
+}
+
+impl AttnTimeModel {
+    /// Llama-3.1 70B single attention layer, calibrated to the paper's
+    /// Table 4 testbed (FlexAttention block-sparse kernels on A40s): the
+    /// per-pair rate is fit so the 64k-token EP/LPT row lands at the
+    /// paper's ~25 ms, the per-token term covers the non-quadratic share
+    /// visible between the 16k and 64k rows. Only *relative* numbers
+    /// (which algorithm wins, by what factor) are asserted by tests.
+    pub fn llama70b_a40() -> Self {
+        AttnTimeModel {
+            ms_per_pair: 8.5e-8,
+            ms_per_token: 2.5e-4,
+            overhead_ms: 0.15,
+        }
+    }
+
+    /// Time for one rank holding `local_tokens` queries with summed
+    /// workload `load` (unmasked pairs).
+    pub fn rank_ms(&self, load: u64, local_tokens: u64) -> f64 {
+        self.overhead_ms
+            + self.ms_per_pair * load as f64
+            + self.ms_per_token * local_tokens as f64
+    }
+
+    /// Step time = slowest rank (ranks synchronize at the collective).
+    pub fn step_ms(&self, loads: &[u64], local_tokens: &[u64]) -> f64 {
+        loads
+            .iter()
+            .zip(local_tokens)
+            .map(|(&l, &t)| self.rank_ms(l, t))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Per-rank local token counts for an assignment over fixed-size blocks.
+pub fn rank_tokens(
+    assign: &[usize],
+    block_size: usize,
+    total_tokens: usize,
+    g: usize,
+) -> Vec<u64> {
+    let mut toks = vec![0u64; g];
+    for (b, &r) in assign.iter().enumerate() {
+        let start = b * block_size;
+        let end = ((b + 1) * block_size).min(total_tokens);
+        toks[r] += (end - start) as u64;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_and_makespan() {
+        let w = [4u64, 3, 2, 1];
+        let a = [0usize, 1, 0, 1];
+        assert_eq!(rank_loads(&w, &a, 2), vec![6, 4]);
+        assert_eq!(makespan(&w, &a, 2), 6);
+    }
+
+    #[test]
+    fn rank_tokens_handles_short_tail() {
+        // 10 tokens, block 4 -> blocks of 4,4,2
+        let toks = rank_tokens(&[0, 1, 0], 4, 10, 2);
+        assert_eq!(toks, vec![6, 4]);
+    }
+
+    #[test]
+    fn step_time_is_max_rank() {
+        let m = AttnTimeModel {
+            ms_per_pair: 1.0,
+            ms_per_token: 0.0,
+            overhead_ms: 0.0,
+        };
+        assert_eq!(m.step_ms(&[3, 9, 1], &[0, 0, 0]), 9.0);
+    }
+
+    #[test]
+    fn model_orders_match_workload_orders() {
+        let m = AttnTimeModel::llama70b_a40();
+        assert!(m.rank_ms(1000, 10) < m.rank_ms(5000, 10));
+        assert!(m.rank_ms(1000, 10) < m.rank_ms(1000, 50));
+    }
+}

@@ -1,0 +1,160 @@
+//! Context-parallel token distribution — §4.3.2.
+//!
+//! Given per-block workloads (row-sums of the BAM mask aggregated at block
+//! granularity) and `G` ranks, a [`Distribution`] assigns each block to a
+//! rank. Makespan (max per-rank workload) is what the attention step costs,
+//! so balancing it is makespan-minimization scheduling (NP-hard; the paper
+//! formulates the ILP and solves greedily):
+//!
+//! * [`lpt`] — the paper's greedy Longest-Processing-Time-First
+//!   (Algorithm 2): sort blocks by workload descending, repeatedly give the
+//!   next block to the least-loaded rank. Worst case `OPT + t_max`
+//!   (Graham), `O(B log B + B log G)` with a binary heap.
+//! * [`random`] — §5.3's fallback: uniform random rank per block; within
+//!   Chernoff-bound distance of balanced when `T >> G²`.
+//! * [`zigzag`] — the LLM-causal baseline (Figure 4a): rank `i` takes
+//!   chunks `i` and `2G-1-i` of `2G` contiguous chunks. Perfect for causal
+//!   masks, imbalanced for multimodal ones (Figure 4b).
+//! * [`ring`] — naive ring attention: contiguous equal chunks.
+//! * [`exact`] — branch-and-bound ILP solver for small instances; the
+//!   test oracle for LPT's approximation quality.
+
+pub mod algorithms;
+pub mod exact;
+pub mod metrics;
+
+pub use algorithms::{lpt, random, ring, zigzag, Algorithm};
+pub use exact::exact_min_makespan;
+pub use metrics::{makespan, rank_loads, Assignment};
+
+/// A token/block distribution policy.
+pub trait Distribution {
+    /// Map each block index to a rank in `[0, g)`.
+    fn assign(&self, block_workloads: &[u64], g: usize) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::rng::Rng;
+
+    fn all_algorithms() -> Vec<Algorithm> {
+        vec![
+            Algorithm::Lpt,
+            Algorithm::Random { seed: 7 },
+            Algorithm::Zigzag,
+            Algorithm::Ring,
+        ]
+    }
+
+    #[test]
+    fn assignments_are_total_and_in_range() {
+        check("every block assigned to a valid rank", 40, |gen| {
+            let w = gen.vec_u64(1..200, 1000);
+            let g = gen.usize(1, 9);
+            for alg in all_algorithms() {
+                let a = alg.assign(&w, g);
+                assert_eq!(a.len(), w.len(), "{}", alg.name());
+                assert!(a.iter().all(|&r| r < g), "{}", alg.name());
+            }
+        });
+    }
+
+    #[test]
+    fn workload_is_conserved() {
+        check("sum of rank loads == total workload", 40, |gen| {
+            let w = gen.vec_u64(1..200, 1000);
+            let g = gen.usize(1, 9);
+            let total: u64 = w.iter().sum();
+            for alg in all_algorithms() {
+                let a = alg.assign(&w, g);
+                let loads = rank_loads(&w, &a, g);
+                assert_eq!(loads.iter().sum::<u64>(), total, "{}", alg.name());
+            }
+        });
+    }
+
+    #[test]
+    fn lpt_never_worse_than_contiguous_ring() {
+        check("LPT makespan <= ring makespan", 40, |gen| {
+            let w = gen.vec_u64(8..300, 1000);
+            let g = gen.usize(2, 9);
+            let m_lpt = makespan(&w, &Algorithm::Lpt.assign(&w, g), g);
+            let m_ring = makespan(&w, &Algorithm::Ring.assign(&w, g), g);
+            assert!(m_lpt <= m_ring, "lpt {m_lpt} > ring {m_ring}");
+        });
+    }
+
+    #[test]
+    fn lpt_within_graham_bound_of_exact() {
+        // LPT <= (4/3 - 1/(3G)) * OPT (Graham 1969).
+        check("LPT within Graham bound", 25, |gen| {
+            let b = gen.usize(4, 13);
+            let w: Vec<u64> = (0..b).map(|_| gen.rng.below(100) + 1).collect();
+            let g = gen.usize(2, 5);
+            let opt = exact_min_makespan(&w, g);
+            let got = makespan(&w, &Algorithm::Lpt.assign(&w, g), g);
+            let bound = (4.0 / 3.0 - 1.0 / (3.0 * g as f64)) * opt as f64;
+            assert!(
+                got as f64 <= bound + 1e-9,
+                "LPT {got} vs OPT {opt} (bound {bound})"
+            );
+        });
+    }
+
+    #[test]
+    fn zigzag_is_perfect_on_causal_workloads() {
+        // Causal text: W_i = i+1. With B = 2G equal-size chunks the zigzag
+        // pairing (i, 2G-1-i) gives every rank the same total (Figure 4a).
+        for g in [2usize, 4, 8] {
+            let b = 2 * g;
+            // workload of chunk c of a causal mask with chunk size s:
+            // sum_{i=cs}^{cs+s-1} (i+1) — use s=16.
+            let s = 16u64;
+            let w: Vec<u64> = (0..b as u64)
+                .map(|c| (0..s).map(|i| c * s + i + 1).sum())
+                .collect();
+            let a = Algorithm::Zigzag.assign(&w, g);
+            let loads = rank_loads(&w, &a, g);
+            assert!(
+                loads.iter().all(|&l| l == loads[0]),
+                "zigzag causal loads {loads:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn random_balances_large_t() {
+        // T >> G^2 (paper §5.3): random is close to balanced.
+        let mut rng = Rng::new(3);
+        let w: Vec<u64> = (0..40_000).map(|_| rng.below(64) + 1).collect();
+        let g = 8;
+        let a = Algorithm::Random { seed: 11 }.assign(&w, g);
+        let loads: Vec<f64> =
+            rank_loads(&w, &a, g).iter().map(|&l| l as f64).collect();
+        let imb = crate::util::stats::imbalance(&loads);
+        assert!(imb < 1.03, "random imbalance {imb}");
+    }
+
+    #[test]
+    fn lpt_beats_zigzag_on_multimodal_masks() {
+        // The paper's core CP claim: on EE/MP masks LPT balances better
+        // than zigzag (Table 4 / Figure 12).
+        let mut rng = Rng::new(5);
+        let mut lpt_wins = 0;
+        let n = 20;
+        for _ in 0..n {
+            let m = crate::bam::generators::random_ee(&mut rng, 4096, 3);
+            let w = crate::bam::block_workloads(&m.workloads(), 64);
+            let g = 8;
+            let m_l = makespan(&w, &Algorithm::Lpt.assign(&w, g), g);
+            let m_z = makespan(&w, &Algorithm::Zigzag.assign(&w, g), g);
+            if m_l <= m_z {
+                lpt_wins += 1;
+            }
+        }
+        assert!(lpt_wins >= n * 9 / 10, "LPT won only {lpt_wins}/{n}");
+    }
+}

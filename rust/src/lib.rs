@@ -1,0 +1,42 @@
+//! # Cornstarch (reproduction): multimodality-aware distributed MLLM training
+//!
+//! Rust L3 coordinator of the three-layer stack (see `DESIGN.md`):
+//!
+//! * [`modality`] — the paper's programming model: `MultimodalModule`
+//!   execution DAGs, `ParallelSpec`s, and the loosely-coupled
+//!   auto-parallelization of §5.2 (Algorithm 1), plus the two baseline
+//!   planners (encoders-colocated, encoders-replicated).
+//! * [`pipeline`] — frozen-status-aware pipeline partitioning (§4.2) and
+//!   heterogeneous 1F1B schedule construction over the modality-parallel
+//!   DAG (§4.1).
+//! * [`bam`] — the Bitfield Attention Mask (§4.3.1): `u64` bitfields,
+//!   mask semantics identical to `python/compile/kernels/ref.py`, EP/EE/MP
+//!   mask generators, and O(T·V) workload computation that never
+//!   materializes the `[T,T]` mask.
+//! * [`cp`] — context-parallel token distribution (§4.3.2): greedy LPT,
+//!   random, zigzag and naive-ring baselines, and an exact branch-and-bound
+//!   solver for small instances (the ILP of §4.3.2).
+//! * [`cost`] — the analytic execution-time model (flops-derived, frozen
+//!   rule backward times) calibrated against the paper's Figure 3b.
+//! * [`sim`] — a discrete-event cluster simulator that replays pipeline
+//!   schedules to produce the paper's tables and figures.
+//! * [`runtime`] — PJRT execution of the AOT artifacts emitted by
+//!   `python/compile/aot.py` (HLO text; python never runs at train time).
+//! * [`train`] — the real thing: a thread-per-stage 1F1B training executor
+//!   over PJRT with frozen-aware backward selection and AdamW.
+//! * [`coordinator`] — leader entrypoint gluing plan → build → run, and
+//!   the `reproduce` harness that regenerates every evaluation table and
+//!   figure of the paper.
+
+pub mod util;
+pub mod model;
+pub mod bam;
+pub mod cp;
+pub mod cost;
+pub mod modality;
+pub mod pipeline;
+pub mod sim;
+pub mod runtime;
+pub mod train;
+pub mod coordinator;
+pub mod bench;

@@ -1,0 +1,210 @@
+//! `cornstarch` — the leader CLI.
+//!
+//! ```text
+//! cornstarch reproduce <exp|all>        regenerate a paper table/figure
+//! cornstarch train [opts]               train a model over the artifacts
+//! cornstarch plan <mllm> [opts]         print a parallelization plan
+//! cornstarch auto <mllm> [--groups N]   Algorithm 1 frontier
+//! cornstarch attn-check [--artifact A]  PJRT cross-check of the CP model
+//! cornstarch list-models                artifacts available to `train`
+//! ```
+//!
+//! `<mllm>` names follow §6.1: `VLM-M`, `ALM-L`, `VALM-SM`…, optionally
+//! prefixed with an LLM size (`llm=S`).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use cornstarch::coordinator::{self, TrainOpts};
+use cornstarch::cost::Device;
+use cornstarch::modality::{
+    planner, MultimodalModule, MultimodalParallelSpec, Strategy,
+};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::runtime::Manifest;
+use cornstarch::train::FrozenPolicy;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "reproduce" => {
+            let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+            print!("{}", coordinator::reproduce(which)?);
+        }
+        "train" => {
+            let opts = parse_train(rest)?;
+            let losses = coordinator::train(&opts)?;
+            let first = losses.first().copied().unwrap_or(f32::NAN);
+            let last = losses.last().copied().unwrap_or(f32::NAN);
+            println!("loss: {first:.4} -> {last:.4} over {} steps", losses.len());
+        }
+        "plan" => {
+            let spec = parse_mllm(rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"), rest)?;
+            let strategy = match flag(rest, "--strategy").as_deref() {
+                None | Some("cornstarch") => Strategy::Cornstarch,
+                Some("colocated") => Strategy::Colocated,
+                Some("replicated") => Strategy::Replicated,
+                Some(s) => bail!("unknown strategy {s}"),
+            };
+            let llm_pp = flag_num(rest, "--llm-pp")?.unwrap_or(4);
+            let enc_pp = flag_num(rest, "--enc-pp")?.unwrap_or(1);
+            let mm = MultimodalModule::from_spec(&spec);
+            let n_enc = mm.encoders.len();
+            let ps = MultimodalParallelSpec::paper_default(
+                &vec![enc_pp; n_enc],
+                llm_pp,
+                flag_num(rest, "--tp")?.unwrap_or(2),
+                flag_num(rest, "--cp")?.unwrap_or(2),
+            );
+            let plan = planner::plan(strategy, &mm, &ps, Device::a40());
+            let m = plan.simulate();
+            println!("{} / {}", spec.name(), strategy.name());
+            println!("  stages:");
+            for (name, node) in plan.stage_names.iter().zip(&plan.graph.nodes)
+            {
+                println!(
+                    "    {:<16} dev {:<2} fwd {:>8.2} ms  bwd {:>8.2} ms",
+                    name, node.device, node.cost.fwd_ms, node.cost.bwd_ms
+                );
+            }
+            let (lo, hi) = plan.stage_time_range();
+            println!("  stage fwd+bwd range: {lo:.1} ~ {hi:.1} ms");
+            println!(
+                "  iteration {:.1} ms | {:.2} input/s | {:.3} input/s/GPU ({} GPUs) | bubble {:.1}%",
+                m.iteration_ms,
+                m.throughput,
+                m.throughput_per_gpu,
+                plan.n_gpus,
+                m.bubble_ratio * 100.0
+            );
+        }
+        "auto" => {
+            let spec = parse_mllm(
+                rest.first().map(|s| s.as_str()).unwrap_or("VALM-MM"),
+                rest,
+            )?;
+            let groups = flag_num(rest, "--groups")?.unwrap_or(6);
+            print!(
+                "{}",
+                coordinator::experiments::auto_frontier(&spec, groups)
+                    .render()
+            );
+        }
+        "attn-check" => {
+            let artifact =
+                flag(rest, "--artifact").unwrap_or_else(|| "attn512".into());
+            let repeats = flag_num(rest, "--repeats")?.unwrap_or(5);
+            print!("{}", coordinator::attn_crosscheck(&artifact, repeats)?);
+        }
+        "list-models" => {
+            let m = Manifest::load(Manifest::default_root())
+                .context("run `make artifacts` first")?;
+            for model in &m.models {
+                println!(
+                    "{:<10} tokens={} components={} llm_stages={}",
+                    model.name,
+                    model.total_tokens,
+                    model.components.len(),
+                    model.n_llm_stages()
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print_help(),
+        other => bail!("unknown command {other:?} (try `cornstarch help`)"),
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "cornstarch — multimodality-aware distributed MLLM training \
+         (paper reproduction)\n\n\
+         commands:\n  \
+         reproduce <exp|all>   regenerate paper tables/figures\n  \
+         train [--model M] [--steps N] [--microbatches N] [--lr X]\n        \
+         [--single-process] [--policy paper|all|frozen] [--log-json P]\n  \
+         plan <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n  \
+         auto <MLLM> [--groups N]\n  \
+         attn-check [--artifact attn512] [--repeats N]\n  \
+         list-models"
+    );
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn flag_num(args: &[String], name: &str) -> Result<Option<usize>> {
+    flag(args, name)
+        .map(|v| v.parse::<usize>().map_err(|_| anyhow!("{name} wants a number, got {v:?}")))
+        .transpose()
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn parse_train(args: &[String]) -> Result<TrainOpts> {
+    let mut o = TrainOpts::default();
+    if let Some(m) = flag(args, "--model") {
+        o.model = m;
+    }
+    if let Some(s) = flag_num(args, "--steps")? {
+        o.steps = s;
+    }
+    if let Some(m) = flag_num(args, "--microbatches")? {
+        o.microbatches = m;
+    }
+    if let Some(lr) = flag(args, "--lr") {
+        o.lr = lr.parse().map_err(|_| anyhow!("bad --lr {lr:?}"))?;
+    }
+    if let Some(s) = flag_num(args, "--seed")? {
+        o.seed = s as u64;
+    }
+    o.pipelined = !has_flag(args, "--single-process");
+    o.log_json = flag(args, "--log-json");
+    o.policy = match flag(args, "--policy").as_deref() {
+        None | Some("paper") => FrozenPolicy::paper(),
+        Some("all") => FrozenPolicy::all_trainable(),
+        Some("frozen") => FrozenPolicy::all_frozen(),
+        Some(p) => bail!("unknown policy {p:?} (paper|all|frozen)"),
+    };
+    Ok(o)
+}
+
+/// Parse `VLM-M` / `ALM-S` / `VALM-ML` (+ optional `--llm S|M|L`).
+fn parse_mllm(name: &str, args: &[String]) -> Result<MllmSpec> {
+    let llm = match flag(args, "--llm") {
+        Some(s) => Size::parse(&s).ok_or_else(|| anyhow!("bad --llm {s:?}"))?,
+        None => Size::M,
+    };
+    let (kind, sizes) = name
+        .split_once('-')
+        .ok_or_else(|| anyhow!("bad MLLM name {name:?} (e.g. VLM-M, VALM-SL)"))?;
+    let parse1 = |s: &str| {
+        Size::parse(s).ok_or_else(|| anyhow!("bad size {s:?} in {name:?}"))
+    };
+    Ok(match kind {
+        "VLM" => MllmSpec::vlm(llm, parse1(sizes)?),
+        "ALM" => MllmSpec::alm(llm, parse1(sizes)?),
+        "VALM" => {
+            anyhow::ensure!(sizes.len() == 2, "VALM wants two sizes (e.g. VALM-ML)");
+            MllmSpec::valm(llm, parse1(&sizes[0..1])?, parse1(&sizes[1..2])?)
+        }
+        _ => bail!("unknown MLLM kind {kind:?}"),
+    })
+}

@@ -1,0 +1,231 @@
+//! Loosely-coupled auto-parallelization — Algorithm 1 (§5.2).
+//!
+//! Cornstarch does not invent a new unimodal auto-parallelizer; it reuses
+//! one (here: the exact min-max partitioner) per module and *couples* the
+//! per-module choices loosely: enumerate feasible LLM stage counts, derive
+//! each option's per-stage time target `t_i`, pick for every encoder the
+//! stage count whose per-stage time best matches `t_i`, then simulate each
+//! combination and keep the minimum-iteration-time plan.
+
+use crate::cost::Device;
+use crate::pipeline::{partition_min_max, stage_sums, LayerCost};
+
+use super::planner::{plan, Plan, PlanMetrics, Strategy};
+use super::{MultimodalModule, MultimodalParallelSpec, ParallelSpec};
+
+/// Result of the search: the winning plan plus the whole frontier for
+/// inspection (the reproduce harness prints it).
+#[derive(Clone, Debug)]
+pub struct AutoResult {
+    pub best: Plan,
+    pub best_metrics: PlanMetrics,
+    /// (llm_pp, encoder_pps, iteration_ms, tput_per_gpu) per candidate.
+    pub frontier: Vec<(usize, Vec<usize>, f64, f64)>,
+}
+
+/// Worst per-stage fwd+bwd time of `layers` split into `pp` stages
+/// (frozen-aware, the partitioner Cornstarch plugs in).
+fn stage_time(layers: &[LayerCost], pp: usize, grad_ckpt: bool) -> f64 {
+    let costs: Vec<f64> =
+        layers.iter().map(|l| l.fwd_ms + l.bwd_ms(grad_ckpt)).collect();
+    let bounds = partition_min_max(&costs, pp);
+    stage_sums(layers, &bounds, grad_ckpt)
+        .iter()
+        .map(|s| s.total())
+        .fold(0.0, f64::max)
+}
+
+/// Encoder stage count whose per-stage time is closest to `target` without
+/// exceeding the device budget (`get_parallel_model(e, target_stage_time)`
+/// of Algorithm 1 line 6).
+fn match_encoder_pp(
+    layers: &[LayerCost],
+    target_ms: f64,
+    max_pp: usize,
+    grad_ckpt: bool,
+) -> usize {
+    let mut best = 1usize;
+    let mut best_err = f64::INFINITY;
+    for pp in 1..=max_pp.min(layers.len()) {
+        let t = stage_time(layers, pp, grad_ckpt);
+        let err = (t - target_ms).abs();
+        if err < best_err {
+            best_err = err;
+            best = pp;
+        }
+    }
+    best
+}
+
+/// Algorithm 1. `gpu_budget` bounds the total device-group count
+/// (`llm_pp + Σ enc_pp`); `tp`/`cp` are fixed per the §6.1 setup. The
+/// paper caps each modality at 6 stages — we accept any `max_pp`.
+pub fn auto_parallelize(
+    mm: &MultimodalModule,
+    gpu_budget_groups: usize,
+    tp: usize,
+    cp: usize,
+    max_pp: usize,
+    device: Device,
+) -> AutoResult {
+    assert!(gpu_budget_groups >= 1 + mm.encoders.len());
+    let grad_ckpt = true;
+    let llm_layers = super::planner::llm_layer_costs(mm, device, tp * cp);
+    let enc_layers: Vec<Vec<LayerCost>> = mm
+        .encoders
+        .iter()
+        .map(|e| {
+            super::planner::encoder_layer_costs(e, &mm.llm.geom, device, tp * cp)
+        })
+        .collect();
+
+    let mut frontier = Vec::new();
+    let mut best: Option<(Plan, PlanMetrics)> = None;
+    let llm_max =
+        max_pp.min(llm_layers.len()).min(gpu_budget_groups - mm.encoders.len());
+    for llm_pp in 1..=llm_max {
+        // line 4: t_i — per-stage fwd+bwd of this LLM option
+        let t_i = stage_time(&llm_layers, llm_pp, grad_ckpt);
+        // line 6: match each encoder to the target stage time
+        let groups_left = gpu_budget_groups - llm_pp;
+        let per_enc_cap = if mm.encoders.is_empty() {
+            0
+        } else {
+            // leave one group for every other encoder
+            groups_left.saturating_sub(mm.encoders.len() - 1)
+        };
+        let enc_pps: Vec<usize> = enc_layers
+            .iter()
+            .map(|l| {
+                match_encoder_pp(l, t_i, per_enc_cap.min(max_pp), grad_ckpt)
+            })
+            .collect();
+        if llm_pp + enc_pps.iter().sum::<usize>() > gpu_budget_groups {
+            continue;
+        }
+        // lines 8-9: evaluate the combination end-to-end
+        let spec =
+            MultimodalParallelSpec::paper_default(&enc_pps, llm_pp, tp, cp);
+        let p = plan(Strategy::Cornstarch, mm, &spec, device);
+        let m = p.simulate();
+        frontier.push((
+            llm_pp,
+            enc_pps.clone(),
+            m.iteration_ms,
+            m.throughput_per_gpu,
+        ));
+        let better = match &best {
+            None => true,
+            Some((_, bm)) => m.iteration_ms < bm.iteration_ms,
+        };
+        if better {
+            best = Some((p, m));
+        }
+    }
+    let (best, best_metrics) = best.expect("no feasible parallelization");
+    AutoResult { best, best_metrics, frontier }
+}
+
+/// Convenience: build the spec the winning plan used.
+pub fn spec_of(plan: &Plan, tp: usize, cp: usize) -> MultimodalParallelSpec {
+    // Recover stage counts per module from the stage names.
+    let mut enc_names: Vec<String> = Vec::new();
+    let mut enc_counts: Vec<usize> = Vec::new();
+    let mut llm_pp = 0usize;
+    for n in &plan.stage_names {
+        if let Some(rest) = n.strip_prefix("enc:") {
+            let name = rest.split('[').next().unwrap().to_string();
+            match enc_names.iter().position(|x| *x == name) {
+                Some(i) => enc_counts[i] += 1,
+                None => {
+                    enc_names.push(name);
+                    enc_counts.push(1);
+                }
+            }
+        } else if n.starts_with("llm[") {
+            llm_pp += 1;
+        }
+    }
+    MultimodalParallelSpec {
+        encoder_specs: enc_counts
+            .iter()
+            .map(|&pp| ParallelSpec::new(tp, cp, pp))
+            .collect(),
+        llm_spec: ParallelSpec::new(tp, cp, llm_pp),
+        num_microbatches: plan.num_microbatches,
+        comm_ms: plan.graph.comm_ms,
+        grad_ckpt: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MllmSpec, Size};
+
+    #[test]
+    fn auto_finds_feasible_plan_within_budget() {
+        let mm = MultimodalModule::from_spec(&MllmSpec::valm(
+            Size::M,
+            Size::M,
+            Size::M,
+        ));
+        let r = auto_parallelize(&mm, 6, 2, 2, 6, Device::a40());
+        let groups: usize = r
+            .best
+            .graph
+            .nodes
+            .iter()
+            .map(|n| n.device + 1)
+            .max()
+            .unwrap();
+        assert!(groups <= 6);
+        assert!(!r.frontier.is_empty());
+        assert!(r.best_metrics.iteration_ms > 0.0);
+    }
+
+    #[test]
+    fn auto_best_is_frontier_minimum() {
+        let mm =
+            MultimodalModule::from_spec(&MllmSpec::vlm(Size::S, Size::M));
+        let r = auto_parallelize(&mm, 6, 2, 2, 6, Device::a40());
+        let min = r
+            .frontier
+            .iter()
+            .map(|f| f.2)
+            .fold(f64::INFINITY, f64::min);
+        assert!((r.best_metrics.iteration_ms - min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auto_gives_llm_more_stages_when_llm_dominates() {
+        // LLM-L with a small encoder: the LLM should win most groups.
+        let mm =
+            MultimodalModule::from_spec(&MllmSpec::vlm(Size::L, Size::S));
+        let r = auto_parallelize(&mm, 6, 2, 2, 6, Device::a40());
+        let (llm_pp, enc_pps, _, _) = r
+            .frontier
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap()
+            .clone();
+        assert!(llm_pp > enc_pps[0], "llm {llm_pp} enc {enc_pps:?}");
+    }
+
+    #[test]
+    fn spec_roundtrip_matches_plan_topology() {
+        let mm = MultimodalModule::from_spec(&MllmSpec::valm(
+            Size::S,
+            Size::S,
+            Size::L,
+        ));
+        let spec = MultimodalParallelSpec::paper_default(&[1, 2], 3, 2, 2);
+        let p = plan(Strategy::Cornstarch, &mm, &spec, Device::a40());
+        let rt = spec_of(&p, 2, 2);
+        assert_eq!(rt.llm_spec.pp, 3);
+        assert_eq!(
+            rt.encoder_specs.iter().map(|s| s.pp).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+    }
+}

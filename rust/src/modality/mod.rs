@@ -1,0 +1,293 @@
+//! The Cornstarch programming model (§3.2) in Rust: `ModalityModule`,
+//! `MultimodalModule`, `ParallelSpec`, `MultimodalParallelSpec`, and the
+//! planners that turn them into executable pipeline stage DAGs.
+//!
+//! Listing 1 of the paper maps onto this module as follows:
+//!
+//! ```text
+//! paper (python)                          this crate
+//! -------------------------------------   ---------------------------------
+//! ModalityModule(vis, proj="mlp")         ModalityModule::encoder(geom, ..)
+//! MultimodalModule(encoders=.., llm=..)   MultimodalModule::new(..)
+//! mllm.vision_encoder.module.train(False) module.train(false)
+//! ParallelSpec(tp_size, cp_size, pp_size) ParallelSpec { tp, cp, pp }
+//! MultimodalParallelSpec(...)             MultimodalParallelSpec { .. }
+//! mm_spec.apply(mllm)                     spec.apply(&mllm) -> Plan
+//! parallel_mllm.execute(batch)            crate::train (real PJRT) or
+//!                                         crate::sim (calibrated model)
+//! ```
+//!
+//! [`planner`] holds the three parallelization policies compared in §6:
+//! Cornstarch's modality-parallel + frozen-aware planner and the two
+//! baselines (encoders-colocated, encoders-replicated). [`auto`] is the
+//! loosely-coupled auto-parallelization of Algorithm 1.
+
+pub mod auto;
+pub mod planner;
+
+pub use auto::{auto_parallelize, AutoResult};
+pub use planner::{Plan, Strategy};
+
+use crate::cost::{Device, GradFlow, ModuleCost};
+use crate::model::{MllmSpec, ModuleGeom, TokenCounts};
+
+/// What a module is, which decides attention density, token count, and
+/// grad-flow classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModuleKind {
+    /// A modality encoder with a trailing projector.
+    Encoder,
+    /// The language model (consumes all projected modality tokens).
+    Llm,
+}
+
+/// One unimodal constituent of an MLLM: an encoder (+projector) or the LLM.
+///
+/// `frozen` mirrors `module.train(mode=False)` in the paper's Listing 1;
+/// `projector_trainable` mirrors `mllm.vision_encoder.projector.train(True)`
+/// (encoders only).
+#[derive(Clone, Debug)]
+pub struct ModalityModule {
+    pub name: String,
+    pub geom: ModuleGeom,
+    pub kind: ModuleKind,
+    pub frozen: bool,
+    /// Only meaningful for encoders. The common MLLM recipe (§2.1) freezes
+    /// the encoder and LLM and trains projectors; this defaults to `true`.
+    pub projector_trainable: bool,
+    /// Tokens this module processes per sample (sequence length).
+    pub tokens: usize,
+}
+
+impl ModalityModule {
+    pub fn encoder(name: &str, geom: ModuleGeom, tokens: usize) -> Self {
+        ModalityModule {
+            name: name.to_string(),
+            geom,
+            kind: ModuleKind::Encoder,
+            frozen: true,
+            projector_trainable: true,
+            tokens,
+        }
+    }
+
+    pub fn llm(geom: ModuleGeom, tokens: usize) -> Self {
+        ModalityModule {
+            name: "llm".to_string(),
+            geom,
+            kind: ModuleKind::Llm,
+            frozen: true,
+            projector_trainable: false,
+            tokens,
+        }
+    }
+
+    /// `train(mode)` from Listing 1: `train(false)` freezes the module.
+    pub fn train(&mut self, mode: bool) -> &mut Self {
+        self.frozen = !mode;
+        self
+    }
+
+    /// Grad-flow classification of the module body under the §4.2 rule.
+    ///
+    /// * encoder body: nothing precedes it ⇒ `upstream_trainable = false`;
+    /// * LLM: a trainable projector precedes it whenever any encoder's
+    ///   projector (or the encoder itself) is trainable.
+    pub fn flow(&self, upstream_trainable: bool) -> GradFlow {
+        GradFlow { trainable: !self.frozen, upstream_trainable }
+    }
+
+    /// Per-layer forward time (ms) on one device group of `shards` GPUs.
+    pub fn layer_fwd_ms(&self, device: Device, shards: usize) -> f64 {
+        let cost = match self.kind {
+            ModuleKind::Encoder => {
+                ModuleCost::encoder(self.geom.clone(), self.tokens, device)
+            }
+            ModuleKind::Llm => {
+                ModuleCost::llm(self.geom.clone(), self.tokens, device)
+            }
+        };
+        cost.layer_fwd_ms(shards)
+    }
+}
+
+/// An MLLM assembled from unimodal modules (the paper's
+/// `MultimodalModule`). The execution DAG is implicit in the structure:
+/// every encoder chain feeds the LLM's first stage (Figure 6a).
+#[derive(Clone, Debug)]
+pub struct MultimodalModule {
+    pub encoders: Vec<ModalityModule>,
+    pub llm: ModalityModule,
+    /// Microbatch size in samples (the paper uses 1 sample/microbatch).
+    pub microbatch_size: usize,
+}
+
+impl MultimodalModule {
+    pub fn new(encoders: Vec<ModalityModule>, llm: ModalityModule) -> Self {
+        MultimodalModule { encoders, llm, microbatch_size: 1 }
+    }
+
+    /// Build from a Table-1 composition with the paper's §6.1 recipe:
+    /// encoders and LLM frozen, projectors trainable.
+    pub fn from_spec(spec: &MllmSpec) -> Self {
+        let tok = spec.tokens;
+        let mut encoders = Vec::new();
+        if let Some(v) = &spec.vision {
+            encoders.push(ModalityModule::encoder("vision", v.clone(), tok.vision));
+        }
+        if let Some(a) = &spec.audio {
+            encoders.push(ModalityModule::encoder("audio", a.clone(), tok.audio));
+        }
+        let llm_tokens = spec.llm_tokens();
+        MultimodalModule::new(encoders, ModalityModule::llm(spec.llm.clone(), llm_tokens))
+    }
+
+    /// Does any trainable parameter precede the LLM in forward order?
+    /// (Decides whether the LLM must propagate input gradients — §4.2.)
+    pub fn llm_has_trainable_upstream(&self) -> bool {
+        self.encoders
+            .iter()
+            .any(|e| !e.frozen || e.projector_trainable)
+    }
+
+    /// Token counts helper for the synthetic §6.1 dataset.
+    pub fn paper_tokens() -> TokenCounts {
+        TokenCounts::paper()
+    }
+}
+
+/// Per-module parallelization degrees (the paper's `ParallelSpec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelSpec {
+    pub tp: usize,
+    pub cp: usize,
+    pub pp: usize,
+}
+
+impl ParallelSpec {
+    pub fn new(tp: usize, cp: usize, pp: usize) -> Self {
+        assert!(tp >= 1 && cp >= 1 && pp >= 1);
+        ParallelSpec { tp, cp, pp }
+    }
+
+    /// GPUs per pipeline stage of this module.
+    pub fn gpus_per_stage(&self) -> usize {
+        self.tp * self.cp
+    }
+
+    /// Total GPUs this module occupies.
+    pub fn gpus(&self) -> usize {
+        self.gpus_per_stage() * self.pp
+    }
+}
+
+/// The whole-MLLM parallelization request (the paper's
+/// `MultimodalParallelSpec`): one spec per encoder plus one for the LLM.
+#[derive(Clone, Debug)]
+pub struct MultimodalParallelSpec {
+    /// Parallel spec per encoder, in `MultimodalModule::encoders` order.
+    pub encoder_specs: Vec<ParallelSpec>,
+    pub llm_spec: ParallelSpec,
+    pub num_microbatches: usize,
+    /// ms charged on every cross-stage activation/gradient hop.
+    pub comm_ms: f64,
+    /// Gradient checkpointing (activation recomputation, §4.2 note).
+    pub grad_ckpt: bool,
+}
+
+impl MultimodalParallelSpec {
+    pub fn paper_default(
+        encoder_pp: &[usize],
+        llm_pp: usize,
+        tp: usize,
+        cp: usize,
+    ) -> Self {
+        MultimodalParallelSpec {
+            encoder_specs: encoder_pp
+                .iter()
+                .map(|&pp| ParallelSpec::new(tp, cp, pp))
+                .collect(),
+            llm_spec: ParallelSpec::new(tp, cp, llm_pp),
+            num_microbatches: 24, // §6.1: 24 microbatches of 1 sample
+            comm_ms: 0.5,
+            grad_ckpt: true,
+        }
+    }
+
+    /// `apply()` from Listing 1: parallelize the MLLM with Cornstarch's
+    /// multimodality-aware planner (modality parallelism + frozen-aware
+    /// partitioning). Baselines are reachable via [`planner::plan`].
+    pub fn apply(&self, mm: &MultimodalModule) -> Plan {
+        planner::plan(Strategy::Cornstarch, mm, self, Device::a40())
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.llm_spec.gpus()
+            + self
+                .encoder_specs
+                .iter()
+                .map(|s| s.gpus())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Size;
+
+    fn valm_mm() -> MultimodalModule {
+        MultimodalModule::from_spec(&MllmSpec::valm(Size::M, Size::M, Size::M))
+    }
+
+    #[test]
+    fn from_spec_follows_paper_recipe() {
+        let mm = valm_mm();
+        assert_eq!(mm.encoders.len(), 2);
+        assert!(mm.encoders.iter().all(|e| e.frozen && e.projector_trainable));
+        assert!(mm.llm.frozen);
+        // projectors trainable => LLM must propagate input gradients
+        assert!(mm.llm_has_trainable_upstream());
+    }
+
+    #[test]
+    fn train_toggles_frozen() {
+        let mut mm = valm_mm();
+        mm.llm.train(true);
+        assert!(!mm.llm.frozen);
+        mm.llm.train(false);
+        assert!(mm.llm.frozen);
+    }
+
+    #[test]
+    fn fully_frozen_everything_stops_llm_backprop() {
+        let mut mm = valm_mm();
+        for e in &mut mm.encoders {
+            e.projector_trainable = false;
+        }
+        assert!(!mm.llm_has_trainable_upstream());
+        let flow = mm.llm.flow(mm.llm_has_trainable_upstream());
+        assert_eq!(flow.bwd_multiplier(), 0.0);
+    }
+
+    #[test]
+    fn parallel_spec_gpu_accounting() {
+        let s = ParallelSpec::new(2, 2, 3);
+        assert_eq!(s.gpus_per_stage(), 4);
+        assert_eq!(s.gpus(), 12);
+        let mspec = MultimodalParallelSpec::paper_default(&[1, 1], 4, 2, 2);
+        assert_eq!(mspec.total_gpus(), (4 + 1 + 1) * 4);
+    }
+
+    #[test]
+    fn llm_attention_is_causal_encoders_full() {
+        let mm = valm_mm();
+        let d = Device::a40();
+        // same geom for vision-M and llm-M (32 x 4096) but encoders use
+        // density 1.0 — at equal token counts the encoder layer is slower.
+        let enc = &mm.encoders[0];
+        let mut enc_eq = enc.clone();
+        enc_eq.tokens = mm.llm.tokens;
+        assert!(enc_eq.layer_fwd_ms(d, 1) > mm.llm.layer_fwd_ms(d, 1));
+    }
+}

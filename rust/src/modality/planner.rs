@@ -1,0 +1,554 @@
+//! The three MLLM parallelization policies evaluated in §6.
+//!
+//! * [`Strategy::Cornstarch`] — modality parallelism (§4.1: every encoder
+//!   chain on its own devices, feeding the LLM chain) with frozen-status-
+//!   aware stage partitioning (§4.2: balance `fwd + bwd` where bwd obeys
+//!   the `0/1×/2×` rule).
+//! * [`plan_chain`] — joint-chain partitioning with a frozen-aware toggle
+//!   (the Table 3 / Figure 7 ablation).
+//! * [`Strategy::Colocated`] — Megatron-LM-style: all encoders partitioned
+//!   into the *same* number of stages, colocated per stage and executed
+//!   sequentially, chained in front of the LLM (Figure 1c), partitioned by
+//!   forward time under the "bwd = 2×fwd" assumption.
+//! * [`Strategy::Replicated`] — Meta-Llama-style: LLM-only pipeline, all
+//!   encoders replicated into and re-executed by every stage (Figure 1b).
+//!
+//! Whichever policy *partitions* the model, *execution* reality is the
+//! same: backward times follow the frozen rule (that mismatch is exactly
+//! the paper's Figure 7b imbalance).
+
+use crate::cost::{projector_fwd_ms, Device, GradFlow};
+use crate::model::ModuleGeom;
+use crate::pipeline::{
+    onef1b_tasks, partition_min_max, stage_sums, LayerCost, StageCost,
+    StageGraph,
+};
+use crate::sim::{simulate, SimResult};
+
+use super::{ModalityModule, MultimodalModule, MultimodalParallelSpec};
+
+/// Parallelization policy under comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Cornstarch,
+    Colocated,
+    Replicated,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [
+        Strategy::Cornstarch,
+        Strategy::Colocated,
+        Strategy::Replicated,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Cornstarch => "Cornstarch",
+            Strategy::Colocated => "Encoders-colocated",
+            Strategy::Replicated => "Encoders-replicated",
+        }
+    }
+}
+
+/// A fully-planned parallel MLLM: the stage DAG plus accounting needed to
+/// report the paper's metrics.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub strategy: Strategy,
+    pub graph: StageGraph,
+    /// Stage names parallel to `graph.nodes` (`enc:vision[0]`, `llm[2]`…).
+    pub stage_names: Vec<String>,
+    pub n_gpus: usize,
+    pub num_microbatches: usize,
+    pub microbatch_size: usize,
+}
+
+/// Iteration-level metrics computed by replaying the plan through the
+/// discrete-event simulator.
+#[derive(Clone, Debug)]
+pub struct PlanMetrics {
+    pub iteration_ms: f64,
+    /// Samples per second (whole job).
+    pub throughput: f64,
+    /// The paper's normalized metric: input/s per GPU.
+    pub throughput_per_gpu: f64,
+    /// 1 − mean(device busy / makespan).
+    pub bubble_ratio: f64,
+    pub sim: SimResult,
+}
+
+impl Plan {
+    pub fn simulate(&self) -> PlanMetrics {
+        let tasks = onef1b_tasks(&self.graph, self.num_microbatches);
+        let sim = simulate(&tasks);
+        let iteration_ms = sim.makespan_ms;
+        let samples =
+            (self.num_microbatches * self.microbatch_size) as f64;
+        let throughput = samples / (iteration_ms / 1e3);
+        let n_dev = self.graph.n_devices() as f64;
+        let busy: f64 = sim.device_busy_ms.iter().sum();
+        let bubble_ratio = 1.0 - busy / (iteration_ms * n_dev);
+        PlanMetrics {
+            iteration_ms,
+            throughput,
+            throughput_per_gpu: throughput / self.n_gpus as f64,
+            bubble_ratio,
+            sim,
+        }
+    }
+
+    /// (min, max) of per-stage fwd+bwd over all stages — the balance metric
+    /// quoted in §6.2 ("50 ms ~ 131 ms range of per-stage fwd+bwd time").
+    pub fn stage_time_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for n in &self.graph.nodes {
+            let t = n.cost.total();
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        (lo, hi)
+    }
+
+    /// Mean per-stage fwd and bwd of stages whose name starts with `prefix`
+    /// (Table 3's "Per-Stage Fwd/Bwd (ms), Encoder | LLM" columns).
+    pub fn mean_stage_cost(&self, prefix: &str) -> Option<StageCost> {
+        let sel: Vec<&StageCost> = self
+            .stage_names
+            .iter()
+            .zip(&self.graph.nodes)
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, node)| &node.cost)
+            .collect();
+        if sel.is_empty() {
+            return None;
+        }
+        let k = sel.len() as f64;
+        Some(StageCost {
+            fwd_ms: sel.iter().map(|c| c.fwd_ms).sum::<f64>() / k,
+            bwd_ms: sel.iter().map(|c| c.bwd_ms).sum::<f64>() / k,
+        })
+    }
+}
+
+/// Per-layer cost rows of one module: encoder body layers followed by its
+/// projector pseudo-layer, or the LLM's layers.
+pub fn encoder_layer_costs(
+    e: &ModalityModule,
+    llm_geom: &ModuleGeom,
+    device: Device,
+    shards: usize,
+) -> Vec<LayerCost> {
+    let body_flow = GradFlow { trainable: !e.frozen, upstream_trainable: false };
+    let fwd = e.layer_fwd_ms(device, shards);
+    let mut layers: Vec<LayerCost> = (0..e.geom.n_layers)
+        .map(|_| LayerCost { fwd_ms: fwd, flow: body_flow })
+        .collect();
+    // Trailing projector: a single linear layer (§6.1).
+    layers.push(LayerCost {
+        fwd_ms: projector_fwd_ms(
+            e.geom.hidden,
+            llm_geom.hidden,
+            e.tokens,
+            device,
+        ) / shards as f64,
+        flow: GradFlow {
+            trainable: e.projector_trainable,
+            upstream_trainable: !e.frozen,
+        },
+    });
+    layers
+}
+
+pub fn llm_layer_costs(
+    mm: &MultimodalModule,
+    device: Device,
+    shards: usize,
+) -> Vec<LayerCost> {
+    let flow = mm.llm.flow(mm.llm_has_trainable_upstream());
+    let fwd = mm.llm.layer_fwd_ms(device, shards);
+    (0..mm.llm.geom.n_layers)
+        .map(|_| LayerCost { fwd_ms: fwd, flow })
+        .collect()
+}
+
+/// Partition `layers` into `pp` stages. Frozen-aware balances `fwd+bwd`
+/// (with recompute when checkpointing); unaware balances fwd only — the
+/// classic "bwd is 2×fwd" assumption makes both orderings identical.
+fn partition(
+    layers: &[LayerCost],
+    pp: usize,
+    frozen_aware: bool,
+    grad_ckpt: bool,
+) -> Vec<StageCost> {
+    let costs: Vec<f64> = if frozen_aware {
+        layers.iter().map(|l| l.fwd_ms + l.bwd_ms(grad_ckpt)).collect()
+    } else {
+        layers.iter().map(|l| l.fwd_ms).collect()
+    };
+    let bounds = partition_min_max(&costs, pp);
+    // Execution reality always applies the frozen rule.
+    stage_sums(layers, &bounds, grad_ckpt)
+}
+
+/// Plan an MLLM under `strategy`. GPU accounting: every pipeline stage is
+/// one device group of `tp×cp` GPUs; Replicated reuses the LLM's groups.
+pub fn plan(
+    strategy: Strategy,
+    mm: &MultimodalModule,
+    spec: &MultimodalParallelSpec,
+    device: Device,
+) -> Plan {
+    match strategy {
+        Strategy::Cornstarch => plan_modality_parallel(mm, spec, device),
+        Strategy::Colocated => plan_colocated(mm, spec, device),
+        Strategy::Replicated => plan_replicated(mm, spec, device),
+    }
+}
+
+/// Joint-chain partitioning for single-chain MLLMs — the §4.2 / Figure 7
+/// experiment (Tables 3, 10, 11). All modules' layers are concatenated in
+/// forward order (encoders, projectors, LLM) and split into `total_stages`
+/// contiguous stages:
+///
+/// * `frozen_aware = true` balances per-stage `fwd + bwd` under the frozen
+///   rule (Figure 7c) — the boundary shifts *toward the encoder*, giving
+///   encoder stages more forward work since their backward is ~0;
+/// * `frozen_aware = false` balances per-stage fwd assuming `bwd = 2×fwd`
+///   (Figure 7a) — balanced forward, imbalanced execution (Figure 7b).
+pub fn plan_chain(
+    mm: &MultimodalModule,
+    total_stages: usize,
+    frozen_aware: bool,
+    spec: &MultimodalParallelSpec,
+    device: Device,
+) -> Plan {
+    let gps = spec.llm_spec.gpus_per_stage();
+    // Concatenate all modules' layers in forward order; remember which
+    // module each layer belongs to for stage naming.
+    let mut layers: Vec<LayerCost> = Vec::new();
+    let mut owner: Vec<String> = Vec::new();
+    for e in &mm.encoders {
+        let ls = encoder_layer_costs(e, &mm.llm.geom, device, gps);
+        owner.extend(std::iter::repeat_n(format!("enc:{}", e.name), ls.len()));
+        layers.extend(ls);
+    }
+    let ls = llm_layer_costs(mm, device, gps);
+    owner.extend(std::iter::repeat_n("llm".to_string(), ls.len()));
+    layers.extend(ls);
+
+    let weights: Vec<f64> = if frozen_aware {
+        layers
+            .iter()
+            .map(|l| l.fwd_ms + l.bwd_ms(spec.grad_ckpt))
+            .collect()
+    } else {
+        layers.iter().map(|l| l.fwd_ms).collect()
+    };
+    let bounds = partition_min_max(&weights, total_stages);
+    let costs = stage_sums(&layers, &bounds, spec.grad_ckpt);
+    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    graph.add_chain("stage", &costs, 0, &[]);
+    // A stage is named for the module owning its first layer.
+    let names: Vec<String> = bounds
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| format!("{}[{i}]", owner[w[0]]))
+        .collect();
+    Plan {
+        strategy: Strategy::Cornstarch,
+        graph,
+        stage_names: names,
+        n_gpus: total_stages * gps,
+        num_microbatches: spec.num_microbatches,
+        microbatch_size: mm.microbatch_size,
+    }
+}
+
+fn plan_modality_parallel(
+    mm: &MultimodalModule,
+    spec: &MultimodalParallelSpec,
+    device: Device,
+) -> Plan {
+    assert_eq!(spec.encoder_specs.len(), mm.encoders.len());
+    let aware = true; // Cornstarch always partitions frozen-aware
+    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    let mut names = Vec::new();
+    let mut dev = 0usize;
+    let mut enc_tails = Vec::new();
+    let mut n_gpus = 0usize;
+    for (e, ps) in mm.encoders.iter().zip(&spec.encoder_specs) {
+        let layers =
+            encoder_layer_costs(e, &mm.llm.geom, device, ps.gpus_per_stage());
+        let costs = partition(&layers, ps.pp, aware, spec.grad_ckpt);
+        let ids = graph.add_chain(&format!("enc:{}", e.name), &costs, dev, &[]);
+        for i in 0..costs.len() {
+            names.push(format!("enc:{}[{}]", e.name, i));
+        }
+        dev += ps.pp;
+        n_gpus += ps.gpus();
+        enc_tails.push(*ids.last().unwrap());
+    }
+    let lp = &spec.llm_spec;
+    let layers = llm_layer_costs(mm, device, lp.gpus_per_stage());
+    let costs = partition(&layers, lp.pp, aware, spec.grad_ckpt);
+    graph.add_chain("llm", &costs, dev, &enc_tails);
+    for i in 0..costs.len() {
+        names.push(format!("llm[{i}]"));
+    }
+    n_gpus += lp.gpus();
+    Plan {
+        strategy: Strategy::Cornstarch,
+        graph,
+        stage_names: names,
+        n_gpus,
+        num_microbatches: spec.num_microbatches,
+        microbatch_size: mm.microbatch_size,
+    }
+}
+
+fn plan_colocated(
+    mm: &MultimodalModule,
+    spec: &MultimodalParallelSpec,
+    device: Device,
+) -> Plan {
+    // All encoders share ONE stage count (the colocated constraint the
+    // paper calls out in §6.3: "all encoders in the colocated module must
+    // be partitioned with the same number of stages").
+    let enc_pp = spec
+        .encoder_specs
+        .first()
+        .map(|s| s.pp)
+        .unwrap_or(0);
+    assert!(
+        spec.encoder_specs.iter().all(|s| s.pp == enc_pp),
+        "encoders-colocated requires equal encoder stage counts"
+    );
+    let gps = spec.llm_spec.gpus_per_stage();
+    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    let mut names = Vec::new();
+    let mut enc_tail = Vec::new();
+    let mut dev = 0usize;
+    if enc_pp > 0 && !mm.encoders.is_empty() {
+        // Partition each encoder into enc_pp stages by fwd time, then fuse
+        // stage-wise: colocated stage i runs every encoder's stage i
+        // sequentially (Figure 1c).
+        let mut fused = vec![StageCost { fwd_ms: 0.0, bwd_ms: 0.0 }; enc_pp];
+        for e in &mm.encoders {
+            let layers = encoder_layer_costs(e, &mm.llm.geom, device, gps);
+            let costs = partition(&layers, enc_pp, false, spec.grad_ckpt);
+            for (f, c) in fused.iter_mut().zip(costs) {
+                f.fwd_ms += c.fwd_ms;
+                f.bwd_ms += c.bwd_ms;
+            }
+        }
+        let ids = graph.add_chain("enc", &fused, 0, &[]);
+        for i in 0..enc_pp {
+            names.push(format!("enc[{i}]"));
+        }
+        enc_tail.push(*ids.last().unwrap());
+        dev = enc_pp;
+    }
+    let layers = llm_layer_costs(mm, device, gps);
+    let costs = partition(&layers, spec.llm_spec.pp, false, spec.grad_ckpt);
+    graph.add_chain("llm", &costs, dev, &enc_tail);
+    for i in 0..costs.len() {
+        names.push(format!("llm[{i}]"));
+    }
+    let n_gpus = (enc_pp + spec.llm_spec.pp) * gps;
+    Plan {
+        strategy: Strategy::Colocated,
+        graph,
+        stage_names: names,
+        n_gpus,
+        num_microbatches: spec.num_microbatches,
+        microbatch_size: mm.microbatch_size,
+    }
+}
+
+fn plan_replicated(
+    mm: &MultimodalModule,
+    spec: &MultimodalParallelSpec,
+    device: Device,
+) -> Plan {
+    let gps = spec.llm_spec.gpus_per_stage();
+    let pp = spec.llm_spec.pp;
+    let layers = llm_layer_costs(mm, device, gps);
+    let mut costs = partition(&layers, pp, false, spec.grad_ckpt);
+    // Every stage redundantly re-runs ALL encoders per microbatch
+    // (Figure 1b / Figure 2a): add the full encoder fwd (+frozen-rule bwd)
+    // to every stage.
+    let mut enc_fwd = 0.0;
+    let mut enc_bwd = 0.0;
+    for e in &mm.encoders {
+        for l in encoder_layer_costs(e, &mm.llm.geom, device, gps) {
+            enc_fwd += l.fwd_ms;
+            enc_bwd += l.bwd_ms(spec.grad_ckpt);
+        }
+    }
+    for c in &mut costs {
+        c.fwd_ms += enc_fwd;
+        c.bwd_ms += enc_bwd;
+    }
+    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    graph.add_chain("llm", &costs, 0, &[]);
+    let names = (0..pp).map(|i| format!("llm[{i}]")).collect();
+    Plan {
+        strategy: Strategy::Replicated,
+        graph,
+        stage_names: names,
+        n_gpus: pp * gps,
+        num_microbatches: spec.num_microbatches,
+        microbatch_size: mm.microbatch_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MllmSpec, Size};
+    use crate::modality::MultimodalModule;
+
+    fn plan_for(
+        strategy: Strategy,
+        spec: &MllmSpec,
+        enc_pp: &[usize],
+        llm_pp: usize,
+    ) -> Plan {
+        let mm = MultimodalModule::from_spec(spec);
+        let ps = MultimodalParallelSpec::paper_default(enc_pp, llm_pp, 2, 2);
+        plan(strategy, &mm, &ps, Device::a40())
+    }
+
+    #[test]
+    fn cornstarch_builds_modality_parallel_dag() {
+        let p = plan_for(
+            Strategy::Cornstarch,
+            &MllmSpec::valm(Size::M, Size::M, Size::M),
+            &[1, 1],
+            4,
+        );
+        assert_eq!(p.graph.nodes.len(), 1 + 1 + 4);
+        // both encoder tails feed llm[0]
+        let llm0 = 2;
+        assert_eq!(p.graph.nodes[llm0].preds, vec![0, 1]);
+        // distinct devices for every stage
+        let mut devs: Vec<usize> =
+            p.graph.nodes.iter().map(|n| n.device).collect();
+        devs.sort_unstable();
+        devs.dedup();
+        assert_eq!(devs.len(), 6);
+        assert_eq!(p.n_gpus, 6 * 4);
+    }
+
+    #[test]
+    fn colocated_is_a_chain() {
+        let p = plan_for(
+            Strategy::Colocated,
+            &MllmSpec::valm(Size::M, Size::M, Size::M),
+            &[3, 3],
+            3,
+        );
+        assert_eq!(p.graph.nodes.len(), 6);
+        for (i, n) in p.graph.nodes.iter().enumerate() {
+            if i == 0 {
+                assert!(n.preds.is_empty());
+            } else {
+                assert_eq!(n.preds, vec![i - 1]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "equal encoder stage counts")]
+    fn colocated_rejects_unequal_encoder_stages() {
+        plan_for(
+            Strategy::Colocated,
+            &MllmSpec::valm(Size::M, Size::M, Size::M),
+            &[2, 3],
+            3,
+        );
+    }
+
+    #[test]
+    fn replicated_pays_encoder_cost_in_every_stage() {
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let rep = plan_for(Strategy::Replicated, &spec, &[1], 4);
+        let mm = MultimodalModule::from_spec(&spec);
+        let d = Device::a40();
+        let enc_fwd: f64 =
+            encoder_layer_costs(&mm.encoders[0], &mm.llm.geom, d, 4)
+                .iter()
+                .map(|l| l.fwd_ms)
+                .sum();
+        // every stage's fwd strictly exceeds the encoder-only fwd
+        for n in &rep.graph.nodes {
+            assert!(n.cost.fwd_ms > enc_fwd);
+        }
+        assert_eq!(rep.graph.nodes.len(), 4);
+    }
+
+    #[test]
+    fn frozen_aware_beats_unaware_on_vlm_l() {
+        // Table 3's headline: VLM-L frozen-aware 1.53x faster. Same total
+        // stage count, only the partitioning policy differs (Figure 7).
+        let spec = MllmSpec::vlm(Size::M, Size::L);
+        let mm = MultimodalModule::from_spec(&spec);
+        let ps = MultimodalParallelSpec::paper_default(&[2], 3, 2, 1);
+        let d = Device::a40();
+        let aware = plan_chain(&mm, 5, true, &ps, d);
+        let unaware = plan_chain(&mm, 5, false, &ps, d);
+        let ta = aware.simulate().iteration_ms;
+        let tu = unaware.simulate().iteration_ms;
+        assert!(
+            ta < tu,
+            "frozen-aware {ta:.1} ms should beat unaware {tu:.1} ms"
+        );
+        // Figure 7c: aware gives encoder stages MORE forward work.
+        let enc_aware = aware.mean_stage_cost("enc:").unwrap();
+        let enc_unaware = unaware.mean_stage_cost("enc:").unwrap();
+        assert!(enc_aware.fwd_ms > enc_unaware.fwd_ms);
+        // and the fwd+bwd spread across stages is tighter.
+        let spread = |p: &Plan| {
+            let (lo, hi) = p.stage_time_range();
+            hi / lo
+        };
+        assert!(spread(&aware) <= spread(&unaware) + 1e-9);
+    }
+
+    #[test]
+    fn cornstarch_beats_replicated_on_large_encoders() {
+        // Figure 2a: replicating large encoders wastes compute.
+        let spec = MllmSpec::vlm(Size::M, Size::L);
+        let cs = plan_for(Strategy::Cornstarch, &spec, &[2], 4);
+        let rep = plan_for(Strategy::Replicated, &spec, &[2], 4);
+        let m_cs = cs.simulate();
+        let m_rep = rep.simulate();
+        assert!(
+            m_cs.throughput_per_gpu > m_rep.throughput_per_gpu,
+            "cornstarch {:.3} vs replicated {:.3} input/s/GPU",
+            m_cs.throughput_per_gpu,
+            m_rep.throughput_per_gpu
+        );
+    }
+
+    #[test]
+    fn metrics_are_consistent() {
+        let p = plan_for(
+            Strategy::Cornstarch,
+            &MllmSpec::alm(Size::S, Size::M),
+            &[2],
+            3,
+        );
+        let m = p.simulate();
+        assert!(m.iteration_ms > 0.0);
+        assert!((m.throughput - 24.0 / (m.iteration_ms / 1e3)).abs() < 1e-9);
+        assert!(m.bubble_ratio >= 0.0 && m.bubble_ratio < 1.0);
+        let (lo, hi) = p.stage_time_range();
+        assert!(lo <= hi);
+        assert!(p.mean_stage_cost("llm").is_some());
+        assert!(p.mean_stage_cost("enc:audio").is_some());
+        assert!(p.mean_stage_cost("enc:vision").is_none());
+    }
+}

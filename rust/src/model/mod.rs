@@ -1,0 +1,238 @@
+//! Model geometry: the unimodal building blocks of Table 1 and the
+//! MLLM compositions evaluated in §6.
+//!
+//! Geometry (layers, hidden, ffn, heads) is what pipeline balance depends
+//! on; absolute parameter counts only matter for memory accounting. The
+//! numbers mirror the paper's Table 1 exactly.
+
+/// Transformer geometry of one unimodal model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModuleGeom {
+    pub name: String,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+}
+
+impl ModuleGeom {
+    pub fn new(name: &str, n_layers: usize, hidden: usize) -> Self {
+        ModuleGeom {
+            name: name.to_string(),
+            n_layers,
+            hidden,
+            d_ff: 4 * hidden,
+            n_heads: (hidden / 128).max(1),
+        }
+    }
+
+    /// Approximate parameter count (dense transformer):
+    /// per layer 4h² (attn) + 2·h·ff (mlp).
+    pub fn params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.d_ff as u64;
+        self.n_layers as u64 * (4 * h * h + 2 * h * f)
+    }
+}
+
+/// Model size classes of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Size {
+    S,
+    M,
+    L,
+}
+
+impl Size {
+    pub const ALL: [Size; 3] = [Size::S, Size::M, Size::L];
+
+    pub fn letter(&self) -> &'static str {
+        match self {
+            Size::S => "S",
+            Size::M => "M",
+            Size::L => "L",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Size> {
+        match s {
+            "S" | "s" => Some(Size::S),
+            "M" | "m" => Some(Size::M),
+            "L" | "l" => Some(Size::L),
+            _ => None,
+        }
+    }
+}
+
+/// Llama-3.1 LLM rows of Table 1 (16/2048 ≈ 1.2b, 32/4096 ≈ 8b,
+/// 64/5120 ≈ 32b).
+pub fn llama(size: Size) -> ModuleGeom {
+    match size {
+        Size::S => ModuleGeom::new("Llama3.1-S", 16, 2048),
+        Size::M => ModuleGeom::new("Llama3.1-M", 32, 4096),
+        Size::L => ModuleGeom::new("Llama3.1-L", 64, 5120),
+    }
+}
+
+/// EVA-CLIP vision encoder rows (40/1408 ≈ 1b, 32/4096 ≈ 8b, 48/5120 ≈ 18b).
+pub fn eva_clip(size: Size) -> ModuleGeom {
+    match size {
+        Size::S => ModuleGeom::new("EVA-CLIP-S", 40, 1408),
+        Size::M => ModuleGeom::new("EVA-CLIP-M", 32, 4096),
+        Size::L => ModuleGeom::new("EVA-CLIP-L", 48, 5120),
+    }
+}
+
+/// Whisper audio encoder rows (32/1920 ≈ 1.4b, 40/3840 ≈ 7b, 48/5120 ≈ 15b).
+pub fn whisper(size: Size) -> ModuleGeom {
+    match size {
+        Size::S => ModuleGeom::new("Whisper-S", 32, 1920),
+        Size::M => ModuleGeom::new("Whisper-M", 40, 3840),
+        Size::L => ModuleGeom::new("Whisper-L", 48, 5120),
+    }
+}
+
+/// Per-sample token counts of the synthetic dataset (§6.1: 1k text tokens,
+/// a 1280×720 image, a 30 s audio clip; 1.5k–4k total after projection).
+#[derive(Clone, Copy, Debug)]
+pub struct TokenCounts {
+    pub text: usize,
+    pub vision: usize,
+    pub audio: usize,
+}
+
+impl TokenCounts {
+    pub fn paper() -> Self {
+        // 1280x720 / 14px patches ≈ 4,700 raw -> pooled ~1024; Whisper 30 s
+        // -> 1500 frames -> 750 post-conv tokens. Totals land in the
+        // paper's 1.5k–4k band.
+        TokenCounts { text: 1000, vision: 1024, audio: 750 }
+    }
+
+    pub fn llm_total(&self, has_vision: bool, has_audio: bool) -> usize {
+        self.text
+            + if has_vision { self.vision } else { 0 }
+            + if has_audio { self.audio } else { 0 }
+    }
+}
+
+/// An MLLM composition under test: `VLM-x`, `ALM-x`, or `VALM-xy` with a
+/// separately-sized LLM (§6.1 naming).
+#[derive(Clone, Debug)]
+pub struct MllmSpec {
+    pub llm: ModuleGeom,
+    pub vision: Option<ModuleGeom>,
+    pub audio: Option<ModuleGeom>,
+    pub tokens: TokenCounts,
+}
+
+impl MllmSpec {
+    pub fn vlm(llm_size: Size, enc_size: Size) -> Self {
+        MllmSpec {
+            llm: llama(llm_size),
+            vision: Some(eva_clip(enc_size)),
+            audio: None,
+            tokens: TokenCounts::paper(),
+        }
+    }
+
+    pub fn alm(llm_size: Size, enc_size: Size) -> Self {
+        MllmSpec {
+            llm: llama(llm_size),
+            vision: None,
+            audio: Some(whisper(enc_size)),
+            tokens: TokenCounts::paper(),
+        }
+    }
+
+    pub fn valm(llm_size: Size, vis_size: Size, aud_size: Size) -> Self {
+        MllmSpec {
+            llm: llama(llm_size),
+            vision: Some(eva_clip(vis_size)),
+            audio: Some(whisper(aud_size)),
+            tokens: TokenCounts::paper(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match (&self.vision, &self.audio) {
+            (Some(v), Some(a)) => format!(
+                "VALM-{}{}",
+                size_of(v).letter(),
+                size_of(a).letter()
+            ),
+            (Some(v), None) => format!("VLM-{}", size_of(v).letter()),
+            (None, Some(a)) => format!("ALM-{}", size_of(a).letter()),
+            (None, None) => "LLM".to_string(),
+        }
+    }
+
+    pub fn llm_tokens(&self) -> usize {
+        self.tokens
+            .llm_total(self.vision.is_some(), self.audio.is_some())
+    }
+}
+
+fn size_of(g: &ModuleGeom) -> Size {
+    if g.name.ends_with("-S") {
+        Size::S
+    } else if g.name.ends_with("-M") {
+        Size::M
+    } else {
+        Size::L
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_param_counts_are_in_band() {
+        // Paper: Llama S/M/L = 1.2b/8b/32b; EVA-CLIP 1b/8b/18b;
+        // Whisper 1.4b/7b/15b. Dense estimate should land within ~35%.
+        let cases: Vec<(ModuleGeom, f64)> = vec![
+            (llama(Size::S), 1.2e9),
+            (llama(Size::M), 8e9),
+            (llama(Size::L), 32e9),
+            (eva_clip(Size::S), 1e9),
+            (eva_clip(Size::M), 8e9),
+            (eva_clip(Size::L), 18e9),
+            (whisper(Size::S), 1.4e9),
+            (whisper(Size::M), 7e9),
+            (whisper(Size::L), 15e9),
+        ];
+        for (g, want) in cases {
+            let got = g.params() as f64;
+            let ratio = got / want;
+            assert!(
+                (0.55..1.8).contains(&ratio),
+                "{}: {got:.2e} vs paper {want:.2e} (ratio {ratio:.2})",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn token_counts_in_paper_band() {
+        let t = TokenCounts::paper();
+        let total_valm = t.llm_total(true, true);
+        assert!((1500..=4000).contains(&total_valm), "{total_valm}");
+        assert!((1500..=4000).contains(&t.llm_total(true, false)));
+    }
+
+    #[test]
+    fn names_follow_paper_convention() {
+        assert_eq!(MllmSpec::vlm(Size::M, Size::L).name(), "VLM-L");
+        assert_eq!(MllmSpec::valm(Size::S, Size::M, Size::L).name(), "VALM-ML");
+        assert_eq!(MllmSpec::alm(Size::L, Size::S).name(), "ALM-S");
+    }
+
+    #[test]
+    fn size_parse_roundtrip() {
+        for s in Size::ALL {
+            assert_eq!(Size::parse(s.letter()), Some(s));
+        }
+        assert_eq!(Size::parse("x"), None);
+    }
+}

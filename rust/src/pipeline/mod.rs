@@ -1,0 +1,23 @@
+//! Pipeline parallelism: frozen-status-aware stage partitioning (§4.2)
+//! and 1F1B schedule construction over modality-parallel stage DAGs (§4.1).
+
+pub mod partition;
+pub mod schedule;
+
+pub use partition::{partition_min_max, stage_sums, LayerCost};
+pub use schedule::{
+    onef1b_tasks, StageGraph, StageNode, TaskKind, TaskSpec,
+};
+
+/// Cost of one pipeline stage for one microbatch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StageCost {
+    pub fwd_ms: f64,
+    pub bwd_ms: f64,
+}
+
+impl StageCost {
+    pub fn total(&self) -> f64 {
+        self.fwd_ms + self.bwd_ms
+    }
+}

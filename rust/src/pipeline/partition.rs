@@ -1,0 +1,233 @@
+//! Min-max contiguous partitioning of layers into pipeline stages.
+//!
+//! The §4.2 observation: partition by *fwd + bwd* time where bwd follows
+//! the frozen rule — not by fwd time with the classic "bwd = 2×fwd"
+//! assumption. Both policies are expressed by choosing which per-layer
+//! cost vector to feed the same partitioner:
+//!
+//! * frozen-aware:  `cost[l] = fwd[l] + bwd[l]` (bwd from [`crate::cost::GradFlow`])
+//! * frozen-unaware: `cost[l] = fwd[l]` (equivalently `3×fwd`, a constant
+//!   scale that does not change the argmin)
+
+use super::StageCost;
+use crate::cost::GradFlow;
+
+/// One layer's costs and grad-flow classification.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCost {
+    pub fwd_ms: f64,
+    pub flow: GradFlow,
+}
+
+impl LayerCost {
+    pub fn bwd_ms(&self, grad_ckpt: bool) -> f64 {
+        self.flow.bwd_ms(self.fwd_ms, grad_ckpt)
+    }
+}
+
+/// Partition `costs` into `s` contiguous non-empty segments minimizing the
+/// maximum segment sum (exact DP, O(s·L²) — L ≤ 64 layers in every model
+/// of Table 1, so this is microseconds). Returns the segment boundaries as
+/// `s+1` indices (`bounds[k]..bounds[k+1]` is stage k). Ties are broken
+/// toward earlier split points, which yields the even split for uniform
+/// costs.
+pub fn partition_min_max(costs: &[f64], s: usize) -> Vec<usize> {
+    assert!(s > 0, "need at least one stage");
+    assert!(
+        costs.len() >= s,
+        "cannot split {} layers into {s} non-empty stages",
+        costs.len()
+    );
+    assert!(costs.iter().all(|&c| c >= 0.0));
+    let n = costs.len();
+    // prefix[i] = sum of costs[0..i]
+    let mut prefix = vec![0.0f64; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + costs[i];
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // costs[a..b]
+
+    // dp[k][i]: min over splits of costs[0..i] into k non-empty segments of
+    // the max segment sum; choice[k][i]: start of the last segment.
+    let inf = f64::INFINITY;
+    let mut dp = vec![vec![inf; n + 1]; s + 1];
+    let mut choice = vec![vec![0usize; n + 1]; s + 1];
+    dp[0][0] = 0.0;
+    for k in 1..=s {
+        for i in k..=n {
+            // last segment is costs[j..i] with j >= k-1 (room for k-1 segs)
+            let mut best = inf;
+            let mut best_j = k - 1;
+            for j in (k - 1)..i {
+                if dp[k - 1][j].is_finite() {
+                    let cand = dp[k - 1][j].max(seg(j, i));
+                    // strict < keeps the earliest split on ties, and since
+                    // seg(j,i) decreases as j grows, earliest-j ties give
+                    // balanced (even) splits for uniform costs.
+                    if cand < best - 1e-12 {
+                        best = cand;
+                        best_j = j;
+                    }
+                }
+            }
+            dp[k][i] = best;
+            choice[k][i] = best_j;
+        }
+    }
+    // Recover boundaries.
+    let mut bounds = vec![n];
+    let mut i = n;
+    for k in (1..=s).rev() {
+        i = choice[k][i];
+        bounds.push(i);
+    }
+    bounds.reverse();
+    debug_assert_eq!(bounds.len(), s + 1);
+    debug_assert_eq!(bounds[0], 0);
+    bounds
+}
+
+/// Per-stage fwd/bwd sums for a set of boundaries.
+pub fn stage_sums(
+    layers: &[LayerCost],
+    bounds: &[usize],
+    grad_ckpt: bool,
+) -> Vec<StageCost> {
+    bounds
+        .windows(2)
+        .map(|w| {
+            let seg = &layers[w[0]..w[1]];
+            StageCost {
+                fwd_ms: seg.iter().map(|l| l.fwd_ms).sum(),
+                bwd_ms: seg.iter().map(|l| l.bwd_ms(grad_ckpt)).sum(),
+            }
+        })
+        .collect()
+}
+
+/// Convenience: build the per-layer costs of a frozen module that must
+/// propagate gradients (`upstream_trainable`) or not, or a trainable one.
+pub fn uniform_layers(
+    n: usize,
+    fwd_ms: f64,
+    trainable: bool,
+    upstream_trainable: bool,
+) -> Vec<LayerCost> {
+    (0..n)
+        .map(|_| LayerCost {
+            fwd_ms,
+            flow: GradFlow { trainable, upstream_trainable },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn max_seg(costs: &[f64], bounds: &[usize]) -> f64 {
+        bounds
+            .windows(2)
+            .map(|w| costs[w[0]..w[1]].iter().sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn equal_layers_split_evenly() {
+        let costs = vec![1.0; 8];
+        let b = partition_min_max(&costs, 4);
+        assert_eq!(b, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn heavy_head_gets_own_stage() {
+        let costs = vec![10.0, 1.0, 1.0, 1.0];
+        let b = partition_min_max(&costs, 2);
+        assert_eq!(b, vec![0, 1, 4]);
+        assert!((max_seg(&costs, &b) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boundaries_are_monotone_and_cover() {
+        check("partition covers all layers", 50, |g| {
+            let n = g.usize(1, 60);
+            let s = g.usize(1, n + 1);
+            let costs: Vec<f64> =
+                (0..n).map(|_| g.rng.f64() * 10.0 + 0.01).collect();
+            let b = partition_min_max(&costs, s);
+            assert_eq!(b.len(), s + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), n);
+            assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+        });
+    }
+
+    #[test]
+    fn optimal_within_bound_of_lower_bound() {
+        check("min-max within layer granularity of LB", 40, |g| {
+            let n = g.usize(2, 40);
+            let s = g.usize(1, n + 1);
+            let costs: Vec<f64> =
+                (0..n).map(|_| g.rng.f64() * 5.0 + 0.01).collect();
+            let b = partition_min_max(&costs, s);
+            let got = max_seg(&costs, &b);
+            let lb = (costs.iter().sum::<f64>() / s as f64)
+                .max(costs.iter().cloned().fold(0.0, f64::max));
+            let max_layer = costs.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                got <= lb + max_layer + 1e-9,
+                "got {got} lb {lb} max_layer {max_layer}"
+            );
+        });
+    }
+
+    #[test]
+    fn frozen_aware_shifts_boundary_toward_encoder() {
+        // Paper Figure 7: frozen encoder (bwd 0) + frozen LLM (bwd 1x).
+        // Frozen-aware partitioning gives the encoder FEWER stages (more
+        // fwd per encoder stage) than fwd-balanced partitioning.
+        let mut layers = uniform_layers(8, 10.0, false, false); // encoder
+        layers.extend(uniform_layers(8, 10.0, false, true)); // llm
+        let s = 4;
+        // frozen-aware costs: fwd+bwd
+        let aware: Vec<f64> =
+            layers.iter().map(|l| l.fwd_ms + l.bwd_ms(false)).collect();
+        // unaware: balanced by fwd only
+        let unaware: Vec<f64> = layers.iter().map(|l| l.fwd_ms).collect();
+        let b_aware = partition_min_max(&aware, s);
+        let b_unaware = partition_min_max(&unaware, s);
+        // encoder layers are 0..8; count layers of stage 0+1 that are
+        // encoder layers — aware should pack more encoder layers early.
+        let enc_layers_in_first_two =
+            |b: &Vec<usize>| b[2].min(8);
+        assert!(
+            enc_layers_in_first_two(&b_aware)
+                >= enc_layers_in_first_two(&b_unaware),
+            "aware {b_aware:?} unaware {b_unaware:?}"
+        );
+        // fwd+bwd balance must be better under aware partitioning
+        let spread = |b: &Vec<usize>| {
+            let sums = stage_sums(&layers, b, false);
+            let tot: Vec<f64> = sums.iter().map(|s| s.total()).collect();
+            crate::util::stats::imbalance(&tot)
+        };
+        assert!(spread(&b_aware) <= spread(&b_unaware) + 1e-9);
+    }
+
+    #[test]
+    fn stage_sums_add_up() {
+        let layers = uniform_layers(6, 2.0, true, true);
+        let sums = stage_sums(&layers, &[0, 3, 6], true);
+        assert_eq!(sums.len(), 2);
+        assert!((sums[0].fwd_ms - 6.0).abs() < 1e-12);
+        // trainable with ckpt: bwd = 2x + 1x recompute = 3x fwd
+        assert!((sums[0].bwd_ms - 18.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_more_stages_than_layers() {
+        partition_min_max(&[1.0, 2.0], 3);
+    }
+}

@@ -1,0 +1,526 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the python
+//! AOT exporter (`python/compile/aot.py`, the only place python runs) and
+//! the rust runtime. Line-oriented; grammar documented in `aot.py`.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        })
+    }
+}
+
+/// One input or output of an artifact: `name:dtype:AxBxC` (`_` = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut it = s.split(':');
+        let name = it.next().ok_or_else(|| anyhow!("empty io spec"))?;
+        let dtype = DType::parse(it.next().context("io spec missing dtype")?)?;
+        let dims_s = it.next().context("io spec missing dims")?;
+        let dims = if dims_s == "_" {
+            Vec::new()
+        } else {
+            dims_s
+                .split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(IoSpec { name: name.to_string(), dtype, dims })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+/// The compute role of an artifact (§4.2's `0/1×/2×` rule as programs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// Forward pass.
+    Fwd,
+    /// Full backward: param grads + input grads (trainable, `2×`).
+    Bwd,
+    /// Input-grads-only backward (frozen but must propagate, `1×`).
+    BwdIn,
+    /// AdamW parameter update.
+    Upd,
+}
+
+impl Role {
+    pub const ALL: [Role; 4] = [Role::Fwd, Role::Bwd, Role::BwdIn, Role::Upd];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fwd" => Ok(Role::Fwd),
+            "bwd" => Ok(Role::Bwd),
+            "bwdin" => Ok(Role::BwdIn),
+            "upd" => Ok(Role::Upd),
+            _ => bail!("unknown artifact role {s:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Role::Fwd => "fwd",
+            Role::Bwd => "bwd",
+            Role::BwdIn => "bwdin",
+            Role::Upd => "upd",
+        }
+    }
+}
+
+/// One AOT-compiled HLO program.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub role: Role,
+    /// Path relative to the artifacts root.
+    pub rel_path: String,
+    pub ins: Vec<IoSpec>,
+    pub outs: Vec<IoSpec>,
+}
+
+/// One pipeline component (encoder, projector, LLM stage, or head).
+#[derive(Clone, Debug)]
+pub struct ComponentSpec {
+    pub name: String,
+    pub kind: String,
+    pub n_params: usize,
+    /// `llm:head` shares the last LLM stage's parameter vector.
+    pub shares_params_with: Option<String>,
+    /// (rel_path, n_elems) of the deterministic f32 init.
+    pub params: Option<(String, usize)>,
+    pub artifacts: HashMap<Role, ArtifactSpec>,
+}
+
+impl ComponentSpec {
+    pub fn artifact(&self, role: Role) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(&role)
+            .ok_or_else(|| anyhow!("{}: no {} artifact", self.name, role.as_str()))
+    }
+}
+
+/// A BAM token segment: `[start, end)` tokens carry `bits`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentSpec {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+    pub bits: u64,
+}
+
+/// One exported model (a DAG of components).
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub total_tokens: usize,
+    pub text_len: usize,
+    pub insert_at: usize,
+    pub vocab: usize,
+    pub segments: Vec<SegmentSpec>,
+    pub components: Vec<ComponentSpec>,
+    pub edges: Vec<(String, String)>,
+}
+
+impl ModelManifest {
+    pub fn component(&self, name: &str) -> Result<&ComponentSpec> {
+        self.components
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("model {}: no component {name}", self.name))
+    }
+
+    /// Encoder names in declaration order (e.g. `["vision", "audio"]`).
+    pub fn encoder_names(&self) -> Vec<String> {
+        self.components
+            .iter()
+            .filter(|c| c.kind == "encoder")
+            .map(|c| c.name.trim_start_matches("enc:").to_string())
+            .collect()
+    }
+
+    /// Number of LLM pipeline stages (excluding the head).
+    pub fn n_llm_stages(&self) -> usize {
+        self.components.iter().filter(|c| c.kind == "llm_stage").count()
+    }
+
+    /// Successors of `name` in the execution DAG.
+    pub fn successors(&self, name: &str) -> Vec<&str> {
+        self.edges
+            .iter()
+            .filter(|(f, _)| f == name)
+            .map(|(_, t)| t.as_str())
+            .collect()
+    }
+
+    /// Predecessors of `name` in the execution DAG.
+    pub fn predecessors(&self, name: &str) -> Vec<&str> {
+        self.edges
+            .iter()
+            .filter(|(_, t)| t == name)
+            .map(|(f, _)| f.as_str())
+            .collect()
+    }
+
+    /// The per-token BAM bitfields of this model's (fixed) token layout.
+    pub fn bam_bits(&self) -> Vec<u64> {
+        let mut bits = vec![0u64; self.total_tokens];
+        for s in &self.segments {
+            for b in &mut bits[s.start..s.end] {
+                *b = s.bits;
+            }
+        }
+        bits
+    }
+}
+
+/// A standalone attention artifact (CP benches).
+#[derive(Clone, Debug)]
+pub struct AttnSpec {
+    pub name: String,
+    pub rel_path: String,
+    pub tokens: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+/// The whole artifacts directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<ModelManifest>,
+    pub attn: Vec<AttnSpec>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.txt`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, root)
+    }
+
+    /// Default artifacts root: `$CORNSTARCH_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var_os("CORNSTARCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let mut models: Vec<ModelManifest> = Vec::new();
+        let mut attn = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut f = line.split_whitespace();
+            let tag = f.next().unwrap();
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match tag {
+                "model" => {
+                    models.push(ModelManifest {
+                        name: f.next().with_context(ctx)?.to_string(),
+                        total_tokens: 0,
+                        text_len: 0,
+                        insert_at: 0,
+                        vocab: 0,
+                        segments: Vec::new(),
+                        components: Vec::new(),
+                        edges: Vec::new(),
+                    });
+                }
+                "tokens" => {
+                    let m = models.last_mut().with_context(ctx)?;
+                    m.total_tokens = f.next().with_context(ctx)?.parse()?;
+                    anyhow::ensure!(f.next() == Some("text"), "{}", ctx());
+                    m.text_len = f.next().with_context(ctx)?.parse()?;
+                    anyhow::ensure!(f.next() == Some("insert"), "{}", ctx());
+                    m.insert_at = f.next().with_context(ctx)?.parse()?;
+                    anyhow::ensure!(f.next() == Some("vocab"), "{}", ctx());
+                    m.vocab = f.next().with_context(ctx)?.parse()?;
+                }
+                "segment" => {
+                    let m = models.last_mut().with_context(ctx)?;
+                    m.segments.push(SegmentSpec {
+                        name: f.next().with_context(ctx)?.to_string(),
+                        start: f.next().with_context(ctx)?.parse()?,
+                        end: f.next().with_context(ctx)?.parse()?,
+                        bits: f.next().with_context(ctx)?.parse()?,
+                    });
+                }
+                "component" => {
+                    let m = models.last_mut().with_context(ctx)?;
+                    let name = f.next().with_context(ctx)?.to_string();
+                    let kind = f.next().with_context(ctx)?.to_string();
+                    let n_params: usize =
+                        f.next().with_context(ctx)?.parse()?;
+                    let shares = f
+                        .next()
+                        .with_context(ctx)?
+                        .strip_prefix("shares=")
+                        .with_context(ctx)?;
+                    m.components.push(ComponentSpec {
+                        name,
+                        kind,
+                        n_params,
+                        shares_params_with: if shares == "-" {
+                            None
+                        } else {
+                            Some(shares.to_string())
+                        },
+                        params: None,
+                        artifacts: HashMap::new(),
+                    });
+                }
+                "params" => {
+                    let m = models.last_mut().with_context(ctx)?;
+                    let comp = f.next().with_context(ctx)?.to_string();
+                    let rel = f.next().with_context(ctx)?.to_string();
+                    let n: usize = f.next().with_context(ctx)?.parse()?;
+                    m.components
+                        .iter_mut()
+                        .find(|c| c.name == comp)
+                        .with_context(ctx)?
+                        .params = Some((rel, n));
+                }
+                "artifact" => {
+                    let m = models.last_mut().with_context(ctx)?;
+                    let comp = f.next().with_context(ctx)?.to_string();
+                    let role = Role::parse(f.next().with_context(ctx)?)?;
+                    let rel_path = f.next().with_context(ctx)?.to_string();
+                    let ins_s = f
+                        .next()
+                        .with_context(ctx)?
+                        .strip_prefix("ins=")
+                        .with_context(ctx)?;
+                    let outs_s = f
+                        .next()
+                        .with_context(ctx)?
+                        .strip_prefix("outs=")
+                        .with_context(ctx)?;
+                    let parse_specs = |s: &str| -> Result<Vec<IoSpec>> {
+                        if s.is_empty() {
+                            return Ok(Vec::new());
+                        }
+                        s.split(';').map(IoSpec::parse).collect()
+                    };
+                    let art = ArtifactSpec {
+                        role,
+                        rel_path,
+                        ins: parse_specs(ins_s)?,
+                        outs: parse_specs(outs_s)?,
+                    };
+                    m.components
+                        .iter_mut()
+                        .find(|c| c.name == comp)
+                        .with_context(ctx)?
+                        .artifacts
+                        .insert(role, art);
+                }
+                "edge" => {
+                    let m = models.last_mut().with_context(ctx)?;
+                    m.edges.push((
+                        f.next().with_context(ctx)?.to_string(),
+                        f.next().with_context(ctx)?.to_string(),
+                    ));
+                }
+                "attn" => {
+                    attn.push(AttnSpec {
+                        name: f.next().with_context(ctx)?.to_string(),
+                        rel_path: f.next().with_context(ctx)?.to_string(),
+                        tokens: f.next().with_context(ctx)?.parse()?,
+                        heads: f.next().with_context(ctx)?.parse()?,
+                        head_dim: f.next().with_context(ctx)?.parse()?,
+                    });
+                }
+                _ => bail!("unknown manifest record {tag:?} at line {}", lineno + 1),
+            }
+        }
+        Ok(Manifest { root, models, attn })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("manifest has no model {name:?}"))
+    }
+
+    pub fn abs(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+/// Read a little-endian f32 binary blob (the exported param init).
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "{}: length {} not a multiple of 4",
+        path.as_ref().display(),
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+model tiny
+tokens 32 text 24 insert 4 vocab 512
+segment text 0 4 3
+segment vision 4 12 2
+segment text 12 32 3
+component enc:vision encoder 40080 shares=-
+params enc:vision tiny/params/enc_vision.f32.bin 40080
+artifact enc:vision fwd tiny/enc_vision.fwd.hlo.txt ins=flat:f32:40080;x:f32:8x48 outs=o0:f32:8x48
+component llm:head llm_head 98944 shares=llm:1
+artifact llm:head fwd tiny/llm_head.fwd.hlo.txt ins=flat:f32:98944;h:f32:32x64;labels:i32:32 outs=o0:f32:_
+edge enc:vision llm:head
+attn attn128 attn/attn128.fwd.hlo.txt 128 4 32
+";
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_model_headers() {
+        let m = sample();
+        let t = m.model("tiny").unwrap();
+        assert_eq!(t.total_tokens, 32);
+        assert_eq!(t.text_len, 24);
+        assert_eq!(t.insert_at, 4);
+        assert_eq!(t.vocab, 512);
+        assert_eq!(t.segments.len(), 3);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn parses_components_and_artifacts() {
+        let m = sample();
+        let t = m.model("tiny").unwrap();
+        let enc = t.component("enc:vision").unwrap();
+        assert_eq!(enc.kind, "encoder");
+        assert_eq!(enc.n_params, 40080);
+        assert_eq!(
+            enc.params,
+            Some(("tiny/params/enc_vision.f32.bin".to_string(), 40080))
+        );
+        let fwd = enc.artifact(Role::Fwd).unwrap();
+        assert_eq!(fwd.ins.len(), 2);
+        assert_eq!(fwd.ins[1].dims, vec![8, 48]);
+        assert_eq!(fwd.outs[0].dims, vec![8, 48]);
+        assert!(enc.artifact(Role::Bwd).is_err());
+    }
+
+    #[test]
+    fn scalar_dims_parse_as_empty() {
+        let m = sample();
+        let head = m.model("tiny").unwrap().component("llm:head").unwrap();
+        let fwd = head.artifact(Role::Fwd).unwrap();
+        assert!(fwd.outs[0].dims.is_empty());
+        assert_eq!(fwd.outs[0].elements(), 1);
+        assert_eq!(
+            head.shares_params_with.as_deref(),
+            Some("llm:1")
+        );
+        assert_eq!(fwd.ins[2].dtype, DType::I32);
+    }
+
+    #[test]
+    fn bam_bits_reconstructs_segments() {
+        let m = sample();
+        let bits = m.model("tiny").unwrap().bam_bits();
+        assert_eq!(bits.len(), 32);
+        assert_eq!(bits[0], 3);
+        assert_eq!(bits[4], 2);
+        assert_eq!(bits[11], 2);
+        assert_eq!(bits[12], 3);
+    }
+
+    #[test]
+    fn edges_and_queries() {
+        let m = sample();
+        let t = m.model("tiny").unwrap();
+        assert_eq!(t.successors("enc:vision"), vec!["llm:head"]);
+        assert_eq!(t.predecessors("llm:head"), vec!["enc:vision"]);
+        assert_eq!(t.encoder_names(), vec!["vision"]);
+    }
+
+    #[test]
+    fn attn_records() {
+        let m = sample();
+        assert_eq!(m.attn.len(), 1);
+        assert_eq!(m.attn[0].tokens, 128);
+        assert_eq!(m.attn[0].heads, 4);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // The repo's own artifacts (built by `make artifacts`).
+        let root = Manifest::default_root();
+        if root.join("manifest.txt").exists() {
+            let m = Manifest::load(&root).unwrap();
+            assert!(m.model("tiny").is_ok());
+            let tiny = m.model("tiny").unwrap();
+            assert!(tiny.n_llm_stages() >= 2);
+            for c in &tiny.components {
+                assert!(c.artifacts.contains_key(&Role::Fwd), "{}", c.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", PathBuf::from(".")).is_err());
+        assert!(IoSpec::parse("x:f99:2x2").is_err());
+        assert!(Role::parse("sideways").is_err());
+    }
+}

@@ -1,0 +1,655 @@
+//! PJRT runtime — loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and executes them from rust. Python never runs here: the HLO text files
+//! are parsed, compiled, and executed through the `xla` crate
+//! (`PjRtClient::cpu()`), exactly as `/opt/xla-example/load_hlo` does.
+//!
+//! Layering:
+//!
+//! * [`manifest`] — the artifact contract (components, roles, I/O specs).
+//! * [`HostTensor`] — `Send` host-side tensors that cross stage-thread
+//!   channels in [`crate::train`] (PJRT handles are not `Send`).
+//! * [`ModelRuntime`] — one PJRT client owning the compiled executables of
+//!   a subset of a model's components (a pipeline stage owns only its own
+//!   components — the paper's model-parallel placement).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+pub use manifest::{
+    ArtifactSpec, AttnSpec, ComponentSpec, DType, IoSpec, Manifest,
+    ModelManifest, Role, SegmentSpec,
+};
+
+/// A host-side tensor (always dense, row-major). `Send + Sync`, unlike the
+/// PJRT handles, so activations/gradients can cross stage threads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { dims: vec![], data: vec![x] }
+    }
+
+    pub fn zeros_f32(dims: &[usize]) -> Self {
+        let n = dims.iter().product::<usize>().max(1);
+        HostTensor::F32 { dims: dims.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Scalar value (loss etc).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(d.len() == 1, "not a scalar: {} elems", d.len());
+        Ok(d[0])
+    }
+
+    /// Does this tensor match an artifact I/O spec?
+    pub fn matches(&self, spec: &IoSpec) -> bool {
+        self.dtype() == spec.dtype && self.dims() == spec.dims.as_slice()
+    }
+
+    /// Upload to a device buffer (one host→device copy; no intermediate
+    /// Literal). The hot path: `execute_b` with resident parameter buffers.
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostTensor::F32 { dims, data } => client
+                .buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow!("buffer_from_host_buffer: {e}")),
+            HostTensor::I32 { dims, data } => client
+                .buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow!("buffer_from_host_buffer: {e}")),
+        }
+    }
+
+    #[allow(dead_code)]
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { dims, data } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&d)
+                        .map_err(|e| anyhow!("reshape: {e}"))?
+                }
+            }
+            HostTensor::I32 { dims, data } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&d)
+                        .map_err(|e| anyhow!("reshape: {e}"))?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32 {
+                dims: spec.dims.clone(),
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?,
+            },
+            DType::I32 => HostTensor::I32 {
+                dims: spec.dims.clone(),
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?,
+            },
+        })
+    }
+}
+
+/// One compiled component: its spec plus one PJRT executable per exported
+/// role and the authoritative host copy of the flat parameter vector
+/// (`llm:head` aliases its sharing target at execute time).
+struct CompiledComponent {
+    spec: ComponentSpec,
+    exes: HashMap<Role, xla::PjRtLoadedExecutable>,
+    params: Vec<f32>,
+    /// Device-resident copy of `params`, uploaded lazily and invalidated
+    /// by `set_params` — the perf-pass optimization that removes the
+    /// per-call host→device copy of the (large) flat parameter vector.
+    params_buf: Option<xla::PjRtBuffer>,
+}
+
+/// A PJRT runtime holding compiled executables for a subset of one model's
+/// components. Create one per pipeline-stage thread ([`crate::train`]) or
+/// one for everything (tests, single-process examples).
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    model: ModelManifest,
+    comps: HashMap<String, CompiledComponent>,
+    /// Cumulative wall time spent inside PJRT execute calls, per role.
+    pub exec_ms: HashMap<Role, f64>,
+}
+
+impl ModelRuntime {
+    /// Compile `components` (by name; `None` = all) of `model` for `roles`.
+    pub fn load(
+        manifest: &Manifest,
+        model_name: &str,
+        components: Option<&[&str]>,
+        roles: &[Role],
+    ) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let model = manifest.model(model_name)?.clone();
+        let mut comps = HashMap::new();
+        for spec in &model.components {
+            if let Some(filter) = components {
+                if !filter.contains(&spec.name.as_str()) {
+                    continue;
+                }
+            }
+            let mut exes = HashMap::new();
+            for role in roles {
+                let Some(art) = spec.artifacts.get(role) else {
+                    continue;
+                };
+                let path = manifest.abs(&art.rel_path);
+                exes.insert(*role, compile_hlo(&client, &path)?);
+            }
+            let params = match &spec.params {
+                Some((rel, n)) => {
+                    let p = manifest::read_f32_bin(manifest.abs(rel))?;
+                    anyhow::ensure!(
+                        p.len() == *n,
+                        "{}: params file has {} elems, manifest says {n}",
+                        spec.name,
+                        p.len()
+                    );
+                    p
+                }
+                None => Vec::new(),
+            };
+            comps.insert(
+                spec.name.clone(),
+                CompiledComponent {
+                    spec: spec.clone(),
+                    exes,
+                    params,
+                    params_buf: None,
+                },
+            );
+        }
+        Ok(ModelRuntime { client, model, comps, exec_ms: HashMap::new() })
+    }
+
+    /// Convenience: load every component of `model` with all roles.
+    pub fn load_all(manifest: &Manifest, model_name: &str) -> Result<Self> {
+        Self::load(manifest, model_name, None, &Role::ALL)
+    }
+
+    pub fn model(&self) -> &ModelManifest {
+        &self.model
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The flat parameter vector of `comp` (resolving parameter sharing).
+    pub fn params(&self, comp: &str) -> Result<&[f32]> {
+        let c = self.comp(comp)?;
+        match &c.spec.shares_params_with {
+            Some(owner) => self.params(owner),
+            None => Ok(&c.params),
+        }
+    }
+
+    /// Overwrite the flat parameter vector of `comp` (optimizer step).
+    pub fn set_params(&mut self, comp: &str, new: Vec<f32>) -> Result<()> {
+        let owner = {
+            let c = self.comp(comp)?;
+            c.spec
+                .shares_params_with
+                .clone()
+                .unwrap_or_else(|| comp.to_string())
+        };
+        let c = self
+            .comps
+            .get_mut(&owner)
+            .ok_or_else(|| anyhow!("no component {owner}"))?;
+        anyhow::ensure!(
+            new.len() == c.params.len(),
+            "{owner}: param size mismatch {} vs {}",
+            new.len(),
+            c.params.len()
+        );
+        c.params = new;
+        c.params_buf = None; // re-uploaded lazily on next execute
+        Ok(())
+    }
+
+    /// Name of the component owning `comp`'s parameters.
+    fn owner_of(&self, comp: &str) -> Result<String> {
+        let c = self.comp(comp)?;
+        Ok(c.spec
+            .shares_params_with
+            .clone()
+            .unwrap_or_else(|| comp.to_string()))
+    }
+
+    /// Ensure the owner's parameter vector is resident on device.
+    fn ensure_param_buffer(&mut self, comp: &str) -> Result<String> {
+        let owner = self.owner_of(comp)?;
+        let c = self
+            .comps
+            .get_mut(&owner)
+            .ok_or_else(|| anyhow!("no component {owner}"))?;
+        if c.params_buf.is_none() {
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&c.params, &[c.params.len()], None)
+                .map_err(|e| anyhow!("{owner}: param upload: {e}"))?;
+            c.params_buf = Some(buf);
+        }
+        Ok(owner)
+    }
+
+    fn comp(&self, name: &str) -> Result<&CompiledComponent> {
+        self.comps
+            .get(name)
+            .ok_or_else(|| anyhow!("component {name:?} not loaded"))
+    }
+
+    /// The artifact spec of a loaded component.
+    pub fn artifact(&self, comp: &str, role: Role) -> Result<&ArtifactSpec> {
+        self.comp(comp)?.spec.artifact(role)
+    }
+
+    /// Execute `comp`'s `role` program. `inputs` are the artifact inputs
+    /// *after* the leading `flat` parameter vector, which stays resident
+    /// on the device (perf pass: the large param vector is uploaded once,
+    /// not per call). Shapes are validated against the manifest.
+    pub fn execute(
+        &mut self,
+        comp: &str,
+        role: Role,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let owner = self.ensure_param_buffer(comp)?;
+        let art = {
+            let c = self.comp(comp)?;
+            c.spec.artifact(role)?.clone()
+        };
+        anyhow::ensure!(
+            inputs.len() + 1 == art.ins.len(),
+            "{comp}/{}: expected {} inputs after flat, got {}",
+            role.as_str(),
+            art.ins.len() - 1,
+            inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&art.ins[1..]) {
+            anyhow::ensure!(
+                t.matches(spec),
+                "{comp}/{}: input {} expects {}:{:?}, got {}:{:?}",
+                role.as_str(),
+                spec.name,
+                spec.dtype,
+                spec.dims,
+                t.dtype(),
+                t.dims()
+            );
+        }
+        let act_bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let (parts, elapsed) = {
+            let pbuf = self
+                .comps
+                .get(&owner)
+                .and_then(|c| c.params_buf.as_ref())
+                .expect("ensure_param_buffer uploaded it");
+            let c = self.comp(comp)?;
+            let exe = c.exes.get(&role).ok_or_else(|| {
+                anyhow!("{comp}: role {} not compiled", role.as_str())
+            })?;
+            let mut refs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(act_bufs.len() + 1);
+            refs.push(pbuf);
+            refs.extend(act_bufs.iter());
+            let t0 = Instant::now();
+            let out = exe
+                .execute_b::<&xla::PjRtBuffer>(&refs)
+                .map_err(|e| anyhow!("{comp}/{} execute: {e}", role.as_str()))?;
+            let result = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+            let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+            // aot.py lowers with return_tuple=True: root is always a tuple.
+            let parts = result
+                .to_tuple()
+                .map_err(|e| anyhow!("decompose tuple: {e}"))?;
+            (parts, elapsed)
+        };
+        *self.exec_ms.entry(role).or_insert(0.0) += elapsed;
+        anyhow::ensure!(
+            parts.len() == art.outs.len(),
+            "{comp}/{}: {} outputs, manifest says {}",
+            role.as_str(),
+            parts.len(),
+            art.outs.len()
+        );
+        parts
+            .iter()
+            .zip(&art.outs)
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+
+    /// Execute with the full explicit input list (including `flat`) —
+    /// used by the optimizer path and tests. Every input is uploaded.
+    pub fn execute_raw(
+        &mut self,
+        comp: &str,
+        role: Role,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let art = {
+            let c = self.comp(comp)?;
+            c.spec.artifact(role)?.clone()
+        };
+        anyhow::ensure!(
+            inputs.len() == art.ins.len(),
+            "{comp}/{}: expected {} inputs, got {}",
+            role.as_str(),
+            art.ins.len(),
+            inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&art.ins) {
+            anyhow::ensure!(
+                t.matches(spec),
+                "{comp}/{}: input {} expects {}:{:?}, got {}:{:?}",
+                role.as_str(),
+                spec.name,
+                spec.dtype,
+                spec.dims,
+                t.dtype(),
+                t.dims()
+            );
+        }
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<Result<_>>()?;
+        let (parts, elapsed) = {
+            let c = self.comp(comp)?;
+            let exe = c.exes.get(&role).ok_or_else(|| {
+                anyhow!("{comp}: role {} not compiled", role.as_str())
+            })?;
+            let t0 = Instant::now();
+            let out = exe
+                .execute_b::<&xla::PjRtBuffer>(
+                    &bufs.iter().collect::<Vec<_>>(),
+                )
+                .map_err(|e| anyhow!("{comp}/{} execute: {e}", role.as_str()))?;
+            let result = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+            let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+            let parts = result
+                .to_tuple()
+                .map_err(|e| anyhow!("decompose tuple: {e}"))?;
+            (parts, elapsed)
+        };
+        *self.exec_ms.entry(role).or_insert(0.0) += elapsed;
+        anyhow::ensure!(
+            parts.len() == art.outs.len(),
+            "{comp}/{}: {} outputs, manifest says {}",
+            role.as_str(),
+            parts.len(),
+            art.outs.len()
+        );
+        parts
+            .iter()
+            .zip(&art.outs)
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+
+    /// One AdamW step for `comp`: runs the `upd` artifact and installs the
+    /// new parameters. Optimizer slots (`m`, `v`) are owned by the caller.
+    pub fn adamw_step(
+        &mut self,
+        comp: &str,
+        grad: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        step: f32,
+        lr: f32,
+    ) -> Result<()> {
+        let n = self.params(comp)?.len();
+        anyhow::ensure!(grad.len() == n && m.len() == n && v.len() == n);
+        let owner = self.ensure_param_buffer(comp)?;
+        let parts = {
+            // grad/m/v upload (unavoidable: they are step inputs); the
+            // flat vector itself stays resident.
+            let up = |data: &[f32]| {
+                self.client
+                    .buffer_from_host_buffer(data, &[data.len()], None)
+                    .map_err(|e| anyhow!("upd upload: {e}"))
+            };
+            let gbuf = up(grad)?;
+            let mbuf = up(m)?;
+            let vbuf = up(v)?;
+            // step/lr are 0-d scalars in the artifact signature
+            let sbuf = self
+                .client
+                .buffer_from_host_buffer(&[step], &[], None)
+                .map_err(|e| anyhow!("upd upload: {e}"))?;
+            let lbuf = self
+                .client
+                .buffer_from_host_buffer(&[lr], &[], None)
+                .map_err(|e| anyhow!("upd upload: {e}"))?;
+            let c = self.comps.get(&owner).unwrap();
+            let pbuf = c.params_buf.as_ref().unwrap();
+            let exe = c
+                .exes
+                .get(&Role::Upd)
+                .ok_or_else(|| anyhow!("{owner}: upd not compiled"))?;
+            let refs: Vec<&xla::PjRtBuffer> =
+                vec![pbuf, &gbuf, &mbuf, &vbuf, &sbuf, &lbuf];
+            let t0 = Instant::now();
+            let out = exe
+                .execute_b::<&xla::PjRtBuffer>(&refs)
+                .map_err(|e| anyhow!("{owner}/upd execute: {e}"))?;
+            let result = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+            let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+            *self.exec_ms.entry(Role::Upd).or_insert(0.0) += elapsed;
+            result.to_tuple().map_err(|e| anyhow!("tuple: {e}"))?
+        };
+        anyhow::ensure!(parts.len() == 3, "upd returns (flat', m', v')");
+        let new = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        *m = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        *v = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        // Install new params on host; the device copy is invalidated and
+        // lazily re-uploaded on the next execute. (Re-uploading from the
+        // output literal via `buffer_from_host_literal` would save that
+        // copy, but the CPU plugin aliases the literal's memory, which is
+        // freed when `parts` drops — use-after-free.)
+        self.set_params(comp, new)?;
+        Ok(())
+    }
+}
+
+/// Compile one HLO-text file on `client`.
+pub fn compile_hlo(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e}", path.display()))
+}
+
+/// Standalone BAM-attention runner for the CP benches: executes the
+/// `attn<T>` artifact on (q, k, v, bits, pos) host tensors.
+pub struct AttnRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: AttnSpec,
+}
+
+impl AttnRuntime {
+    pub fn load(manifest: &Manifest, name: &str) -> Result<AttnRuntime> {
+        let spec = manifest
+            .attn
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("no attn artifact {name:?}"))?
+            .clone();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let exe = compile_hlo(&client, &manifest.abs(&spec.rel_path))
+            .context("compiling attention artifact")?;
+        Ok(AttnRuntime { client, exe, spec })
+    }
+
+    /// Run attention over the full (un-sharded) token set; returns the
+    /// output `[T*H*D]` and the execute wall time in ms.
+    pub fn run(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        bits: &[i32],
+        pos: &[i32],
+    ) -> Result<(Vec<f32>, f64)> {
+        let t = self.spec.tokens;
+        let h = self.spec.heads;
+        let d = self.spec.head_dim;
+        let qd = [t, h, d];
+        let mk = |x: &[f32]| HostTensor::f32(&qd, x.to_vec()).to_literal();
+        let lits = vec![
+            mk(q)?,
+            mk(k)?,
+            mk(v)?,
+            HostTensor::i32(&[t], bits.to_vec()).to_literal()?,
+            HostTensor::i32(&[t], pos.to_vec()).to_literal()?,
+            HostTensor::i32(&[t], bits.to_vec()).to_literal()?,
+            HostTensor::i32(&[t], pos.to_vec()).to_literal()?,
+        ];
+        let t0 = Instant::now();
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("attn execute: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync: {e}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let o = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("tuple1: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec: {e}"))?;
+        Ok((o, ms))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_and_validation() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.elements(), 6);
+        assert!(t.as_i32().is_err());
+        let spec =
+            IoSpec { name: "x".into(), dtype: DType::F32, dims: vec![2, 3] };
+        assert!(t.matches(&spec));
+        let bad =
+            IoSpec { name: "x".into(), dtype: DType::I32, dims: vec![2, 3] };
+        assert!(!t.matches(&bad));
+        let s = HostTensor::scalar_f32(4.5);
+        assert_eq!(s.scalar().unwrap(), 4.5);
+        assert!(t.scalar().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_bad_dims() {
+        HostTensor::f32(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let z = HostTensor::zeros_f32(&[4, 8]);
+        assert_eq!(z.elements(), 32);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,328 @@
+//! Event-driven executor for dependency task graphs.
+//!
+//! Semantics: a task becomes *ready* when all dependencies have finished
+//! (plus per-edge latency). Each device runs one task at a time; when a
+//! device is free it starts the ready task with the smallest priority key
+//! (1F1B: backward first, then lowest microbatch). Zero-duration tasks
+//! (e.g. the skipped backward of a fully-frozen encoder stage, §4.2) are
+//! legal and complete instantly.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::pipeline::TaskSpec;
+
+/// Per-task execution record.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskTrace {
+    pub start_ms: f64,
+    pub end_ms: f64,
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan_ms: f64,
+    pub device_busy_ms: Vec<f64>,
+    pub trace: Vec<TaskTrace>,
+}
+
+/// Ordered-f64 wrapper for heap keys.
+#[derive(PartialEq, PartialOrd)]
+struct F(f64);
+impl Eq for F {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for F {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Run the simulation. Panics on dependency cycles (tasks that never
+/// become ready).
+pub fn simulate(tasks: &[TaskSpec]) -> SimResult {
+    let n = tasks.len();
+    let n_dev = tasks.iter().map(|t| t.device + 1).max().unwrap_or(0);
+    let mut indegree = vec![0usize; n];
+    let mut dependents: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for (i, t) in tasks.iter().enumerate() {
+        indegree[i] = t.deps.len();
+        for &(d, lat) in &t.deps {
+            dependents[d].push((i, lat));
+        }
+    }
+
+    // ready_at[i): time the task's last dependency (incl. latency) cleared.
+    let mut ready_at = vec![0.0f64; n];
+    // Per-device ready queues ordered by (priority, ready_at) — min-heaps.
+    let mut queues: Vec<BinaryHeap<Reverse<((u8, usize), F, usize)>>> =
+        (0..n_dev).map(|_| BinaryHeap::new()).collect();
+    for (i, t) in tasks.iter().enumerate() {
+        if indegree[i] == 0 {
+            queues[t.device].push(Reverse((t.priority, F(0.0), i)));
+        }
+    }
+
+    let mut device_free = vec![0.0f64; n_dev];
+    let mut device_busy = vec![0.0f64; n_dev];
+    let mut trace = vec![TaskTrace { start_ms: 0.0, end_ms: 0.0 }; n];
+    let mut done = vec![false; n];
+    let mut n_done = 0usize;
+
+    // Event heap: (finish_time, task).
+    let mut events: BinaryHeap<Reverse<(F, usize)>> = BinaryHeap::new();
+
+    // Greedy device dispatch at current time.
+    fn dispatch(
+        now: f64,
+        dev: usize,
+        tasks: &[TaskSpec],
+        queues: &mut [BinaryHeap<Reverse<((u8, usize), F, usize)>>],
+        device_free: &mut [f64],
+        device_busy: &mut [f64],
+        ready_at: &[f64],
+        trace: &mut [TaskTrace],
+        events: &mut BinaryHeap<Reverse<(F, usize)>>,
+    ) {
+        if device_free[dev] > now + 1e-12 {
+            return;
+        }
+        // Pop tasks whose ready_at <= now; if the head is ready in the
+        // future, we cannot start it yet (it re-enters consideration when
+        // its enabling event fires).
+        let mut deferred = Vec::new();
+        let mut chosen = None;
+        while let Some(Reverse((prio, F(r), i))) = queues[dev].pop() {
+            if r <= now + 1e-12 {
+                chosen = Some(i);
+                break;
+            }
+            deferred.push(Reverse((prio, F(r), i)));
+        }
+        for d in deferred {
+            queues[dev].push(d);
+        }
+        if let Some(i) = chosen {
+            let start = now.max(ready_at[i]);
+            let end = start + tasks[i].dur_ms;
+            trace[i] = TaskTrace { start_ms: start, end_ms: end };
+            device_free[dev] = end;
+            device_busy[dev] += tasks[i].dur_ms;
+            events.push(Reverse((F(end), i)));
+        }
+    }
+
+    // Kick off all devices at t=0.
+    for dev in 0..n_dev {
+        dispatch(
+            0.0, dev, tasks, &mut queues, &mut device_free, &mut device_busy,
+            &ready_at, &mut trace, &mut events,
+        );
+    }
+
+    let mut makespan = 0.0f64;
+    while let Some(Reverse((F(now), i))) = events.pop() {
+        if done[i] {
+            continue;
+        }
+        done[i] = true;
+        n_done += 1;
+        makespan = makespan.max(trace[i].end_ms);
+        // Release dependents.
+        for &(j, lat) in &dependents[i] {
+            indegree[j] -= 1;
+            ready_at[j] = ready_at[j].max(now + lat);
+            if indegree[j] == 0 {
+                queues[tasks[j].device].push(Reverse((
+                    tasks[j].priority,
+                    F(ready_at[j]),
+                    j,
+                )));
+            }
+        }
+        // This device is free now; also devices whose queued tasks just
+        // became ready may be idle — dispatch everywhere cheaply.
+        for dev in 0..n_dev {
+            dispatch(
+                now, dev, tasks, &mut queues, &mut device_free,
+                &mut device_busy, &ready_at, &mut trace, &mut events,
+            );
+        }
+        // Some tasks may be ready only at now+lat with idle devices and no
+        // further events; schedule a wake-up via a zero-task trick: handled
+        // by dispatching at the *next* event anyway — ensure progress by
+        // inserting a synthetic event at the earliest future ready time if
+        // all devices idle and no events pending.
+        if events.is_empty() && n_done < n {
+            let mut min_ready = f64::INFINITY;
+            let mut any = false;
+            for q in &queues {
+                if let Some(Reverse((_, F(r), _))) = q.peek() {
+                    min_ready = min_ready.min(*&r.clone());
+                    any = true;
+                }
+            }
+            if any && min_ready.is_finite() {
+                for dev in 0..n_dev {
+                    dispatch(
+                        min_ready, dev, tasks, &mut queues, &mut device_free,
+                        &mut device_busy, &ready_at, &mut trace, &mut events,
+                    );
+                }
+            }
+        }
+    }
+
+    assert_eq!(
+        n_done, n,
+        "simulation deadlock: {} of {n} tasks completed (cycle in deps?)",
+        n_done
+    );
+
+    SimResult { makespan_ms: makespan, device_busy_ms: device_busy, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{
+        onef1b_tasks, StageCost, StageGraph, TaskKind, TaskSpec,
+    };
+
+    fn t(
+        device: usize,
+        dur: f64,
+        deps: Vec<(usize, f64)>,
+        prio: (u8, usize),
+    ) -> TaskSpec {
+        TaskSpec {
+            kind: TaskKind::Fwd,
+            stage: 0,
+            microbatch: 0,
+            device,
+            dur_ms: dur,
+            deps,
+            priority: prio,
+        }
+    }
+
+    #[test]
+    fn serial_chain() {
+        let tasks = vec![
+            t(0, 1.0, vec![], (0, 0)),
+            t(0, 2.0, vec![(0, 0.0)], (0, 1)),
+            t(0, 3.0, vec![(1, 0.0)], (0, 2)),
+        ];
+        let r = simulate(&tasks);
+        assert!((r.makespan_ms - 6.0).abs() < 1e-9);
+        assert!((r.device_busy_ms[0] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_devices() {
+        let tasks = vec![t(0, 5.0, vec![], (0, 0)), t(1, 3.0, vec![], (0, 0))];
+        let r = simulate(&tasks);
+        assert!((r.makespan_ms - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn edge_latency_delays_start() {
+        let tasks = vec![
+            t(0, 1.0, vec![], (0, 0)),
+            t(1, 1.0, vec![(0, 2.5)], (0, 0)),
+        ];
+        let r = simulate(&tasks);
+        assert!((r.trace[1].start_ms - 3.5).abs() < 1e-9);
+        assert!((r.makespan_ms - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priority_breaks_ties() {
+        // Two ready tasks on one device: lower priority key first.
+        let tasks = vec![
+            t(0, 1.0, vec![], (1, 5)),
+            t(0, 1.0, vec![], (0, 9)),
+        ];
+        let r = simulate(&tasks);
+        assert!(r.trace[1].start_ms < r.trace[0].start_ms);
+    }
+
+    #[test]
+    fn zero_duration_tasks_complete() {
+        let tasks = vec![
+            t(0, 0.0, vec![], (0, 0)),
+            t(0, 1.0, vec![(0, 0.0)], (0, 1)),
+        ];
+        let r = simulate(&tasks);
+        assert!((r.makespan_ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn detects_cycles() {
+        let tasks = vec![
+            t(0, 1.0, vec![(1, 0.0)], (0, 0)),
+            t(0, 1.0, vec![(0, 0.0)], (0, 1)),
+        ];
+        simulate(&tasks);
+    }
+
+    /// The textbook sanity check: a homogeneous 1F1B pipeline's iteration
+    /// time is (M + S - 1)·(f+b) for M microbatches, S stages, when fwd
+    /// and bwd times are equal per stage... with f != b the classic bound
+    /// is (S-1)·(f+b) warmup+drain plus M·(f+b) steady state on the
+    /// bottleneck stage.
+    #[test]
+    fn onef1b_chain_matches_analytic_bound() {
+        let s = 4;
+        let m = 8;
+        let f = 1.0;
+        let b = 2.0;
+        let mut g = StageGraph::default();
+        g.add_chain(
+            "llm",
+            &vec![StageCost { fwd_ms: f, bwd_ms: b }; s],
+            0,
+            &[],
+        );
+        let r = simulate(&onef1b_tasks(&g, m));
+        let ideal = (m as f64) * (f + b) + (s as f64 - 1.0) * (f + b);
+        assert!(
+            (r.makespan_ms - ideal).abs() < 1e-6,
+            "got {} want {ideal}",
+            r.makespan_ms
+        );
+    }
+
+    /// Modality parallelism (Fig 6b): two encoders on their own devices
+    /// run concurrently; makespan < running them via a fused sequential
+    /// chain (encoders-colocated on one device).
+    #[test]
+    fn modality_parallel_beats_colocated_encoders() {
+        let m = 4;
+        let enc = StageCost { fwd_ms: 2.0, bwd_ms: 0.0 };
+        let llm = StageCost { fwd_ms: 1.0, bwd_ms: 1.0 };
+
+        // modality-parallel: vision dev0, audio dev1, llm dev2..3
+        let mut gmp = StageGraph::default();
+        let v = gmp.add_chain("vision", &[enc], 0, &[]);
+        let a = gmp.add_chain("audio", &[enc], 1, &[]);
+        gmp.add_chain("llm", &[llm, llm], 2, &[v[0], a[0]]);
+        let r_mp = simulate(&onef1b_tasks(&gmp, m));
+
+        // colocated: both encoders fused into one stage (sequential) on
+        // dev0, llm dev1..2 — one fewer device but 2x encoder stage time.
+        let fused = StageCost { fwd_ms: 4.0, bwd_ms: 0.0 };
+        let mut gco = StageGraph::default();
+        let c = gco.add_chain("encoders", &[fused], 0, &[]);
+        gco.add_chain("llm", &[llm, llm], 1, &[c[0]]);
+        let r_co = simulate(&onef1b_tasks(&gco, m));
+
+        assert!(
+            r_mp.makespan_ms < r_co.makespan_ms,
+            "mp {} vs co {}",
+            r_mp.makespan_ms,
+            r_co.makespan_ms
+        );
+    }
+}

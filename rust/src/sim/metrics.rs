@@ -1,0 +1,53 @@
+//! Derived metrics over simulation results.
+
+use super::engine::SimResult;
+
+/// Fraction of device-time spent idle (pipeline bubbles) across the
+/// devices that had any work.
+pub fn bubble_fraction(r: &SimResult) -> f64 {
+    let active: Vec<&f64> =
+        r.device_busy_ms.iter().filter(|&&b| b > 0.0).collect();
+    if active.is_empty() || r.makespan_ms == 0.0 {
+        return 0.0;
+    }
+    let busy: f64 = active.iter().copied().sum();
+    let capacity = r.makespan_ms * active.len() as f64;
+    (capacity - busy) / capacity
+}
+
+/// Samples/s/GPU given `samples` processed per iteration and `n_gpus`
+/// total (the paper normalizes throughput by GPU count because
+/// configurations use different numbers of GPUs, §6.1).
+pub fn throughput_per_gpu(r: &SimResult, samples: usize, n_gpus: usize) -> f64 {
+    samples as f64 / (r.makespan_ms / 1e3) / n_gpus as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::TaskTrace;
+
+    fn res(makespan: f64, busy: Vec<f64>) -> SimResult {
+        SimResult { makespan_ms: makespan, device_busy_ms: busy, trace: vec![TaskTrace { start_ms: 0.0, end_ms: 0.0 }] }
+    }
+
+    #[test]
+    fn no_bubbles_when_fully_busy() {
+        let r = res(10.0, vec![10.0, 10.0]);
+        assert!(bubble_fraction(&r).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_idle() {
+        let r = res(10.0, vec![10.0, 0.0, 5.0]);
+        // devices with work: 10 and 5 busy of 2*10 capacity
+        assert!((bubble_fraction(&r) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_normalizes_by_gpus() {
+        let r = res(1000.0, vec![1000.0]);
+        assert!((throughput_per_gpu(&r, 24, 24) - 1.0).abs() < 1e-12);
+        assert!((throughput_per_gpu(&r, 24, 12) - 2.0).abs() < 1e-12);
+    }
+}

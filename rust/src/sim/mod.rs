@@ -1,0 +1,13 @@
+//! Discrete-event cluster simulator.
+//!
+//! Executes a dependency task graph ([`crate::pipeline::TaskSpec`]) over
+//! devices with greedy per-device priority scheduling, producing the
+//! iteration timeline the paper's evaluation figures are built from:
+//! makespan (iteration time), per-device busy/idle (pipeline bubbles),
+//! and a per-task trace for schedule visualization (Figure 2/6/7 style).
+
+pub mod engine;
+pub mod metrics;
+
+pub use engine::{simulate, SimResult, TaskTrace};
+pub use metrics::{bubble_fraction, throughput_per_gpu};

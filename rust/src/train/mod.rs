@@ -1,0 +1,353 @@
+//! Real distributed training over PJRT artifacts — the executable half of
+//! the paper's system (the planners in [`crate::modality`] decide *how* to
+//! split; this module actually *runs* the split model).
+//!
+//! Two executors share the same per-component programs and must produce
+//! bit-identical losses:
+//!
+//! * [`single::Trainer`] — one PJRT client, sequential microbatches. The
+//!   numerics oracle (pytest checks it against the pure-JAX model) and the
+//!   quickstart path.
+//! * [`pipeline::PipelineTrainer`] — the paper's execution model: one OS
+//!   thread per pipeline stage, each owning its own PJRT client and only
+//!   its own components' executables; activations/gradients cross stages
+//!   as [`HostTensor`] messages (modality parallelism: encoder stages run
+//!   concurrently; 1F1B: stages prefer backward work in steady state).
+//!
+//! The §4.2 frozen rule is executed literally via artifact choice
+//! ([`GradAction`]): `Full` runs `bwd` (param+input grads, the 2× path),
+//! `InputOnly` runs `bwdin` (the 1× path), `Skip` runs nothing (the 0×
+//! path).
+
+pub mod data;
+pub mod pipeline;
+pub mod single;
+
+pub use data::{Sample, SyntheticDataset, IGNORE_LABEL};
+pub use pipeline::PipelineTrainer;
+pub use single::Trainer;
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::{ComponentSpec, HostTensor, ModelManifest, Role};
+
+/// Which constituent models are frozen (the paper's Listing 1 `train()`
+/// toggles). Default = the §6.1 recipe: encoders+LLM frozen, projectors
+/// trainable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrozenPolicy {
+    pub encoders_frozen: bool,
+    pub llm_frozen: bool,
+    pub projectors_frozen: bool,
+}
+
+impl FrozenPolicy {
+    /// The paper's default MLLM alignment recipe.
+    pub fn paper() -> Self {
+        FrozenPolicy {
+            encoders_frozen: true,
+            llm_frozen: true,
+            projectors_frozen: false,
+        }
+    }
+
+    /// Full fine-tuning: everything trainable.
+    pub fn all_trainable() -> Self {
+        FrozenPolicy {
+            encoders_frozen: false,
+            llm_frozen: false,
+            projectors_frozen: false,
+        }
+    }
+
+    /// Everything frozen (no training happens; inference-like).
+    pub fn all_frozen() -> Self {
+        FrozenPolicy {
+            encoders_frozen: true,
+            llm_frozen: true,
+            projectors_frozen: true,
+        }
+    }
+
+    fn any_encoder_side_trainable(&self) -> bool {
+        !self.encoders_frozen || !self.projectors_frozen
+    }
+
+    /// Is a component's own parameter set trainable?
+    pub fn trainable(&self, kind: &str) -> bool {
+        match kind {
+            "encoder" => !self.encoders_frozen,
+            "projector" => !self.projectors_frozen,
+            "llm_stage" | "llm_head" => !self.llm_frozen,
+            _ => false,
+        }
+    }
+
+    /// The backward action for a component — the §4.2 rule as code.
+    pub fn grad_action(&self, kind: &str) -> GradAction {
+        match kind {
+            "encoder" => {
+                if !self.encoders_frozen {
+                    GradAction::Full
+                } else {
+                    // nothing upstream of an encoder: 0x path
+                    GradAction::Skip
+                }
+            }
+            "projector" => {
+                if !self.projectors_frozen {
+                    GradAction::Full
+                } else if !self.encoders_frozen {
+                    GradAction::InputOnly
+                } else {
+                    GradAction::Skip
+                }
+            }
+            "llm_stage" | "llm_head" => {
+                if !self.llm_frozen {
+                    GradAction::Full
+                } else if self.any_encoder_side_trainable() {
+                    // frozen but must propagate input grads (1x path)
+                    GradAction::InputOnly
+                } else {
+                    GradAction::Skip
+                }
+            }
+            _ => GradAction::Skip,
+        }
+    }
+}
+
+/// Which backward program (if any) a component runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradAction {
+    /// `bwd`: parameter + input gradients (the 2× path).
+    Full,
+    /// `bwdin`: input gradients only (the 1× path).
+    InputOnly,
+    /// No backward at all (the 0× path).
+    Skip,
+}
+
+impl GradAction {
+    pub fn role(&self) -> Option<Role> {
+        match self {
+            GradAction::Full => Some(Role::Bwd),
+            GradAction::InputOnly => Some(Role::BwdIn),
+            GradAction::Skip => None,
+        }
+    }
+}
+
+/// Per-step training statistics.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub step: usize,
+    /// Mean loss over the step's microbatches.
+    pub loss: f32,
+    pub microbatches: usize,
+    /// Wall time of the whole step (ms).
+    pub wall_ms: f64,
+}
+
+/// Accumulates flat gradients per parameter-owning component.
+#[derive(Default, Debug)]
+pub struct GradStore {
+    grads: HashMap<String, Vec<f32>>,
+}
+
+impl GradStore {
+    pub fn add(&mut self, owner: &str, g: &[f32]) {
+        match self.grads.get_mut(owner) {
+            Some(acc) => {
+                debug_assert_eq!(acc.len(), g.len());
+                for (a, x) in acc.iter_mut().zip(g) {
+                    *a += x;
+                }
+            }
+            None => {
+                self.grads.insert(owner.to_string(), g.to_vec());
+            }
+        }
+    }
+
+    /// Drain, scaling by `1/microbatches` (loss is microbatch-mean).
+    pub fn drain_scaled(
+        &mut self,
+        microbatches: usize,
+    ) -> Vec<(String, Vec<f32>)> {
+        let s = 1.0 / microbatches as f32;
+        let mut out: Vec<(String, Vec<f32>)> = self
+            .grads
+            .drain()
+            .map(|(k, mut v)| {
+                for x in &mut v {
+                    *x *= s;
+                }
+                (k, v)
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grads.is_empty()
+    }
+
+    pub fn get(&self, owner: &str) -> Option<&[f32]> {
+        self.grads.get(owner).map(|v| v.as_slice())
+    }
+}
+
+/// The owner of a component's parameters (resolving `shares_params_with`).
+pub fn param_owner(comp: &ComponentSpec) -> &str {
+    comp.shares_params_with.as_deref().unwrap_or(&comp.name)
+}
+
+/// User-defined inter-module callbacks — the paper's §5.1 / Listing 2
+/// interface ("useful when modules are not designed for multimodality"):
+///
+/// * `before_encoder(name, x)` — preprocess an encoder's raw input (the
+///   paper's example: LLaVA-Next AnyRes image-block splitting that the
+///   underlying CLIP encoder does not support);
+/// * `after_encoder(name, feats)` — postprocess encoder features before
+///   the projector;
+/// * `after_projector(name, mod_h)` — postprocess projected tokens before
+///   they are embedded into the LLM (the paper's modality-token merge
+///   hook; the *placement* of merged tokens is the manifest's segment
+///   layout, which the artifacts bake in).
+///
+/// Callbacks run on host tensors on the stage that owns the module, so
+/// they are `Send + Sync` closures. The backward pass treats them as
+/// identity (gradients flow through unchanged) — appropriate for the
+/// re-layout / token-merge style hooks of the paper's examples; a hook
+/// with its own parameters should instead be a proper component with
+/// exported artifacts.
+#[derive(Clone, Default)]
+pub struct Callbacks {
+    pub before_encoder: Option<CbTensor>,
+    pub after_encoder: Option<CbTensor>,
+    pub after_projector: Option<CbTensor>,
+}
+
+/// `(module name, tensor) -> tensor` host-side hook.
+pub type CbTensor =
+    std::sync::Arc<dyn Fn(&str, HostTensor) -> HostTensor + Send + Sync>;
+
+impl Callbacks {
+    pub fn none() -> Self {
+        Callbacks::default()
+    }
+
+    pub fn apply(
+        which: &Option<CbTensor>,
+        name: &str,
+        t: HostTensor,
+    ) -> HostTensor {
+        match which {
+            Some(cb) => cb(name, t),
+            None => t,
+        }
+    }
+}
+
+/// Fixed per-model tensors fed to every LLM-stage call: the BAM bits and
+/// positions of the (static) token layout.
+#[derive(Clone, Debug)]
+pub struct BamTensors {
+    pub bits: HostTensor,
+    pub pos: HostTensor,
+}
+
+impl BamTensors {
+    pub fn of(model: &ModelManifest) -> Result<BamTensors> {
+        let t = model.total_tokens;
+        let bits64 = model.bam_bits();
+        let bits: Vec<i32> = bits64
+            .iter()
+            .map(|&b| {
+                anyhow::ensure!(
+                    b <= i32::MAX as u64,
+                    "bitfield {b:#x} exceeds the kernel's 32-bit lanes"
+                );
+                Ok(b as i32)
+            })
+            .collect::<Result<_>>()?;
+        let pos: Vec<i32> = (0..t as i32).collect();
+        Ok(BamTensors {
+            bits: HostTensor::i32(&[t], bits),
+            pos: HostTensor::i32(&[t], pos),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_policy_maps_to_paper_rule() {
+        // Figure 3b / §4.2: frozen encoder+LLM, trainable projector.
+        let p = FrozenPolicy::paper();
+        assert_eq!(p.grad_action("encoder"), GradAction::Skip); // 0x
+        assert_eq!(p.grad_action("projector"), GradAction::Full); // 2x
+        assert_eq!(p.grad_action("llm_stage"), GradAction::InputOnly); // 1x
+        assert_eq!(p.grad_action("llm_head"), GradAction::InputOnly);
+        assert!(!p.trainable("encoder"));
+        assert!(p.trainable("projector"));
+        assert!(!p.trainable("llm_stage"));
+    }
+
+    #[test]
+    fn all_trainable_runs_full_backward_everywhere() {
+        let p = FrozenPolicy::all_trainable();
+        for k in ["encoder", "projector", "llm_stage", "llm_head"] {
+            assert_eq!(p.grad_action(k), GradAction::Full, "{k}");
+        }
+    }
+
+    #[test]
+    fn all_frozen_skips_everything() {
+        let p = FrozenPolicy::all_frozen();
+        for k in ["encoder", "projector", "llm_stage", "llm_head"] {
+            assert_eq!(p.grad_action(k), GradAction::Skip, "{k}");
+        }
+    }
+
+    #[test]
+    fn trainable_encoder_forces_llm_input_grads() {
+        // Even a fully-frozen LLM must propagate if the encoder trains.
+        let p = FrozenPolicy {
+            encoders_frozen: false,
+            llm_frozen: true,
+            projectors_frozen: true,
+        };
+        assert_eq!(p.grad_action("llm_stage"), GradAction::InputOnly);
+        assert_eq!(p.grad_action("projector"), GradAction::InputOnly);
+        assert_eq!(p.grad_action("encoder"), GradAction::Full);
+    }
+
+    #[test]
+    fn grad_store_accumulates_and_scales() {
+        let mut gs = GradStore::default();
+        gs.add("a", &[1.0, 2.0]);
+        gs.add("a", &[3.0, 4.0]);
+        gs.add("b", &[10.0]);
+        let out = gs.drain_scaled(2);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, "a");
+        assert_eq!(out[0].1, vec![2.0, 3.0]);
+        assert_eq!(out[1].1, vec![5.0]);
+        assert!(gs.is_empty());
+    }
+
+    #[test]
+    fn action_roles() {
+        assert_eq!(GradAction::Full.role(), Some(Role::Bwd));
+        assert_eq!(GradAction::InputOnly.role(), Some(Role::BwdIn));
+        assert_eq!(GradAction::Skip.role(), None);
+    }
+}

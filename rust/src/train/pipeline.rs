@@ -1,0 +1,843 @@
+//! Thread-per-stage pipeline-parallel trainer — the paper's execution
+//! model, real: every pipeline stage is an OS thread owning its own PJRT
+//! CPU client and ONLY its own components' compiled executables (model
+//! parallelism: no stage ever holds another stage's parameters).
+//! Activations and gradients cross stages as [`HostTensor`] messages over
+//! mpsc channels, standing in for NVLink/IB transfers.
+//!
+//! Topology (modality parallelism, §4.1): one stage per encoder chain
+//! (`enc:X` + `proj:X`) — encoder stages run **concurrently** on their own
+//! threads — plus one stage per LLM pipeline stage; the loss head is
+//! colocated with the last LLM stage. The LLM's first stage gathers every
+//! encoder's projected tokens before it can run a microbatch forward
+//! (Figure 6b), and its backward fans `d mod_h` back out to every encoder
+//! stage in parallel.
+//!
+//! Schedule: stages drain their inbox preferring **backward** messages
+//! (1F1B steady-state priority), and the feeder caps in-flight
+//! microbatches at the stage depth (the 1F1B activation-memory bound), so
+//! the stash held per stage stays ≤ depth, not ≤ #microbatches.
+//!
+//! Frozen rule (§4.2): each stage picks `bwd` / `bwdin` / nothing per its
+//! components' [`GradAction`] — the `2×/1×/0×` paths are different
+//! artifacts, not scaled estimates.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{HostTensor, Manifest, ModelRuntime, Role};
+
+use super::{
+    BamTensors, FrozenPolicy, GradAction, GradStore, Sample, StepStats,
+};
+
+/// Inter-stage message.
+enum Msg {
+    /// Forward activation (or source data) for microbatch `mb`.
+    Fwd { mb: usize, from: String, tensor: HostTensor },
+    /// Gradient w.r.t. this stage's output for microbatch `mb`.
+    Bwd { mb: usize, tensor: HostTensor },
+    /// All microbatches of the step have been fed; run the optimizer once
+    /// local work drains, then report `StageDone`.
+    StepEnd { microbatches: usize },
+    /// Shut the stage thread down.
+    Stop,
+}
+
+/// Stage -> coordinator report.
+enum Report {
+    Loss { mb: usize, loss: f32 },
+    StageDone { stage: usize, peak_stash: usize, exec_ms: f64 },
+    Error { stage: usize, message: String },
+}
+
+/// What one stage runs.
+#[derive(Clone, Debug)]
+enum StageKind {
+    /// `enc:X` + `proj:X`.
+    Encoder { name: String },
+    /// `llm:i`; the last stage also owns `llm:head`.
+    Llm { index: usize, is_last: bool },
+}
+
+struct StageCtx {
+    stage_id: usize,
+    kind: StageKind,
+    rt: ModelRuntime,
+    policy: FrozenPolicy,
+    bam: BamTensors,
+    #[allow(dead_code)]
+    n_llm_stages: usize,
+    enc_names: Vec<String>,
+    /// Senders to successor/predecessor stages and the coordinator.
+    to_next: Vec<Sender<Msg>>, // fwd direction
+    to_prev: Vec<Sender<Msg>>, // bwd direction (encoder stages: empty)
+    report: Sender<Report>,
+    lr: f32,
+}
+
+/// The coordinator handle: owns the stage threads and drives steps.
+pub struct PipelineTrainer {
+    feeders: Vec<(String, Sender<Msg>)>, // (encoder comp name, sender)
+    llm0_tx: Sender<Msg>,
+    last_tx: Sender<Msg>,
+    all_tx: Vec<Sender<Msg>>,
+    report_rx: Receiver<Report>,
+    handles: Vec<JoinHandle<()>>,
+    n_stages: usize,
+    step: usize,
+    model_name: String,
+    /// Max in-flight microbatches (the 1F1B memory bound).
+    pub inflight_limit: usize,
+    /// Peak stash (microbatches buffered) per stage, last step.
+    pub peak_stash: Vec<usize>,
+    /// Cumulative PJRT execute ms per stage, last step.
+    pub stage_exec_ms: Vec<f64>,
+}
+
+impl PipelineTrainer {
+    /// Spawn one thread per stage. Compilation happens inside each thread
+    /// (each has a private PJRT client), concurrently.
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        policy: FrozenPolicy,
+        lr: f32,
+    ) -> Result<PipelineTrainer> {
+        let mm = manifest.model(model)?.clone();
+        let enc_names = mm.encoder_names();
+        let n_llm = mm.n_llm_stages();
+        let n_stages = enc_names.len() + n_llm;
+
+        // Channels: one inbox per stage + one report channel.
+        let mut txs = Vec::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n_stages {
+            let (tx, rx) = channel::<Msg>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let (report_tx, report_rx) = channel::<Report>();
+
+        // Stage ids: encoders 0..E, llm stages E..E+n_llm.
+        let llm_stage_id = |i: usize| enc_names.len() + i;
+        let mut handles = Vec::new();
+        for (sid, rx) in rxs.into_iter().enumerate() {
+            let kind = if sid < enc_names.len() {
+                StageKind::Encoder { name: enc_names[sid].clone() }
+            } else {
+                let i = sid - enc_names.len();
+                StageKind::Llm { index: i, is_last: i == n_llm - 1 }
+            };
+            let (to_next, to_prev) = match &kind {
+                StageKind::Encoder { .. } => {
+                    (vec![txs[llm_stage_id(0)].clone()], vec![])
+                }
+                StageKind::Llm { index, is_last } => {
+                    let next = if *is_last {
+                        vec![]
+                    } else {
+                        vec![txs[llm_stage_id(index + 1)].clone()]
+                    };
+                    let prev = if *index == 0 {
+                        (0..enc_names.len()).map(|e| txs[e].clone()).collect()
+                    } else {
+                        vec![txs[llm_stage_id(index - 1)].clone()]
+                    };
+                    (next, prev)
+                }
+            };
+            let manifest = manifest.clone();
+            let model = model.to_string();
+            let report = report_tx.clone();
+            let kind_c = kind.clone();
+            let enc_names_c = enc_names.clone();
+            handles.push(std::thread::spawn(move || {
+                match stage_main(
+                    sid, kind_c, &manifest, &model, policy, lr, rx, to_next,
+                    to_prev, report.clone(), n_llm, enc_names_c,
+                ) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        let _ = report.send(Report::Error {
+                            stage: sid,
+                            message: format!("{e:#}"),
+                        });
+                    }
+                }
+            }));
+        }
+
+        Ok(PipelineTrainer {
+            feeders: enc_names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| (format!("enc:{n}"), txs[i].clone()))
+                .collect(),
+            llm0_tx: txs[llm_stage_id(0)].clone(),
+            last_tx: txs[llm_stage_id(n_llm - 1)].clone(),
+            all_tx: txs,
+            report_rx,
+            handles,
+            n_stages,
+            step: 0,
+            model_name: model.to_string(),
+            inflight_limit: n_stages + 1,
+            peak_stash: vec![0; n_stages],
+            stage_exec_ms: vec![0.0; n_stages],
+        })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.n_stages
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    /// One training step over `samples` microbatches. Returns the mean
+    /// loss; losses equal the single-process [`super::Trainer`]'s exactly.
+    pub fn train_step(&mut self, samples: &[Sample]) -> Result<StepStats> {
+        anyhow::ensure!(!samples.is_empty());
+        let m = samples.len();
+        let t0 = Instant::now();
+        let mut losses = vec![f32::NAN; m];
+        let mut got_losses = 0usize;
+        let mut fed = 0usize;
+
+        let feed = |mb: usize, trainer: &Self| -> Result<()> {
+            let s = &samples[mb];
+            for (comp, tx) in &trainer.feeders {
+                let x = s
+                    .encoder_inputs
+                    .iter()
+                    .find(|(n, _)| n == comp)
+                    .map(|(_, t)| t.clone())
+                    .ok_or_else(|| anyhow!("sample missing {comp}"))?;
+                tx.send(Msg::Fwd { mb, from: "data".into(), tensor: x })
+                    .map_err(|_| anyhow!("stage hung up"))?;
+            }
+            trainer
+                .llm0_tx
+                .send(Msg::Fwd {
+                    mb,
+                    from: "text".into(),
+                    tensor: HostTensor::i32(
+                        &[s.text_ids.len()],
+                        s.text_ids.clone(),
+                    ),
+                })
+                .map_err(|_| anyhow!("stage hung up"))?;
+            trainer
+                .last_tx
+                .send(Msg::Fwd {
+                    mb,
+                    from: "labels".into(),
+                    tensor: HostTensor::i32(
+                        &[s.labels.len()],
+                        s.labels.clone(),
+                    ),
+                })
+                .map_err(|_| anyhow!("stage hung up"))?;
+            Ok(())
+        };
+
+        // Warmup window: at most `inflight_limit` microbatches in flight
+        // (the 1F1B activation-memory bound).
+        while fed < m.min(self.inflight_limit) {
+            feed(fed, self)?;
+            fed += 1;
+        }
+
+        // Drain losses; feed one more microbatch per completed one (1F1B
+        // steady state: one forward admitted per backward completed).
+        while got_losses < m {
+            match self.report_rx.recv() {
+                Ok(Report::Loss { mb, loss }) => {
+                    losses[mb] = loss;
+                    got_losses += 1;
+                    if fed < m {
+                        feed(fed, self)?;
+                        fed += 1;
+                    }
+                }
+                Ok(Report::Error { stage, message }) => {
+                    bail!("stage {stage} failed: {message}")
+                }
+                Ok(Report::StageDone { .. }) => {
+                    bail!("unexpected StageDone before StepEnd")
+                }
+                Err(_) => bail!("all stages hung up"),
+            }
+        }
+
+        // End of step: every stage runs its optimizer then reports done.
+        for tx in &self.all_tx {
+            tx.send(Msg::StepEnd { microbatches: m })
+                .map_err(|_| anyhow!("stage hung up"))?;
+        }
+        let mut done = 0usize;
+        while done < self.n_stages {
+            match self.report_rx.recv() {
+                Ok(Report::StageDone { stage, peak_stash, exec_ms }) => {
+                    self.peak_stash[stage] = peak_stash;
+                    self.stage_exec_ms[stage] = exec_ms;
+                    done += 1;
+                }
+                Ok(Report::Error { stage, message }) => {
+                    bail!("stage {stage} failed: {message}")
+                }
+                Ok(Report::Loss { .. }) => bail!("loss after step end"),
+                Err(_) => bail!("all stages hung up"),
+            }
+        }
+
+        self.step += 1;
+        let loss = losses.iter().sum::<f32>() / m as f32;
+        anyhow::ensure!(loss.is_finite(), "non-finite step loss");
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            microbatches: m,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+impl Drop for PipelineTrainer {
+    fn drop(&mut self) {
+        for tx in &self.all_tx {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pending forward inputs of one microbatch at the llm:0 gather point.
+#[derive(Default)]
+struct Gather {
+    text: Option<HostTensor>,
+    mod_h: HashMap<String, HostTensor>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage_main(
+    stage_id: usize,
+    kind: StageKind,
+    manifest: &Manifest,
+    model: &str,
+    policy: FrozenPolicy,
+    lr: f32,
+    rx: Receiver<Msg>,
+    to_next: Vec<Sender<Msg>>,
+    to_prev: Vec<Sender<Msg>>,
+    report: Sender<Report>,
+    n_llm_stages: usize,
+    enc_names: Vec<String>,
+) -> Result<()> {
+    // Compile ONLY this stage's components (model-parallel placement).
+    let comps: Vec<String> = match &kind {
+        StageKind::Encoder { name } => {
+            vec![format!("enc:{name}"), format!("proj:{name}")]
+        }
+        StageKind::Llm { index, is_last } => {
+            let mut v = vec![format!("llm:{index}")];
+            if *is_last {
+                v.push("llm:head".to_string());
+            }
+            v
+        }
+    };
+    let comp_refs: Vec<&str> = comps.iter().map(|s| s.as_str()).collect();
+    let rt = ModelRuntime::load(manifest, model, Some(&comp_refs), &Role::ALL)?;
+    let bam = BamTensors::of(rt.model())?;
+    let mut ctx = StageCtx {
+        stage_id,
+        kind,
+        rt,
+        policy,
+        bam,
+        n_llm_stages,
+        enc_names,
+        to_next,
+        to_prev,
+        report,
+        lr,
+    };
+    stage_loop(&mut ctx, rx)
+}
+
+fn stage_loop(ctx: &mut StageCtx, rx: Receiver<Msg>) -> Result<()> {
+    // Optimizer slots for owned trainable components.
+    let mut opt: HashMap<String, (Vec<f32>, Vec<f32>)> = HashMap::new();
+    for c in ctx.rt.model().components.clone() {
+        let owned = match &ctx.kind {
+            StageKind::Encoder { name } => {
+                c.name == format!("enc:{name}") || c.name == format!("proj:{name}")
+            }
+            StageKind::Llm { index, .. } => c.name == format!("llm:{index}"),
+        };
+        if owned && ctx.policy.trainable(&c.kind) && c.shares_params_with.is_none()
+        {
+            opt.insert(c.name.clone(), (vec![0.0; c.n_params], vec![0.0; c.n_params]));
+        }
+    }
+    let mut step = 0usize;
+
+    // Per-step state.
+    let mut stash: HashMap<usize, Vec<HostTensor>> = HashMap::new(); // fwd ins per mb
+    let mut gather: HashMap<usize, Gather> = HashMap::new(); // llm:0 only
+    let mut labels: HashMap<usize, HostTensor> = HashMap::new(); // last only
+    let mut grads = GradStore::default();
+    let mut fwd_done = 0usize;
+    let mut bwd_done = 0usize;
+    let mut peak_stash = 0usize;
+    let mut pending_end: Option<usize> = None;
+    // Local queue with backward-first priority (1F1B steady state).
+    let mut queue: VecDeque<Msg> = VecDeque::new();
+
+    'outer: loop {
+        // Fill the local queue: block for one message, then drain.
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(m) => push_prio(&mut queue, m),
+                Err(_) => break 'outer, // coordinator dropped
+            }
+        }
+        while let Ok(m) = rx.try_recv() {
+            push_prio(&mut queue, m);
+        }
+        let Some(msg) = queue.pop_front() else { continue };
+        match msg {
+            Msg::Stop => break 'outer,
+            Msg::Fwd { mb, from, tensor } => {
+                handle_fwd(ctx, mb, &from, tensor, &mut stash, &mut gather, &mut labels, &mut grads, &mut fwd_done, &mut bwd_done)?;
+                peak_stash = peak_stash.max(stash.len());
+            }
+            Msg::Bwd { mb, tensor } => {
+                handle_bwd(ctx, mb, tensor, &mut stash, &mut grads)?;
+                bwd_done += 1;
+            }
+            Msg::StepEnd { microbatches } => pending_end = Some(microbatches),
+        }
+        // Step completion check: all fwd and all expected bwd done.
+        if let Some(m) = pending_end {
+            let expect_bwd = expected_bwd(ctx, m);
+            if fwd_done >= m && bwd_done >= expect_bwd {
+                step += 1;
+                for (owner, g) in grads.drain_scaled(m) {
+                    if let Some((mm, vv)) = opt.get_mut(&owner) {
+                        let mut m_t = std::mem::take(mm);
+                        let mut v_t = std::mem::take(vv);
+                        ctx.rt.adamw_step(
+                            &owner, &g, &mut m_t, &mut v_t, step as f32,
+                            ctx.lr,
+                        )?;
+                        let slot = opt.get_mut(&owner).unwrap();
+                        slot.0 = m_t;
+                        slot.1 = v_t;
+                    }
+                }
+                let exec_ms: f64 = ctx.rt.exec_ms.values().sum();
+                ctx.rt.exec_ms.clear();
+                ctx.report
+                    .send(Report::StageDone {
+                        stage: ctx.stage_id,
+                        peak_stash,
+                        exec_ms,
+                    })
+                    .ok();
+                stash.clear();
+                gather.clear();
+                labels.clear();
+                fwd_done = 0;
+                bwd_done = 0;
+                peak_stash = 0;
+                pending_end = None;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn push_prio(q: &mut VecDeque<Msg>, m: Msg) {
+    match m {
+        Msg::Bwd { .. } => q.push_front(m), // backward first (1F1B)
+        other => q.push_back(other),
+    }
+}
+
+/// How many Bwd messages this stage receives per step of `m` microbatches.
+fn expected_bwd(ctx: &StageCtx, m: usize) -> usize {
+    match &ctx.kind {
+        // Encoder stages receive d mod_h iff the LLM propagates input
+        // grads (its action is not Skip).
+        StageKind::Encoder { .. } => {
+            if ctx.policy.grad_action("llm_stage") != GradAction::Skip {
+                m
+            } else {
+                0
+            }
+        }
+        // The last LLM stage self-triggers backward from the loss; other
+        // stages receive dh from their successor.
+        StageKind::Llm { is_last, .. } => {
+            if *is_last || ctx.policy.grad_action("llm_stage") == GradAction::Skip
+            {
+                0
+            } else {
+                m
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_fwd(
+    ctx: &mut StageCtx,
+    mb: usize,
+    from: &str,
+    tensor: HostTensor,
+    stash: &mut HashMap<usize, Vec<HostTensor>>,
+    gather: &mut HashMap<usize, Gather>,
+    labels: &mut HashMap<usize, HostTensor>,
+    grads: &mut GradStore,
+    fwd_done: &mut usize,
+    bwd_done: &mut usize,
+) -> Result<()> {
+    match ctx.kind.clone() {
+        StageKind::Encoder { name } => {
+            let enc = format!("enc:{name}");
+            let proj = format!("proj:{name}");
+            let ins = vec![tensor];
+            let feats = ctx.rt.execute(&enc, Role::Fwd, &ins)?.remove(0);
+            let pins = vec![feats];
+            let mod_h = ctx.rt.execute(&proj, Role::Fwd, &pins)?.remove(0);
+            // stash = [enc_x, proj_feats] for backward
+            let mut st = ins;
+            st.extend(pins);
+            stash.insert(mb, st);
+            *fwd_done += 1;
+            ctx.to_next[0]
+                .send(Msg::Fwd { mb, from: proj, tensor: mod_h })
+                .ok();
+        }
+        StageKind::Llm { index: 0, is_last } => {
+            if from == "labels" {
+                labels.insert(mb, tensor);
+                if is_last {
+                    try_run_head(ctx, mb, labels, stash, grads, bwd_done)?;
+                }
+                return Ok(());
+            }
+            // Gather text + every encoder's mod_h before running.
+            {
+                let g = gather.entry(mb).or_default();
+                if from == "text" {
+                    g.text = Some(tensor);
+                } else {
+                    let enc = from
+                        .strip_prefix("proj:")
+                        .ok_or_else(|| anyhow!("unexpected fwd from {from}"))?;
+                    g.mod_h.insert(enc.to_string(), tensor);
+                }
+            }
+            let complete = {
+                let g = &gather[&mb];
+                g.text.is_some() && g.mod_h.len() == ctx.enc_names.len()
+            };
+            if complete {
+                let g = gather.remove(&mb).unwrap();
+                let mut ins = vec![g.text.unwrap()];
+                for n in &ctx.enc_names {
+                    ins.push(
+                        g.mod_h
+                            .get(n)
+                            .ok_or_else(|| anyhow!("missing mod_h {n}"))?
+                            .clone(),
+                    );
+                }
+                ins.push(ctx.bam.bits.clone());
+                ins.push(ctx.bam.pos.clone());
+                let h = ctx.rt.execute("llm:0", Role::Fwd, &ins)?.remove(0);
+                stash.insert(mb, ins);
+                *fwd_done += 1;
+                finish_llm_fwd(ctx, mb, h, is_last, labels, stash, grads, bwd_done)?;
+            }
+        }
+        StageKind::Llm { index, is_last } => {
+            if from == "labels" {
+                labels.insert(mb, tensor);
+                // The head runs once both the parked stage output and the
+                // labels are present, whichever arrives last.
+                try_run_head(ctx, mb, labels, stash, grads, bwd_done)?;
+                return Ok(());
+            }
+            let name = format!("llm:{index}");
+            let ins =
+                vec![tensor, ctx.bam.bits.clone(), ctx.bam.pos.clone()];
+            let h = ctx.rt.execute(&name, Role::Fwd, &ins)?.remove(0);
+            stash.insert(mb, ins);
+            *fwd_done += 1;
+            finish_llm_fwd(ctx, mb, h, is_last, labels, stash, grads, bwd_done)?;
+        }
+    }
+    Ok(())
+}
+
+/// Forward the stage output downstream, or — on the last stage — park it
+/// in the stash (after the fwd inputs) until the labels arrive.
+#[allow(clippy::too_many_arguments)]
+fn finish_llm_fwd(
+    ctx: &mut StageCtx,
+    mb: usize,
+    h: HostTensor,
+    is_last: bool,
+    labels: &mut HashMap<usize, HostTensor>,
+    stash: &mut HashMap<usize, Vec<HostTensor>>,
+    grads: &mut GradStore,
+    bwd_done: &mut usize,
+) -> Result<()> {
+    if !is_last {
+        ctx.to_next[0]
+            .send(Msg::Fwd { mb, from: "llm".into(), tensor: h })
+            .ok();
+        return Ok(());
+    }
+    // Park the output h for the head (labels may not have arrived yet).
+    stash.get_mut(&mb).unwrap().push(h);
+    try_run_head(ctx, mb, labels, stash, grads, bwd_done)
+}
+
+/// Run head fwd (loss) + the stage's own backward as soon as both the
+/// stage output and the labels are available (the last stage starts the
+/// backward wave itself — 1F1B's "backward begins immediately").
+fn try_run_head(
+    ctx: &mut StageCtx,
+    mb: usize,
+    labels: &mut HashMap<usize, HostTensor>,
+    stash: &mut HashMap<usize, Vec<HostTensor>>,
+    grads: &mut GradStore,
+    bwd_done: &mut usize,
+) -> Result<()> {
+    let n_ins = ctx.rt.artifact(&llm_name(ctx)?, Role::Fwd)?.ins.len() - 1;
+    let ready = labels.contains_key(&mb)
+        && stash.get(&mb).map(|s| s.len() == n_ins + 1).unwrap_or(false);
+    if !ready {
+        return Ok(());
+    }
+    let lab = labels.remove(&mb).unwrap();
+    let h = stash.get_mut(&mb).unwrap().pop().unwrap(); // parked output
+    let head_ins = vec![h, lab];
+    let loss = ctx
+        .rt
+        .execute("llm:head", Role::Fwd, &head_ins)?
+        .remove(0)
+        .scalar()?;
+    ctx.report.send(Report::Loss { mb, loss }).ok();
+
+    // Immediately run backward for this microbatch (head + own stage).
+    let head_action = ctx.policy.grad_action("llm_head");
+    let Some(head_role) = head_action.role() else {
+        stash.remove(&mb);
+        return Ok(());
+    };
+    let mut outs = ctx.rt.execute("llm:head", head_role, &head_ins)?;
+    let g = if head_action == GradAction::Full {
+        let dflat = outs.remove(0);
+        grads.add(&llm_name(ctx)?, dflat.as_f32()?);
+        outs.remove(0)
+    } else {
+        outs.remove(0)
+    };
+    run_stage_bwd(ctx, mb, g, stash, grads)?;
+    *bwd_done += 1;
+    Ok(())
+}
+
+fn llm_name(ctx: &StageCtx) -> Result<String> {
+    match &ctx.kind {
+        StageKind::Llm { index, .. } => Ok(format!("llm:{index}")),
+        _ => bail!("not an llm stage"),
+    }
+}
+
+fn handle_bwd(
+    ctx: &mut StageCtx,
+    mb: usize,
+    g: HostTensor,
+    stash: &mut HashMap<usize, Vec<HostTensor>>,
+    grads: &mut GradStore,
+) -> Result<()> {
+    match ctx.kind.clone() {
+        StageKind::Encoder { name } => {
+            let proj = format!("proj:{name}");
+            let enc = format!("enc:{name}");
+            let proj_action = ctx.policy.grad_action("projector");
+            let enc_action = ctx.policy.grad_action("encoder");
+            let st = stash
+                .remove(&mb)
+                .ok_or_else(|| anyhow!("bwd for unknown mb {mb}"))?;
+            // st = [enc_x, proj_feats]
+            let Some(proj_role) = proj_action.role() else {
+                return Ok(());
+            };
+            let pins = vec![st[1].clone(), g];
+            let mut pouts = ctx.rt.execute(&proj, proj_role, &pins)?;
+            if proj_action == GradAction::Full {
+                let dflat = pouts.remove(0);
+                grads.add(&proj, dflat.as_f32()?);
+            }
+            let d_feats = pouts.remove(0);
+            if let Some(enc_role) = enc_action.role() {
+                let eins = vec![st[0].clone(), d_feats];
+                let mut eouts = ctx.rt.execute(&enc, enc_role, &eins)?;
+                if enc_action == GradAction::Full {
+                    let dflat = eouts.remove(0);
+                    grads.add(&enc, dflat.as_f32()?);
+                }
+            }
+        }
+        StageKind::Llm { index, .. } => {
+            run_stage_bwd_from_stash(ctx, mb, g, index, stash, grads)?;
+        }
+    }
+    Ok(())
+}
+
+/// Backward of this LLM stage given the output-gradient `g`, fanning
+/// results to predecessors.
+fn run_stage_bwd(
+    ctx: &mut StageCtx,
+    mb: usize,
+    g: HostTensor,
+    stash: &mut HashMap<usize, Vec<HostTensor>>,
+    grads: &mut GradStore,
+) -> Result<()> {
+    let index = match &ctx.kind {
+        StageKind::Llm { index, .. } => *index,
+        _ => bail!("run_stage_bwd on non-llm stage"),
+    };
+    run_stage_bwd_from_stash(ctx, mb, g, index, stash, grads)
+}
+
+fn run_stage_bwd_from_stash(
+    ctx: &mut StageCtx,
+    mb: usize,
+    g: HostTensor,
+    index: usize,
+    stash: &mut HashMap<usize, Vec<HostTensor>>,
+    grads: &mut GradStore,
+) -> Result<()> {
+    let action = ctx.policy.grad_action("llm_stage");
+    let Some(role) = action.role() else {
+        stash.remove(&mb);
+        return Ok(());
+    };
+    let name = format!("llm:{index}");
+    let mut ins = stash
+        .remove(&mb)
+        .ok_or_else(|| anyhow!("bwd for unknown mb {mb}"))?;
+    ins.push(g);
+    let mut outs = ctx.rt.execute(&name, role, &ins)?;
+    if action == GradAction::Full {
+        let dflat = outs.remove(0);
+        grads.add(&name, dflat.as_f32()?);
+    }
+    if index > 0 {
+        let dh = outs.remove(0);
+        ctx.to_prev[0].send(Msg::Bwd { mb, tensor: dh }).ok();
+    } else {
+        // fan d mod_h out to every encoder stage (parallel backward)
+        for (e, _) in ctx.enc_names.clone().iter().enumerate() {
+            let d_mod_h = outs.remove(0);
+            ctx.to_prev[e].send(Msg::Bwd { mb, tensor: d_mod_h }).ok();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::{SyntheticDataset, Trainer};
+
+    fn manifest() -> Manifest {
+        Manifest::load(Manifest::default_root()).unwrap()
+    }
+
+    /// The pipeline executor must match the single-process trainer
+    /// loss-for-loss: same artifacts, same order, same numerics.
+    #[test]
+    fn pipeline_matches_single_process_losses() {
+        let mf = manifest();
+        let policy = FrozenPolicy::paper();
+        let mut single = Trainer::new(&mf, "tiny", policy, 3e-3).unwrap();
+        let mut pipe =
+            PipelineTrainer::new(&mf, "tiny", policy, 3e-3).unwrap();
+        let ds = SyntheticDataset::new(single.runtime().model(), 77);
+        let batch: Vec<_> = (0..3).map(|i| ds.sample(i)).collect();
+        for step in 0..3 {
+            let a = single.train_step(&batch).unwrap();
+            let b = pipe.train_step(&batch).unwrap();
+            assert_eq!(
+                a.loss, b.loss,
+                "step {step}: single {} vs pipeline {}",
+                a.loss, b.loss
+            );
+        }
+    }
+
+    #[test]
+    fn multi_encoder_pipeline_runs_and_learns() {
+        let mf = manifest();
+        let mut pipe = PipelineTrainer::new(
+            &mf,
+            "tiny_va",
+            FrozenPolicy::paper(),
+            3e-3,
+        )
+        .unwrap();
+        assert_eq!(pipe.n_stages(), 4); // vision, audio, llm:0, llm:1
+        let model = mf.model("tiny_va").unwrap().clone();
+        let ds = SyntheticDataset::new(&model, 5);
+        let batch: Vec<_> = (0..2).map(|i| ds.sample(i)).collect();
+        let first = pipe.train_step(&batch).unwrap();
+        let mut last = first.clone();
+        for _ in 0..6 {
+            last = pipe.train_step(&batch).unwrap();
+        }
+        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+    }
+
+    #[test]
+    fn inflight_limit_bounds_stash() {
+        let mf = manifest();
+        let mut pipe =
+            PipelineTrainer::new(&mf, "tiny", FrozenPolicy::paper(), 1e-3)
+                .unwrap();
+        pipe.inflight_limit = 2;
+        let model = mf.model("tiny").unwrap().clone();
+        let ds = SyntheticDataset::new(&model, 9);
+        let batch: Vec<_> = (0..6).map(|i| ds.sample(i)).collect();
+        pipe.train_step(&batch).unwrap();
+        // Credit-based feeding: the coordinator admits one new microbatch
+        // per completed loss, so per-stage stash is bounded by the limit
+        // plus the backward-propagation lag (≤ pipeline depth in the worst
+        // case; ≤ 2 in practice with backward-first priority). The key
+        // property: far below the unthrottled bound of 6 microbatches.
+        for (s, &peak) in pipe.peak_stash.iter().enumerate() {
+            assert!(
+                peak <= 2 + 2,
+                "stage {s} stash peaked at {peak} with limit 2"
+            );
+        }
+    }
+}

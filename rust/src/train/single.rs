@@ -1,0 +1,415 @@
+//! Single-process trainer: one PJRT client, microbatches in sequence.
+//!
+//! This is the numerics oracle for the thread-per-stage executor
+//! ([`super::pipeline`]) — both run the *same artifacts* in the *same
+//! order*, so their losses must agree bit-for-bit — and the reference the
+//! pytest suite checks against the pure-JAX model.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{HostTensor, Manifest, ModelRuntime, Role};
+
+use super::{
+    BamTensors, Callbacks, FrozenPolicy, GradAction, GradStore, Sample,
+    StepStats,
+};
+
+/// Stashed forward inputs of one component for one microbatch (gradient
+/// checkpointing: the backward artifacts recompute activations from these;
+/// no residuals ever cross the wire).
+type Stash = HashMap<String, Vec<HostTensor>>;
+
+/// Sequential trainer over one model's artifacts.
+pub struct Trainer {
+    rt: ModelRuntime,
+    policy: FrozenPolicy,
+    bam: BamTensors,
+    /// AdamW slots per parameter-owning trainable component.
+    opt: HashMap<String, (Vec<f32>, Vec<f32>)>,
+    step: usize,
+    pub lr: f32,
+    /// Encoder names in manifest order (`vision`, `audio`, ...).
+    enc_names: Vec<String>,
+    n_stages: usize,
+    /// §5.1 inter-module hooks (Listing 2).
+    pub callbacks: Callbacks,
+}
+
+impl Trainer {
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        policy: FrozenPolicy,
+        lr: f32,
+    ) -> Result<Trainer> {
+        let rt = ModelRuntime::load_all(manifest, model)?;
+        let m = rt.model().clone();
+        let bam = BamTensors::of(&m)?;
+        let mut opt = HashMap::new();
+        for c in &m.components {
+            if policy.trainable(&c.kind) && c.shares_params_with.is_none() {
+                let n = c.n_params;
+                opt.insert(c.name.clone(), (vec![0.0; n], vec![0.0; n]));
+            }
+        }
+        Ok(Trainer {
+            rt,
+            policy,
+            bam,
+            opt,
+            step: 0,
+            lr,
+            enc_names: m.encoder_names(),
+            n_stages: m.n_llm_stages(),
+            callbacks: Callbacks::none(),
+        })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut ModelRuntime {
+        &mut self.rt
+    }
+
+    pub fn policy(&self) -> FrozenPolicy {
+        self.policy
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// Forward one sample end-to-end; returns (loss, stash for backward).
+    fn forward(&mut self, s: &Sample) -> Result<(f32, Stash)> {
+        let mut stash: Stash = HashMap::new();
+        let m = self.rt.model().clone();
+        // encoders + projectors (modality-parallel in the pipeline
+        // executor; sequential here — same numbers either way)
+        let mut mod_hs = Vec::new();
+        for name in self.enc_names.clone() {
+            let enc = format!("enc:{name}");
+            let proj = format!("proj:{name}");
+            let x = s
+                .encoder_inputs
+                .iter()
+                .find(|(n, _)| *n == enc)
+                .map(|(_, t)| t.clone())
+                .ok_or_else(|| anyhow!("sample missing input for {enc}"))?;
+            // cb_before_encoder (Listing 2): e.g. AnyRes block splitting
+            let x = Callbacks::apply(&self.callbacks.before_encoder, &name, x);
+            let ins = vec![x];
+            let feats =
+                self.rt.execute(&enc, Role::Fwd, &ins)?.remove(0);
+            stash.insert(enc, ins);
+            let feats =
+                Callbacks::apply(&self.callbacks.after_encoder, &name, feats);
+            let pins = vec![feats];
+            let mod_h =
+                self.rt.execute(&proj, Role::Fwd, &pins)?.remove(0);
+            stash.insert(proj, pins);
+            let mod_h = Callbacks::apply(
+                &self.callbacks.after_projector,
+                &name,
+                mod_h,
+            );
+            mod_hs.push(mod_h);
+        }
+        // llm stage 0 (embeds text + splices modality tokens)
+        let mut ins = vec![HostTensor::i32(&[m.text_len], s.text_ids.clone())];
+        ins.extend(mod_hs);
+        ins.push(self.bam.bits.clone());
+        ins.push(self.bam.pos.clone());
+        let mut h = self.rt.execute("llm:0", Role::Fwd, &ins)?.remove(0);
+        stash.insert("llm:0".to_string(), ins);
+        // middle/last stages
+        for i in 1..self.n_stages {
+            let name = format!("llm:{i}");
+            let ins =
+                vec![h, self.bam.bits.clone(), self.bam.pos.clone()];
+            h = self.rt.execute(&name, Role::Fwd, &ins)?.remove(0);
+            stash.insert(name, ins);
+        }
+        // head (loss)
+        let ins = vec![
+            h,
+            HostTensor::i32(&[m.total_tokens], s.labels.clone()),
+        ];
+        let loss = self
+            .rt
+            .execute("llm:head", Role::Fwd, &ins)?
+            .remove(0)
+            .scalar()?;
+        stash.insert("llm:head".to_string(), ins);
+        Ok((loss, stash))
+    }
+
+    /// Backward one microbatch per the §4.2 frozen rule, accumulating
+    /// parameter grads into `grads`.
+    fn backward(&mut self, stash: &Stash, grads: &mut GradStore) -> Result<()> {
+        let head_action = self.policy.grad_action("llm_head");
+        let Some(head_role) = head_action.role() else {
+            return Ok(()); // everything frozen: the 0x path for all
+        };
+        // --- head: loss is the root, no incoming cotangent
+        let ins = &stash["llm:head"];
+        let mut outs = self.rt.execute("llm:head", head_role, ins)?;
+        let mut g = if head_action == GradAction::Full {
+            let dflat = outs.remove(0);
+            // head shares the last LLM stage's params
+            let owner = format!("llm:{}", self.n_stages - 1);
+            grads.add(&owner, dflat.as_f32()?);
+            outs.remove(0)
+        } else {
+            outs.remove(0)
+        };
+        // --- llm stages in reverse
+        let stage_action = self.policy.grad_action("llm_stage");
+        for i in (0..self.n_stages).rev() {
+            let name = format!("llm:{i}");
+            let role = stage_action
+                .role()
+                .expect("llm stage action follows head action");
+            let mut ins = stash[&name].clone();
+            ins.push(g.clone());
+            let mut outs = self.rt.execute(&name, role, &ins)?;
+            if stage_action == GradAction::Full {
+                let dflat = outs.remove(0);
+                grads.add(&name, dflat.as_f32()?);
+            }
+            if i > 0 {
+                g = outs.remove(0); // d h
+            } else {
+                // d mod_h per encoder, in declared order
+                let proj_action = self.policy.grad_action("projector");
+                let enc_action = self.policy.grad_action("encoder");
+                for name in self.enc_names.clone() {
+                    let d_mod_h = outs.remove(0);
+                    let Some(proj_role) = proj_action.role() else {
+                        continue;
+                    };
+                    let proj = format!("proj:{name}");
+                    let mut pins = stash[&proj].clone();
+                    pins.push(d_mod_h);
+                    let mut pouts =
+                        self.rt.execute(&proj, proj_role, &pins)?;
+                    if proj_action == GradAction::Full {
+                        let dflat = pouts.remove(0);
+                        grads.add(&proj, dflat.as_f32()?);
+                    }
+                    let d_feats = pouts.remove(0);
+                    let Some(enc_role) = enc_action.role() else {
+                        continue;
+                    };
+                    let enc = format!("enc:{name}");
+                    let mut eins = stash[&enc].clone();
+                    eins.push(d_feats);
+                    let mut eouts =
+                        self.rt.execute(&enc, enc_role, &eins)?;
+                    if enc_action == GradAction::Full {
+                        let dflat = eouts.remove(0);
+                        grads.add(&enc, dflat.as_f32()?);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One optimizer step over `samples` (= one iteration of `samples.len()`
+    /// gradient-accumulated microbatches).
+    pub fn train_step(&mut self, samples: &[Sample]) -> Result<StepStats> {
+        anyhow::ensure!(!samples.is_empty());
+        let t0 = Instant::now();
+        let mut grads = GradStore::default();
+        let mut loss_sum = 0.0f32;
+        for s in samples {
+            let (loss, stash) = self.forward(s)?;
+            anyhow::ensure!(loss.is_finite(), "non-finite loss {loss}");
+            loss_sum += loss;
+            self.backward(&stash, &mut grads)?;
+        }
+        self.step += 1;
+        let step_f = self.step as f32;
+        for (owner, g) in grads.drain_scaled(samples.len()) {
+            let (m, v) = self
+                .opt
+                .get_mut(&owner)
+                .ok_or_else(|| anyhow!("grads for non-trainable {owner}"))?;
+            let mut m_t = std::mem::take(m);
+            let mut v_t = std::mem::take(v);
+            self.rt
+                .adamw_step(&owner, &g, &mut m_t, &mut v_t, step_f, self.lr)?;
+            let slot = self.opt.get_mut(&owner).unwrap();
+            slot.0 = m_t;
+            slot.1 = v_t;
+        }
+        Ok(StepStats {
+            step: self.step,
+            loss: loss_sum / samples.len() as f32,
+            microbatches: samples.len(),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Loss without training (eval).
+    pub fn eval_loss(&mut self, s: &Sample) -> Result<f32> {
+        Ok(self.forward(s)?.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::SyntheticDataset;
+
+    fn manifest() -> Manifest {
+        Manifest::load(Manifest::default_root()).unwrap()
+    }
+
+    #[test]
+    fn tiny_loss_decreases_under_paper_policy() {
+        let mf = manifest();
+        let mut tr =
+            Trainer::new(&mf, "tiny", FrozenPolicy::paper(), 3e-3).unwrap();
+        let ds = SyntheticDataset::new(tr.runtime().model(), 42);
+        let batch: Vec<_> = (0..2).map(|i| ds.sample(i)).collect();
+        let first = tr.train_step(&batch).unwrap();
+        let mut last = first.clone();
+        for _ in 0..8 {
+            last = tr.train_step(&batch).unwrap();
+        }
+        assert!(
+            last.loss < first.loss,
+            "loss did not decrease: {} -> {}",
+            first.loss,
+            last.loss
+        );
+    }
+
+    #[test]
+    fn frozen_components_do_not_change() {
+        let mf = manifest();
+        let mut tr =
+            Trainer::new(&mf, "tiny", FrozenPolicy::paper(), 1e-2).unwrap();
+        let enc_before = tr.runtime().params("enc:vision").unwrap().to_vec();
+        let llm_before = tr.runtime().params("llm:0").unwrap().to_vec();
+        let proj_before =
+            tr.runtime().params("proj:vision").unwrap().to_vec();
+        let ds = SyntheticDataset::new(tr.runtime().model(), 1);
+        tr.train_step(&[ds.sample(0)]).unwrap();
+        assert_eq!(
+            tr.runtime().params("enc:vision").unwrap(),
+            &enc_before[..],
+            "frozen encoder must not move"
+        );
+        assert_eq!(
+            tr.runtime().params("llm:0").unwrap(),
+            &llm_before[..],
+            "frozen llm must not move"
+        );
+        assert_ne!(
+            tr.runtime().params("proj:vision").unwrap(),
+            &proj_before[..],
+            "trainable projector must move"
+        );
+    }
+
+    #[test]
+    fn all_frozen_trains_nothing_and_loss_constant() {
+        let mf = manifest();
+        let mut tr =
+            Trainer::new(&mf, "tiny", FrozenPolicy::all_frozen(), 1e-2)
+                .unwrap();
+        let ds = SyntheticDataset::new(tr.runtime().model(), 5);
+        let s1 = tr.train_step(&[ds.sample(0)]).unwrap();
+        let s2 = tr.train_step(&[ds.sample(0)]).unwrap();
+        assert_eq!(s1.loss, s2.loss);
+    }
+
+    #[test]
+    fn all_trainable_updates_everything() {
+        let mf = manifest();
+        let mut tr =
+            Trainer::new(&mf, "tiny", FrozenPolicy::all_trainable(), 1e-3)
+                .unwrap();
+        let before: Vec<Vec<f32>> = ["enc:vision", "proj:vision", "llm:0", "llm:1"]
+            .iter()
+            .map(|c| tr.runtime().params(c).unwrap().to_vec())
+            .collect();
+        let ds = SyntheticDataset::new(tr.runtime().model(), 2);
+        tr.train_step(&[ds.sample(0)]).unwrap();
+        for (c, b) in
+            ["enc:vision", "proj:vision", "llm:0", "llm:1"].iter().zip(before)
+        {
+            assert_ne!(
+                tr.runtime().params(c).unwrap(),
+                &b[..],
+                "{c} should have moved"
+            );
+        }
+    }
+
+    #[test]
+    fn callbacks_fire_and_identity_is_neutral() {
+        use crate::runtime::HostTensor;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let mf = manifest();
+        let ds = {
+            let m = mf.model("tiny").unwrap().clone();
+            crate::train::SyntheticDataset::new(&m, 4)
+        };
+        let s = ds.sample(0);
+
+        // identity callbacks must not change the loss
+        let mut plain =
+            Trainer::new(&mf, "tiny", FrozenPolicy::paper(), 1e-3).unwrap();
+        let base = plain.eval_loss(&s).unwrap();
+        let mut with_id =
+            Trainer::new(&mf, "tiny", FrozenPolicy::paper(), 1e-3).unwrap();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = calls.clone();
+        with_id.callbacks.before_encoder = Some(Arc::new(move |_n, t| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            t
+        }));
+        assert_eq!(with_id.eval_loss(&s).unwrap(), base);
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+
+        // a real preprocessing hook (input normalization) changes the loss
+        let mut with_norm =
+            Trainer::new(&mf, "tiny", FrozenPolicy::paper(), 1e-3).unwrap();
+        with_norm.callbacks.before_encoder = Some(Arc::new(|_n, t| {
+            let dims = t.dims().to_vec();
+            let data = t.as_f32().unwrap();
+            let mu = data.iter().sum::<f32>() / data.len() as f32;
+            HostTensor::f32(
+                &dims,
+                data.iter().map(|x| (x - mu) * 2.0).collect(),
+            )
+        }));
+        assert_ne!(with_norm.eval_loss(&s).unwrap(), base);
+    }
+
+    #[test]
+    fn multi_encoder_model_trains() {
+        let mf = manifest();
+        let mut tr =
+            Trainer::new(&mf, "tiny_va", FrozenPolicy::paper(), 3e-3)
+                .unwrap();
+        assert_eq!(tr.enc_names, vec!["vision", "audio"]);
+        let ds = SyntheticDataset::new(tr.runtime().model(), 11);
+        let batch: Vec<_> = (0..2).map(|i| ds.sample(i)).collect();
+        let first = tr.train_step(&batch).unwrap();
+        let mut last = first.clone();
+        for _ in 0..6 {
+            last = tr.train_step(&batch).unwrap();
+        }
+        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+    }
+}

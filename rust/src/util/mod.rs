@@ -1,0 +1,13 @@
+//! Self-contained utilities.
+//!
+//! The offline vendor set has no `rand`, `serde`, `criterion`, or
+//! `proptest`, so this module provides the small pieces we need:
+//! deterministic RNGs ([`rng`]), summary statistics ([`stats`]),
+//! ASCII table rendering ([`table`]), a minimal JSON writer ([`json`]),
+//! and a shrinking property-test harness ([`check`]).
+
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod json;
+pub mod check;

@@ -1,0 +1,119 @@
+//! Summary statistics used by benches, the simulator, and CP imbalance
+//! metrics.
+
+/// Summary of a sample of f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Max/mean imbalance ratio — 1.0 is perfectly balanced. This is the
+/// metric behind the paper's Figure 12 discussion.
+pub fn imbalance(loads: &[f64]) -> f64 {
+    assert!(!loads.is_empty());
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    if mean == 0.0 {
+        return 1.0;
+    }
+    loads.iter().cloned().fold(f64::MIN, f64::max) / mean
+}
+
+/// Coefficient of variation (std/mean).
+pub fn cv(loads: &[f64]) -> f64 {
+    let s = Summary::of(loads);
+    if s.mean == 0.0 {
+        0.0
+    } else {
+        s.std / s.mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_simple() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.5);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 3.0);
+        assert_eq!(percentile_sorted(&xs, 0.5), 2.0);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_one() {
+        assert_eq!(imbalance(&[3.0, 3.0, 3.0]), 1.0);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let r = imbalance(&[1.0, 1.0, 6.0]);
+        assert!((r - 6.0 / (8.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        assert_eq!(cv(&[2.0, 2.0]), 0.0);
+    }
+}
