@@ -1,0 +1,71 @@
+//! Bench: the autotuner's search wall time — enumeration + lower-bound
+//! pruning + multi-threaded simulation — across compositions, budgets,
+//! and worker counts, plus the cache's O(1) repeated-query path.
+
+use cornstarch::bench::Bencher;
+use cornstarch::cost::Device;
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::tuner::{
+    enumerate, search, tune, Objective, SearchSpace, TuneRequest,
+};
+
+fn main() {
+    let d = Device::a40();
+
+    // ---- space sizes, for context ----
+    for (name, spec, devices) in [
+        ("VLM-M", MllmSpec::vlm(Size::M, Size::M), 16usize),
+        ("ALM-L", MllmSpec::alm(Size::M, Size::L), 16),
+        ("VALM-MM", MllmSpec::valm(Size::M, Size::M, Size::M), 24),
+    ] {
+        let mm = cornstarch::modality::MultimodalModule::from_spec(&spec);
+        let n = enumerate(&mm, &SearchSpace::paper_default(devices)).len();
+        println!("{name} on {devices} GPUs: {n} candidates");
+    }
+    println!();
+
+    let mut b = Bencher::new("autotuner search wall time");
+    for (name, spec, devices) in [
+        ("VLM-M @16", MllmSpec::vlm(Size::M, Size::M), 16usize),
+        ("VALM-MM @24", MllmSpec::valm(Size::M, Size::M, Size::M), 24),
+    ] {
+        for threads in [1usize, 4] {
+            b.bench(&format!("{name} exhaustive t={threads}"), || {
+                std::hint::black_box(search(
+                    &spec,
+                    &SearchSpace::paper_default(devices),
+                    Objective::Makespan,
+                    0,
+                    threads,
+                    d,
+                ));
+            });
+        }
+        b.bench(&format!("{name} budget=16 t=4"), || {
+            std::hint::black_box(search(
+                &spec,
+                &SearchSpace::paper_default(devices),
+                Objective::Makespan,
+                16,
+                4,
+                d,
+            ));
+        });
+    }
+
+    // ---- cache hit path: must be file-read-bound, not search-bound ----
+    let mut path = std::env::temp_dir();
+    path.push(format!("cornstarch-tuner-bench-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut req = TuneRequest::new(MllmSpec::vlm(Size::M, Size::M), 16);
+    req.cache_path = Some(path.to_string_lossy().into_owned());
+    tune(&req).expect("warm the cache");
+    b.bench("VLM-M @16 cached query", || {
+        let out = tune(&req).expect("cached");
+        assert!(out.cache_hit);
+        std::hint::black_box(out);
+    });
+    let _ = std::fs::remove_file(&path);
+
+    b.report();
+}

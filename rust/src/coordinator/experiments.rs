@@ -568,6 +568,78 @@ pub fn auto_frontier(spec: &MllmSpec, groups: usize) -> Table {
     t
 }
 
+/// Autotuner vs the fixed-policy planners at a device budget: each
+/// baseline at its default split, then the searched best. The tuned row
+/// must never lose to a baseline on iteration time — the tuner's space is
+/// a superset of the baselines' configurations.
+pub fn tuner_vs_baselines(
+    spec: &MllmSpec,
+    devices: usize,
+    budget: usize,
+) -> (Table, Vec<(String, f64)>) {
+    use crate::tuner::{tune, Objective, TuneRequest};
+    let mm = MultimodalModule::from_spec(spec);
+    let n_enc = mm.encoders.len();
+    let groups = devices / 4; // baselines use tp=2, cp=2
+    let mut t = Table::new(
+        &format!(
+            "Autotuner — {} on {} GPUs (budget {} simulations)",
+            spec.name(),
+            devices,
+            budget
+        ),
+        &["config", "iteration (ms)", "tput/GPU", "GPUs"],
+    );
+    let mut rows = Vec::new();
+    // Baselines that would exceed the budget at tp=cp=2 are skipped (the
+    // tuner itself still searches lower degrees that fit).
+    let baselines = [
+        (Strategy::Cornstarch, vec![1usize; n_enc], groups.saturating_sub(n_enc)),
+        (Strategy::Colocated, vec![1; n_enc], groups.saturating_sub(1)),
+        (Strategy::Replicated, Vec::new(), groups),
+    ];
+    for (strategy, enc_pp, llm_pp) in baselines {
+        if llm_pp == 0 {
+            continue;
+        }
+        let mut ps =
+            MultimodalParallelSpec::paper_default(&enc_pp, llm_pp, 2, 2);
+        ps.num_microbatches = MICROBATCHES;
+        let plan = planner::plan(strategy, &mm, &ps, Device::a40());
+        let m = plan.simulate();
+        t.row(&[
+            strategy.name().to_string(),
+            format!("{:.1}", m.iteration_ms),
+            format!("{:.3}", m.throughput_per_gpu),
+            plan.n_gpus.to_string(),
+        ]);
+        rows.push((strategy.name().to_string(), m.iteration_ms));
+    }
+    let mut req = TuneRequest::new(spec.clone(), devices);
+    req.objective = Objective::Makespan;
+    req.budget = budget;
+    match tune(&req) {
+        Ok(out) => {
+            t.row(&[
+                format!("tuned: {}", out.entry.candidate.label()),
+                format!("{:.1}", out.entry.iteration_ms),
+                format!("{:.3}", out.entry.throughput_per_gpu),
+                out.entry.n_gpus.to_string(),
+            ]);
+            rows.push(("tuned".to_string(), out.entry.iteration_ms));
+        }
+        Err(e) => {
+            t.row(&[
+                format!("tuned: infeasible ({e})"),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+        }
+    }
+    (t, rows)
+}
+
 /// Table 1: the model zoo geometry.
 pub fn table1() -> Table {
     let mut t = Table::new(
@@ -698,6 +770,25 @@ mod tests {
                     mt
                 );
             }
+        }
+    }
+
+    #[test]
+    fn tuner_row_is_at_least_as_fast_as_every_baseline() {
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        // budget 0 = exhaustive over the space, which contains every
+        // baseline configuration.
+        let (_, rows) = tuner_vs_baselines(&spec, 16, 0);
+        let tuned = rows
+            .iter()
+            .find(|(n, _)| n == "tuned")
+            .expect("tuned row present")
+            .1;
+        for (name, ms) in rows.iter().filter(|(n, _)| n != "tuned") {
+            assert!(
+                tuned <= ms + 1e-9,
+                "tuned {tuned:.1} ms slower than {name} {ms:.1} ms"
+            );
         }
     }
 

@@ -7,14 +7,33 @@ pub mod experiments;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cost::Device;
+use crate::modality::Plan;
 use crate::model::{MllmSpec, Size};
 use crate::runtime::Manifest;
 use crate::train::{
     FrozenPolicy, PipelineTrainer, SyntheticDataset, Trainer,
 };
+use crate::tuner::{self, TuneOutcome, TuneRequest};
 use crate::util::json::Json;
 
 pub use experiments::{E2eRow, FrozenRow, MaskType};
+
+/// The tuner hook: resolve the fastest known plan for `spec` on `devices`
+/// GPUs, consulting (and filling) the persistent cache when given one.
+/// `train` and `reproduce` callers get an executable [`Plan`] plus the
+/// [`TuneOutcome`] that says whether it came from the cache.
+pub fn tuned_plan(
+    spec: &MllmSpec,
+    devices: usize,
+    cache: Option<&str>,
+) -> Result<(Plan, TuneOutcome)> {
+    let mut req = TuneRequest::new(spec.clone(), devices);
+    req.cache_path = cache.map(|s| s.to_string());
+    let outcome = tuner::tune(&req)?;
+    let plan = outcome.instantiate(spec, Device::a40());
+    Ok((plan, outcome))
+}
 
 /// Run one named experiment (or `all`). Returns the rendered report.
 pub fn reproduce(which: &str) -> Result<String> {
@@ -111,11 +130,22 @@ pub fn reproduce(which: &str) -> Result<String> {
             6,
         ));
     }
+    if all || which == "tuner" {
+        known = true;
+        push(
+            experiments::tuner_vs_baselines(
+                &MllmSpec::vlm(Size::M, Size::M),
+                16,
+                64,
+            )
+            .0,
+        );
+    }
     if !known {
         bail!(
             "unknown experiment {which:?}; known: all, table1, fig2, fig3b, \
              fig9, fig10, fig13, fig14, fig15, table2, table3, table4, \
-             table7, table8, table10, table11, fig12, auto"
+             table7, table8, table10, table11, fig12, auto, tuner"
         );
     }
     Ok(out)
@@ -281,5 +311,24 @@ mod tests {
     fn reproduce_fig12_renders() {
         let r = reproduce("fig12").unwrap();
         assert!(r.contains("Zigzag"));
+    }
+
+    #[test]
+    fn reproduce_tuner_renders() {
+        let r = reproduce("tuner").unwrap();
+        assert!(r.contains("Autotuner"));
+        assert!(r.contains("tuned:"));
+    }
+
+    #[test]
+    fn tuned_plan_hook_returns_an_executable_plan() {
+        let spec = MllmSpec::vlm(Size::M, Size::S);
+        let (plan, outcome) = tuned_plan(&spec, 8, None).unwrap();
+        assert!(!outcome.cache_hit);
+        assert!(plan.n_gpus <= 8);
+        let m = plan.simulate();
+        assert!(
+            (m.iteration_ms - outcome.entry.iteration_ms).abs() < 1e-6
+        );
     }
 }

@@ -24,6 +24,11 @@
 //!   `python/compile/aot.py` (HLO text; python never runs at train time).
 //! * [`train`] — the real thing: a thread-per-stage 1F1B training executor
 //!   over PJRT with frozen-aware backward selection and AdamW.
+//! * [`tuner`] — the plan-search autotuner: bounded best-first search of
+//!   the joint configuration space (policy × encoder placement × LLM
+//!   pipeline depth × TP/CP × microbatches × frozen policy) with
+//!   cost-model lower-bound pruning, multi-threaded simulation, and a
+//!   JSON-persisted plan cache keyed by a workload/cluster signature.
 //! * [`coordinator`] — leader entrypoint gluing plan → build → run, and
 //!   the `reproduce` harness that regenerates every evaluation table and
 //!   figure of the paper.
@@ -36,6 +41,7 @@ pub mod cost;
 pub mod modality;
 pub mod pipeline;
 pub mod sim;
+pub mod tuner;
 pub mod runtime;
 pub mod train;
 pub mod coordinator;

@@ -4,6 +4,7 @@
 //! cornstarch reproduce <exp|all>        regenerate a paper table/figure
 //! cornstarch train [opts]               train a model over the artifacts
 //! cornstarch plan <mllm> [opts]         print a parallelization plan
+//! cornstarch tune <mllm> [opts]         autotune the fastest plan
 //! cornstarch auto <mllm> [--groups N]   Algorithm 1 frontier
 //! cornstarch attn-check [--artifact A]  PJRT cross-check of the CP model
 //! cornstarch list-models                artifacts available to `train`
@@ -17,11 +18,14 @@ use anyhow::{anyhow, bail, Context, Result};
 use cornstarch::coordinator::{self, TrainOpts};
 use cornstarch::cost::Device;
 use cornstarch::modality::{
-    planner, MultimodalModule, MultimodalParallelSpec, Strategy,
+    planner, MultimodalModule, MultimodalParallelSpec, Plan, Strategy,
 };
 use cornstarch::model::{MllmSpec, Size};
 use cornstarch::runtime::Manifest;
 use cornstarch::train::FrozenPolicy;
+use cornstarch::tuner::{
+    tune, FrozenSetting, Objective, TuneRequest,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -34,7 +38,7 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_help();
-        return Ok(());
+        bail!("missing command (try `cornstarch help`)");
     };
     let rest = &args[1..];
     match cmd.as_str() {
@@ -51,11 +55,28 @@ fn run(args: &[String]) -> Result<()> {
         }
         "plan" => {
             let spec = parse_mllm(rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"), rest)?;
-            let strategy = match flag(rest, "--strategy").as_deref() {
-                None | Some("cornstarch") => Strategy::Cornstarch,
-                Some("colocated") => Strategy::Colocated,
-                Some("replicated") => Strategy::Replicated,
-                Some(s) => bail!("unknown strategy {s}"),
+            let strategy_flag = flag(rest, "--strategy");
+            if strategy_flag.as_deref() == Some("tuned") {
+                // Consume the tuner (and its cache) through the
+                // coordinator hook.
+                let devices = flag_num(rest, "--devices")?.unwrap_or(16);
+                let cache = flag(rest, "--cache");
+                let (plan, outcome) =
+                    coordinator::tuned_plan(&spec, devices, cache.as_deref())?;
+                println!(
+                    "{} / tuned on {} GPUs ({})",
+                    spec.name(),
+                    devices,
+                    if outcome.cache_hit { "cache hit" } else { "searched" }
+                );
+                println!("  {}", outcome.entry.candidate.label());
+                print_plan(&plan);
+                return Ok(());
+            }
+            let strategy = match strategy_flag.as_deref() {
+                None => Strategy::Cornstarch,
+                Some(s) => Strategy::from_key(s)
+                    .ok_or_else(|| anyhow!("unknown strategy {s}"))?,
             };
             let llm_pp = flag_num(rest, "--llm-pp")?.unwrap_or(4);
             let enc_pp = flag_num(rest, "--enc-pp")?.unwrap_or(1);
@@ -68,26 +89,66 @@ fn run(args: &[String]) -> Result<()> {
                 flag_num(rest, "--cp")?.unwrap_or(2),
             );
             let plan = planner::plan(strategy, &mm, &ps, Device::a40());
-            let m = plan.simulate();
             println!("{} / {}", spec.name(), strategy.name());
-            println!("  stages:");
-            for (name, node) in plan.stage_names.iter().zip(&plan.graph.nodes)
-            {
+            print_plan(&plan);
+        }
+        "tune" => {
+            let spec = parse_mllm(
+                rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"),
+                rest,
+            )?;
+            let devices = flag_num(rest, "--devices")?.unwrap_or(16);
+            let mut req = TuneRequest::new(spec.clone(), devices);
+            if let Some(b) = flag_num(rest, "--budget")? {
+                req.budget = b;
+            }
+            if let Some(t) = flag_num(rest, "--threads")? {
+                req.threads = t.max(1);
+            }
+            req.cache_path = flag(rest, "--cache");
+            if let Some(o) = flag(rest, "--objective") {
+                req.objective = Objective::parse(&o).ok_or_else(|| {
+                    anyhow!("bad --objective {o:?} (makespan|tput-per-gpu)")
+                })?;
+            }
+            if let Some(p) = flag(rest, "--policy") {
+                let f = FrozenSetting::parse(&p).ok_or_else(|| {
+                    anyhow!("bad --policy {p:?} (paper|all|frozen)")
+                })?;
+                req.space.frozen_choices = vec![f];
+            }
+            if has_flag(rest, "--sweep-policies") {
+                req.space.frozen_choices = FrozenSetting::ALL.to_vec();
+            }
+            let t0 = std::time::Instant::now();
+            let out = tune(&req)?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let e = &out.entry;
+            println!(
+                "{} on {} GPUs — objective {}",
+                spec.name(),
+                devices,
+                req.objective.key()
+            );
+            if out.cache_hit {
                 println!(
-                    "    {:<16} dev {:<2} fwd {:>8.2} ms  bwd {:>8.2} ms",
-                    name, node.device, node.cost.fwd_ms, node.cost.bwd_ms
+                    "  cache hit ({}) — no simulation",
+                    req.cache_path.as_deref().unwrap_or("in-memory")
+                );
+            } else {
+                println!(
+                    "  searched {} candidates: {} simulated, {} pruned \
+                     by lower bound ({:.0} ms wall)",
+                    out.total_candidates, out.evaluated, out.pruned, wall_ms
                 );
             }
-            let (lo, hi) = plan.stage_time_range();
-            println!("  stage fwd+bwd range: {lo:.1} ~ {hi:.1} ms");
+            println!("  best: {}", e.candidate.label());
             println!(
-                "  iteration {:.1} ms | {:.2} input/s | {:.3} input/s/GPU ({} GPUs) | bubble {:.1}%",
-                m.iteration_ms,
-                m.throughput,
-                m.throughput_per_gpu,
-                plan.n_gpus,
-                m.bubble_ratio * 100.0
+                "  iteration {:.1} ms | {:.3} input/s/GPU | {} GPUs | cp dist: {}",
+                e.iteration_ms, e.throughput_per_gpu, e.n_gpus, e.cp_algorithm
             );
+            let plan = out.instantiate(&spec, Device::a40());
+            print_plan(&plan);
         }
         "auto" => {
             let spec = parse_mllm(
@@ -126,6 +187,27 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn print_plan(plan: &Plan) {
+    let m = plan.simulate();
+    println!("  stages:");
+    for (name, node) in plan.stage_names.iter().zip(&plan.graph.nodes) {
+        println!(
+            "    {:<16} dev {:<2} fwd {:>8.2} ms  bwd {:>8.2} ms",
+            name, node.device, node.cost.fwd_ms, node.cost.bwd_ms
+        );
+    }
+    let (lo, hi) = plan.stage_time_range();
+    println!("  stage fwd+bwd range: {lo:.1} ~ {hi:.1} ms");
+    println!(
+        "  iteration {:.1} ms | {:.2} input/s | {:.3} input/s/GPU ({} GPUs) | bubble {:.1}%",
+        m.iteration_ms,
+        m.throughput,
+        m.throughput_per_gpu,
+        plan.n_gpus,
+        m.bubble_ratio * 100.0
+    );
+}
+
 fn print_help() {
     println!(
         "cornstarch — multimodality-aware distributed MLLM training \
@@ -134,7 +216,11 @@ fn print_help() {
          reproduce <exp|all>   regenerate paper tables/figures\n  \
          train [--model M] [--steps N] [--microbatches N] [--lr X]\n        \
          [--single-process] [--policy paper|all|frozen] [--log-json P]\n  \
-         plan <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n  \
+         plan <MLLM> [--strategy S|tuned] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
+         [--devices N] [--cache P]      (tuned strategy only)\n  \
+         tune <MLLM> [--devices N] [--budget K] [--cache P] [--threads N]\n        \
+         [--objective makespan|tput-per-gpu] [--policy paper|all|frozen]\n        \
+         [--sweep-policies]\n  \
          auto <MLLM> [--groups N]\n  \
          attn-check [--artifact attn512] [--repeats N]\n  \
          list-models"

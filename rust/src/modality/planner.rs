@@ -49,6 +49,24 @@ impl Strategy {
             Strategy::Replicated => "Encoders-replicated",
         }
     }
+
+    /// Stable machine-readable key (CLI flags, tuner cache entries).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Strategy::Cornstarch => "cornstarch",
+            Strategy::Colocated => "colocated",
+            Strategy::Replicated => "replicated",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Option<Strategy> {
+        match s {
+            "cornstarch" => Some(Strategy::Cornstarch),
+            "colocated" => Some(Strategy::Colocated),
+            "replicated" => Some(Strategy::Replicated),
+            _ => None,
+        }
+    }
 }
 
 /// A fully-planned parallel MLLM: the stage DAG plus accounting needed to

@@ -13,6 +13,11 @@
 //!   components — the paper's model-parallel placement).
 
 pub mod manifest;
+// Offline stand-in for the external `xla` crate: the child module shadows
+// the crate name, so every `xla::` path below resolves here (public
+// because `compile_hlo`'s signature exposes its types). See `xla.rs` for
+// how to swap the real backend in.
+pub mod xla;
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -764,7 +764,9 @@ fn run_stage_bwd_from_stash(
     Ok(())
 }
 
-#[cfg(test)]
+// Gated with the integration tests: these drive real PJRT execution over
+// `make artifacts` output.
+#[cfg(all(test, feature = "artifacts"))]
 mod tests {
     use super::*;
     use crate::train::{SyntheticDataset, Trainer};

@@ -262,7 +262,9 @@ impl Trainer {
     }
 }
 
-#[cfg(test)]
+// Gated with the integration tests: these drive real PJRT execution over
+// `make artifacts` output.
+#[cfg(all(test, feature = "artifacts"))]
 mod tests {
     use super::*;
     use crate::train::SyntheticDataset;

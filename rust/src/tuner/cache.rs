@@ -1,0 +1,279 @@
+//! Persistent plan cache: repeated tuning queries are O(1).
+//!
+//! Entries are keyed by a *signature* — a deterministic string over the
+//! workload (MLLM composition, frozen policy, microbatching) and the
+//! cluster/search bounds ([`super::space::SearchSpace::fingerprint`] plus
+//! the objective and budget) — so a cached answer is only ever returned
+//! for an identical query. The store is a single JSON file written
+//! atomically (temp file + rename); a missing or corrupt file degrades to
+//! an empty cache, never an error.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::modality::Strategy;
+use crate::util::json::Json;
+
+use super::space::{Candidate, FrozenSetting};
+
+/// One cached tuning answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheEntry {
+    pub signature: String,
+    pub candidate: Candidate,
+    pub iteration_ms: f64,
+    pub throughput_per_gpu: f64,
+    pub n_gpus: usize,
+    /// Recommended CP token-distribution algorithm ("none" when cp = 1).
+    pub cp_algorithm: String,
+    /// How many candidates the original search simulated.
+    pub evaluated: usize,
+}
+
+impl CacheEntry {
+    fn to_json(&self) -> Json {
+        let c = &self.candidate;
+        Json::obj(vec![
+            ("signature", Json::Str(self.signature.clone())),
+            ("strategy", Json::Str(c.strategy.key().to_string())),
+            (
+                "enc_pps",
+                Json::Arr(
+                    c.enc_pps.iter().map(|&p| Json::Int(p as i64)).collect(),
+                ),
+            ),
+            ("llm_pp", Json::Int(c.llm_pp as i64)),
+            ("tp", Json::Int(c.tp as i64)),
+            ("cp", Json::Int(c.cp as i64)),
+            ("microbatches", Json::Int(c.num_microbatches as i64)),
+            ("frozen", Json::Str(c.frozen.key().to_string())),
+            ("iteration_ms", Json::Num(self.iteration_ms)),
+            ("throughput_per_gpu", Json::Num(self.throughput_per_gpu)),
+            ("n_gpus", Json::Int(self.n_gpus as i64)),
+            ("cp_algorithm", Json::Str(self.cp_algorithm.clone())),
+            ("evaluated", Json::Int(self.evaluated as i64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<CacheEntry> {
+        let us = |k: &str| -> Option<usize> {
+            j.get(k)?.as_i64().and_then(|v| usize::try_from(v).ok())
+        };
+        let enc_pps: Option<Vec<usize>> = j
+            .get("enc_pps")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_i64().and_then(|x| usize::try_from(x).ok()))
+            .collect();
+        Some(CacheEntry {
+            signature: j.get("signature")?.as_str()?.to_string(),
+            candidate: Candidate {
+                strategy: Strategy::from_key(j.get("strategy")?.as_str()?)?,
+                enc_pps: enc_pps?,
+                llm_pp: us("llm_pp")?,
+                tp: us("tp")?,
+                cp: us("cp")?,
+                num_microbatches: us("microbatches")?,
+                frozen: FrozenSetting::parse(j.get("frozen")?.as_str()?)?,
+            },
+            iteration_ms: j.get("iteration_ms")?.as_f64()?,
+            throughput_per_gpu: j.get("throughput_per_gpu")?.as_f64()?,
+            n_gpus: us("n_gpus")?,
+            cp_algorithm: j.get("cp_algorithm")?.as_str()?.to_string(),
+            evaluated: us("evaluated")?,
+        })
+    }
+}
+
+/// The on-disk store. `path = None` gives an in-memory cache (used when
+/// the CLI runs without `--cache`).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    path: Option<PathBuf>,
+    entries: Vec<CacheEntry>,
+}
+
+/// Bumped when the entry schema or the scoring model changes
+/// incompatibly; files with another version are ignored wholesale.
+const CACHE_VERSION: i64 = 1;
+
+impl PlanCache {
+    pub fn in_memory() -> Self {
+        PlanCache::default()
+    }
+
+    /// Load from `path`; missing or unreadable files yield an empty cache
+    /// bound to that path (it will be created on the first `save`).
+    pub fn load(path: &Path) -> Self {
+        let entries = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .filter(|j| {
+                j.get("version").and_then(Json::as_i64)
+                    == Some(CACHE_VERSION)
+            })
+            .and_then(|j| {
+                j.get("entries").and_then(Json::as_arr).map(|xs| {
+                    xs.iter().filter_map(CacheEntry::from_json).collect()
+                })
+            })
+            .unwrap_or_default();
+        PlanCache { path: Some(path.to_path_buf()), entries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn lookup(&self, signature: &str) -> Option<&CacheEntry> {
+        self.entries.iter().find(|e| e.signature == signature)
+    }
+
+    /// Insert or replace the entry for its signature.
+    pub fn insert(&mut self, entry: CacheEntry) {
+        match self
+            .entries
+            .iter_mut()
+            .find(|e| e.signature == entry.signature)
+        {
+            Some(slot) => *slot = entry,
+            None => self.entries.push(entry),
+        }
+    }
+
+    /// Persist to the bound path (no-op for in-memory caches). Atomic:
+    /// write a sibling temp file, then rename over the target. Entries
+    /// another process wrote since our load are re-read and kept (ours
+    /// win per signature), so concurrent tuners sharing one file don't
+    /// drop each other's results.
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        let mut merged = PlanCache::load(path).entries;
+        for e in &self.entries {
+            match merged.iter_mut().find(|m| m.signature == e.signature) {
+                Some(slot) => *slot = e.clone(),
+                None => merged.push(e.clone()),
+            }
+        }
+        let doc = Json::obj(vec![
+            ("version", Json::Int(CACHE_VERSION)),
+            (
+                "entries",
+                Json::Arr(merged.iter().map(|e| e.to_json()).collect()),
+            ),
+        ]);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, doc.render())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(sig: &str, llm_pp: usize) -> CacheEntry {
+        CacheEntry {
+            signature: sig.to_string(),
+            candidate: Candidate {
+                strategy: Strategy::Cornstarch,
+                enc_pps: vec![1, 2],
+                llm_pp,
+                tp: 2,
+                cp: 2,
+                num_microbatches: 24,
+                frozen: FrozenSetting::Paper,
+            },
+            iteration_ms: 123.5,
+            throughput_per_gpu: 0.042,
+            n_gpus: 16,
+            cp_algorithm: "LPT".to_string(),
+            evaluated: 37,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cornstarch-cache-test-{name}-{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let path = tmp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut c = PlanCache::load(&path);
+        assert!(c.is_empty());
+        c.insert(entry("sig-a", 3));
+        c.insert(entry("sig-b", 4));
+        c.save().unwrap();
+        let c2 = PlanCache::load(&path);
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.lookup("sig-a"), Some(&entry("sig-a", 3)));
+        assert_eq!(c2.lookup("sig-b"), Some(&entry("sig-b", 4)));
+        assert!(c2.lookup("sig-c").is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn insert_replaces_same_signature() {
+        let mut c = PlanCache::in_memory();
+        c.insert(entry("s", 2));
+        c.insert(entry("s", 5));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.lookup("s").unwrap().candidate.llm_pp, 5);
+    }
+
+    #[test]
+    fn save_merges_entries_written_by_another_process() {
+        let path = tmp_path("merge");
+        let _ = std::fs::remove_file(&path);
+        let mut a = PlanCache::load(&path);
+        let mut b = PlanCache::load(&path);
+        a.insert(entry("sig-a", 2));
+        a.save().unwrap();
+        b.insert(entry("sig-b", 3));
+        b.save().unwrap(); // must not drop sig-a
+        let c = PlanCache::load(&path);
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup("sig-a").is_some());
+        assert!(c.lookup("sig-b").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_file_degrades_to_empty() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "not json at all {{{{").unwrap();
+        let c = PlanCache::load(&path);
+        assert!(c.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version_mismatch_ignored() {
+        let path = tmp_path("version");
+        std::fs::write(&path, r#"{"version":999,"entries":[{}]}"#).unwrap();
+        let c = PlanCache::load(&path);
+        assert!(c.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let mut c = PlanCache::in_memory();
+        c.insert(entry("x", 1));
+        c.save().unwrap();
+        assert_eq!(c.len(), 1);
+    }
+}

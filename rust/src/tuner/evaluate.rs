@@ -1,0 +1,310 @@
+//! Parallel candidate evaluation — the tuner's hot path.
+//!
+//! A candidate is scored by building its plan (partitioning via
+//! [`crate::pipeline`]) and replaying the 1F1B task graph through the
+//! discrete-event simulator ([`crate::sim::simulate`], reached through
+//! [`Plan::simulate`]). Simulation dominates the cost, so batches of
+//! candidates fan out over `std::thread` workers pulling from a shared
+//! atomic cursor; results come back in candidate order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::bam;
+use crate::cost::Device;
+use crate::cp::{makespan, Algorithm};
+use crate::modality::{
+    planner, MultimodalModule, MultimodalParallelSpec, Plan,
+};
+use crate::model::MllmSpec;
+use crate::util::rng::Rng;
+
+use super::space::Candidate;
+
+/// A fully-scored candidate.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub candidate: Candidate,
+    pub iteration_ms: f64,
+    pub throughput_per_gpu: f64,
+    pub n_gpus: usize,
+}
+
+/// Materialize the module tree a candidate plans against (frozen policy
+/// applied).
+pub fn module_for(spec: &MllmSpec, cand: &Candidate) -> MultimodalModule {
+    let mut mm = MultimodalModule::from_spec(spec);
+    cand.frozen.apply(&mut mm);
+    mm
+}
+
+/// The parallel spec a candidate denotes.
+pub fn spec_for(cand: &Candidate) -> MultimodalParallelSpec {
+    let mut ps = MultimodalParallelSpec::paper_default(
+        &cand.enc_pps,
+        cand.llm_pp,
+        cand.tp,
+        cand.cp,
+    );
+    ps.num_microbatches = cand.num_microbatches;
+    ps
+}
+
+/// Build the stage DAG for one candidate without simulating it.
+pub fn build_plan(spec: &MllmSpec, cand: &Candidate, device: Device) -> Plan {
+    let mm = module_for(spec, cand);
+    planner::plan(cand.strategy, &mm, &spec_for(cand), device)
+}
+
+/// Cheap lower bound on the plan's iteration time, used by the search to
+/// prune without simulating:
+///
+/// * the bottleneck device must run all `m` of its microbatches'
+///   fwd+bwd serially, and
+/// * one microbatch must traverse the longest stage path (fwd down,
+///   bwd back up, plus a comm hop per cross-device edge).
+///
+/// Both are valid lower bounds on the 1F1B makespan; we take the max.
+pub fn lower_bound_ms(plan: &Plan) -> f64 {
+    let m = plan.num_microbatches as f64;
+    // Per-device serial work (stages sharing a device accumulate).
+    let n_dev = plan.graph.n_devices();
+    let mut dev_work = vec![0.0f64; n_dev];
+    for node in &plan.graph.nodes {
+        dev_work[node.device] += node.cost.total();
+    }
+    let busy_lb = m * dev_work.iter().cloned().fold(0.0, f64::max);
+
+    // Critical path of one microbatch: longest fwd chain into each node,
+    // then the symmetric bwd walk back — equivalently twice the one-way
+    // path with fwd+bwd costs and doubled comm.
+    let n = plan.graph.nodes.len();
+    let mut path = vec![0.0f64; n];
+    let mut critical: f64 = 0.0;
+    for (i, node) in plan.graph.nodes.iter().enumerate() {
+        let mut best = 0.0f64;
+        for &p in &node.preds {
+            let comm = if plan.graph.nodes[p].device != node.device {
+                2.0 * plan.graph.comm_ms
+            } else {
+                0.0
+            };
+            best = best.max(path[p] + comm);
+        }
+        path[i] = best + node.cost.total();
+        critical = critical.max(path[i]);
+    }
+    busy_lb.max(critical)
+}
+
+/// Simulate an already-built plan.
+fn evaluation_of(cand: &Candidate, plan: &Plan) -> Evaluation {
+    let m = plan.simulate();
+    Evaluation {
+        candidate: cand.clone(),
+        iteration_ms: m.iteration_ms,
+        throughput_per_gpu: m.throughput_per_gpu,
+        n_gpus: plan.n_gpus,
+    }
+}
+
+/// Score one candidate end-to-end (plan + simulate).
+pub fn evaluate_one(
+    spec: &MllmSpec,
+    cand: &Candidate,
+    device: Device,
+) -> Evaluation {
+    let plan = build_plan(spec, cand, device);
+    evaluation_of(cand, &plan)
+}
+
+/// Simulate pre-built (candidate, plan) pairs across `threads` workers —
+/// the search's wave path: plans were already constructed for bounding,
+/// so they are not rebuilt here. Result `i` corresponds to `items[i]`.
+pub fn simulate_plans_parallel(
+    items: &[(Candidate, Plan)],
+    threads: usize,
+) -> Vec<Evaluation> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(|(c, p)| evaluation_of(c, p)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Evaluation>>> =
+        (0..items.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let (c, p) = &items[i];
+                *slots[i].lock().unwrap() = Some(evaluation_of(c, p));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Score `candidates` across `threads` workers. Result `i` corresponds to
+/// `candidates[i]`. `threads == 1` degenerates to a serial loop (used by
+/// tests for determinism cross-checks).
+pub fn evaluate_parallel(
+    spec: &MllmSpec,
+    candidates: &[Candidate],
+    device: Device,
+    threads: usize,
+) -> Vec<Evaluation> {
+    let threads = threads.max(1).min(candidates.len().max(1));
+    if threads <= 1 {
+        return candidates
+            .iter()
+            .map(|c| evaluate_one(spec, c, device))
+            .collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Evaluation>>> =
+        (0..candidates.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= candidates.len() {
+                    break;
+                }
+                let ev = evaluate_one(spec, &candidates[i], device);
+                *slots[i].lock().unwrap() = Some(ev);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Pick the CP token-distribution algorithm for the tuned plan: sample an
+/// EE-style multimodal mask at the workload's LLM sequence length and keep
+/// the algorithm with the smallest simulated max-rank workload (§4.3.2).
+/// With `cp == 1` there is nothing to distribute.
+pub fn pick_cp_algorithm(tokens: usize, cp: usize, seed: u64) -> &'static str {
+    if cp <= 1 {
+        return "none";
+    }
+    let mut rng = Rng::new(seed);
+    // Round up to a mask the generators accept comfortably.
+    let t = tokens.max(256);
+    let mask = bam::generators::random_ee(&mut rng, t, 3);
+    let w = bam::block_workloads(&mask.workloads(), 128);
+    let mut best = ("LPT", u64::MAX);
+    for alg in [Algorithm::Lpt, Algorithm::Zigzag, Algorithm::Ring] {
+        let mk = makespan(&w, &alg.assign(&w, cp), cp);
+        if mk < best.1 {
+            best = (alg.name(), mk);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modality::Strategy;
+    use crate::model::Size;
+    use crate::tuner::space::FrozenSetting;
+
+    fn cand(strategy: Strategy, enc_pps: Vec<usize>, llm_pp: usize) -> Candidate {
+        Candidate {
+            strategy,
+            enc_pps,
+            llm_pp,
+            tp: 2,
+            cp: 2,
+            num_microbatches: 8,
+            frozen: FrozenSetting::Paper,
+        }
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_simulated_makespan() {
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let d = Device::a40();
+        for c in [
+            cand(Strategy::Cornstarch, vec![1], 3),
+            cand(Strategy::Cornstarch, vec![2], 4),
+            cand(Strategy::Colocated, vec![1], 3),
+            cand(Strategy::Replicated, vec![], 4),
+        ] {
+            let plan = build_plan(&spec, &c, d);
+            let lb = lower_bound_ms(&plan);
+            let sim = plan.simulate().iteration_ms;
+            assert!(
+                lb <= sim + 1e-6,
+                "{}: lb {lb:.2} > sim {sim:.2}",
+                c.label()
+            );
+            assert!(lb > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_evaluation_matches_serial() {
+        let spec = MllmSpec::vlm(Size::M, Size::S);
+        let d = Device::a40();
+        let cands: Vec<Candidate> = (1..=4)
+            .map(|pp| cand(Strategy::Cornstarch, vec![1], pp))
+            .collect();
+        let serial = evaluate_parallel(&spec, &cands, d, 1);
+        let par = evaluate_parallel(&spec, &cands, d, 4);
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.candidate, p.candidate);
+            assert!((s.iteration_ms - p.iteration_ms).abs() < 1e-9);
+            assert!(
+                (s.throughput_per_gpu - p.throughput_per_gpu).abs() < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn frozen_setting_changes_the_score() {
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let d = Device::a40();
+        let mut a = cand(Strategy::Cornstarch, vec![1], 3);
+        let mut b = a.clone();
+        a.frozen = FrozenSetting::AllFrozen;
+        b.frozen = FrozenSetting::AllTrainable;
+        let ea = evaluate_one(&spec, &a, d);
+        let eb = evaluate_one(&spec, &b, d);
+        // full training must cost strictly more than pure frozen replay
+        assert!(ea.iteration_ms < eb.iteration_ms);
+    }
+
+    #[test]
+    fn candidate_gpu_accounting_matches_the_planner() {
+        // Including the colocated case, where encoders share stages.
+        let spec = MllmSpec::valm(Size::M, Size::M, Size::M);
+        let d = Device::a40();
+        for c in [
+            cand(Strategy::Cornstarch, vec![1, 2], 3),
+            cand(Strategy::Colocated, vec![2, 2], 3),
+            cand(Strategy::Replicated, vec![], 4),
+        ] {
+            let plan = build_plan(&spec, &c, d);
+            assert_eq!(plan.n_gpus, c.n_gpus(), "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn cp_algorithm_pick_is_deterministic() {
+        assert_eq!(
+            pick_cp_algorithm(2774, 2, 7),
+            pick_cp_algorithm(2774, 2, 7)
+        );
+        assert_eq!(pick_cp_algorithm(2774, 1, 7), "none");
+    }
+}

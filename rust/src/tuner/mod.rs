@@ -1,0 +1,232 @@
+//! The plan-search autotuner: given an MLLM composition and a device
+//! budget, search the joint configuration space (policy × encoder
+//! placement × LLM pipeline depth × TP/CP degrees × microbatch count ×
+//! frozen policy) for the fastest plan, with a persistent cache so a
+//! repeated query never re-simulates.
+//!
+//! The subsystem is four layers deep, mirroring its data flow:
+//!
+//! * [`space`] — [`space::Candidate`] enumeration under the device budget;
+//! * [`search`] — bounded best-first search with cost-model lower-bound
+//!   pruning ([`search::Objective`] selects what is optimized);
+//! * [`evaluate`] — plan construction ([`crate::modality::planner`] +
+//!   [`crate::pipeline`]) and multi-threaded discrete-event simulation
+//!   ([`crate::sim`]), plus the CP distribution pick ([`crate::cp`]);
+//! * [`cache`] — the JSON-persisted plan cache keyed by a
+//!   workload/cluster signature.
+//!
+//! Entry point: [`tune`].
+
+pub mod cache;
+pub mod evaluate;
+pub mod search;
+pub mod space;
+
+pub use cache::{CacheEntry, PlanCache};
+pub use evaluate::{build_plan, evaluate_parallel, Evaluation};
+pub use search::{search, Objective, SearchReport};
+pub use space::{enumerate, Candidate, FrozenSetting, SearchSpace};
+
+use anyhow::{anyhow, Result};
+
+use crate::cost::Device;
+use crate::modality::Plan;
+use crate::model::MllmSpec;
+
+/// A tuning query.
+#[derive(Clone, Debug)]
+pub struct TuneRequest {
+    pub spec: MllmSpec,
+    pub space: SearchSpace,
+    pub objective: Objective,
+    /// Max candidates to simulate; 0 = unlimited (exact over the space).
+    pub budget: usize,
+    pub threads: usize,
+    /// JSON cache path; `None` searches fresh every time.
+    pub cache_path: Option<String>,
+    pub device: Device,
+}
+
+impl TuneRequest {
+    pub fn new(spec: MllmSpec, devices: usize) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8);
+        TuneRequest {
+            spec,
+            space: SearchSpace::paper_default(devices),
+            objective: Objective::Makespan,
+            budget: 0,
+            threads,
+            cache_path: None,
+            device: Device::a40(),
+        }
+    }
+
+    /// The cache key: everything that can change the answer (including
+    /// the device model — a plan tuned for one throughput profile must
+    /// not answer for another).
+    pub fn signature(&self) -> String {
+        format!(
+            "mllm={}|llm={}|{}|obj={}|budget={}|flops={:.4e}|mfu={}",
+            self.spec.name(),
+            self.spec.llm.name,
+            self.space.fingerprint(),
+            self.objective.key(),
+            self.budget,
+            self.device.peak_flops,
+            self.device.mfu,
+        )
+    }
+}
+
+/// The tuner's answer.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub entry: CacheEntry,
+    /// True when the answer came straight from the cache (no search, no
+    /// simulation).
+    pub cache_hit: bool,
+    /// Search statistics — all zero on a cache hit.
+    pub total_candidates: usize,
+    pub evaluated: usize,
+    pub pruned: usize,
+}
+
+impl TuneOutcome {
+    /// Rebuild the executable stage DAG the cached candidate denotes.
+    pub fn instantiate(&self, spec: &MllmSpec, device: Device) -> Plan {
+        build_plan(spec, &self.entry.candidate, device)
+    }
+}
+
+/// Tune: consult the cache, otherwise search, then persist the winner.
+pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
+    let mut cache = match &req.cache_path {
+        Some(p) => PlanCache::load(std::path::Path::new(p)),
+        None => PlanCache::in_memory(),
+    };
+    let sig = req.signature();
+    if let Some(entry) = cache.lookup(&sig) {
+        return Ok(TuneOutcome {
+            entry: entry.clone(),
+            cache_hit: true,
+            total_candidates: 0,
+            evaluated: 0,
+            pruned: 0,
+        });
+    }
+    let report = search(
+        &req.spec,
+        &req.space,
+        req.objective,
+        req.budget,
+        req.threads,
+        req.device,
+    )
+    .ok_or_else(|| {
+        anyhow!(
+            "no feasible plan for {} on {} device(s)",
+            req.spec.name(),
+            req.space.devices
+        )
+    })?;
+    let best = report.best;
+    let cp_algorithm = evaluate::pick_cp_algorithm(
+        req.spec.llm_tokens(),
+        best.candidate.cp,
+        0x7EAC_0DE5,
+    )
+    .to_string();
+    let entry = CacheEntry {
+        signature: sig,
+        candidate: best.candidate.clone(),
+        iteration_ms: best.iteration_ms,
+        throughput_per_gpu: best.throughput_per_gpu,
+        n_gpus: best.n_gpus,
+        cp_algorithm,
+        evaluated: report.evaluated,
+    };
+    cache.insert(entry.clone());
+    cache.save()?;
+    Ok(TuneOutcome {
+        entry,
+        cache_hit: false,
+        total_candidates: report.total_candidates,
+        evaluated: report.evaluated,
+        pruned: report.pruned,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Size;
+
+    fn req(devices: usize) -> TuneRequest {
+        let mut r =
+            TuneRequest::new(MllmSpec::vlm(Size::M, Size::S), devices);
+        r.threads = 2;
+        r
+    }
+
+    #[test]
+    fn tune_without_cache_searches_every_time() {
+        let a = tune(&req(8)).unwrap();
+        assert!(!a.cache_hit);
+        assert!(a.evaluated >= 1);
+        let b = tune(&req(8)).unwrap();
+        assert!(!b.cache_hit);
+        assert_eq!(a.entry.candidate, b.entry.candidate);
+    }
+
+    #[test]
+    fn cache_hit_skips_search_and_preserves_the_plan() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("cornstarch-tune-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut r = req(8);
+        r.cache_path = Some(path.to_string_lossy().into_owned());
+        let first = tune(&r).unwrap();
+        assert!(!first.cache_hit);
+        let second = tune(&r).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(second.evaluated, 0, "cache hit must not re-simulate");
+        assert_eq!(first.entry, second.entry);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn different_budgets_get_different_signatures() {
+        let mut a = req(8);
+        let mut b = req(8);
+        a.budget = 10;
+        b.budget = 20;
+        assert_ne!(a.signature(), b.signature());
+    }
+
+    #[test]
+    fn instantiate_rebuilds_a_consistent_plan() {
+        let r = req(16);
+        let out = tune(&r).unwrap();
+        let plan = out.instantiate(&r.spec, r.device);
+        let m = plan.simulate();
+        assert!(
+            (m.iteration_ms - out.entry.iteration_ms).abs() < 1e-6,
+            "instantiated plan {:.3} ms vs cached {:.3} ms",
+            m.iteration_ms,
+            out.entry.iteration_ms
+        );
+        assert_eq!(plan.n_gpus, out.entry.n_gpus);
+    }
+
+    #[test]
+    fn infeasible_budget_is_an_error() {
+        let mut r = req(8);
+        r.space.devices = 0;
+        r.space.tp_choices = vec![4];
+        r.space.cp_choices = vec![4];
+        assert!(tune(&r).is_err());
+    }
+}

@@ -1,0 +1,408 @@
+//! Candidate enumeration: the joint configuration space the autotuner
+//! searches.
+//!
+//! A [`Candidate`] fixes everything the planning layers need to produce an
+//! executable plan: the parallelization policy ([`Strategy`]), the encoder
+//! placement (per-encoder stage counts), the LLM pipeline depth, the TP
+//! and CP degrees, the microbatch count, and the frozen policy. The
+//! [`SearchSpace`] bounds each dimension; [`enumerate`] walks the cross
+//! product and keeps only candidates that fit the device budget and the
+//! per-module layer counts.
+
+use crate::modality::{ModalityModule, MultimodalModule, Strategy};
+
+/// Which modules train — the §4.2 dimension DistTrain-style placement
+/// search must be aware of, since it decides every stage's backward time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrozenSetting {
+    /// The paper's recipe: encoders + LLM frozen, projectors trainable.
+    Paper,
+    /// Full fine-tuning: everything trainable.
+    AllTrainable,
+    /// Pure inference-style replay: nothing trainable anywhere.
+    AllFrozen,
+}
+
+impl FrozenSetting {
+    pub const ALL: [FrozenSetting; 3] = [
+        FrozenSetting::Paper,
+        FrozenSetting::AllTrainable,
+        FrozenSetting::AllFrozen,
+    ];
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            FrozenSetting::Paper => "paper",
+            FrozenSetting::AllTrainable => "all",
+            FrozenSetting::AllFrozen => "frozen",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FrozenSetting> {
+        match s {
+            "paper" => Some(FrozenSetting::Paper),
+            "all" => Some(FrozenSetting::AllTrainable),
+            "frozen" => Some(FrozenSetting::AllFrozen),
+            _ => None,
+        }
+    }
+
+    /// Rewrite a module tree's frozen flags in place.
+    pub fn apply(&self, mm: &mut MultimodalModule) {
+        let set = |m: &mut ModalityModule, frozen: bool, proj: bool| {
+            m.frozen = frozen;
+            m.projector_trainable = proj;
+        };
+        match self {
+            // `MultimodalModule::from_spec` already builds the paper recipe.
+            FrozenSetting::Paper => {}
+            FrozenSetting::AllTrainable => {
+                for e in &mut mm.encoders {
+                    set(e, false, true);
+                }
+                mm.llm.frozen = false;
+            }
+            FrozenSetting::AllFrozen => {
+                for e in &mut mm.encoders {
+                    set(e, true, false);
+                }
+                mm.llm.frozen = true;
+            }
+        }
+    }
+}
+
+/// One point of the joint configuration space.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub strategy: Strategy,
+    /// Per-encoder stage counts in `MultimodalModule::encoders` order.
+    /// Empty for [`Strategy::Replicated`] (encoders ride the LLM stages).
+    pub enc_pps: Vec<usize>,
+    pub llm_pp: usize,
+    pub tp: usize,
+    pub cp: usize,
+    pub num_microbatches: usize,
+    pub frozen: FrozenSetting,
+}
+
+impl Candidate {
+    /// Total GPUs the candidate occupies (each stage is a `tp×cp` group).
+    /// Colocated fuses every encoder into one shared chain of
+    /// `enc_pps[0]` stages; Replicated reuses the LLM's groups for the
+    /// encoders (`enc_pps` is empty).
+    pub fn n_gpus(&self) -> usize {
+        let groups = match self.strategy {
+            Strategy::Colocated => {
+                self.llm_pp + self.enc_pps.first().copied().unwrap_or(0)
+            }
+            _ => self.llm_pp + self.enc_pps.iter().sum::<usize>(),
+        };
+        groups * self.tp * self.cp
+    }
+
+    /// Compact human-readable form for tables and logs.
+    pub fn label(&self) -> String {
+        format!(
+            "{} llm_pp={} enc_pp={:?} tp={} cp={} mb={} policy={}",
+            self.strategy.key(),
+            self.llm_pp,
+            self.enc_pps,
+            self.tp,
+            self.cp,
+            self.num_microbatches,
+            self.frozen.key()
+        )
+    }
+}
+
+/// Bounds of each search dimension.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Total GPU budget; candidates must fit (they need not fill it).
+    pub devices: usize,
+    pub tp_choices: Vec<usize>,
+    pub cp_choices: Vec<usize>,
+    pub microbatch_choices: Vec<usize>,
+    /// Cap on any single module's stage count (the paper caps at 6).
+    pub max_pp: usize,
+    pub strategies: Vec<Strategy>,
+    pub frozen_choices: Vec<FrozenSetting>,
+}
+
+impl SearchSpace {
+    /// The §6.1 defaults: tp/cp ∈ {1, 2}, 24 microbatches of 1 sample,
+    /// all three policies, the paper's frozen recipe, stages capped at 6.
+    pub fn paper_default(devices: usize) -> Self {
+        assert!(devices >= 1);
+        SearchSpace {
+            devices,
+            tp_choices: vec![1, 2],
+            cp_choices: vec![1, 2],
+            microbatch_choices: vec![24],
+            max_pp: 6,
+            strategies: Strategy::ALL.to_vec(),
+            frozen_choices: vec![FrozenSetting::Paper],
+        }
+    }
+
+    /// Stable fingerprint of the space bounds — part of the cache key, so
+    /// a cache entry never answers for a differently-bounded search.
+    pub fn fingerprint(&self) -> String {
+        let keys: Vec<&str> =
+            self.strategies.iter().map(|s| s.key()).collect();
+        let frozen: Vec<&str> =
+            self.frozen_choices.iter().map(|f| f.key()).collect();
+        format!(
+            "dev={}|tp={:?}|cp={:?}|mb={:?}|maxpp={}|strat={}|frozen={}",
+            self.devices,
+            self.tp_choices,
+            self.cp_choices,
+            self.microbatch_choices,
+            self.max_pp,
+            keys.join(","),
+            frozen.join(",")
+        )
+    }
+}
+
+/// Max stage count of one encoder: its body layers plus the trailing
+/// projector pseudo-layer (see `planner::encoder_layer_costs`).
+fn enc_max_stages(e: &crate::modality::ModalityModule) -> usize {
+    e.geom.n_layers + 1
+}
+
+/// Enumerate every candidate of `space` that is feasible for `mm`:
+/// stage counts within layer counts, total GPUs within the budget, and
+/// the colocated policy's equal-encoder-stage constraint respected.
+pub fn enumerate(mm: &MultimodalModule, space: &SearchSpace) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for &frozen in &space.frozen_choices {
+        for &tp in &space.tp_choices {
+            for &cp in &space.cp_choices {
+                let groups = space.devices / (tp * cp);
+                if groups == 0 {
+                    continue;
+                }
+                for &mb in &space.microbatch_choices {
+                    for &strategy in &space.strategies {
+                        push_pp_splits(
+                            mm, space, strategy, tp, cp, mb, frozen, groups,
+                            &mut out,
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Append all feasible (llm_pp, enc_pps) splits of `groups` device groups
+/// for one (strategy, tp, cp, mb, frozen) combination.
+#[allow(clippy::too_many_arguments)]
+fn push_pp_splits(
+    mm: &MultimodalModule,
+    space: &SearchSpace,
+    strategy: Strategy,
+    tp: usize,
+    cp: usize,
+    mb: usize,
+    frozen: FrozenSetting,
+    groups: usize,
+    out: &mut Vec<Candidate>,
+) {
+    let n_enc = mm.encoders.len();
+    let llm_max = space.max_pp.min(mm.llm.geom.n_layers).min(groups);
+    match strategy {
+        Strategy::Replicated => {
+            // Encoders are replicated into the LLM stages: the split is
+            // the LLM depth alone.
+            for llm_pp in 1..=llm_max {
+                out.push(Candidate {
+                    strategy,
+                    enc_pps: Vec::new(),
+                    llm_pp,
+                    tp,
+                    cp,
+                    num_microbatches: mb,
+                    frozen,
+                });
+            }
+        }
+        Strategy::Colocated => {
+            // All encoders share one stage count (§6.3 constraint).
+            if n_enc == 0 {
+                return;
+            }
+            let enc_cap = space
+                .max_pp
+                .min(mm.encoders.iter().map(enc_max_stages).min().unwrap());
+            for llm_pp in 1..=llm_max {
+                for enc_pp in 1..=enc_cap {
+                    if llm_pp + enc_pp <= groups {
+                        out.push(Candidate {
+                            strategy,
+                            enc_pps: vec![enc_pp; n_enc],
+                            llm_pp,
+                            tp,
+                            cp,
+                            num_microbatches: mb,
+                            frozen,
+                        });
+                    }
+                }
+            }
+        }
+        Strategy::Cornstarch => {
+            if n_enc == 0 {
+                return;
+            }
+            // Independent per-encoder depths: recurse over encoders.
+            for llm_pp in 1..=llm_max {
+                let left = match groups.checked_sub(llm_pp + n_enc) {
+                    Some(slack) => slack,
+                    None => continue, // not even 1 stage per encoder
+                };
+                let mut enc_pps = vec![1usize; n_enc];
+                fill_encoders(
+                    mm, space, 0, left, &mut enc_pps, &mut |pps: &[usize]| {
+                        out.push(Candidate {
+                            strategy,
+                            enc_pps: pps.to_vec(),
+                            llm_pp,
+                            tp,
+                            cp,
+                            num_microbatches: mb,
+                            frozen,
+                        });
+                    },
+                );
+            }
+        }
+    }
+}
+
+/// Recursively assign each encoder a stage count of `1 + extra` where the
+/// `extra`s drawn across encoders never exceed `slack` spare groups.
+fn fill_encoders(
+    mm: &MultimodalModule,
+    space: &SearchSpace,
+    idx: usize,
+    slack: usize,
+    enc_pps: &mut Vec<usize>,
+    emit: &mut dyn FnMut(&[usize]),
+) {
+    if idx == mm.encoders.len() {
+        emit(enc_pps);
+        return;
+    }
+    let cap = space.max_pp.min(enc_max_stages(&mm.encoders[idx]));
+    for pp in 1..=cap.min(1 + slack) {
+        enc_pps[idx] = pp;
+        fill_encoders(mm, space, idx + 1, slack - (pp - 1), enc_pps, emit);
+    }
+    enc_pps[idx] = 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MllmSpec, Size};
+
+    fn vlm_mm() -> MultimodalModule {
+        MultimodalModule::from_spec(&MllmSpec::vlm(Size::M, Size::M))
+    }
+
+    #[test]
+    fn candidates_fit_the_budget() {
+        let mm = vlm_mm();
+        let space = SearchSpace::paper_default(16);
+        let cands = enumerate(&mm, &space);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert!(c.n_gpus() <= 16, "{}", c.label());
+            assert!(c.llm_pp >= 1 && c.llm_pp <= space.max_pp);
+            for &pp in &c.enc_pps {
+                assert!(pp >= 1 && pp <= space.max_pp);
+            }
+        }
+    }
+
+    #[test]
+    fn all_three_strategies_appear() {
+        let mm = vlm_mm();
+        let cands = enumerate(&mm, &SearchSpace::paper_default(16));
+        for s in Strategy::ALL {
+            assert!(
+                cands.iter().any(|c| c.strategy == s),
+                "missing {}",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn colocated_encoder_stages_are_equal() {
+        let mm = MultimodalModule::from_spec(&MllmSpec::valm(
+            Size::M,
+            Size::M,
+            Size::M,
+        ));
+        let cands = enumerate(&mm, &SearchSpace::paper_default(32));
+        for c in cands.iter().filter(|c| c.strategy == Strategy::Colocated) {
+            assert!(c.enc_pps.windows(2).all(|w| w[0] == w[1]));
+        }
+    }
+
+    #[test]
+    fn valm_cornstarch_splits_cover_both_encoders() {
+        let mm = MultimodalModule::from_spec(&MllmSpec::valm(
+            Size::M,
+            Size::M,
+            Size::M,
+        ));
+        let cands = enumerate(&mm, &SearchSpace::paper_default(24));
+        let cs: Vec<_> = cands
+            .iter()
+            .filter(|c| c.strategy == Strategy::Cornstarch)
+            .collect();
+        assert!(!cs.is_empty());
+        assert!(cs.iter().all(|c| c.enc_pps.len() == 2));
+        // some candidate gives the two encoders different depths
+        assert!(cs.iter().any(|c| c.enc_pps[0] != c.enc_pps[1]));
+    }
+
+    #[test]
+    fn frozen_setting_rewrites_module_flags() {
+        let mut mm = vlm_mm();
+        FrozenSetting::AllTrainable.apply(&mut mm);
+        assert!(!mm.llm.frozen);
+        assert!(mm.encoders.iter().all(|e| !e.frozen));
+        let mut mm2 = vlm_mm();
+        FrozenSetting::AllFrozen.apply(&mut mm2);
+        assert!(mm2.llm.frozen);
+        assert!(!mm2.llm_has_trainable_upstream());
+    }
+
+    #[test]
+    fn fingerprint_changes_with_budget() {
+        let a = SearchSpace::paper_default(8).fingerprint();
+        let b = SearchSpace::paper_default(16).fingerprint();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tiny_budget_yields_no_impossible_candidates() {
+        // 1 GPU: only tp=cp=1, single-stage plans fit.
+        let mm = vlm_mm();
+        let cands = enumerate(&mm, &SearchSpace::paper_default(1));
+        for c in &cands {
+            assert_eq!(c.n_gpus(), 1, "{}", c.label());
+        }
+        // replicated with llm_pp=1 fits; cornstarch needs >= 2 groups.
+        assert!(cands
+            .iter()
+            .all(|c| c.strategy != Strategy::Cornstarch));
+    }
+}

@@ -2,6 +2,11 @@
 //! from python, executed via PJRT) against a from-scratch rust reference
 //! that uses ONLY `bam::can_attend` — proving that all three layers agree
 //! on the mask semantics and the attention math.
+//!
+//! Needs `make artifacts` first — gated behind the `artifacts` feature so
+//! a clean checkout passes `cargo test` (run with
+//! `cargo test --features artifacts` once artifacts are built).
+#![cfg(feature = "artifacts")]
 
 use cornstarch::bam::Bam;
 use cornstarch::runtime::{AttnRuntime, Manifest};

@@ -1,6 +1,11 @@
 //! End-to-end training integration: the full three-layer stack on the
 //! `mini` (~35M class) model — artifacts compiled from JAX+Pallas, loaded
 //! and driven entirely from rust, loss decreasing, frozen semantics held.
+//!
+//! Needs `make artifacts` first — gated behind the `artifacts` feature so
+//! a clean checkout passes `cargo test` (run with
+//! `cargo test --features artifacts` once artifacts are built).
+#![cfg(feature = "artifacts")]
 
 use cornstarch::runtime::{Manifest, Role};
 use cornstarch::train::{

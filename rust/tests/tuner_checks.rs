@@ -1,0 +1,146 @@
+//! Tuner acceptance + CP solver parity.
+//!
+//! * property tests: `cp::exact` (branch-and-bound, the §4.3.2 ILP) never
+//!   yields a worse max-workload than greedy LPT, and respects the
+//!   packing lower bounds — seeded through `util::rng` so failures
+//!   reproduce;
+//! * regression: the tuner's plan cache round-trips through disk and a
+//!   second query returns the identical best plan without re-simulating;
+//! * acceptance: `tune VLM-M --devices 16` end-to-end beats the best of
+//!   the three fixed planners on the same scenario.
+
+use cornstarch::cost::Device;
+use cornstarch::cp::{exact_min_makespan, makespan, Algorithm};
+use cornstarch::modality::{
+    planner, MultimodalModule, MultimodalParallelSpec, Strategy,
+};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::tuner::{tune, TuneRequest};
+use cornstarch::util::check::check;
+use cornstarch::util::rng::Rng;
+
+#[test]
+fn exact_never_worse_than_lpt_on_small_instances() {
+    check("exact <= LPT makespan", 60, |g| {
+        let b = g.usize(1, 15);
+        let w: Vec<u64> = (0..b).map(|_| g.rng.below(120) + 1).collect();
+        let ranks = g.usize(1, 6);
+        let opt = exact_min_makespan(&w, ranks);
+        let lpt = makespan(&w, &Algorithm::Lpt.assign(&w, ranks), ranks);
+        assert!(opt <= lpt, "exact {opt} > LPT {lpt} on {w:?} / {ranks}");
+        // and exact respects both packing lower bounds
+        let total: u64 = w.iter().sum();
+        assert!(opt >= total.div_ceil(ranks as u64));
+        assert!(opt >= w.iter().copied().max().unwrap_or(0));
+    });
+}
+
+#[test]
+fn exact_matches_lpt_when_lpt_is_provably_optimal() {
+    // Uniform workloads in multiples of the rank count: LPT achieves the
+    // mean exactly, so exact must equal it.
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..20 {
+        let ranks = 2 + (rng.below(4) as usize);
+        let per = 1 + rng.below(40);
+        let w = vec![per; ranks * (1 + rng.below(3) as usize)];
+        let opt = exact_min_makespan(&w, ranks);
+        let lpt = makespan(&w, &Algorithm::Lpt.assign(&w, ranks), ranks);
+        assert_eq!(opt, lpt);
+        assert_eq!(opt, per * (w.len() / ranks) as u64);
+    }
+}
+
+fn acceptance_request(cache: Option<String>) -> TuneRequest {
+    let mut req = TuneRequest::new(MllmSpec::vlm(Size::M, Size::M), 16);
+    req.threads = 2;
+    req.cache_path = cache;
+    req
+}
+
+/// The ISSUE's acceptance scenario: tune VLM-M on 16 devices; the result
+/// must be at least as fast as the best of the three baseline planners on
+/// the same scenario (tp=2, cp=2, 24 microbatches, 4 device groups).
+#[test]
+fn tuned_vlm_m_16_devices_beats_all_baseline_planners() {
+    let out = tune(&acceptance_request(None)).unwrap();
+    assert!(!out.cache_hit);
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+    let mm = MultimodalModule::from_spec(&spec);
+    let d = Device::a40();
+    let mut best_baseline = f64::INFINITY;
+    for (strategy, enc_pp, llm_pp) in [
+        (Strategy::Cornstarch, vec![1usize], 3usize),
+        (Strategy::Colocated, vec![1], 3),
+        (Strategy::Replicated, vec![], 4),
+    ] {
+        let ps = MultimodalParallelSpec::paper_default(&enc_pp, llm_pp, 2, 2);
+        let m = planner::plan(strategy, &mm, &ps, d).simulate();
+        best_baseline = best_baseline.min(m.iteration_ms);
+    }
+    assert!(
+        out.entry.iteration_ms <= best_baseline + 1e-9,
+        "tuned {:.1} ms vs best baseline {:.1} ms",
+        out.entry.iteration_ms,
+        best_baseline
+    );
+    // The winner must fit the budget and be executable.
+    assert!(out.entry.n_gpus <= 16);
+    let plan = out.instantiate(&spec, d);
+    let m = plan.simulate();
+    assert!((m.iteration_ms - out.entry.iteration_ms).abs() < 1e-6);
+}
+
+/// Cache regression: serialize → load → identical best plan, with zero
+/// re-simulation on the second query.
+#[test]
+fn tuner_cache_roundtrip_returns_identical_plan() {
+    let mut path = std::env::temp_dir();
+    path.push(format!(
+        "cornstarch-tuner-accept-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let cache = Some(path.to_string_lossy().into_owned());
+
+    let first = tune(&acceptance_request(cache.clone())).unwrap();
+    assert!(!first.cache_hit);
+    assert!(first.evaluated > 0);
+
+    let second = tune(&acceptance_request(cache)).unwrap();
+    assert!(second.cache_hit, "second invocation must hit the cache");
+    assert_eq!(second.evaluated, 0, "cache hit must not re-simulate");
+    assert_eq!(first.entry, second.entry, "cached plan differs");
+
+    // The cached candidate instantiates to the same simulated makespan.
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+    let plan = second.instantiate(&spec, Device::a40());
+    assert!(
+        (plan.simulate().iteration_ms - first.entry.iteration_ms).abs()
+            < 1e-6
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A different query (other budget/devices) never answers from the same
+/// cache slot.
+#[test]
+fn cache_does_not_cross_scenarios() {
+    let mut path = std::env::temp_dir();
+    path.push(format!(
+        "cornstarch-tuner-cross-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let cache = Some(path.to_string_lossy().into_owned());
+
+    let a = tune(&acceptance_request(cache.clone())).unwrap();
+    let mut req8 = TuneRequest::new(MllmSpec::vlm(Size::M, Size::M), 8);
+    req8.threads = 2;
+    req8.cache_path = cache;
+    let b = tune(&req8).unwrap();
+    assert!(!b.cache_hit, "8-device query must not reuse the 16-device plan");
+    assert!(b.entry.n_gpus <= 8);
+    assert!(a.entry.n_gpus <= 16);
+    let _ = std::fs::remove_file(&path);
+}
