@@ -38,12 +38,13 @@ fn main() -> Result<()> {
         let mut req = TuneRequest::new(spec.clone(), *devices);
         req.cache_path = Some(cache.clone());
         let out = tune(&req)?;
+        let best = out.entry.best();
         t.row(&[
             spec.name(),
             devices.to_string(),
-            out.entry.candidate.label(),
-            format!("{:.1}", out.entry.iteration_ms),
-            format!("{:.3}", out.entry.throughput_per_gpu),
+            best.candidate.label(),
+            format!("{:.1}", best.iteration_ms),
+            format!("{:.3}", best.throughput_per_gpu),
             out.evaluated.to_string(),
             out.pruned.to_string(),
         ]);
@@ -73,8 +74,29 @@ fn main() -> Result<()> {
     println!(
         "\nVLM-L @16: paper recipe {:.1} ms vs full fine-tune {:.1} ms — \
          frozen-aware placement is why the tuner must know the policy",
-        paper.entry.iteration_ms, full.entry.iteration_ms
+        paper.entry.best().iteration_ms,
+        full.entry.best().iteration_ms
     );
+
+    // ---- the cached frontier answers trade-off queries for free ----
+    // The first loop persisted a top-5 frontier for this exact scenario;
+    // asking for the top 3 is served straight from the cache.
+    let mut req = TuneRequest::new(MllmSpec::vlm(Size::M, Size::M), 16);
+    req.top = 3;
+    req.cache_path = Some(cache.clone());
+    let out = tune(&req)?;
+    assert!(out.cache_hit, "frontier query should be a cache hit");
+    println!("\ntop-{} frontier (throughput vs GPUs vs headroom):", req.top);
+    for (i, p) in out.entry.frontier.iter().enumerate() {
+        println!(
+            "  #{}: {:.1} ms | {} GPUs | peak {:.1} GB | {}",
+            i + 1,
+            p.iteration_ms,
+            p.n_gpus,
+            cornstarch::memory::gb(p.peak_mem_bytes),
+            p.candidate.label()
+        );
+    }
 
     let _ = std::fs::remove_file(&cache_path);
     Ok(())

@@ -217,7 +217,8 @@ pub const TABLE9: &[FrozenCfg] = &{
         c(M, false, S, (5, 1), (6, 1), 2),
         c(M, false, M, (4, 4), (6, 1), 2),
         c(M, false, L, (5, 5), (4, 2), 2),
-        // LLM-L (tp=4: CP off would OOM per Appendix D)
+        // LLM-L rows pin tp=4, and need CP: enforced against the memory
+        // model by `validate_llm_l_memory`, not by a prose claim.
         c(L, true, S, (3, 5), (5, 1), 4),
         c(L, true, M, (5, 1), (5, 1), 4),
         c(L, true, L, (4, 2), (4, 1), 4),
@@ -230,6 +231,63 @@ pub const TABLE9: &[FrozenCfg] = &{
 /// Human name of a single-encoder model (`VLM-L`, `ALM-S`...).
 pub fn single_enc_name(vision: bool, enc: Size) -> String {
     format!("{}-{}", if vision { "VLM" } else { "ALM" }, enc.letter())
+}
+
+/// Appendix D's memory constraint, held to the analytic model
+/// ([`crate::memory`]) instead of a prose comment: every LLM-L row of
+/// Table 9 runs TP=4 because at TP=2 the 40 GB A40 budget is exceeded
+/// even with CP=2, and CP is required because at TP=4 with CP off the
+/// VLM-L row still exceeds it. Panics loudly if the Table 1 geometry or
+/// the memory model ever drifts away from those verdicts.
+pub fn validate_llm_l_memory() {
+    use crate::cost::Device;
+    use crate::memory;
+    use crate::modality::{planner, Strategy};
+    use crate::model::MllmSpec;
+
+    let plan_for = |c: &FrozenCfg, tp: usize, cp: usize| {
+        let spec = if c.vision {
+            MllmSpec::vlm(c.llm, c.enc)
+        } else {
+            MllmSpec::alm(c.llm, c.enc)
+        };
+        planner::plan_uniform(
+            Strategy::Cornstarch,
+            &spec,
+            c.aware.1,
+            c.aware.0,
+            tp,
+            cp,
+            24,
+            Device::a40(),
+        )
+    };
+    for c in TABLE9.iter().filter(|c| c.llm == Size::L) {
+        assert_eq!(
+            c.tp, 4,
+            "Table 9 LLM-L rows must pin tp=4 ({})",
+            single_enc_name(c.vision, c.enc)
+        );
+        let plan = plan_for(c, 4, 2);
+        if let Err(e) = memory::check(&plan, memory::A40_BUDGET_BYTES) {
+            panic!(
+                "Table 9 {} @ LLM-L no longer fits at tp=4/cp=2: {e}",
+                single_enc_name(c.vision, c.enc)
+            );
+        }
+    }
+    // The VLM-L row is the Appendix D OOM witness: with CP off its
+    // encoder stage's warm-up window busts the budget.
+    let witness = TABLE9
+        .iter()
+        .find(|c| c.llm == Size::L && c.vision && c.enc == Size::L)
+        .expect("Table 9 carries a VLM-L @ LLM-L row");
+    assert!(
+        memory::check(&plan_for(witness, 4, 1), memory::A40_BUDGET_BYTES)
+            .is_err(),
+        "VLM-L @ LLM-L with CP off should exceed the A40 budget \
+         (Appendix D)"
+    );
 }
 
 #[cfg(test)]
@@ -268,6 +326,12 @@ mod tests {
         for c in TABLE9 {
             assert!(c.aware.0 + c.aware.1 <= 12);
         }
+    }
+
+    #[test]
+    fn llm_l_memory_constraints_hold() {
+        // Must not panic: tp=4/cp=2 fits everywhere, CP off OOMs VLM-L.
+        validate_llm_l_memory();
     }
 
     #[test]

@@ -17,12 +17,14 @@
 //! | `table4`    | Table 4 (CP attention time)     | [`table4`]            |
 //! | `fig12`     | Figure 12 (per-rank balance)    | [`fig12`]             |
 //! | `auto`      | Algorithm 1 frontier            | [`auto_frontier`]     |
+//! | `memory`    | Appendix D (LLM-L OOM verdicts) | [`memory_feasibility`]|
 //! | `attn`      | PJRT cross-check of the model   | [`attn_crosscheck`]   |
 
 use crate::bam::{self, Bam};
 use crate::cost::Device;
 use crate::cp::{metrics::rank_tokens, Algorithm};
 use crate::cp::metrics::AttnTimeModel;
+use crate::memory;
 use crate::modality::{
     auto_parallelize, planner, MultimodalModule, MultimodalParallelSpec,
     Plan, Strategy,
@@ -32,7 +34,7 @@ use crate::util::rng::Rng;
 use crate::util::table::Table;
 
 use super::configs::{
-    single_enc_name, SingleEncCfg, TABLE2_7_8,
+    single_enc_name, validate_llm_l_memory, SingleEncCfg, TABLE2_7_8,
     TABLE5, TABLE6, TABLE9,
 };
 
@@ -334,12 +336,24 @@ pub struct FrozenRow {
 /// partitioning. The policies differ in how many stages each module gets
 /// (the §4.2 partitioner balances fwd+bwd; the unaware one balances fwd
 /// assuming bwd = 2×fwd) — Table 9 records both policies' resulting stage
-/// counts, which we replay. CP = 1 per Appendix D.
+/// counts, which we replay. CP = 1 per Appendix D, except LLM-L: the
+/// memory model proves CP off exceeds the A40 budget there even at tp=4
+/// (`validate_llm_l_memory`), so those rows replay at the cp=2 the
+/// validator certifies. The comparison is unaffected — aware and unaware
+/// scale identically with CP.
 pub fn table3_10_11(llm: Size) -> (Table, Vec<FrozenRow>) {
     let id = match llm {
         Size::M => "3",
         Size::S => "10",
         Size::L => "11",
+    };
+    let cp = if llm == Size::L {
+        // Fail loudly if the geometry drifts from the Appendix D
+        // verdicts this cp choice is based on.
+        validate_llm_l_memory();
+        2
+    } else {
+        1
     };
     let mut t = Table::new(
         &format!(
@@ -363,7 +377,7 @@ pub fn table3_10_11(llm: Size) -> (Table, Vec<FrozenRow>) {
             [(true, c.aware), (false, c.unaware)]
         {
             let mut ps = MultimodalParallelSpec::paper_default(
-                &[enc_pp], llm_pp, c.tp, 1,
+                &[enc_pp], llm_pp, c.tp, cp,
             );
             ps.num_microbatches = MICROBATCHES;
             let plan =
@@ -568,6 +582,61 @@ pub fn auto_frontier(spec: &MllmSpec, groups: usize) -> Table {
     t
 }
 
+/// Appendix D's memory feasibility verdicts for the heaviest Table 9 row
+/// (VLM-L @ LLM-L, frozen-aware split): the per-device peak of the
+/// memory model across TP/CP degrees, against the 40 GB A40 budget.
+/// The paper's claim pattern: tp=4 with CP off exceeds the budget, tp=4
+/// with cp=2 fits — and tp=2 exceeds either way, which is why Table 9
+/// pins tp=4 for LLM-L. Returns `(tp, cp, peak_bytes, fits)` rows.
+pub fn memory_feasibility() -> (Table, Vec<(usize, usize, u64, bool)>) {
+    validate_llm_l_memory();
+    let row = TABLE9
+        .iter()
+        .find(|c| c.llm == Size::L && c.vision && c.enc == Size::L)
+        .expect("Table 9 carries a VLM-L @ LLM-L row");
+    let (llm_pp, enc_pp) = row.aware;
+    let spec = MllmSpec::vlm(Size::L, Size::L);
+    let mut t = Table::new(
+        &format!(
+            "Appendix D — LLM-L memory feasibility (VLM-L, aware split \
+             llm_pp={llm_pp}/enc_pp={enc_pp}, {:.0} GB A40 budget)",
+            memory::gb(memory::A40_BUDGET_BYTES)
+        ),
+        &["tp", "cp", "peak GB/GPU", "worst stage", "within budget"],
+    );
+    let mut rows = Vec::new();
+    for (tp, cp) in [(2, 1), (2, 2), (4, 1), (4, 2)] {
+        let plan = planner::plan_uniform(
+            Strategy::Cornstarch,
+            &spec,
+            enc_pp,
+            llm_pp,
+            tp,
+            cp,
+            MICROBATCHES,
+            Device::a40(),
+        );
+        let peak = plan.peak_device_bytes();
+        let fits = peak <= memory::A40_BUDGET_BYTES;
+        let worst = plan
+            .stage_mem
+            .iter()
+            .zip(&plan.stage_names)
+            .max_by_key(|(s, _)| s.peak_bytes())
+            .map(|(_, n)| n.clone())
+            .unwrap_or_default();
+        t.row(&[
+            tp.to_string(),
+            cp.to_string(),
+            format!("{:.1}", memory::gb(peak)),
+            worst,
+            if fits { "yes" } else { "no (OOM)" }.to_string(),
+        ]);
+        rows.push((tp, cp, peak, fits));
+    }
+    (t, rows)
+}
+
 /// Autotuner vs the fixed-policy planners at a device budget: each
 /// baseline at its default split, then the searched best. The tuned row
 /// must never lose to a baseline on iteration time — the tuner's space is
@@ -588,7 +657,7 @@ pub fn tuner_vs_baselines(
             devices,
             budget
         ),
-        &["config", "iteration (ms)", "tput/GPU", "GPUs"],
+        &["config", "iteration (ms)", "tput/GPU", "GPUs", "peak GB/GPU"],
     );
     let mut rows = Vec::new();
     // Baselines that would exceed the budget at tp=cp=2 are skipped (the
@@ -612,6 +681,7 @@ pub fn tuner_vs_baselines(
             format!("{:.1}", m.iteration_ms),
             format!("{:.3}", m.throughput_per_gpu),
             plan.n_gpus.to_string(),
+            format!("{:.1}", memory::gb(plan.peak_device_bytes())),
         ]);
         rows.push((strategy.name().to_string(), m.iteration_ms));
     }
@@ -620,17 +690,20 @@ pub fn tuner_vs_baselines(
     req.budget = budget;
     match tune(&req) {
         Ok(out) => {
+            let best = out.entry.best();
             t.row(&[
-                format!("tuned: {}", out.entry.candidate.label()),
-                format!("{:.1}", out.entry.iteration_ms),
-                format!("{:.3}", out.entry.throughput_per_gpu),
-                out.entry.n_gpus.to_string(),
+                format!("tuned: {}", best.candidate.label()),
+                format!("{:.1}", best.iteration_ms),
+                format!("{:.3}", best.throughput_per_gpu),
+                best.n_gpus.to_string(),
+                format!("{:.1}", memory::gb(best.peak_mem_bytes)),
             ]);
-            rows.push(("tuned".to_string(), out.entry.iteration_ms));
+            rows.push(("tuned".to_string(), best.iteration_ms));
         }
         Err(e) => {
             t.row(&[
                 format!("tuned: infeasible ({e})"),
+                "-".to_string(),
                 "-".to_string(),
                 "-".to_string(),
                 "-".to_string(),
@@ -771,6 +844,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn appendix_d_oom_claim_reproduced() {
+        let (_, rows) = memory_feasibility();
+        let fits = |tp: usize, cp: usize| {
+            rows.iter()
+                .find(|(t, c, _, _)| *t == tp && *c == cp)
+                .unwrap()
+                .3
+        };
+        assert!(!fits(4, 1), "LLM-L tp=4 with CP off must exceed 40 GB");
+        assert!(fits(4, 2), "LLM-L tp=4 cp=2 must fit");
+        assert!(
+            !fits(2, 1) && !fits(2, 2),
+            "tp=2 must exceed either way (why Table 9 pins tp=4)"
+        );
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //!   solver for small instances (the ILP of §4.3.2).
 //! * [`cost`] — the analytic execution-time model (flops-derived, frozen
 //!   rule backward times) calibrated against the paper's Figure 3b.
+//! * [`memory`] — the analytic per-device memory model (Appendix D):
+//!   frozen-aware parameter/gradient/optimizer bytes, TP/CP-sharded
+//!   activation footprints under the 1F1B warm-up window, and the
+//!   capacity checks that prune OOM-infeasible plans from the tuner's
+//!   search space.
 //! * [`sim`] — a discrete-event cluster simulator that replays pipeline
 //!   schedules to produce the paper's tables and figures.
 //! * [`runtime`] — PJRT execution of the AOT artifacts emitted by
@@ -38,6 +43,7 @@ pub mod model;
 pub mod bam;
 pub mod cp;
 pub mod cost;
+pub mod memory;
 pub mod modality;
 pub mod pipeline;
 pub mod sim;

@@ -5,6 +5,7 @@
 //! cornstarch train [opts]               train a model over the artifacts
 //! cornstarch plan <mllm> [opts]         print a parallelization plan
 //! cornstarch tune <mllm> [opts]         autotune the fastest plan
+//! cornstarch memory <mllm> [opts]       per-stage memory model verdict
 //! cornstarch auto <mllm> [--groups N]   Algorithm 1 frontier
 //! cornstarch attn-check [--artifact A]  PJRT cross-check of the CP model
 //! cornstarch list-models                artifacts available to `train`
@@ -17,6 +18,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use cornstarch::coordinator::{self, TrainOpts};
 use cornstarch::cost::Device;
+use cornstarch::memory;
 use cornstarch::modality::{
     planner, MultimodalModule, MultimodalParallelSpec, Plan, Strategy,
 };
@@ -69,7 +71,7 @@ fn run(args: &[String]) -> Result<()> {
                     devices,
                     if outcome.cache_hit { "cache hit" } else { "searched" }
                 );
-                println!("  {}", outcome.entry.candidate.label());
+                println!("  {}", outcome.entry.best().candidate.label());
                 print_plan(&plan);
                 return Ok(());
             }
@@ -120,10 +122,12 @@ fn run(args: &[String]) -> Result<()> {
             if has_flag(rest, "--sweep-policies") {
                 req.space.frozen_choices = FrozenSetting::ALL.to_vec();
             }
+            let top = flag_num(rest, "--top")?.unwrap_or(1).max(1);
+            req.top = req.top.max(top);
             let t0 = std::time::Instant::now();
             let out = tune(&req)?;
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-            let e = &out.entry;
+            let e = out.entry.best();
             println!(
                 "{} on {} GPUs — objective {}",
                 spec.name(),
@@ -144,11 +148,68 @@ fn run(args: &[String]) -> Result<()> {
             }
             println!("  best: {}", e.candidate.label());
             println!(
-                "  iteration {:.1} ms | {:.3} input/s/GPU | {} GPUs | cp dist: {}",
-                e.iteration_ms, e.throughput_per_gpu, e.n_gpus, e.cp_algorithm
+                "  iteration {:.1} ms | {:.3} input/s/GPU | {} GPUs | \
+                 peak {:.1} GB/GPU | cp dist: {}",
+                e.iteration_ms,
+                e.throughput_per_gpu,
+                e.n_gpus,
+                memory::gb(e.peak_mem_bytes),
+                e.cp_algorithm
             );
+            if top > 1 {
+                println!("  frontier (top {}):", top.min(out.entry.frontier.len()));
+                for (i, p) in
+                    out.entry.frontier.iter().take(top).enumerate()
+                {
+                    println!(
+                        "    #{}: {:.1} ms | {:.3} in/s/GPU | {} GPUs | \
+                         peak {:.1} GB | {}",
+                        i + 1,
+                        p.iteration_ms,
+                        p.throughput_per_gpu,
+                        p.n_gpus,
+                        memory::gb(p.peak_mem_bytes),
+                        p.candidate.label()
+                    );
+                }
+            }
             let plan = out.instantiate(&spec, Device::a40());
             print_plan(&plan);
+        }
+        "memory" => {
+            let spec = parse_mllm(
+                rest.first().map(|s| s.as_str()).unwrap_or("VLM-L"),
+                rest,
+            )?;
+            let strategy = match flag(rest, "--strategy").as_deref() {
+                None => Strategy::Cornstarch,
+                Some(s) => Strategy::from_key(s)
+                    .ok_or_else(|| anyhow!("unknown strategy {s}"))?,
+            };
+            let llm_pp = flag_num(rest, "--llm-pp")?.unwrap_or(4);
+            let enc_pp = flag_num(rest, "--enc-pp")?.unwrap_or(1);
+            let microbatches =
+                flag_num(rest, "--microbatches")?.unwrap_or(24);
+            let budget = flag_num(rest, "--budget-gb")?
+                .map(|g| g as u64 * 1_000_000_000)
+                .unwrap_or(memory::A40_BUDGET_BYTES);
+            let plan = planner::plan_uniform(
+                strategy,
+                &spec,
+                enc_pp,
+                llm_pp,
+                flag_num(rest, "--tp")?.unwrap_or(2),
+                flag_num(rest, "--cp")?.unwrap_or(2),
+                microbatches,
+                Device::a40(),
+            );
+            println!(
+                "{} / {} — {} microbatches",
+                spec.name(),
+                strategy.name(),
+                microbatches
+            );
+            print_memory(&plan, budget);
         }
         "auto" => {
             let spec = parse_mllm(
@@ -206,6 +267,38 @@ fn print_plan(plan: &Plan) {
         plan.n_gpus,
         m.bubble_ratio * 100.0
     );
+    println!(
+        "  peak memory {:.1} GB/GPU (modeled)",
+        memory::gb(plan.peak_device_bytes())
+    );
+}
+
+fn print_memory(plan: &Plan, budget_bytes: u64) {
+    println!("  stages (per-GPU bytes from the memory model):");
+    for (name, sm) in plan.stage_names.iter().zip(&plan.stage_mem) {
+        println!(
+            "    {:<16} params {:>6.2} GB  grads {:>6.2} GB  optim \
+             {:>6.2} GB  act {:>6.2} GB/mb x{:<2}  peak {:>6.2} GB",
+            name,
+            memory::gb(sm.param_bytes),
+            memory::gb(sm.grad_bytes),
+            memory::gb(sm.optim_bytes),
+            memory::gb(sm.act_bytes_per_mb),
+            sm.in_flight,
+            memory::gb(sm.peak_bytes())
+        );
+    }
+    let peak = plan.peak_device_bytes();
+    match memory::check(plan, budget_bytes) {
+        Ok(()) => println!(
+            "  peak {:.2} GB/GPU — fits the {:.0} GB budget \
+             ({:.1} GB headroom)",
+            memory::gb(peak),
+            memory::gb(budget_bytes),
+            memory::gb(budget_bytes - peak)
+        ),
+        Err(e) => println!("  OOM: {e}"),
+    }
 }
 
 fn print_help() {
@@ -220,7 +313,9 @@ fn print_help() {
          [--devices N] [--cache P]      (tuned strategy only)\n  \
          tune <MLLM> [--devices N] [--budget K] [--cache P] [--threads N]\n        \
          [--objective makespan|tput-per-gpu] [--policy paper|all|frozen]\n        \
-         [--sweep-policies]\n  \
+         [--sweep-policies] [--top N]   (top-N frontier from one search)\n  \
+         memory <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
+         [--microbatches N] [--budget-gb G]\n  \
          auto <MLLM> [--groups N]\n  \
          attn-check [--artifact attn512] [--repeats N]\n  \
          list-models"

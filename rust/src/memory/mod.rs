@@ -1,0 +1,399 @@
+//! Frozen-aware, sharding-aware per-device memory accounting — the
+//! capacity side of §4.2 and Appendix D.
+//!
+//! The time model ([`crate::cost`]) decides how *fast* a plan is; this
+//! module decides whether a plan **fits** at all. For every pipeline
+//! stage it estimates peak per-GPU bytes as
+//!
+//! ```text
+//! peak = params + grads + optimizer states      (static; frozen ⇒ weights
+//!        ---------------------------------       only, all ÷ TP degree)
+//!      + act_per_microbatch × in_flight          (1F1B warm-up window:
+//!                                                 in_flight = min(m, depth
+//!                                                 to sink), tokens ÷ CP)
+//! ```
+//!
+//! Consumers:
+//!
+//! * [`crate::modality::planner`] fills [`Plan::stage_mem`] for every
+//!   plan it builds, so every simulated configuration carries its memory
+//!   verdict;
+//! * [`crate::tuner::space::enumerate`] rejects candidates whose modeled
+//!   peak exceeds the device budget *before* they are ever simulated —
+//!   what makes the joint microbatch sweep meaningful;
+//! * `cornstarch memory <mllm>` prints the per-stage breakdown, and
+//!   `reproduce memory` regenerates the Appendix D feasibility verdicts
+//!   (LLM-L at tp=4: CP off exceeds the 40 GB A40 budget, cp=2 fits).
+//!
+//! [`Plan::stage_mem`]: crate::modality::planner::Plan
+
+pub mod model;
+
+pub use model::{
+    body_layer_memory, layer_act_bytes, layer_param_count,
+    projector_memory, LayerMemory, ADAMW_STATE_BYTES, GRAD_BYTES,
+    PARAM_BYTES,
+};
+
+use anyhow::{bail, Result};
+
+use crate::modality::planner::Plan;
+use crate::modality::{ModalityModule, MultimodalModule, ParallelSpec};
+use crate::model::ModuleGeom;
+use crate::pipeline::StageGraph;
+
+/// The A40 testbed's usable per-GPU budget (Appendix D): 48 GB HBM minus
+/// the runtime/fragmentation reserve the paper plans against.
+pub const A40_BUDGET_BYTES: u64 = 40_000_000_000;
+
+/// Bytes → decimal gigabytes, for tables and error messages.
+pub fn gb(bytes: u64) -> f64 {
+    bytes as f64 / 1e9
+}
+
+/// Aggregate memory of one pipeline stage on ONE of its GPUs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageMemory {
+    pub param_bytes: u64,
+    pub grad_bytes: u64,
+    pub optim_bytes: u64,
+    /// Activation bytes per in-flight microbatch.
+    pub act_bytes_per_mb: u64,
+    /// In-flight microbatches under 1F1B (`min(m, depth-to-sink)`); set
+    /// by [`assign_in_flight`] once the stage DAG is known.
+    pub in_flight: usize,
+}
+
+impl StageMemory {
+    pub fn add_layer(&mut self, l: &LayerMemory) {
+        self.param_bytes += l.param_bytes;
+        self.grad_bytes += l.grad_bytes;
+        self.optim_bytes += l.optim_bytes;
+        self.act_bytes_per_mb += l.act_bytes;
+    }
+
+    /// Accumulate another stage's whole footprint (colocated stage
+    /// fusion, encoders-replicated redundancy).
+    pub fn absorb(&mut self, o: &StageMemory) {
+        self.param_bytes += o.param_bytes;
+        self.grad_bytes += o.grad_bytes;
+        self.optim_bytes += o.optim_bytes;
+        self.act_bytes_per_mb += o.act_bytes_per_mb;
+    }
+
+    /// Bytes resident regardless of schedule position.
+    pub fn static_bytes(&self) -> u64 {
+        self.param_bytes + self.grad_bytes + self.optim_bytes
+    }
+
+    /// Peak activation bytes (warm-up window full).
+    pub fn activation_bytes(&self) -> u64 {
+        self.act_bytes_per_mb * self.in_flight as u64
+    }
+
+    /// Peak per-GPU bytes of this stage.
+    pub fn peak_bytes(&self) -> u64 {
+        self.static_bytes() + self.activation_bytes()
+    }
+}
+
+/// Per-layer memory rows of one encoder: body layers then the trailing
+/// projector pseudo-layer — index-aligned with
+/// [`crate::modality::planner::encoder_layer_costs`], so the same
+/// partition bounds can sum both time and memory.
+pub fn encoder_layer_memory(
+    e: &ModalityModule,
+    llm_geom: &ModuleGeom,
+    ps: &ParallelSpec,
+    microbatch_size: usize,
+) -> Vec<LayerMemory> {
+    let mut out: Vec<LayerMemory> = (0..e.geom.n_layers)
+        .map(|_| {
+            body_layer_memory(
+                &e.geom,
+                e.tokens,
+                ps.tp,
+                ps.cp,
+                microbatch_size,
+                !e.frozen,
+            )
+        })
+        .collect();
+    out.push(projector_memory(
+        e.geom.hidden,
+        llm_geom.hidden,
+        e.tokens,
+        ps.tp,
+        ps.cp,
+        microbatch_size,
+        e.projector_trainable,
+    ));
+    out
+}
+
+/// Per-layer memory rows of the LLM — aligned with
+/// [`crate::modality::planner::llm_layer_costs`].
+pub fn llm_layer_memory(
+    mm: &MultimodalModule,
+    ps: &ParallelSpec,
+    microbatch_size: usize,
+) -> Vec<LayerMemory> {
+    (0..mm.llm.geom.n_layers)
+        .map(|_| {
+            body_layer_memory(
+                &mm.llm.geom,
+                mm.llm.tokens,
+                ps.tp,
+                ps.cp,
+                microbatch_size,
+                !mm.llm.frozen,
+            )
+        })
+        .collect()
+}
+
+/// Sum per-layer rows into per-stage footprints for the partition
+/// `bounds` (same convention as [`crate::pipeline::stage_sums`]).
+/// `in_flight` is left 0 — call [`assign_in_flight`] once the DAG exists.
+pub fn stage_sums(
+    mems: &[LayerMemory],
+    bounds: &[usize],
+) -> Vec<StageMemory> {
+    bounds
+        .windows(2)
+        .map(|w| {
+            let mut s = StageMemory::default();
+            for l in &mems[w[0]..w[1]] {
+                s.add_layer(l);
+            }
+            s
+        })
+        .collect()
+}
+
+/// 1F1B warm-up accounting: stage `s` admits `min(m, depth_to_sink(s))`
+/// microbatches before its first backward frees an activation set —
+/// exactly the schedule's activation token
+/// ([`crate::pipeline::onef1b_tasks`] gates `Fwd(s, m)` on
+/// `Bwd(s, m - depth_to_sink(s))`).
+pub fn assign_in_flight(
+    mem: &mut [StageMemory],
+    graph: &StageGraph,
+    microbatches: usize,
+) {
+    debug_assert_eq!(mem.len(), graph.nodes.len());
+    for (sm, depth) in mem.iter_mut().zip(graph.depth_to_sink()) {
+        sm.in_flight = microbatches.min(depth);
+    }
+}
+
+/// Peak per-GPU bytes across a set of stages (each stage is one `tp×cp`
+/// device group; all figures are already per GPU).
+pub fn peak_device_bytes(stage_mem: &[StageMemory]) -> u64 {
+    stage_mem.iter().map(|s| s.peak_bytes()).max().unwrap_or(0)
+}
+
+/// Hold a plan to a per-GPU budget; the error names the worst stage and
+/// its breakdown, so a failed check reads like an OOM report.
+pub fn check(plan: &Plan, budget_bytes: u64) -> Result<()> {
+    let Some((idx, worst)) = plan
+        .stage_mem
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, s)| s.peak_bytes())
+    else {
+        return Ok(());
+    };
+    if worst.peak_bytes() > budget_bytes {
+        let name = plan
+            .stage_names
+            .get(idx)
+            .map(String::as_str)
+            .unwrap_or("?");
+        bail!(
+            "stage {idx} ({name}) needs {:.2} GB ({:.2} GB static + \
+             {:.2} GB/microbatch × {} in flight) > {:.2} GB budget",
+            gb(worst.peak_bytes()),
+            gb(worst.static_bytes()),
+            gb(worst.act_bytes_per_mb),
+            worst.in_flight,
+            gb(budget_bytes)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Device;
+    use crate::modality::{planner, MultimodalParallelSpec, Strategy};
+    use crate::model::{MllmSpec, Size};
+    use crate::util::check::check as prop_check;
+
+    fn plan_for(
+        spec: &MllmSpec,
+        strategy: Strategy,
+        enc_pp: usize,
+        llm_pp: usize,
+        tp: usize,
+        cp: usize,
+        m: usize,
+    ) -> Plan {
+        planner::plan_uniform(
+            strategy,
+            spec,
+            enc_pp,
+            llm_pp,
+            tp,
+            cp,
+            m,
+            Device::a40(),
+        )
+    }
+
+    #[test]
+    fn frozen_recipe_holds_weights_but_no_optimizer_for_bodies() {
+        // Paper recipe: encoder + LLM frozen, projector trainable. Only
+        // the projector may contribute grads/optimizer bytes anywhere.
+        let p = plan_for(
+            &MllmSpec::vlm(Size::M, Size::M),
+            Strategy::Cornstarch,
+            1,
+            3,
+            2,
+            2,
+            24,
+        );
+        for sm in &p.stage_mem {
+            assert!(sm.param_bytes > 0);
+            // grads/optim only ever come from the tiny projector
+            assert!(sm.grad_bytes + sm.optim_bytes < sm.param_bytes / 10);
+        }
+    }
+
+    #[test]
+    fn stage_memory_is_aligned_with_the_graph_and_warmup() {
+        let p = plan_for(
+            &MllmSpec::valm(Size::M, Size::M, Size::M),
+            Strategy::Cornstarch,
+            1,
+            4,
+            2,
+            2,
+            24,
+        );
+        assert_eq!(p.stage_mem.len(), p.graph.nodes.len());
+        for (sm, depth) in p.stage_mem.iter().zip(p.graph.depth_to_sink())
+        {
+            assert_eq!(sm.in_flight, depth.min(24));
+            assert!(sm.act_bytes_per_mb > 0);
+        }
+        // a 2-microbatch run caps every window at 2
+        let p2 = plan_for(
+            &MllmSpec::valm(Size::M, Size::M, Size::M),
+            Strategy::Cornstarch,
+            1,
+            4,
+            2,
+            2,
+            2,
+        );
+        assert!(p2.stage_mem.iter().all(|s| s.in_flight <= 2));
+        assert!(p2.peak_device_bytes() <= p.peak_device_bytes());
+    }
+
+    #[test]
+    fn replicated_pays_encoder_weights_on_every_stage() {
+        let spec = MllmSpec::vlm(Size::M, Size::L);
+        let rep =
+            plan_for(&spec, Strategy::Replicated, 0, 4, 2, 2, 24);
+        let cs = plan_for(&spec, Strategy::Cornstarch, 1, 4, 2, 2, 24);
+        // cornstarch's LLM stages hold a quarter of the LLM each; every
+        // replicated stage additionally holds the WHOLE encoder.
+        let cs_llm_params = cs.stage_mem.last().unwrap().param_bytes;
+        for sm in &rep.stage_mem {
+            assert!(
+                sm.param_bytes > cs_llm_params,
+                "replicated stage {} vs cornstarch llm stage {}",
+                sm.param_bytes,
+                cs_llm_params
+            );
+        }
+    }
+
+    #[test]
+    fn check_reports_the_worst_stage() {
+        let p = plan_for(
+            &MllmSpec::vlm(Size::M, Size::M),
+            Strategy::Cornstarch,
+            1,
+            3,
+            2,
+            2,
+            24,
+        );
+        assert!(check(&p, u64::MAX).is_ok());
+        let err = check(&p, 1).unwrap_err().to_string();
+        assert!(err.contains("GB budget"), "{err}");
+        assert!(err.contains("in flight"), "{err}");
+    }
+
+    #[test]
+    fn trainable_policy_costs_more_than_frozen() {
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let mm_frozen = MultimodalModule::from_spec(&spec);
+        let mut mm_train = mm_frozen.clone();
+        mm_train.llm.frozen = false;
+        for e in &mut mm_train.encoders {
+            e.frozen = false;
+        }
+        let ps = MultimodalParallelSpec::paper_default(&[1], 3, 2, 2);
+        let d = Device::a40();
+        let frozen =
+            planner::plan(Strategy::Cornstarch, &mm_frozen, &ps, d);
+        let train = planner::plan(Strategy::Cornstarch, &mm_train, &ps, d);
+        assert!(
+            train.peak_device_bytes() > frozen.peak_device_bytes(),
+            "full fine-tuning must need more memory"
+        );
+    }
+
+    #[test]
+    fn peak_is_monotone_in_microbatches_and_antitone_in_tp_cp() {
+        prop_check("memory monotonicity", 30, |g| {
+            let spec = match g.usize(0, 3) {
+                0 => MllmSpec::vlm(Size::M, Size::M),
+                1 => MllmSpec::alm(Size::M, Size::L),
+                _ => MllmSpec::valm(Size::S, Size::M, Size::M),
+            };
+            let enc_pp = g.usize(1, 4);
+            let llm_pp = g.usize(1, 5);
+            let tp = 1 << g.usize(0, 3);
+            let cp = 1 << g.usize(0, 2);
+            let m = g.usize(1, 33);
+            let peak = |tp: usize, cp: usize, m: usize| {
+                plan_for(
+                    &spec,
+                    Strategy::Cornstarch,
+                    enc_pp,
+                    llm_pp,
+                    tp,
+                    cp,
+                    m,
+                )
+                .peak_device_bytes()
+            };
+            let base = peak(tp, cp, m);
+            assert!(peak(tp, cp, m + 1) >= base, "peak not monotone in m");
+            assert!(
+                peak(2 * tp, cp, m) <= base,
+                "peak increased with TP degree"
+            );
+            assert!(
+                peak(tp, 2 * cp, m) <= base,
+                "peak increased with CP degree"
+            );
+        });
+    }
+}

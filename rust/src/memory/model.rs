@@ -1,0 +1,224 @@
+//! Per-layer byte-count formulas — the geometry-level core of the memory
+//! model.
+//!
+//! Every figure is **per GPU**. Parameter-class bytes (weights, gradients,
+//! AdamW states) shard by TP; CP ranks replicate weights, so CP never
+//! appears in the static terms. Activation bytes shard by CP through the
+//! token dimension and only *partially* by TP: with sequence parallelism
+//! off (the paper's §6.1 setup) the residual/norm stream is replicated
+//! across TP ranks while the attention/MLP internals shard.
+//!
+//! The activation footprint follows the per-layer accounting of
+//! "Reducing Activation Recomputation in Large Transformer Models"
+//! (Korthikanti et al., 2022); see [`layer_act_bytes`].
+
+use crate::model::ModuleGeom;
+
+/// Weights are bf16 (§6.1).
+pub const PARAM_BYTES: u64 = 2;
+/// Gradients live in the parameter dtype.
+pub const GRAD_BYTES: u64 = 2;
+/// AdamW keeps 2 fp32 states (first + second moment) per trainable
+/// parameter. The fp32 master copy of full mixed-precision recipes is
+/// deliberately not counted (see DESIGN.md "what is ignored").
+pub const ADAMW_STATE_BYTES: u64 = 8;
+
+/// Activation bytes per token per hidden unit that every TP rank keeps
+/// (residual stream, layernorm inputs — unsharded without sequence
+/// parallelism).
+const ACT_REPLICATED_PER_HIDDEN: f64 = 10.0;
+/// Activation bytes per token per hidden unit inside the attention/MLP
+/// blocks, which shard by TP.
+const ACT_SHARDED_PER_HIDDEN: f64 = 24.0;
+/// Score/softmax/dropout working-set bytes per (query, key) pair per
+/// head; shards by TP's head split.
+const ACT_ATTN_PER_PAIR: f64 = 5.0;
+
+/// One layer's per-GPU memory footprint — the memory-side mirror of
+/// [`crate::pipeline::LayerCost`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayerMemory {
+    pub param_bytes: u64,
+    /// 0 for frozen layers (§4.2: no parameter gradients are produced).
+    pub grad_bytes: u64,
+    /// 0 for frozen layers (no optimizer states are allocated).
+    pub optim_bytes: u64,
+    /// Resident bytes per in-flight microbatch.
+    pub act_bytes: u64,
+}
+
+impl LayerMemory {
+    /// Bytes resident regardless of schedule position.
+    pub fn static_bytes(&self) -> u64 {
+        self.param_bytes + self.grad_bytes + self.optim_bytes
+    }
+}
+
+/// Parameters of ONE dense transformer layer — the same `4h² + 2·h·ff`
+/// counting as [`ModuleGeom::params`], per layer.
+pub fn layer_param_count(geom: &ModuleGeom) -> u64 {
+    let h = geom.hidden as u64;
+    let f = geom.d_ff as u64;
+    4 * h * h + 2 * h * f
+}
+
+/// Activation bytes one microbatch keeps resident on one GPU for one
+/// transformer layer:
+///
+/// ```text
+/// h·t_local·(10 + 24/tp)  +  5·heads·t_local·t_full/tp
+/// ```
+///
+/// * `t_local = ceil(tokens/cp)` — CP shards the token dimension;
+/// * the residual/norm stream (`10·h` bytes/token) is replicated across
+///   TP ranks, the attention/MLP internals (`24·h`) shard by TP;
+/// * the score/softmax/dropout working set (`5` bytes per (query, key)
+///   pair per head) shards by TP's head split; its key side spans the
+///   full sequence — CP ranks stream K/V but keep their local score rows
+///   resident for backward.
+///
+/// Gradient checkpointing is charged on the *time* side only
+/// ([`crate::cost::GradFlow::bwd_ms`]); its memory saving is deliberately
+/// not modeled — the conservative choice that reproduces Appendix D's
+/// OOM verdicts (see DESIGN.md).
+pub fn layer_act_bytes(
+    geom: &ModuleGeom,
+    tokens: usize,
+    tp: usize,
+    cp: usize,
+    microbatch_size: usize,
+) -> u64 {
+    let t_local = tokens.div_ceil(cp) as f64;
+    let h = geom.hidden as f64;
+    let heads = geom.n_heads as f64;
+    let tp_f = tp as f64;
+    let linear = h
+        * t_local
+        * (ACT_REPLICATED_PER_HIDDEN + ACT_SHARDED_PER_HIDDEN / tp_f);
+    let attn = ACT_ATTN_PER_PAIR * heads * t_local * tokens as f64 / tp_f;
+    ((linear + attn) * microbatch_size as f64).round() as u64
+}
+
+/// Memory of one transformer body layer on one GPU.
+pub fn body_layer_memory(
+    geom: &ModuleGeom,
+    tokens: usize,
+    tp: usize,
+    cp: usize,
+    microbatch_size: usize,
+    trainable: bool,
+) -> LayerMemory {
+    let p = layer_param_count(geom).div_ceil(tp as u64);
+    LayerMemory {
+        param_bytes: p * PARAM_BYTES,
+        grad_bytes: if trainable { p * GRAD_BYTES } else { 0 },
+        optim_bytes: if trainable { p * ADAMW_STATE_BYTES } else { 0 },
+        act_bytes: layer_act_bytes(geom, tokens, tp, cp, microbatch_size),
+    }
+}
+
+/// The projector pseudo-layer (one `d_in × d_out` linear, §6.1). Its
+/// input and output activations sit on the boundary between modules and
+/// are kept unsharded; its weight shards by TP like any linear.
+pub fn projector_memory(
+    d_in: usize,
+    d_out: usize,
+    tokens: usize,
+    tp: usize,
+    cp: usize,
+    microbatch_size: usize,
+    trainable: bool,
+) -> LayerMemory {
+    let p = (d_in as u64 * d_out as u64).div_ceil(tp as u64);
+    let t_local = tokens.div_ceil(cp) as u64;
+    LayerMemory {
+        param_bytes: p * PARAM_BYTES,
+        grad_bytes: if trainable { p * GRAD_BYTES } else { 0 },
+        optim_bytes: if trainable { p * ADAMW_STATE_BYTES } else { 0 },
+        act_bytes: t_local
+            * (d_in + d_out) as u64
+            * PARAM_BYTES
+            * microbatch_size as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{llama, Size};
+
+    #[test]
+    fn llama_8b_weights_are_params_times_two_bytes() {
+        // Table 1: Llama-3.1-M (≈8b) is 32 layers of
+        // 4·4096² + 2·4096·16384 = 201,326,592 params; bf16 weights are
+        // 2 bytes each.
+        let g = llama(Size::M);
+        assert_eq!(layer_param_count(&g), 201_326_592);
+        let l = body_layer_memory(&g, 2024, 1, 1, 1, false);
+        assert_eq!(l.param_bytes, 2 * 201_326_592);
+        // whole-module weights equal ModuleGeom::params × 2 bytes
+        assert_eq!(32 * l.param_bytes, 2 * g.params());
+    }
+
+    #[test]
+    fn frozen_layer_is_weights_only() {
+        let g = llama(Size::M);
+        let l = body_layer_memory(&g, 1000, 2, 1, 1, false);
+        assert_eq!(l.grad_bytes, 0);
+        assert_eq!(l.optim_bytes, 0);
+        assert_eq!(l.static_bytes(), l.param_bytes);
+    }
+
+    #[test]
+    fn trainable_layer_pays_grads_and_two_adamw_states() {
+        let g = llama(Size::M);
+        let l = body_layer_memory(&g, 1000, 2, 1, 1, true);
+        let p = layer_param_count(&g).div_ceil(2);
+        assert_eq!(l.grad_bytes, GRAD_BYTES * p);
+        // AdamW: m + v in fp32 = 8 bytes per trainable param.
+        assert_eq!(l.optim_bytes, 8 * p);
+        assert_eq!(l.optim_bytes, ADAMW_STATE_BYTES * p);
+    }
+
+    #[test]
+    fn tp_shards_weights_cp_does_not() {
+        let g = llama(Size::L);
+        let t1 = body_layer_memory(&g, 2024, 1, 1, 1, false);
+        let t4 = body_layer_memory(&g, 2024, 4, 1, 1, false);
+        assert_eq!(t1.param_bytes, 4 * t4.param_bytes);
+        let c2 = body_layer_memory(&g, 2024, 1, 2, 1, false);
+        assert_eq!(t1.param_bytes, c2.param_bytes);
+        // ...while CP halves the activation footprint's token dimension.
+        assert!(c2.act_bytes < t1.act_bytes);
+    }
+
+    #[test]
+    fn tp_shards_activations_only_partially() {
+        // Doubling TP must shrink activations by LESS than 2x: the
+        // residual stream is replicated (sequence parallelism off).
+        let g = llama(Size::M);
+        let t1 = body_layer_memory(&g, 2024, 1, 1, 1, false);
+        let t2 = body_layer_memory(&g, 2024, 2, 1, 1, false);
+        assert!(t2.act_bytes < t1.act_bytes);
+        assert!(2 * t2.act_bytes > t1.act_bytes);
+    }
+
+    #[test]
+    fn projector_is_small_and_follows_trainability() {
+        let frozen = projector_memory(1024, 4096, 577, 2, 1, 1, false);
+        let train = projector_memory(1024, 4096, 577, 2, 1, 1, true);
+        assert_eq!(frozen.param_bytes, train.param_bytes);
+        assert_eq!(frozen.grad_bytes, 0);
+        assert!(train.grad_bytes > 0 && train.optim_bytes > 0);
+        // a single linear is megabytes, not gigabytes
+        assert!(train.static_bytes() < 100_000_000);
+    }
+
+    #[test]
+    fn act_bytes_scale_with_microbatch_size() {
+        let g = llama(Size::S);
+        let a1 = layer_act_bytes(&g, 1500, 2, 2, 1);
+        let a3 = layer_act_bytes(&g, 1500, 2, 2, 3);
+        assert_eq!(a3, 3 * a1);
+    }
+}

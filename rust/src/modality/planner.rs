@@ -18,6 +18,7 @@
 //! the paper's Figure 7b imbalance).
 
 use crate::cost::{projector_fwd_ms, Device, GradFlow};
+use crate::memory::{self, StageMemory};
 use crate::model::ModuleGeom;
 use crate::pipeline::{
     onef1b_tasks, partition_min_max, stage_sums, LayerCost, StageCost,
@@ -77,6 +78,9 @@ pub struct Plan {
     pub graph: StageGraph,
     /// Stage names parallel to `graph.nodes` (`enc:vision[0]`, `llm[2]`…).
     pub stage_names: Vec<String>,
+    /// Per-stage per-GPU memory accounting ([`crate::memory`]), parallel
+    /// to `graph.nodes`.
+    pub stage_mem: Vec<StageMemory>,
     pub n_gpus: usize,
     pub num_microbatches: usize,
     pub microbatch_size: usize,
@@ -127,6 +131,13 @@ impl Plan {
             hi = hi.max(t);
         }
         (lo, hi)
+    }
+
+    /// Modeled peak per-GPU memory over all stages (bytes) — the quantity
+    /// Appendix D's feasibility verdicts and the tuner's capacity filter
+    /// compare against the device budget.
+    pub fn peak_device_bytes(&self) -> u64 {
+        memory::peak_device_bytes(&self.stage_mem)
     }
 
     /// Mean per-stage fwd and bwd of stages whose name starts with `prefix`
@@ -194,12 +205,14 @@ pub fn llm_layer_costs(
 /// Partition `layers` into `pp` stages. Frozen-aware balances `fwd+bwd`
 /// (with recompute when checkpointing); unaware balances fwd only — the
 /// classic "bwd is 2×fwd" assumption makes both orderings identical.
+/// Returns the boundaries too, so callers can sum per-stage *memory*
+/// over the same split.
 fn partition(
     layers: &[LayerCost],
     pp: usize,
     frozen_aware: bool,
     grad_ckpt: bool,
-) -> Vec<StageCost> {
+) -> (Vec<usize>, Vec<StageCost>) {
     let costs: Vec<f64> = if frozen_aware {
         layers.iter().map(|l| l.fwd_ms + l.bwd_ms(grad_ckpt)).collect()
     } else {
@@ -207,7 +220,8 @@ fn partition(
     };
     let bounds = partition_min_max(&costs, pp);
     // Execution reality always applies the frozen rule.
-    stage_sums(layers, &bounds, grad_ckpt)
+    let sums = stage_sums(layers, &bounds, grad_ckpt);
+    (bounds, sums)
 }
 
 /// Plan an MLLM under `strategy`. GPU accounting: every pipeline stage is
@@ -223,6 +237,34 @@ pub fn plan(
         Strategy::Colocated => plan_colocated(mm, spec, device),
         Strategy::Replicated => plan_replicated(mm, spec, device),
     }
+}
+
+/// Plan a Table-1 composition with uniform per-encoder stage counts and
+/// the §6.1 spec defaults — the single construction path behind every
+/// memory-verdict consumer (`configs::validate_llm_l_memory`,
+/// `reproduce memory`, the `cornstarch memory` CLI), so their verdicts
+/// can never diverge.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_uniform(
+    strategy: Strategy,
+    spec: &crate::model::MllmSpec,
+    enc_pp: usize,
+    llm_pp: usize,
+    tp: usize,
+    cp: usize,
+    num_microbatches: usize,
+    device: Device,
+) -> Plan {
+    let mm = MultimodalModule::from_spec(spec);
+    let enc_pps = if strategy == Strategy::Replicated {
+        Vec::new()
+    } else {
+        vec![enc_pp; mm.encoders.len()]
+    };
+    let mut ps =
+        MultimodalParallelSpec::paper_default(&enc_pps, llm_pp, tp, cp);
+    ps.num_microbatches = num_microbatches;
+    plan(strategy, &mm, &ps, device)
 }
 
 /// Joint-chain partitioning for single-chain MLLMs — the §4.2 / Figure 7
@@ -244,17 +286,31 @@ pub fn plan_chain(
 ) -> Plan {
     let gps = spec.llm_spec.gpus_per_stage();
     // Concatenate all modules' layers in forward order; remember which
-    // module each layer belongs to for stage naming.
+    // module each layer belongs to for stage naming. Memory rows stay
+    // index-aligned with the cost rows.
     let mut layers: Vec<LayerCost> = Vec::new();
+    let mut mems: Vec<memory::LayerMemory> = Vec::new();
     let mut owner: Vec<String> = Vec::new();
     for e in &mm.encoders {
         let ls = encoder_layer_costs(e, &mm.llm.geom, device, gps);
         owner.extend(std::iter::repeat_n(format!("enc:{}", e.name), ls.len()));
         layers.extend(ls);
+        mems.extend(memory::encoder_layer_memory(
+            e,
+            &mm.llm.geom,
+            &spec.llm_spec,
+            mm.microbatch_size,
+        ));
     }
     let ls = llm_layer_costs(mm, device, gps);
     owner.extend(std::iter::repeat_n("llm".to_string(), ls.len()));
     layers.extend(ls);
+    mems.extend(memory::llm_layer_memory(
+        mm,
+        &spec.llm_spec,
+        mm.microbatch_size,
+    ));
+    debug_assert_eq!(layers.len(), mems.len());
 
     let weights: Vec<f64> = if frozen_aware {
         layers
@@ -266,8 +322,10 @@ pub fn plan_chain(
     };
     let bounds = partition_min_max(&weights, total_stages);
     let costs = stage_sums(&layers, &bounds, spec.grad_ckpt);
+    let mut stage_mem = memory::stage_sums(&mems, &bounds);
     let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
     graph.add_chain("stage", &costs, 0, &[]);
+    memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     // A stage is named for the module owning its first layer.
     let names: Vec<String> = bounds
         .windows(2)
@@ -278,6 +336,7 @@ pub fn plan_chain(
         strategy: Strategy::Cornstarch,
         graph,
         stage_names: names,
+        stage_mem,
         n_gpus: total_stages * gps,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -293,13 +352,21 @@ fn plan_modality_parallel(
     let aware = true; // Cornstarch always partitions frozen-aware
     let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
     let mut names = Vec::new();
+    let mut stage_mem: Vec<StageMemory> = Vec::new();
     let mut dev = 0usize;
     let mut enc_tails = Vec::new();
     let mut n_gpus = 0usize;
     for (e, ps) in mm.encoders.iter().zip(&spec.encoder_specs) {
         let layers =
             encoder_layer_costs(e, &mm.llm.geom, device, ps.gpus_per_stage());
-        let costs = partition(&layers, ps.pp, aware, spec.grad_ckpt);
+        let (bounds, costs) = partition(&layers, ps.pp, aware, spec.grad_ckpt);
+        let mems = memory::encoder_layer_memory(
+            e,
+            &mm.llm.geom,
+            ps,
+            mm.microbatch_size,
+        );
+        stage_mem.extend(memory::stage_sums(&mems, &bounds));
         let ids = graph.add_chain(&format!("enc:{}", e.name), &costs, dev, &[]);
         for i in 0..costs.len() {
             names.push(format!("enc:{}[{}]", e.name, i));
@@ -310,16 +377,22 @@ fn plan_modality_parallel(
     }
     let lp = &spec.llm_spec;
     let layers = llm_layer_costs(mm, device, lp.gpus_per_stage());
-    let costs = partition(&layers, lp.pp, aware, spec.grad_ckpt);
+    let (bounds, costs) = partition(&layers, lp.pp, aware, spec.grad_ckpt);
+    stage_mem.extend(memory::stage_sums(
+        &memory::llm_layer_memory(mm, lp, mm.microbatch_size),
+        &bounds,
+    ));
     graph.add_chain("llm", &costs, dev, &enc_tails);
     for i in 0..costs.len() {
         names.push(format!("llm[{i}]"));
     }
     n_gpus += lp.gpus();
+    memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     Plan {
         strategy: Strategy::Cornstarch,
         graph,
         stage_names: names,
+        stage_mem,
         n_gpus,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -346,16 +419,29 @@ fn plan_colocated(
     let gps = spec.llm_spec.gpus_per_stage();
     let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
     let mut names = Vec::new();
+    let mut stage_mem: Vec<StageMemory> = Vec::new();
     let mut enc_tail = Vec::new();
     let mut dev = 0usize;
     if enc_pp > 0 && !mm.encoders.is_empty() {
         // Partition each encoder into enc_pp stages by fwd time, then fuse
         // stage-wise: colocated stage i runs every encoder's stage i
-        // sequentially (Figure 1c).
+        // sequentially (Figure 1c) — and holds every encoder's slice.
         let mut fused = vec![StageCost { fwd_ms: 0.0, bwd_ms: 0.0 }; enc_pp];
+        let mut fused_mem = vec![StageMemory::default(); enc_pp];
         for e in &mm.encoders {
             let layers = encoder_layer_costs(e, &mm.llm.geom, device, gps);
-            let costs = partition(&layers, enc_pp, false, spec.grad_ckpt);
+            let (bounds, costs) = partition(&layers, enc_pp, false, spec.grad_ckpt);
+            let mems = memory::encoder_layer_memory(
+                e,
+                &mm.llm.geom,
+                &spec.llm_spec,
+                mm.microbatch_size,
+            );
+            for (fm, m) in
+                fused_mem.iter_mut().zip(memory::stage_sums(&mems, &bounds))
+            {
+                fm.absorb(&m);
+            }
             for (f, c) in fused.iter_mut().zip(costs) {
                 f.fwd_ms += c.fwd_ms;
                 f.bwd_ms += c.bwd_ms;
@@ -365,20 +451,27 @@ fn plan_colocated(
         for i in 0..enc_pp {
             names.push(format!("enc[{i}]"));
         }
+        stage_mem.extend(fused_mem);
         enc_tail.push(*ids.last().unwrap());
         dev = enc_pp;
     }
     let layers = llm_layer_costs(mm, device, gps);
-    let costs = partition(&layers, spec.llm_spec.pp, false, spec.grad_ckpt);
+    let (bounds, costs) = partition(&layers, spec.llm_spec.pp, false, spec.grad_ckpt);
+    stage_mem.extend(memory::stage_sums(
+        &memory::llm_layer_memory(mm, &spec.llm_spec, mm.microbatch_size),
+        &bounds,
+    ));
     graph.add_chain("llm", &costs, dev, &enc_tail);
     for i in 0..costs.len() {
         names.push(format!("llm[{i}]"));
     }
+    memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     let n_gpus = (enc_pp + spec.llm_spec.pp) * gps;
     Plan {
         strategy: Strategy::Colocated,
         graph,
         stage_names: names,
+        stage_mem,
         n_gpus,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -393,29 +486,48 @@ fn plan_replicated(
     let gps = spec.llm_spec.gpus_per_stage();
     let pp = spec.llm_spec.pp;
     let layers = llm_layer_costs(mm, device, gps);
-    let mut costs = partition(&layers, pp, false, spec.grad_ckpt);
+    let (bounds, mut costs) = partition(&layers, pp, false, spec.grad_ckpt);
     // Every stage redundantly re-runs ALL encoders per microbatch
     // (Figure 1b / Figure 2a): add the full encoder fwd (+frozen-rule bwd)
-    // to every stage.
+    // to every stage — and the full encoder weights + activations to
+    // every stage's memory.
     let mut enc_fwd = 0.0;
     let mut enc_bwd = 0.0;
+    let mut enc_mem = StageMemory::default();
     for e in &mm.encoders {
         for l in encoder_layer_costs(e, &mm.llm.geom, device, gps) {
             enc_fwd += l.fwd_ms;
             enc_bwd += l.bwd_ms(spec.grad_ckpt);
+        }
+        for l in memory::encoder_layer_memory(
+            e,
+            &mm.llm.geom,
+            &spec.llm_spec,
+            mm.microbatch_size,
+        ) {
+            enc_mem.add_layer(&l);
         }
     }
     for c in &mut costs {
         c.fwd_ms += enc_fwd;
         c.bwd_ms += enc_bwd;
     }
+    let mut stage_mem = memory::stage_sums(
+        &memory::llm_layer_memory(mm, &spec.llm_spec, mm.microbatch_size),
+        &bounds,
+    );
+    for sm in &mut stage_mem {
+        sm.absorb(&enc_mem);
+    }
     let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
     graph.add_chain("llm", &costs, 0, &[]);
+    memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     let names = (0..pp).map(|i| format!("llm[{i}]")).collect();
     Plan {
         strategy: Strategy::Replicated,
         graph,
         stage_names: names,
+        stage_mem,
         n_gpus: pp * gps,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,

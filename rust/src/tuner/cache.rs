@@ -4,9 +4,12 @@
 //! workload (MLLM composition, frozen policy, microbatching) and the
 //! cluster/search bounds ([`super::space::SearchSpace::fingerprint`] plus
 //! the objective and budget) — so a cached answer is only ever returned
-//! for an identical query. The store is a single JSON file written
-//! atomically (temp file + rename); a missing or corrupt file degrades to
-//! an empty cache, never an error.
+//! for an identical query. Each entry stores the search's **top-k
+//! frontier** (best first), not just a single winner: consumers trade
+//! throughput against GPU count and memory headroom without
+//! re-searching. The store is a single JSON file written atomically
+//! (temp file + rename); a missing, corrupt, or version-skewed file
+//! degrades to an empty cache, never an error.
 
 use std::path::{Path, PathBuf};
 
@@ -17,25 +20,23 @@ use crate::util::json::Json;
 
 use super::space::{Candidate, FrozenSetting};
 
-/// One cached tuning answer.
+/// One ranked plan of a cached frontier.
 #[derive(Clone, Debug, PartialEq)]
-pub struct CacheEntry {
-    pub signature: String,
+pub struct PlanSummary {
     pub candidate: Candidate,
     pub iteration_ms: f64,
     pub throughput_per_gpu: f64,
     pub n_gpus: usize,
+    /// Modeled peak per-GPU bytes ([`crate::memory`]).
+    pub peak_mem_bytes: u64,
     /// Recommended CP token-distribution algorithm ("none" when cp = 1).
     pub cp_algorithm: String,
-    /// How many candidates the original search simulated.
-    pub evaluated: usize,
 }
 
-impl CacheEntry {
+impl PlanSummary {
     fn to_json(&self) -> Json {
         let c = &self.candidate;
         Json::obj(vec![
-            ("signature", Json::Str(self.signature.clone())),
             ("strategy", Json::Str(c.strategy.key().to_string())),
             (
                 "enc_pps",
@@ -51,12 +52,12 @@ impl CacheEntry {
             ("iteration_ms", Json::Num(self.iteration_ms)),
             ("throughput_per_gpu", Json::Num(self.throughput_per_gpu)),
             ("n_gpus", Json::Int(self.n_gpus as i64)),
+            ("peak_mem_bytes", Json::Int(self.peak_mem_bytes as i64)),
             ("cp_algorithm", Json::Str(self.cp_algorithm.clone())),
-            ("evaluated", Json::Int(self.evaluated as i64)),
         ])
     }
 
-    fn from_json(j: &Json) -> Option<CacheEntry> {
+    fn from_json(j: &Json) -> Option<PlanSummary> {
         let us = |k: &str| -> Option<usize> {
             j.get(k)?.as_i64().and_then(|v| usize::try_from(v).ok())
         };
@@ -66,8 +67,7 @@ impl CacheEntry {
             .iter()
             .map(|v| v.as_i64().and_then(|x| usize::try_from(x).ok()))
             .collect();
-        Some(CacheEntry {
-            signature: j.get("signature")?.as_str()?.to_string(),
+        Some(PlanSummary {
             candidate: Candidate {
                 strategy: Strategy::from_key(j.get("strategy")?.as_str()?)?,
                 enc_pps: enc_pps?,
@@ -80,8 +80,79 @@ impl CacheEntry {
             iteration_ms: j.get("iteration_ms")?.as_f64()?,
             throughput_per_gpu: j.get("throughput_per_gpu")?.as_f64()?,
             n_gpus: us("n_gpus")?,
+            peak_mem_bytes: j
+                .get("peak_mem_bytes")?
+                .as_i64()
+                .and_then(|v| u64::try_from(v).ok())?,
             cp_algorithm: j.get("cp_algorithm")?.as_str()?.to_string(),
-            evaluated: us("evaluated")?,
+        })
+    }
+}
+
+/// One cached tuning answer: the frontier the search kept, best first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheEntry {
+    pub signature: String,
+    /// Best-first frontier; never empty — `frontier[0]` is the winner.
+    pub frontier: Vec<PlanSummary>,
+    /// Frontier depth the writing query searched for. May exceed
+    /// `frontier.len()` when the space held fewer plans — that is how a
+    /// later, deeper query tells "the space ran out" (serve the hit)
+    /// from "the writer asked for less" (re-search).
+    pub top_k: usize,
+    /// How many candidates the original search simulated.
+    pub evaluated: usize,
+}
+
+impl CacheEntry {
+    /// The winner.
+    pub fn best(&self) -> &PlanSummary {
+        &self.frontier[0]
+    }
+
+    /// Can this entry answer a query that wants a `top`-deep frontier?
+    /// Yes when it stores that many plans, or when its own search
+    /// already looked at least that deep (the space simply had fewer).
+    pub fn satisfies_top(&self, top: usize) -> bool {
+        self.frontier.len() >= top || self.top_k >= top
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("signature", Json::Str(self.signature.clone())),
+            ("top_k", Json::Int(self.top_k as i64)),
+            ("evaluated", Json::Int(self.evaluated as i64)),
+            (
+                "frontier",
+                Json::Arr(
+                    self.frontier.iter().map(|p| p.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<CacheEntry> {
+        let frontier: Option<Vec<PlanSummary>> = j
+            .get("frontier")?
+            .as_arr()?
+            .iter()
+            .map(PlanSummary::from_json)
+            .collect();
+        let frontier = frontier?;
+        if frontier.is_empty() {
+            return None;
+        }
+        Some(CacheEntry {
+            signature: j.get("signature")?.as_str()?.to_string(),
+            frontier,
+            top_k: j
+                .get("top_k")?
+                .as_i64()
+                .and_then(|v| usize::try_from(v).ok())?,
+            evaluated: j
+                .get("evaluated")?
+                .as_i64()
+                .and_then(|v| usize::try_from(v).ok())?,
         })
     }
 }
@@ -96,7 +167,9 @@ pub struct PlanCache {
 
 /// Bumped when the entry schema or the scoring model changes
 /// incompatibly; files with another version are ignored wholesale.
-const CACHE_VERSION: i64 = 1;
+/// v2: top-k `frontier` per signature (was a flat single winner) plus
+/// per-plan `peak_mem_bytes` from the memory model.
+const CACHE_VERSION: i64 = 2;
 
 impl PlanCache {
     pub fn in_memory() -> Self {
@@ -136,6 +209,10 @@ impl PlanCache {
 
     /// Insert or replace the entry for its signature.
     pub fn insert(&mut self, entry: CacheEntry) {
+        assert!(
+            !entry.frontier.is_empty(),
+            "a cache entry must carry at least its winner"
+        );
         match self
             .entries
             .iter_mut()
@@ -182,9 +259,8 @@ impl PlanCache {
 mod tests {
     use super::*;
 
-    fn entry(sig: &str, llm_pp: usize) -> CacheEntry {
-        CacheEntry {
-            signature: sig.to_string(),
+    fn summary(llm_pp: usize) -> PlanSummary {
+        PlanSummary {
             candidate: Candidate {
                 strategy: Strategy::Cornstarch,
                 enc_pps: vec![1, 2],
@@ -194,10 +270,19 @@ mod tests {
                 num_microbatches: 24,
                 frozen: FrozenSetting::Paper,
             },
-            iteration_ms: 123.5,
+            iteration_ms: 123.5 + llm_pp as f64,
             throughput_per_gpu: 0.042,
             n_gpus: 16,
+            peak_mem_bytes: 31_400_000_000,
             cp_algorithm: "LPT".to_string(),
+        }
+    }
+
+    fn entry(sig: &str, llm_pp: usize) -> CacheEntry {
+        CacheEntry {
+            signature: sig.to_string(),
+            frontier: vec![summary(llm_pp), summary(llm_pp + 1)],
+            top_k: 2,
             evaluated: 37,
         }
     }
@@ -226,12 +311,40 @@ mod tests {
     }
 
     #[test]
+    fn frontier_order_survives_the_roundtrip() {
+        let path = tmp_path("frontier");
+        let _ = std::fs::remove_file(&path);
+        let mut c = PlanCache::load(&path);
+        c.insert(entry("s", 2));
+        c.save().unwrap();
+        let c2 = PlanCache::load(&path);
+        let e = c2.lookup("s").unwrap();
+        assert_eq!(e.frontier.len(), 2);
+        assert_eq!(e.best(), &e.frontier[0]);
+        assert_eq!(e.best().candidate.llm_pp, 2);
+        assert_eq!(e.frontier[1].candidate.llm_pp, 3);
+        assert_eq!(e.best().peak_mem_bytes, 31_400_000_000);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn satisfies_top_distinguishes_shallow_writer_from_small_space() {
+        let e = entry("s", 3); // 2 plans stored, searched top_k = 2
+        assert!(e.satisfies_top(1));
+        assert!(e.satisfies_top(2));
+        assert!(!e.satisfies_top(3), "writer only looked 2 deep");
+        let mut exhausted = entry("s", 3);
+        exhausted.top_k = 10; // searched 10 deep, space held only 2
+        assert!(exhausted.satisfies_top(5));
+    }
+
+    #[test]
     fn insert_replaces_same_signature() {
         let mut c = PlanCache::in_memory();
         c.insert(entry("s", 2));
         c.insert(entry("s", 5));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.lookup("s").unwrap().candidate.llm_pp, 5);
+        assert_eq!(c.lookup("s").unwrap().best().candidate.llm_pp, 5);
     }
 
     #[test]
@@ -261,11 +374,30 @@ mod tests {
     }
 
     #[test]
-    fn version_mismatch_ignored() {
+    fn version_skew_is_ignored_wholesale() {
+        // Both a future version and the retired v1 single-winner layout
+        // degrade to an empty cache (and are rebuilt on the next save).
         let path = tmp_path("version");
         std::fs::write(&path, r#"{"version":999,"entries":[{}]}"#).unwrap();
-        let c = PlanCache::load(&path);
-        assert!(c.is_empty());
+        assert!(PlanCache::load(&path).is_empty());
+        std::fs::write(
+            &path,
+            r#"{"version":1,"entries":[{"signature":"s","strategy":"cornstarch","enc_pps":[1],"llm_pp":3,"tp":2,"cp":2,"microbatches":24,"frozen":"paper","iteration_ms":1.0,"throughput_per_gpu":0.1,"n_gpus":16,"cp_algorithm":"LPT","evaluated":5}]}"#,
+        )
+        .unwrap();
+        assert!(PlanCache::load(&path).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn entry_without_frontier_is_dropped_not_fatal() {
+        let path = tmp_path("nofrontier");
+        std::fs::write(
+            &path,
+            r#"{"version":2,"entries":[{"signature":"s","evaluated":1,"frontier":[]}]}"#,
+        )
+        .unwrap();
+        assert!(PlanCache::load(&path).is_empty());
         let _ = std::fs::remove_file(&path);
     }
 

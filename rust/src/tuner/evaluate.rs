@@ -28,6 +28,9 @@ pub struct Evaluation {
     pub iteration_ms: f64,
     pub throughput_per_gpu: f64,
     pub n_gpus: usize,
+    /// Modeled peak per-GPU bytes ([`crate::memory`]) — reported next to
+    /// the makespan so consumers see the headroom a plan leaves.
+    pub peak_mem_bytes: u64,
 }
 
 /// Materialize the module tree a candidate plans against (frozen policy
@@ -105,6 +108,7 @@ fn evaluation_of(cand: &Candidate, plan: &Plan) -> Evaluation {
         iteration_ms: m.iteration_ms,
         throughput_per_gpu: m.throughput_per_gpu,
         n_gpus: plan.n_gpus,
+        peak_mem_bytes: plan.peak_device_bytes(),
     }
 }
 

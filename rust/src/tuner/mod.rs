@@ -6,14 +6,20 @@
 //!
 //! The subsystem is four layers deep, mirroring its data flow:
 //!
-//! * [`space`] — [`space::Candidate`] enumeration under the device budget;
+//! * [`space`] — [`space::Candidate`] enumeration under the device budget
+//!   AND the per-GPU memory capacity of [`crate::memory`]: OOM-infeasible
+//!   candidates (including microbatch counts whose 1F1B warm-up window
+//!   cannot fit) are rejected before anything simulates them;
 //! * [`search`] — bounded best-first search with cost-model lower-bound
-//!   pruning ([`search::Objective`] selects what is optimized);
+//!   pruning ([`search::Objective`] selects what is optimized), keeping a
+//!   top-k frontier rather than a single winner;
 //! * [`evaluate`] — plan construction ([`crate::modality::planner`] +
 //!   [`crate::pipeline`]) and multi-threaded discrete-event simulation
 //!   ([`crate::sim`]), plus the CP distribution pick ([`crate::cp`]);
 //! * [`cache`] — the JSON-persisted plan cache keyed by a
-//!   workload/cluster signature.
+//!   workload/cluster signature, storing the whole frontier so later
+//!   queries can trade throughput against GPU count and memory headroom
+//!   without re-searching.
 //!
 //! Entry point: [`tune`].
 
@@ -22,9 +28,9 @@ pub mod evaluate;
 pub mod search;
 pub mod space;
 
-pub use cache::{CacheEntry, PlanCache};
+pub use cache::{CacheEntry, PlanCache, PlanSummary};
 pub use evaluate::{build_plan, evaluate_parallel, Evaluation};
-pub use search::{search, Objective, SearchReport};
+pub use search::{search, search_top, Objective, SearchReport};
 pub use space::{enumerate, Candidate, FrozenSetting, SearchSpace};
 
 use anyhow::{anyhow, Result};
@@ -32,6 +38,9 @@ use anyhow::{anyhow, Result};
 use crate::cost::Device;
 use crate::modality::Plan;
 use crate::model::MllmSpec;
+
+/// Frontier depth a search keeps (and the cache persists) by default.
+pub const DEFAULT_TOP_K: usize = 5;
 
 /// A tuning query.
 #[derive(Clone, Debug)]
@@ -42,6 +51,13 @@ pub struct TuneRequest {
     /// Max candidates to simulate; 0 = unlimited (exact over the space).
     pub budget: usize,
     pub threads: usize,
+    /// Frontier depth to search for and persist (`--top N`). NOT part of
+    /// the cache signature: the whole point of storing a frontier is
+    /// answering later "show me the runners-up" queries without a
+    /// re-search. A hit only counts when the stored entry satisfies this
+    /// depth ([`CacheEntry::satisfies_top`]); a deeper request re-searches
+    /// and overwrites the entry.
+    pub top: usize,
     /// JSON cache path; `None` searches fresh every time.
     pub cache_path: Option<String>,
     pub device: Device,
@@ -59,6 +75,7 @@ impl TuneRequest {
             objective: Objective::Makespan,
             budget: 0,
             threads,
+            top: DEFAULT_TOP_K,
             cache_path: None,
             device: Device::a40(),
         }
@@ -95,35 +112,55 @@ pub struct TuneOutcome {
 }
 
 impl TuneOutcome {
-    /// Rebuild the executable stage DAG the cached candidate denotes.
+    /// Rebuild the executable stage DAG the cached winner denotes.
     pub fn instantiate(&self, spec: &MllmSpec, device: Device) -> Plan {
-        build_plan(spec, &self.entry.candidate, device)
+        build_plan(spec, &self.entry.best().candidate, device)
+    }
+
+    /// Rebuild the stage DAG of frontier entry `rank` (0 = winner).
+    pub fn instantiate_ranked(
+        &self,
+        spec: &MllmSpec,
+        device: Device,
+        rank: usize,
+    ) -> Option<Plan> {
+        self.entry
+            .frontier
+            .get(rank)
+            .map(|p| build_plan(spec, &p.candidate, device))
     }
 }
 
-/// Tune: consult the cache, otherwise search, then persist the winner.
+/// Tune: consult the cache, otherwise search, then persist the top-k
+/// frontier (best first).
 pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
     let mut cache = match &req.cache_path {
         Some(p) => PlanCache::load(std::path::Path::new(p)),
         None => PlanCache::in_memory(),
     };
     let sig = req.signature();
+    let top = req.top.max(1);
     if let Some(entry) = cache.lookup(&sig) {
-        return Ok(TuneOutcome {
-            entry: entry.clone(),
-            cache_hit: true,
-            total_candidates: 0,
-            evaluated: 0,
-            pruned: 0,
-        });
+        if entry.satisfies_top(top) {
+            return Ok(TuneOutcome {
+                entry: entry.clone(),
+                cache_hit: true,
+                total_candidates: 0,
+                evaluated: 0,
+                pruned: 0,
+            });
+        }
+        // Stored frontier is shallower than this query wants: fall
+        // through to a fresh search and overwrite the entry.
     }
-    let report = search(
+    let report = search_top(
         &req.spec,
         &req.space,
         req.objective,
         req.budget,
         req.threads,
         req.device,
+        top,
     )
     .ok_or_else(|| {
         anyhow!(
@@ -132,20 +169,27 @@ pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
             req.space.devices
         )
     })?;
-    let best = report.best;
-    let cp_algorithm = evaluate::pick_cp_algorithm(
-        req.spec.llm_tokens(),
-        best.candidate.cp,
-        0x7EAC_0DE5,
-    )
-    .to_string();
+    let frontier: Vec<cache::PlanSummary> = report
+        .frontier
+        .iter()
+        .map(|ev| cache::PlanSummary {
+            candidate: ev.candidate.clone(),
+            iteration_ms: ev.iteration_ms,
+            throughput_per_gpu: ev.throughput_per_gpu,
+            n_gpus: ev.n_gpus,
+            peak_mem_bytes: ev.peak_mem_bytes,
+            cp_algorithm: evaluate::pick_cp_algorithm(
+                req.spec.llm_tokens(),
+                ev.candidate.cp,
+                0x7EAC_0DE5,
+            )
+            .to_string(),
+        })
+        .collect();
     let entry = CacheEntry {
         signature: sig,
-        candidate: best.candidate.clone(),
-        iteration_ms: best.iteration_ms,
-        throughput_per_gpu: best.throughput_per_gpu,
-        n_gpus: best.n_gpus,
-        cp_algorithm,
+        frontier,
+        top_k: top,
         evaluated: report.evaluated,
     };
     cache.insert(entry.clone());
@@ -178,7 +222,63 @@ mod tests {
         assert!(a.evaluated >= 1);
         let b = tune(&req(8)).unwrap();
         assert!(!b.cache_hit);
-        assert_eq!(a.entry.candidate, b.entry.candidate);
+        assert_eq!(a.entry.best().candidate, b.entry.best().candidate);
+    }
+
+    #[test]
+    fn frontier_is_sorted_and_capped_by_top() {
+        let mut r = req(16);
+        r.top = 3;
+        let out = tune(&r).unwrap();
+        let f = &out.entry.frontier;
+        assert!(!f.is_empty() && f.len() <= 3);
+        assert!(f
+            .windows(2)
+            .all(|w| w[0].iteration_ms <= w[1].iteration_ms + 1e-12));
+        assert_eq!(out.entry.best(), &f[0]);
+        // every frontier plan fits the modeled device budget
+        let budget = r.space.memory_budget_bytes.unwrap();
+        assert!(f.iter().all(|p| p.peak_mem_bytes <= budget));
+        // runners-up instantiate too
+        if f.len() > 1 {
+            let plan = out.instantiate_ranked(&r.spec, r.device, 1).unwrap();
+            let m = plan.simulate();
+            assert!(
+                (m.iteration_ms - f[1].iteration_ms).abs() < 1e-6,
+                "ranked plan {:.3} ms vs cached {:.3} ms",
+                m.iteration_ms,
+                f[1].iteration_ms
+            );
+        }
+    }
+
+    #[test]
+    fn deeper_top_request_re_searches_and_deepens_the_cache() {
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "cornstarch-tune-deepen-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut shallow = req(16);
+        shallow.top = 1;
+        shallow.cache_path = Some(path.to_string_lossy().into_owned());
+        let first = tune(&shallow).unwrap();
+        assert!(!first.cache_hit);
+        assert_eq!(first.entry.frontier.len(), 1);
+        let mut deep = shallow.clone();
+        deep.top = 3;
+        let second = tune(&deep).unwrap();
+        assert!(!second.cache_hit, "shallow entry must not satisfy top=3");
+        assert!(second.entry.frontier.len() > 1);
+        assert_eq!(
+            second.entry.best().candidate,
+            first.entry.best().candidate
+        );
+        // the deepened entry now serves BOTH depths from the cache
+        assert!(tune(&deep).unwrap().cache_hit);
+        assert!(tune(&shallow).unwrap().cache_hit);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -213,12 +313,16 @@ mod tests {
         let plan = out.instantiate(&r.spec, r.device);
         let m = plan.simulate();
         assert!(
-            (m.iteration_ms - out.entry.iteration_ms).abs() < 1e-6,
+            (m.iteration_ms - out.entry.best().iteration_ms).abs() < 1e-6,
             "instantiated plan {:.3} ms vs cached {:.3} ms",
             m.iteration_ms,
-            out.entry.iteration_ms
+            out.entry.best().iteration_ms
         );
-        assert_eq!(plan.n_gpus, out.entry.n_gpus);
+        assert_eq!(plan.n_gpus, out.entry.best().n_gpus);
+        assert_eq!(
+            plan.peak_device_bytes(),
+            out.entry.best().peak_mem_bytes
+        );
     }
 
     #[test]

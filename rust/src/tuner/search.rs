@@ -17,7 +17,7 @@ use crate::model::MllmSpec;
 use super::evaluate::{
     build_plan, lower_bound_ms, simulate_plans_parallel, Evaluation,
 };
-use super::space::{enumerate, Candidate, SearchSpace};
+use super::space::{enumerate_with_plans, Candidate, SearchSpace};
 
 /// What the tuner minimizes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,10 +72,16 @@ impl Objective {
     }
 }
 
-/// Search statistics + the winner.
+/// Search statistics + the winner and its runners-up.
 #[derive(Clone, Debug)]
 pub struct SearchReport {
     pub best: Evaluation,
+    /// Ascending-objective frontier; `frontier[0]` is `best`. Length is
+    /// at most the requested top-k. With an unlimited budget these are
+    /// *exactly* the k best plans of the enumerated space (the prune
+    /// threshold is the k-th incumbent, and bounds are true lower
+    /// bounds).
+    pub frontier: Vec<Evaluation>,
     /// Candidates enumerated from the space.
     pub total_candidates: usize,
     /// Candidates actually simulated.
@@ -84,8 +90,9 @@ pub struct SearchReport {
     pub pruned: usize,
 }
 
-/// Run the search. `budget` caps how many candidates may be simulated
-/// (0 means unlimited); `threads` sizes the evaluation waves.
+/// Run the search for the single best plan. `budget` caps how many
+/// candidates may be simulated (0 means unlimited); `threads` sizes the
+/// evaluation waves.
 pub fn search(
     spec: &MllmSpec,
     space: &SearchSpace,
@@ -94,9 +101,26 @@ pub fn search(
     threads: usize,
     device: Device,
 ) -> Option<SearchReport> {
+    search_top(spec, space, objective, budget, threads, device, 1)
+}
+
+/// Run the search keeping the `top_k` best plans (the frontier the plan
+/// cache persists, so consumers can trade throughput against GPU count
+/// and memory headroom without re-searching).
+pub fn search_top(
+    spec: &MllmSpec,
+    space: &SearchSpace,
+    objective: Objective,
+    budget: usize,
+    threads: usize,
+    device: Device,
+    top_k: usize,
+) -> Option<SearchReport> {
     let mm = crate::modality::MultimodalModule::from_spec(spec);
-    let candidates = enumerate(&mm, space);
-    search_candidates(spec, candidates, objective, budget, threads, device)
+    // The enumeration's memory filter had to build every candidate's
+    // plan anyway; reuse those for bounding and simulation.
+    let pairs = enumerate_with_plans(&mm, space, device);
+    search_pairs(pairs, objective, budget, threads, top_k)
 }
 
 /// Search over an explicit candidate list (the entry point benches and
@@ -109,31 +133,66 @@ pub fn search_candidates(
     threads: usize,
     device: Device,
 ) -> Option<SearchReport> {
-    if candidates.is_empty() {
+    search_candidates_top(
+        spec, candidates, objective, budget, threads, device, 1,
+    )
+}
+
+/// [`search_candidates`] with a `top_k` frontier.
+#[allow(clippy::too_many_arguments)]
+pub fn search_candidates_top(
+    spec: &MllmSpec,
+    candidates: Vec<Candidate>,
+    objective: Objective,
+    budget: usize,
+    threads: usize,
+    device: Device,
+    top_k: usize,
+) -> Option<SearchReport> {
+    let pairs: Vec<(Candidate, crate::modality::Plan)> = candidates
+        .into_iter()
+        .map(|c| {
+            let plan = build_plan(spec, &c, device);
+            (c, plan)
+        })
+        .collect();
+    search_pairs(pairs, objective, budget, threads, top_k)
+}
+
+/// The search core over pre-built (candidate, plan) pairs: bound → sort
+/// → prune → simulate in waves. Every plan is constructed exactly once
+/// (by [`crate::tuner::space::enumerate_with_plans`] or the caller) and
+/// handed from bounding to the simulation wave.
+fn search_pairs(
+    pairs: Vec<(Candidate, crate::modality::Plan)>,
+    objective: Objective,
+    budget: usize,
+    threads: usize,
+    top_k: usize,
+) -> Option<SearchReport> {
+    if pairs.is_empty() {
         return None;
     }
-    let total = candidates.len();
+    let total = pairs.len();
     let budget = if budget == 0 { total } else { budget.min(total) };
     let threads = threads.max(1);
+    let top_k = top_k.max(1);
 
-    // Bound every candidate (cheap: partition DP + a graph walk, no sim).
-    // The plan built for bounding is kept and handed to the simulation
-    // wave, so no candidate pays plan construction twice.
-    let mut bounded: Vec<(f64, Candidate, crate::modality::Plan)> =
-        candidates
-            .into_iter()
-            .map(|c| {
-                let plan = build_plan(spec, &c, device);
-                let samples =
-                    (plan.num_microbatches * plan.microbatch_size) as f64;
-                let lb = lower_bound_ms(&plan);
-                (objective.optimistic_score(lb, &c, samples), c, plan)
-            })
-            .collect();
+    // Bound every candidate (cheap: a graph walk, no sim).
+    let mut bounded: Vec<(f64, Candidate, crate::modality::Plan)> = pairs
+        .into_iter()
+        .map(|(c, plan)| {
+            let samples =
+                (plan.num_microbatches * plan.microbatch_size) as f64;
+            let lb = lower_bound_ms(&plan);
+            (objective.optimistic_score(lb, &c, samples), c, plan)
+        })
+        .collect();
     bounded.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     let mut queue: std::collections::VecDeque<_> = bounded.into();
 
-    let mut best: Option<(f64, Evaluation)> = None;
+    // Ascending-score frontier, capped at top_k.
+    let mut frontier: Vec<(f64, Evaluation)> = Vec::new();
     let mut evaluated = 0usize;
     let mut pruned = 0usize;
     while let Some((head_bound, _, _)) = queue.front() {
@@ -141,10 +200,11 @@ pub fn search_candidates(
             pruned += queue.len();
             break;
         }
-        // Bound-ascending order: if this bound cannot beat the incumbent,
-        // neither can anything after it.
-        if let Some((inc, _)) = &best {
-            if *head_bound >= *inc {
+        // Bound-ascending order: if this bound cannot beat the k-th
+        // incumbent, neither can anything after it.
+        if frontier.len() >= top_k {
+            let worst_kept = frontier[frontier.len() - 1].0;
+            if *head_bound >= worst_kept {
                 pruned += queue.len();
                 break;
             }
@@ -156,17 +216,25 @@ pub fn search_candidates(
         evaluated += evs.len();
         for ev in evs {
             let s = objective.score(&ev);
-            let better = match &best {
-                None => true,
-                Some((bs, _)) => s < *bs,
-            };
-            if better {
-                best = Some((s, ev));
+            let pos = frontier.partition_point(|(fs, _)| *fs <= s);
+            if pos < top_k {
+                frontier.insert(pos, (s, ev));
+                frontier.truncate(top_k);
             }
         }
     }
-    let (_, best) = best?;
-    Some(SearchReport { best, total_candidates: total, evaluated, pruned })
+    if frontier.is_empty() {
+        return None;
+    }
+    let frontier: Vec<Evaluation> =
+        frontier.into_iter().map(|(_, e)| e).collect();
+    Some(SearchReport {
+        best: frontier[0].clone(),
+        frontier,
+        total_candidates: total,
+        evaluated,
+        pruned,
+    })
 }
 
 #[cfg(test)]
@@ -235,6 +303,42 @@ mod tests {
         );
         // pruning must have done something on a space this size
         assert!(r.pruned > 0, "no pruning over {} candidates", r.total_candidates);
+    }
+
+    #[test]
+    fn top_k_frontier_matches_exhaustive_ranking() {
+        let spec = MllmSpec::vlm(Size::M, Size::S);
+        let space = SearchSpace::paper_default(12);
+        let d = Device::a40();
+        let r = search_top(&spec, &space, Objective::Makespan, 0, 4, d, 5)
+            .unwrap();
+        assert!(!r.frontier.is_empty() && r.frontier.len() <= 5);
+        assert!(
+            (r.frontier[0].iteration_ms - r.best.iteration_ms).abs()
+                < 1e-12
+        );
+        assert!(r
+            .frontier
+            .windows(2)
+            .all(|w| w[0].iteration_ms <= w[1].iteration_ms + 1e-12));
+        // exhaustive cross-check: the frontier is exactly the k best
+        let mm = MultimodalModule::from_spec(&spec);
+        let cands = crate::tuner::space::enumerate(&mm, &space);
+        let mut all: Vec<f64> = crate::tuner::evaluate::evaluate_parallel(
+            &spec, &cands, d, 4,
+        )
+        .into_iter()
+        .map(|e| e.iteration_ms)
+        .collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, ev) in r.frontier.iter().enumerate() {
+            assert!(
+                (ev.iteration_ms - all[i]).abs() < 1e-9,
+                "frontier[{i}] {:.3} vs exhaustive {:.3}",
+                ev.iteration_ms,
+                all[i]
+            );
+        }
     }
 
     #[test]

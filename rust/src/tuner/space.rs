@@ -6,9 +6,12 @@
 //! placement (per-encoder stage counts), the LLM pipeline depth, the TP
 //! and CP degrees, the microbatch count, and the frozen policy. The
 //! [`SearchSpace`] bounds each dimension; [`enumerate`] walks the cross
-//! product and keeps only candidates that fit the device budget and the
-//! per-module layer counts.
+//! product and keeps only candidates that fit the device budget, the
+//! per-module layer counts, and — when a per-GPU memory budget is set —
+//! the capacity model of [`crate::memory`]: OOM-infeasible candidates are
+//! rejected here, before the search ever simulates them.
 
+use crate::cost::Device;
 use crate::modality::{ModalityModule, MultimodalModule, Strategy};
 
 /// Which modules train — the §4.2 dimension DistTrain-style placement
@@ -128,21 +131,29 @@ pub struct SearchSpace {
     pub max_pp: usize,
     pub strategies: Vec<Strategy>,
     pub frozen_choices: Vec<FrozenSetting>,
+    /// Per-GPU memory budget in bytes; candidates whose modeled peak
+    /// ([`crate::memory`]) exceeds it are rejected at enumeration time —
+    /// never simulated. `None` disables the capacity filter.
+    pub memory_budget_bytes: Option<u64>,
 }
 
 impl SearchSpace {
-    /// The §6.1 defaults: tp/cp ∈ {1, 2}, 24 microbatches of 1 sample,
-    /// all three policies, the paper's frozen recipe, stages capped at 6.
+    /// The §6.1 defaults: tp/cp ∈ {1, 2}, 1 sample per microbatch, all
+    /// three policies, the paper's frozen recipe, stages capped at 6, and
+    /// the 40 GB A40 budget of Appendix D. Microbatch counts are swept
+    /// around the paper's 24 — meaningful only because the memory filter
+    /// prunes the counts whose 1F1B warm-up window cannot fit.
     pub fn paper_default(devices: usize) -> Self {
         assert!(devices >= 1);
         SearchSpace {
             devices,
             tp_choices: vec![1, 2],
             cp_choices: vec![1, 2],
-            microbatch_choices: vec![24],
+            microbatch_choices: vec![8, 16, 24, 32],
             max_pp: 6,
             strategies: Strategy::ALL.to_vec(),
             frozen_choices: vec![FrozenSetting::Paper],
+            memory_budget_bytes: Some(crate::memory::A40_BUDGET_BYTES),
         }
     }
 
@@ -154,14 +165,15 @@ impl SearchSpace {
         let frozen: Vec<&str> =
             self.frozen_choices.iter().map(|f| f.key()).collect();
         format!(
-            "dev={}|tp={:?}|cp={:?}|mb={:?}|maxpp={}|strat={}|frozen={}",
+            "dev={}|tp={:?}|cp={:?}|mb={:?}|maxpp={}|strat={}|frozen={}|mem={:?}",
             self.devices,
             self.tp_choices,
             self.cp_choices,
             self.microbatch_choices,
             self.max_pp,
             keys.join(","),
-            frozen.join(",")
+            frozen.join(","),
+            self.memory_budget_bytes
         )
     }
 }
@@ -173,10 +185,34 @@ fn enc_max_stages(e: &crate::modality::ModalityModule) -> usize {
 }
 
 /// Enumerate every candidate of `space` that is feasible for `mm`:
-/// stage counts within layer counts, total GPUs within the budget, and
-/// the colocated policy's equal-encoder-stage constraint respected.
+/// stage counts within layer counts, total GPUs within the budget, the
+/// colocated policy's equal-encoder-stage constraint respected, and —
+/// when the space carries a memory budget — a modeled peak per-GPU
+/// footprint within capacity. The capacity filter is what makes the
+/// joint microbatch sweep meaningful: a deep warm-up window at a high
+/// microbatch count is rejected here instead of being simulated.
+///
+/// The memory verdicts are device-throughput-independent (partition
+/// bounds only depend on relative layer costs), so the device used for
+/// the internal plans cannot change which candidates survive.
 pub fn enumerate(mm: &MultimodalModule, space: &SearchSpace) -> Vec<Candidate> {
-    let mut out = Vec::new();
+    if space.memory_budget_bytes.is_none() {
+        // No capacity filter: the cross product is the answer — skip
+        // plan construction entirely.
+        return raw_candidates(mm, space);
+    }
+    enumerate_with_plans(mm, space, Device::a40())
+        .into_iter()
+        .map(|(c, _)| c)
+        .collect()
+}
+
+/// The geometric cross product (device budget + layer counts only).
+fn raw_candidates(
+    mm: &MultimodalModule,
+    space: &SearchSpace,
+) -> Vec<Candidate> {
+    let mut raw = Vec::new();
     for &frozen in &space.frozen_choices {
         for &tp in &space.tp_choices {
             for &cp in &space.cp_choices {
@@ -188,11 +224,54 @@ pub fn enumerate(mm: &MultimodalModule, space: &SearchSpace) -> Vec<Candidate> {
                     for &strategy in &space.strategies {
                         push_pp_splits(
                             mm, space, strategy, tp, cp, mb, frozen, groups,
-                            &mut out,
+                            &mut raw,
                         );
                     }
                 }
             }
+        }
+    }
+    raw
+}
+
+/// [`enumerate`], keeping the plan each candidate denotes (built on
+/// `device`). This is the search's entry point: the plan the memory
+/// filter had to build anyway is reused for lower-bounding and
+/// simulation, so no candidate pays plan construction twice.
+pub fn enumerate_with_plans(
+    mm: &MultimodalModule,
+    space: &SearchSpace,
+    device: Device,
+) -> Vec<(Candidate, crate::modality::Plan)> {
+    let raw = raw_candidates(mm, space);
+    // One frozen-rewritten module per policy, not one clone per
+    // candidate.
+    let variants: Vec<(FrozenSetting, MultimodalModule)> = space
+        .frozen_choices
+        .iter()
+        .map(|&f| {
+            let mut mm_f = mm.clone();
+            f.apply(&mut mm_f);
+            (f, mm_f)
+        })
+        .collect();
+    let mut out = Vec::with_capacity(raw.len());
+    for c in raw {
+        let (_, mm_f) = variants
+            .iter()
+            .find(|(f, _)| *f == c.frozen)
+            .expect("candidate frozen setting comes from the space");
+        let plan = crate::modality::planner::plan(
+            c.strategy,
+            mm_f,
+            &super::evaluate::spec_for(&c),
+            device,
+        );
+        if space
+            .memory_budget_bytes
+            .is_none_or(|budget| plan.peak_device_bytes() <= budget)
+        {
+            out.push((c, plan));
         }
     }
     out
@@ -393,10 +472,62 @@ mod tests {
     }
 
     #[test]
-    fn tiny_budget_yields_no_impossible_candidates() {
-        // 1 GPU: only tp=cp=1, single-stage plans fit.
+    fn memory_filter_prunes_oom_microbatch_counts() {
+        // A deep tp=1 pipeline grows its 1F1B warm-up window with the
+        // microbatch count; a budget between the best m=2 peak and the
+        // best m=8 peak must keep m=2 candidates and reject every m=8
+        // one — pruned at enumeration, never simulated.
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let mm = MultimodalModule::from_spec(&spec);
+        let mut space = SearchSpace::paper_default(8);
+        space.tp_choices = vec![1];
+        space.cp_choices = vec![1];
+        space.strategies = vec![Strategy::Cornstarch];
+        space.microbatch_choices = vec![2, 8];
+        space.memory_budget_bytes = None;
+        let all = enumerate(&mm, &space);
+        let peak = |c: &Candidate| {
+            crate::tuner::evaluate::build_plan(&spec, c, Device::a40())
+                .peak_device_bytes()
+        };
+        let min_of = |m: usize| {
+            all.iter()
+                .filter(|c| c.num_microbatches == m)
+                .map(|c| peak(c))
+                .min()
+                .unwrap()
+        };
+        let (min2, min8) = (min_of(2), min_of(8));
+        assert!(min2 < min8, "warm-up window must grow with m");
+        space.memory_budget_bytes = Some(min8 - 1);
+        let kept = enumerate(&mm, &space);
+        assert!(!kept.is_empty());
+        assert!(kept.iter().all(|c| c.num_microbatches == 2));
+        assert!(kept.iter().all(|c| peak(c) < min8));
+    }
+
+    #[test]
+    fn default_space_keeps_the_microbatch_sweep_live() {
+        // The per-candidate budget assertion lives in
+        // tests/tuner_checks.rs (the ISSUE's acceptance criterion); here
+        // we only check the filter does not collapse the sweep.
         let mm = vlm_mm();
-        let cands = enumerate(&mm, &SearchSpace::paper_default(1));
+        let cands = enumerate(&mm, &SearchSpace::paper_default(16));
+        assert!(!cands.is_empty());
+        let mbs: std::collections::HashSet<usize> =
+            cands.iter().map(|c| c.num_microbatches).collect();
+        assert!(mbs.len() > 1, "microbatch sweep collapsed: {mbs:?}");
+    }
+
+    #[test]
+    fn tiny_budget_yields_no_impossible_candidates() {
+        // 1 GPU: only tp=cp=1, single-stage plans are geometrically
+        // possible (memory filter off — a VLM-M does not fit one A40).
+        let mm = vlm_mm();
+        let mut space = SearchSpace::paper_default(1);
+        space.memory_budget_bytes = None;
+        let cands = enumerate(&mm, &space);
+        assert!(!cands.is_empty());
         for c in &cands {
             assert_eq!(c.n_gpus(), 1, "{}", c.label());
         }
@@ -404,5 +535,9 @@ mod tests {
         assert!(cands
             .iter()
             .all(|c| c.strategy != Strategy::Cornstarch));
+        // ...and with the A40 budget on, nothing survives: the whole
+        // model on one GPU is exactly the OOM the filter exists for.
+        let filtered = enumerate(&mm, &SearchSpace::paper_default(1));
+        assert!(filtered.is_empty());
     }
 }

@@ -7,15 +7,21 @@
 //! * regression: the tuner's plan cache round-trips through disk and a
 //!   second query returns the identical best plan without re-simulating;
 //! * acceptance: `tune VLM-M --devices 16` end-to-end beats the best of
-//!   the three fixed planners on the same scenario.
+//!   the three fixed planners on the same scenario;
+//! * capacity: the default space never offers the simulator a candidate
+//!   whose modeled peak memory exceeds the A40 budget, and the cached
+//!   top-k frontier serves ranked alternatives without re-searching.
 
 use cornstarch::cost::Device;
 use cornstarch::cp::{exact_min_makespan, makespan, Algorithm};
+use cornstarch::memory;
 use cornstarch::modality::{
     planner, MultimodalModule, MultimodalParallelSpec, Strategy,
 };
 use cornstarch::model::{MllmSpec, Size};
-use cornstarch::tuner::{tune, TuneRequest};
+use cornstarch::tuner::{
+    build_plan, enumerate, tune, SearchSpace, TuneRequest,
+};
 use cornstarch::util::check::check;
 use cornstarch::util::rng::Rng;
 
@@ -79,16 +85,72 @@ fn tuned_vlm_m_16_devices_beats_all_baseline_planners() {
         best_baseline = best_baseline.min(m.iteration_ms);
     }
     assert!(
-        out.entry.iteration_ms <= best_baseline + 1e-9,
+        out.entry.best().iteration_ms <= best_baseline + 1e-9,
         "tuned {:.1} ms vs best baseline {:.1} ms",
-        out.entry.iteration_ms,
+        out.entry.best().iteration_ms,
         best_baseline
     );
-    // The winner must fit the budget and be executable.
-    assert!(out.entry.n_gpus <= 16);
+    // The winner must fit the GPU budget, the A40 memory budget, and be
+    // executable.
+    assert!(out.entry.best().n_gpus <= 16);
+    assert!(out.entry.best().peak_mem_bytes <= memory::A40_BUDGET_BYTES);
     let plan = out.instantiate(&spec, d);
     let m = plan.simulate();
-    assert!((m.iteration_ms - out.entry.iteration_ms).abs() < 1e-6);
+    assert!((m.iteration_ms - out.entry.best().iteration_ms).abs() < 1e-6);
+}
+
+/// The ISSUE's capacity acceptance: with the default space, the tuner
+/// never simulates a candidate whose modeled peak exceeds the device
+/// budget — enumeration is the gate, so every enumerated candidate (the
+/// only ones the search can ever hand to the simulator) must fit.
+#[test]
+fn default_space_only_offers_memory_feasible_candidates() {
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+    let mm = MultimodalModule::from_spec(&spec);
+    let space = SearchSpace::paper_default(16);
+    let budget = space
+        .memory_budget_bytes
+        .expect("default space carries the A40 budget");
+    let cands = enumerate(&mm, &space);
+    assert!(!cands.is_empty());
+    for c in &cands {
+        let plan = build_plan(&spec, c, Device::a40());
+        assert!(
+            plan.peak_device_bytes() <= budget,
+            "OOM candidate would be simulated: {}",
+            c.label()
+        );
+    }
+}
+
+/// Top-k frontier acceptance: one search answers later "trade throughput
+/// for fewer GPUs / more headroom" queries straight from the cache.
+#[test]
+fn cached_frontier_offers_ranked_alternatives() {
+    let mut path = std::env::temp_dir();
+    path.push(format!(
+        "cornstarch-tuner-frontier-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let mut req =
+        acceptance_request(Some(path.to_string_lossy().into_owned()));
+    req.top = 4;
+    let first = tune(&req).unwrap();
+    assert!(!first.cache_hit);
+    assert!(first.entry.frontier.len() > 1, "frontier collapsed");
+    let second = tune(&req).unwrap();
+    assert!(second.cache_hit);
+    assert_eq!(first.entry, second.entry);
+    // ranked, and every alternative is memory-feasible
+    let f = &second.entry.frontier;
+    assert!(f
+        .windows(2)
+        .all(|w| w[0].iteration_ms <= w[1].iteration_ms + 1e-12));
+    assert!(f
+        .iter()
+        .all(|p| p.peak_mem_bytes <= memory::A40_BUDGET_BYTES));
+    let _ = std::fs::remove_file(&path);
 }
 
 /// Cache regression: serialize → load → identical best plan, with zero
@@ -116,7 +178,8 @@ fn tuner_cache_roundtrip_returns_identical_plan() {
     let spec = MllmSpec::vlm(Size::M, Size::M);
     let plan = second.instantiate(&spec, Device::a40());
     assert!(
-        (plan.simulate().iteration_ms - first.entry.iteration_ms).abs()
+        (plan.simulate().iteration_ms - first.entry.best().iteration_ms)
+            .abs()
             < 1e-6
     );
     let _ = std::fs::remove_file(&path);
@@ -140,7 +203,7 @@ fn cache_does_not_cross_scenarios() {
     req8.cache_path = cache;
     let b = tune(&req8).unwrap();
     assert!(!b.cache_hit, "8-device query must not reuse the 16-device plan");
-    assert!(b.entry.n_gpus <= 8);
-    assert!(a.entry.n_gpus <= 16);
+    assert!(b.entry.best().n_gpus <= 8);
+    assert!(a.entry.best().n_gpus <= 16);
     let _ = std::fs::remove_file(&path);
 }
