@@ -1,18 +1,23 @@
 //! Scenario: "I was just handed a cluster — what is the fastest way to
-//! train my MLLM on it?" — the autotuner as a planning service.
+//! train my MLLM on it?" — the planning service end-to-end.
 //!
-//! Sweeps device budgets for a VLM and a VALM, tuning each scenario
-//! end-to-end (policy × encoder placement × LLM depth × TP/CP ×
-//! frozen recipe), then shows the persistent plan cache answering the
-//! same query again without simulating anything.
+//! Sweeps device budgets for a VLM and a VALM through
+//! `PlanningService::plan` (policy × encoder placement × LLM depth ×
+//! TP/CP × microbatches × frozen recipe), shows the persistent plan
+//! cache answering the same `PlanRequest` again without simulating
+//! anything, and then swaps the `ClusterSpec` — same model, 80 GB
+//! devices instead of 40 GB A40s — to show the hardware truth changing
+//! the answer (OOM-pruned candidates readmitted).
 //!
 //! ```bash
 //! cargo run --release --example autotune
 //! ```
 
 use anyhow::Result;
+use cornstarch::api::{ClusterSpec, PlanRequest, PlanningService};
+use cornstarch::memory;
 use cornstarch::model::{MllmSpec, Size};
-use cornstarch::tuner::{tune, FrozenSetting, TuneRequest};
+use cornstarch::tuner::FrozenSetting;
 use cornstarch::util::table::Table;
 
 fn main() -> Result<()> {
@@ -20,9 +25,10 @@ fn main() -> Result<()> {
     cache_path.push("cornstarch-autotune-example.json");
     let _ = std::fs::remove_file(&cache_path);
     let cache = cache_path.to_string_lossy().into_owned();
+    let service = PlanningService::new();
 
     let mut t = Table::new(
-        "autotuned plans (objective: iteration time; cache: on)",
+        "planning service (objective: iteration time; cache: on)",
         &[
             "model", "GPUs", "best plan", "iter (ms)", "tput/GPU",
             "simulated", "pruned",
@@ -34,19 +40,22 @@ fn main() -> Result<()> {
         (MllmSpec::vlm(Size::M, Size::L), 16),
         (MllmSpec::valm(Size::M, Size::M, Size::M), 24),
     ];
+    let request = |spec: &MllmSpec, devices: usize| {
+        PlanRequest::default_for(spec.clone())
+            .devices(devices)
+            .cache_file(&cache)
+    };
     for (spec, devices) in &scenarios {
-        let mut req = TuneRequest::new(spec.clone(), *devices);
-        req.cache_path = Some(cache.clone());
-        let out = tune(&req)?;
-        let best = out.entry.best();
+        let report = service.plan(&request(spec, *devices))?;
+        let best = report.winner();
         t.row(&[
             spec.name(),
             devices.to_string(),
             best.candidate.label(),
             format!("{:.1}", best.iteration_ms),
             format!("{:.3}", best.throughput_per_gpu),
-            out.evaluated.to_string(),
-            out.pruned.to_string(),
+            report.provenance.evaluated.to_string(),
+            report.provenance.pruned.to_string(),
         ]);
     }
     println!("{}", t.render());
@@ -54,10 +63,11 @@ fn main() -> Result<()> {
     // ---- the cache makes the second pass O(1) ----
     let t0 = std::time::Instant::now();
     for (spec, devices) in &scenarios {
-        let mut req = TuneRequest::new(spec.clone(), *devices);
-        req.cache_path = Some(cache.clone());
-        let out = tune(&req)?;
-        assert!(out.cache_hit, "expected a cache hit on the second pass");
+        let report = service.plan(&request(spec, *devices))?;
+        assert!(
+            report.provenance.cache_hit,
+            "expected a cache hit on the second pass"
+        );
     }
     println!(
         "second pass over all {} scenarios: cache hits only, {:.1} ms total",
@@ -65,35 +75,71 @@ fn main() -> Result<()> {
         t0.elapsed().as_secs_f64() * 1e3
     );
 
+    // ---- the cluster spec changes the answer ----
+    // Same model and pool size; 80 GB devices instead of 40 GB A40s.
+    // Candidates the A40's memory budget OOM-pruned are readmitted, so
+    // the search sees a strictly larger space.
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+    let a40 = service.plan(
+        &PlanRequest::default_for(spec.clone()).devices(16),
+    )?;
+    let mut big = ClusterSpec::a40_default().with_devices(16);
+    big.name = "a100ish-80g".to_string();
+    big.device.name = "A100-80G".to_string();
+    big.device.mem_bytes = 80_000_000_000;
+    let roomy = service
+        .plan(&PlanRequest::default_for(spec.clone()).cluster(big))?;
+    println!(
+        "\n{} @16 on 40 GB A40s: {} candidates, best {:.1} ms \
+         (peak {:.1} GB/GPU)",
+        spec.name(),
+        a40.provenance.total_candidates,
+        a40.winner().iteration_ms,
+        memory::gb(a40.winner().peak_mem_bytes),
+    );
+    println!(
+        "{} @16 on 80 GB devices: {} candidates ({} readmitted), best \
+         {:.1} ms (peak {:.1} GB/GPU)",
+        spec.name(),
+        roomy.provenance.total_candidates,
+        roomy
+            .provenance
+            .total_candidates
+            .saturating_sub(a40.provenance.total_candidates),
+        roomy.winner().iteration_ms,
+        memory::gb(roomy.winner().peak_mem_bytes),
+    );
+
     // ---- frozen policy changes the answer ----
-    let mut req = TuneRequest::new(MllmSpec::vlm(Size::M, Size::L), 16);
-    req.space.frozen_choices = vec![FrozenSetting::AllTrainable];
-    let full = tune(&req)?;
-    req.space.frozen_choices = vec![FrozenSetting::Paper];
-    let paper = tune(&req)?;
+    let base = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::L));
+    let mut all_trainable = base.resolved_space();
+    all_trainable.frozen_choices = vec![FrozenSetting::AllTrainable];
+    let full = service.plan(&base.clone().space(all_trainable))?;
+    let paper = service.plan(&base)?;
     println!(
         "\nVLM-L @16: paper recipe {:.1} ms vs full fine-tune {:.1} ms — \
-         frozen-aware placement is why the tuner must know the policy",
-        paper.entry.best().iteration_ms,
-        full.entry.best().iteration_ms
+         frozen-aware placement is why the planner must know the policy",
+        paper.winner().iteration_ms,
+        full.winner().iteration_ms
     );
 
     // ---- the cached frontier answers trade-off queries for free ----
-    // The first loop persisted a top-5 frontier for this exact scenario;
+    // The first loop persisted a top-5 frontier for this exact request;
     // asking for the top 3 is served straight from the cache.
-    let mut req = TuneRequest::new(MllmSpec::vlm(Size::M, Size::M), 16);
-    req.top = 3;
-    req.cache_path = Some(cache.clone());
-    let out = tune(&req)?;
-    assert!(out.cache_hit, "frontier query should be a cache hit");
-    println!("\ntop-{} frontier (throughput vs GPUs vs headroom):", req.top);
-    for (i, p) in out.entry.frontier.iter().enumerate() {
+    let req = request(&MllmSpec::vlm(Size::M, Size::M), 16).top(3);
+    let report = service.plan(&req)?;
+    assert!(
+        report.provenance.cache_hit,
+        "frontier query should be a cache hit"
+    );
+    println!("\ntop-3 frontier (throughput vs GPUs vs headroom):");
+    for (i, p) in report.frontier.iter().take(3).enumerate() {
         println!(
             "  #{}: {:.1} ms | {} GPUs | peak {:.1} GB | {}",
             i + 1,
             p.iteration_ms,
             p.n_gpus,
-            cornstarch::memory::gb(p.peak_mem_bytes),
+            memory::gb(p.peak_mem_bytes),
             p.candidate.label()
         );
     }

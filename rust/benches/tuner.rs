@@ -2,15 +2,15 @@
 //! pruning + multi-threaded simulation — across compositions, budgets,
 //! and worker counts, plus the cache's O(1) repeated-query path.
 
+use cornstarch::api::ClusterSpec;
 use cornstarch::bench::Bencher;
-use cornstarch::cost::Device;
 use cornstarch::model::{MllmSpec, Size};
 use cornstarch::tuner::{
     enumerate, search, tune, Objective, SearchSpace, TuneRequest,
 };
 
 fn main() {
-    let d = Device::a40();
+    let d = ClusterSpec::a40_default();
 
     // ---- space sizes, for context ----
     for (name, spec, devices) in [
@@ -37,7 +37,7 @@ fn main() {
                     Objective::Makespan,
                     0,
                     threads,
-                    d,
+                    &d,
                 ));
             });
         }
@@ -48,7 +48,7 @@ fn main() {
                 Objective::Makespan,
                 16,
                 4,
-                d,
+                &d,
             ));
         });
     }

@@ -1,0 +1,360 @@
+//! `ClusterSpec` — the single source of hardware truth for planning.
+//!
+//! Every planning entry point used to bake in one scenario: the A40 as a
+//! single MFU scalar in [`crate::cost::Device::a40`] and a single memory
+//! constant in `crate::memory`. A `ClusterSpec` names all of it in one
+//! typed value — how many devices, what one device can hold
+//! ([`DeviceClass::mem_bytes`]), how fast it computes
+//! ([`DeviceClass::peak_flops`] × [`DeviceClass::mfu`]), and how fast
+//! stages talk to each other ([`ClusterSpec::interconnect_gbps`]) — and
+//! threads through `cost` (per-device-class time scaling), `memory`
+//! (budget per device), `tuner` (search-space bounds and the cache
+//! signature), and `sim` (comm hops priced off the bandwidth).
+//!
+//! Specs load from JSON (`cornstarch tune <mllm> --cluster <file>`):
+//!
+//! ```json
+//! {
+//!   "name": "a40x8",
+//!   "devices": 8,
+//!   "device": { "name": "A40", "mem_gb": 40.0,
+//!               "peak_tflops": 149.7, "mfu": 0.67 },
+//!   "interconnect_gbps": 32.0
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::cost::Device;
+use crate::util::json::Json;
+
+use super::error::PlanError;
+
+/// A40 bf16 peak flops (§6.1 testbed).
+pub const A40_PEAK_FLOPS: f64 = 149.7e12;
+/// The single MFU scalar the analytic time model is calibrated by
+/// (reproduces the paper's Fig. 3b Mistral-7b forward within ~5%; see
+/// `crate::cost`). Every reproduced result is a ratio of times, which
+/// this scalar cancels out of.
+pub const A40_MFU: f64 = 0.67;
+/// The A40 testbed's usable per-GPU budget (Appendix D): 48 GB HBM minus
+/// the runtime/fragmentation reserve the paper plans against.
+pub const A40_MEM_BYTES: u64 = 40_000_000_000;
+/// A40 testbed interconnect, GB/s (PCIe-class effective bandwidth).
+/// Chosen so the nominal activation hop prices at exactly the 0.5 ms the
+/// pre-`ClusterSpec` model charged.
+pub const A40_INTERCONNECT_GBPS: f64 = 32.0;
+
+/// Nominal per-hop activation payload the analytic model prices: one
+/// microbatch's hidden-state tensor at paper scale (~16 MB of bf16 at
+/// h=4096 × ~2000 tokens).
+pub const NOMINAL_HOP_BYTES: u64 = 16_000_000;
+
+/// One device class of a cluster: memory capacity plus the throughput
+/// model the cost layer scales times by.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceClass {
+    pub name: String,
+    /// Usable per-device memory budget in bytes.
+    pub mem_bytes: u64,
+    /// Peak flops (bf16).
+    pub peak_flops: f64,
+    /// Model flops utilization for big dense matmuls.
+    pub mfu: f64,
+}
+
+impl DeviceClass {
+    /// The A40 of the paper's testbed.
+    pub fn a40() -> Self {
+        DeviceClass {
+            name: "A40".to_string(),
+            mem_bytes: A40_MEM_BYTES,
+            peak_flops: A40_PEAK_FLOPS,
+            mfu: A40_MFU,
+        }
+    }
+
+    /// The throughput model [`crate::cost`] consumes.
+    pub fn time_model(&self) -> Device {
+        Device { peak_flops: self.peak_flops, mfu: self.mfu }
+    }
+}
+
+/// The hardware a [`super::PlanRequest`] plans against: a homogeneous
+/// pool of `devices` GPUs of one [`DeviceClass`] connected at
+/// `interconnect_gbps`. (Heterogeneous pools are the next scenario this
+/// type exists to make expressible.)
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    /// Total GPU count the planner may occupy.
+    pub devices: usize,
+    pub device: DeviceClass,
+    /// Cross-stage interconnect bandwidth in decimal GB/s.
+    pub interconnect_gbps: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's §6.1 testbed: 16 × A40. This is the default every
+    /// entry point falls back to, and it reproduces the pre-redesign
+    /// constants exactly (0.5 ms comm hop, 40 GB budget, 0.67 MFU).
+    pub fn a40_default() -> Self {
+        ClusterSpec {
+            name: "a40".to_string(),
+            devices: 16,
+            device: DeviceClass::a40(),
+            interconnect_gbps: A40_INTERCONNECT_GBPS,
+        }
+    }
+
+    /// Same device class and interconnect, different pool size.
+    pub fn with_devices(mut self, devices: usize) -> Self {
+        self.devices = devices;
+        self
+    }
+
+    /// The throughput model [`crate::cost`] consumes.
+    pub fn device_model(&self) -> Device {
+        self.device.time_model()
+    }
+
+    /// Per-device memory budget the capacity checks compare against.
+    pub fn mem_budget_bytes(&self) -> u64 {
+        self.device.mem_bytes
+    }
+
+    /// Milliseconds one cross-stage activation/gradient hop costs:
+    /// [`NOMINAL_HOP_BYTES`] over the interconnect. The A40 default
+    /// yields exactly the 0.5 ms the pre-`ClusterSpec` model charged.
+    pub fn comm_hop_ms(&self) -> f64 {
+        (NOMINAL_HOP_BYTES as f64 * 1e3) / (self.interconnect_gbps * 1e9)
+    }
+
+    /// Stable fingerprint of everything that can change a planning
+    /// answer — joins the tuner's cache signature, and is stored per
+    /// cache entry so an entry written for one cluster can never answer
+    /// for another. Deliberately excludes the display names.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "n={}|mem={}|flops={:.6e}|mfu={}|bw={}",
+            self.devices,
+            self.device.mem_bytes,
+            self.device.peak_flops,
+            self.device.mfu,
+            self.interconnect_gbps,
+        )
+    }
+
+    /// Reject specs the planning layers cannot price.
+    pub fn validate(&self) -> Result<(), PlanError> {
+        let bad = |m: String| Err(PlanError::InvalidCluster(m));
+        if self.devices == 0 {
+            return bad("`devices` must be >= 1".to_string());
+        }
+        if self.device.mem_bytes == 0 {
+            return bad("`device.mem_gb` must be > 0".to_string());
+        }
+        if !self.device.peak_flops.is_finite()
+            || self.device.peak_flops <= 0.0
+        {
+            return bad("`device.peak_tflops` must be > 0".to_string());
+        }
+        if !self.device.mfu.is_finite()
+            || self.device.mfu <= 0.0
+            || self.device.mfu > 1.0
+        {
+            return bad(format!(
+                "`device.mfu` must be in (0, 1], got {}",
+                self.device.mfu
+            ));
+        }
+        if !self.interconnect_gbps.is_finite()
+            || self.interconnect_gbps <= 0.0
+        {
+            return bad("`interconnect_gbps` must be > 0".to_string());
+        }
+        Ok(())
+    }
+
+    /// Serialize to the `--cluster` JSON schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("devices", Json::Int(self.devices as i64)),
+            (
+                "device",
+                Json::obj(vec![
+                    ("name", Json::Str(self.device.name.clone())),
+                    (
+                        "mem_gb",
+                        Json::Num(self.device.mem_bytes as f64 / 1e9),
+                    ),
+                    (
+                        "peak_tflops",
+                        Json::Num(self.device.peak_flops / 1e12),
+                    ),
+                    ("mfu", Json::Num(self.device.mfu)),
+                ]),
+            ),
+            ("interconnect_gbps", Json::Num(self.interconnect_gbps)),
+        ])
+    }
+
+    /// Parse the `--cluster` JSON schema (does not validate ranges; see
+    /// [`ClusterSpec::validate`]).
+    pub fn from_json(j: &Json) -> Result<ClusterSpec, String> {
+        let devices = j
+            .get("devices")
+            .and_then(Json::as_i64)
+            .and_then(|v| usize::try_from(v).ok())
+            .ok_or_else(|| {
+                "cluster JSON needs a non-negative integer `devices`"
+                    .to_string()
+            })?;
+        let d = j
+            .get("device")
+            .ok_or_else(|| "cluster JSON needs a `device` object".to_string())?;
+        let mem_gb = d.get("mem_gb").and_then(Json::as_f64).ok_or_else(|| {
+            "`device.mem_gb` (decimal GB per device) is required".to_string()
+        })?;
+        let peak_tflops =
+            d.get("peak_tflops").and_then(Json::as_f64).ok_or_else(|| {
+                "`device.peak_tflops` is required".to_string()
+            })?;
+        let mfu = d
+            .get("mfu")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| "`device.mfu` is required".to_string())?;
+        let interconnect_gbps = j
+            .get("interconnect_gbps")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                "`interconnect_gbps` (decimal GB/s) is required".to_string()
+            })?;
+        Ok(ClusterSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            devices,
+            device: DeviceClass {
+                name: d
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("custom")
+                    .to_string(),
+                mem_bytes: (mem_gb * 1e9) as u64,
+                peak_flops: peak_tflops * 1e12,
+                mfu,
+            },
+            interconnect_gbps,
+        })
+    }
+
+    /// Load and validate a spec from a `--cluster <file>` path.
+    pub fn load(path: &Path) -> Result<ClusterSpec, PlanError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            PlanError::InvalidCluster(format!(
+                "reading {}: {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text).map_err(|e| {
+            PlanError::InvalidCluster(format!(
+                "parsing {}: {e}",
+                path.display()
+            ))
+        })?;
+        let spec =
+            ClusterSpec::from_json(&j).map_err(PlanError::InvalidCluster)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a40_default_reproduces_the_pre_cluster_constants() {
+        let c = ClusterSpec::a40_default();
+        let d = c.device_model();
+        let legacy = Device::a40();
+        assert_eq!(d.peak_flops, legacy.peak_flops);
+        assert_eq!(d.mfu, legacy.mfu);
+        assert_eq!(c.mem_budget_bytes(), 40_000_000_000);
+        // the comm hop must be EXACTLY the 0.5 ms constant the planners
+        // charged before the redesign — golden-plan parity depends on it
+        assert_eq!(c.comm_hop_ms(), 0.5);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_spec() {
+        let mut c = ClusterSpec::a40_default().with_devices(8);
+        c.name = "a40x8".to_string();
+        let j = c.to_json();
+        let back = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(back, c);
+        // and through the text form too
+        let reparsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(ClusterSpec::from_json(&reparsed).unwrap(), c);
+    }
+
+    #[test]
+    fn fingerprint_tracks_semantics_not_names() {
+        let a = ClusterSpec::a40_default();
+        let mut renamed = a.clone();
+        renamed.name = "somewhere-else".to_string();
+        renamed.device.name = "A40-PCIe".to_string();
+        assert_eq!(a.fingerprint(), renamed.fingerprint());
+        let mut bigger = a.clone();
+        bigger.device.mem_bytes = 80_000_000_000;
+        assert_ne!(a.fingerprint(), bigger.fingerprint());
+        let mut slower_net = a.clone();
+        slower_net.interconnect_gbps = 16.0;
+        assert_ne!(a.fingerprint(), slower_net.fingerprint());
+        assert_ne!(
+            a.fingerprint(),
+            a.clone().with_devices(8).fingerprint()
+        );
+    }
+
+    #[test]
+    fn halved_bandwidth_doubles_the_comm_hop() {
+        let a = ClusterSpec::a40_default();
+        let mut slow = a.clone();
+        slow.interconnect_gbps = a.interconnect_gbps / 2.0;
+        assert_eq!(slow.comm_hop_ms(), 2.0 * a.comm_hop_ms());
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        let ok = ClusterSpec::a40_default();
+        let mut c = ok.clone();
+        c.devices = 0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.device.mfu = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.device.mem_bytes = 0;
+        assert!(c.validate().is_err());
+        let mut c = ok;
+        c.interconnect_gbps = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        let j = Json::parse(r#"{"devices": 8}"#).unwrap();
+        let err = ClusterSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("device"), "{err}");
+        assert!(ClusterSpec::load(Path::new(
+            "/nonexistent/cluster.json"
+        ))
+        .is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Typed errors at the planning-service boundary.
+//!
+//! Inside the crate `anyhow` remains the working currency; the facade
+//! converts to [`PlanError`] so programmatic callers can match on *what*
+//! failed instead of parsing strings.
+
+use std::fmt;
+
+/// Why a [`super::PlanRequest`] could not be answered.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// The [`super::ClusterSpec`] is unusable (bad file, bad field, or a
+    /// value outside the model's domain).
+    InvalidCluster(String),
+    /// The request itself is malformed (e.g. a zero frontier depth).
+    InvalidRequest(String),
+    /// Every candidate in the search space is infeasible on this
+    /// cluster — over the device budget or over the per-device memory.
+    NoFeasiblePlan { mllm: String, devices: usize },
+    /// The persistent plan cache could not be written.
+    Cache(String),
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::InvalidCluster(m) => {
+                write!(f, "invalid cluster spec: {m}")
+            }
+            PlanError::InvalidRequest(m) => {
+                write!(f, "invalid plan request: {m}")
+            }
+            PlanError::NoFeasiblePlan { mllm, devices } => write!(
+                f,
+                "no feasible plan for {mllm} on {devices} device(s): every \
+                 candidate exceeds the device budget or the per-device \
+                 memory capacity"
+            ),
+            PlanError::Cache(m) => write!(f, "plan cache error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure() {
+        let e = PlanError::NoFeasiblePlan {
+            mllm: "VLM-M".to_string(),
+            devices: 1,
+        };
+        let s = e.to_string();
+        assert!(s.contains("VLM-M") && s.contains("1 device"), "{s}");
+        assert!(PlanError::InvalidCluster("x".into())
+            .to_string()
+            .contains("cluster"));
+    }
+}

@@ -1,0 +1,336 @@
+//! The planning-service API: one typed facade over every planning entry
+//! point.
+//!
+//! ```text
+//! PlanRequest (builder)  ──►  PlanningService::plan()  ──►  PlanReport
+//!   MLLM composition             consults the cache,          chosen Plan,
+//!   ClusterSpec                  searches the joint            frontier,
+//!   objective                    space, simulates,             memory verdicts,
+//!   space overrides              prices comm off the           timeline summary,
+//!   cache policy                 cluster's bandwidth           provenance
+//! ```
+//!
+//! The CLI subcommands (`cornstarch plan/tune/memory`),
+//! [`crate::coordinator::tuned_plan`], the `reproduce` tuner experiment,
+//! and `examples/autotune.rs` are all thin wrappers over this module —
+//! the facade is the stable surface new scenarios (heterogeneous pools,
+//! multi-tenant serving, plan diffing) build on.
+//!
+//! [`ClusterSpec`] is the single source of hardware truth: per-device
+//! memory capacity, the flops/MFU time model, and interconnect bandwidth,
+//! loadable from JSON (`--cluster <file>`, see [`cluster`] for the
+//! schema). Errors at this boundary are the typed [`PlanError`], not
+//! `anyhow` strings.
+
+pub mod cluster;
+pub mod error;
+pub mod report;
+
+pub use cluster::{ClusterSpec, DeviceClass};
+pub use error::PlanError;
+pub use report::{PlanReport, Provenance, StageVerdict, TimelineSummary};
+
+use crate::model::MllmSpec;
+use crate::tuner::{
+    self, Objective, SearchSpace, TuneError, TuneRequest,
+};
+
+/// Where (and whether) answers persist between queries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Search fresh every time (an in-memory cache that dies with the
+    /// request).
+    Fresh,
+    /// Consult and fill the JSON plan cache at this path.
+    File(String),
+}
+
+/// A planning query: what to train, on what hardware, optimizing what.
+///
+/// Build one with [`PlanRequest::default_for`] and the chained setters;
+/// the defaults reproduce the paper's scenario (16 × A40, makespan
+/// objective, the §6.1 search space, no persistent cache).
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub mllm: MllmSpec,
+    pub cluster: ClusterSpec,
+    pub objective: Objective,
+    /// Max candidates to simulate; 0 = unlimited (exact over the space).
+    pub budget: usize,
+    pub threads: usize,
+    /// Frontier depth to search for and report.
+    pub top: usize,
+    pub cache: CachePolicy,
+    /// Full search-space override; `None` derives the space from the
+    /// cluster ([`SearchSpace::for_cluster`]). The [`PlanRequest::cluster`]
+    /// and [`PlanRequest::devices`] builders re-sync an override's device
+    /// pool and memory budget; the other bounds are the override's own.
+    pub space: Option<SearchSpace>,
+}
+
+impl PlanRequest {
+    /// The default request for an MLLM: the paper's 16 × A40 testbed,
+    /// makespan objective, fresh search. This reproduces what
+    /// `cornstarch plan <mllm> --strategy tuned` chose before the facade
+    /// existed.
+    pub fn default_for(mllm: MllmSpec) -> Self {
+        PlanRequest {
+            mllm,
+            cluster: ClusterSpec::a40_default(),
+            objective: Objective::Makespan,
+            budget: 0,
+            threads: tuner::default_threads(),
+            top: tuner::DEFAULT_TOP_K,
+            cache: CachePolicy::Fresh,
+            space: None,
+        }
+    }
+
+    /// Plan against this cluster instead of the A40 default. Like
+    /// [`PlanRequest::devices`], an existing space override is re-synced
+    /// to the new cluster's device pool and memory budget.
+    pub fn cluster(mut self, cluster: ClusterSpec) -> Self {
+        if let Some(space) = &mut self.space {
+            space.devices = cluster.devices;
+            space.memory_budget_bytes = Some(cluster.mem_budget_bytes());
+        }
+        self.cluster = cluster;
+        self
+    }
+
+    /// Resize the cluster's device pool (keeps the device class).
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.cluster.devices = devices;
+        if let Some(space) = &mut self.space {
+            space.devices = devices;
+        }
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Cap how many candidates may be simulated (0 = unlimited).
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Frontier depth to search for and report (>= 1).
+    pub fn top(mut self, top: usize) -> Self {
+        self.top = top;
+        self
+    }
+
+    /// Persist (and consult) the plan cache at `path`.
+    pub fn cache_file(mut self, path: &str) -> Self {
+        self.cache = CachePolicy::File(path.to_string());
+        self
+    }
+
+    /// Override the whole search space (see [`PlanRequest::space`]).
+    pub fn space(mut self, space: SearchSpace) -> Self {
+        self.space = Some(space);
+        self
+    }
+
+    /// The search space this request resolves to.
+    pub fn resolved_space(&self) -> SearchSpace {
+        self.space
+            .clone()
+            .unwrap_or_else(|| SearchSpace::for_cluster(&self.cluster))
+    }
+
+    fn to_tune_request(&self) -> TuneRequest {
+        TuneRequest {
+            spec: self.mllm.clone(),
+            cluster: self.cluster.clone(),
+            space: self.resolved_space(),
+            objective: self.objective,
+            budget: self.budget,
+            threads: self.threads.max(1),
+            top: self.top.max(1),
+            cache_path: match &self.cache {
+                CachePolicy::Fresh => None,
+                CachePolicy::File(p) => Some(p.clone()),
+            },
+        }
+    }
+}
+
+/// The planning service. Stateless today (state lives in the request's
+/// cache policy); the type exists so the surface can grow configuration
+/// without breaking callers.
+#[derive(Clone, Debug, Default)]
+pub struct PlanningService;
+
+impl PlanningService {
+    pub fn new() -> Self {
+        PlanningService
+    }
+
+    /// Answer a [`PlanRequest`]: validate, consult the cache, search if
+    /// needed, and package the winner as a [`PlanReport`].
+    pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
+        req.cluster.validate()?;
+        if req.top == 0 {
+            return Err(PlanError::InvalidRequest(
+                "frontier depth `top` must be >= 1".to_string(),
+            ));
+        }
+        let treq = req.to_tune_request();
+        let outcome = tuner::tune_with(&treq).map_err(|e| match e {
+            TuneError::NoFeasiblePlan { mllm, devices } => {
+                PlanError::NoFeasiblePlan { mllm, devices }
+            }
+            TuneError::CacheIo(m) => PlanError::Cache(m),
+        })?;
+        let plan = outcome.instantiate(&req.mllm, &req.cluster);
+        // The cache may hold a deeper frontier than this request asked
+        // for (a hit only requires `satisfies_top`); trim so the same
+        // request answers with the same shape warm or cold.
+        let mut frontier = outcome.entry.frontier;
+        frontier.truncate(req.top.max(1));
+        let m = plan.simulate();
+        let budget_bytes = req.cluster.mem_budget_bytes();
+        let stage_verdicts = plan
+            .stage_names
+            .iter()
+            .zip(&plan.stage_mem)
+            .map(|(name, sm)| StageVerdict {
+                stage: name.clone(),
+                peak_bytes: sm.peak_bytes(),
+                budget_bytes,
+            })
+            .collect();
+        let timeline = TimelineSummary {
+            iteration_ms: m.iteration_ms,
+            throughput: m.throughput,
+            throughput_per_gpu: m.throughput_per_gpu,
+            bubble_ratio: m.bubble_ratio,
+            n_gpus: plan.n_gpus,
+            peak_device_bytes: plan.peak_device_bytes(),
+        };
+        let provenance = Provenance {
+            planner: "tuner",
+            cache_hit: outcome.cache_hit,
+            signature: treq.signature(),
+            cluster: req.cluster.fingerprint(),
+            total_candidates: outcome.total_candidates,
+            evaluated: outcome.evaluated,
+            pruned: outcome.pruned,
+        };
+        Ok(PlanReport {
+            plan,
+            frontier,
+            stage_verdicts,
+            timeline,
+            provenance,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Size;
+
+    #[test]
+    fn default_request_is_the_paper_scenario() {
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::M));
+        assert_eq!(req.cluster, ClusterSpec::a40_default());
+        assert_eq!(req.cluster.devices, 16);
+        assert_eq!(req.objective, Objective::Makespan);
+        assert_eq!(req.cache, CachePolicy::Fresh);
+        let space = req.resolved_space();
+        assert_eq!(space.devices, 16);
+        assert_eq!(
+            space.memory_budget_bytes,
+            Some(req.cluster.mem_budget_bytes())
+        );
+    }
+
+    #[test]
+    fn builders_thread_devices_into_an_overridden_space() {
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S));
+        let space = req.resolved_space();
+        let req = req.space(space).devices(8);
+        assert_eq!(req.cluster.devices, 8);
+        assert_eq!(req.resolved_space().devices, 8);
+    }
+
+    #[test]
+    fn cluster_builder_resyncs_an_overridden_space() {
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S));
+        let space = req.resolved_space(); // A40 bounds: 16 dev, 40 GB
+        let mut big = ClusterSpec::a40_default().with_devices(8);
+        big.device.mem_bytes = 80_000_000_000;
+        let req = req.space(space).cluster(big);
+        let resolved = req.resolved_space();
+        assert_eq!(resolved.devices, 8);
+        assert_eq!(resolved.memory_budget_bytes, Some(80_000_000_000));
+    }
+
+    #[test]
+    fn invalid_cluster_is_a_typed_error() {
+        let mut req =
+            PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S));
+        req.cluster.device.mfu = 0.0;
+        match PlanningService::new().plan(&req) {
+            Err(PlanError::InvalidCluster(_)) => {}
+            other => panic!("expected InvalidCluster, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_pool_is_a_typed_error() {
+        // A whole VLM-M cannot fit one 40 GB device: the capacity filter
+        // rejects everything, and the facade says so in a typed way.
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::M))
+            .devices(1)
+            .threads(2);
+        match PlanningService::new().plan(&req) {
+            Err(PlanError::NoFeasiblePlan { devices, .. }) => {
+                assert_eq!(devices, 1)
+            }
+            other => panic!("expected NoFeasiblePlan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_carries_verdicts_timeline_and_provenance() {
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+            .devices(8)
+            .threads(2);
+        let report = PlanningService::new().plan(&req).unwrap();
+        assert!(!report.provenance.cache_hit);
+        assert!(report.provenance.evaluated >= 1);
+        assert_eq!(report.provenance.planner, "tuner");
+        assert_eq!(
+            report.provenance.cluster,
+            req.cluster.fingerprint()
+        );
+        assert_eq!(
+            report.stage_verdicts.len(),
+            report.plan.stage_names.len()
+        );
+        assert!(report.fits_budget(), "winner must fit its own cluster");
+        assert!(report.timeline.iteration_ms > 0.0);
+        assert!(
+            (report.timeline.iteration_ms
+                - report.winner().iteration_ms)
+                .abs()
+                < 1e-6
+        );
+        let text = report.render();
+        assert!(text.contains("plan:"), "{text}");
+        assert!(text.contains("fits"), "{text}");
+    }
+}

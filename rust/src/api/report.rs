@@ -1,0 +1,154 @@
+//! `PlanReport` — everything a planning answer carries: the chosen
+//! executable [`Plan`], the ranked frontier it was drawn from, per-stage
+//! memory verdicts against the cluster budget, the simulated timeline
+//! summary, and provenance (which planner produced it, whether the cache
+//! answered, how much was searched).
+
+use crate::memory;
+use crate::modality::Plan;
+use crate::tuner::PlanSummary;
+
+/// One stage's memory verdict against the cluster's per-device budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageVerdict {
+    /// Stage name (`enc:vision[0]`, `llm[2]`, …).
+    pub stage: String,
+    /// Modeled peak per-GPU bytes of this stage.
+    pub peak_bytes: u64,
+    /// The cluster's per-device budget the peak is held against.
+    pub budget_bytes: u64,
+}
+
+impl StageVerdict {
+    pub fn fits(&self) -> bool {
+        self.peak_bytes <= self.budget_bytes
+    }
+
+    /// Bytes of headroom (negative when over budget).
+    pub fn headroom_bytes(&self) -> i64 {
+        self.budget_bytes as i64 - self.peak_bytes as i64
+    }
+}
+
+/// Simulated-iteration summary of the chosen plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineSummary {
+    pub iteration_ms: f64,
+    /// Samples per second (whole job).
+    pub throughput: f64,
+    /// The paper's normalized metric: input/s per GPU.
+    pub throughput_per_gpu: f64,
+    /// 1 − mean(device busy / makespan).
+    pub bubble_ratio: f64,
+    pub n_gpus: usize,
+    /// Modeled peak per-GPU bytes over all stages.
+    pub peak_device_bytes: u64,
+}
+
+/// Where the answer came from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    /// Which planner produced the answer (`"tuner"` today; the field
+    /// exists so future planners can be told apart).
+    pub planner: &'static str,
+    /// True when the persistent cache answered without a search.
+    pub cache_hit: bool,
+    /// The cache signature the request resolved to.
+    pub signature: String,
+    /// The [`super::ClusterSpec::fingerprint`] the plan is valid for.
+    pub cluster: String,
+    /// Search statistics — all zero on a cache hit.
+    pub total_candidates: usize,
+    pub evaluated: usize,
+    pub pruned: usize,
+}
+
+/// The planning service's answer (see [`super::PlanningService::plan`]).
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    /// The chosen, executable stage DAG.
+    pub plan: Plan,
+    /// Ranked alternatives, best first; `frontier[0]` is the winner.
+    /// At most the request's `top` entries, even when the cache holds a
+    /// deeper frontier — the same request answers with the same shape
+    /// warm or cold.
+    pub frontier: Vec<PlanSummary>,
+    /// Per-stage memory verdicts, parallel to `plan.stage_names`.
+    pub stage_verdicts: Vec<StageVerdict>,
+    pub timeline: TimelineSummary,
+    pub provenance: Provenance,
+}
+
+impl PlanReport {
+    /// The winning plan's summary (candidate + scored metrics).
+    pub fn winner(&self) -> &PlanSummary {
+        &self.frontier[0]
+    }
+
+    /// Does every stage fit the cluster's per-device budget?
+    pub fn fits_budget(&self) -> bool {
+        self.stage_verdicts.iter().all(StageVerdict::fits)
+    }
+
+    /// Human-readable rendering (the CLI's `tune` output core).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let w = self.winner();
+        let _ = writeln!(s, "plan: {}", w.candidate.label());
+        let _ = writeln!(
+            s,
+            "  provenance: {} ({}) | {} candidates, {} simulated, {} pruned",
+            self.provenance.planner,
+            if self.provenance.cache_hit { "cache hit" } else { "searched" },
+            self.provenance.total_candidates,
+            self.provenance.evaluated,
+            self.provenance.pruned,
+        );
+        let _ = writeln!(s, "  cluster: {}", self.provenance.cluster);
+        let _ = writeln!(
+            s,
+            "  iteration {:.1} ms | {:.3} input/s/GPU | {} GPUs | bubble \
+             {:.1}% | peak {:.2} GB/GPU",
+            self.timeline.iteration_ms,
+            self.timeline.throughput_per_gpu,
+            self.timeline.n_gpus,
+            self.timeline.bubble_ratio * 100.0,
+            memory::gb(self.timeline.peak_device_bytes),
+        );
+        for v in &self.stage_verdicts {
+            let _ = writeln!(
+                s,
+                "    {:<16} {:>7.2} GB / {:.0} GB {}",
+                v.stage,
+                memory::gb(v.peak_bytes),
+                memory::gb(v.budget_bytes),
+                if v.fits() { "fits" } else { "OOM" },
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_verdict_headroom_signs() {
+        let fits = StageVerdict {
+            stage: "llm[0]".to_string(),
+            peak_bytes: 30,
+            budget_bytes: 40,
+        };
+        assert!(fits.fits());
+        assert_eq!(fits.headroom_bytes(), 10);
+        let oom = StageVerdict {
+            stage: "llm[0]".to_string(),
+            peak_bytes: 50,
+            budget_bytes: 40,
+        };
+        assert!(!oom.fits());
+        assert_eq!(oom.headroom_bytes(), -10);
+    }
+}

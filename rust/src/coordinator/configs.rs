@@ -245,6 +245,8 @@ pub fn validate_llm_l_memory() {
     use crate::modality::{planner, Strategy};
     use crate::model::MllmSpec;
 
+    let a40_budget =
+        crate::api::ClusterSpec::a40_default().mem_budget_bytes();
     let plan_for = |c: &FrozenCfg, tp: usize, cp: usize| {
         let spec = if c.vision {
             MllmSpec::vlm(c.llm, c.enc)
@@ -269,7 +271,7 @@ pub fn validate_llm_l_memory() {
             single_enc_name(c.vision, c.enc)
         );
         let plan = plan_for(c, 4, 2);
-        if let Err(e) = memory::check(&plan, memory::A40_BUDGET_BYTES) {
+        if let Err(e) = memory::check(&plan, a40_budget) {
             panic!(
                 "Table 9 {} @ LLM-L no longer fits at tp=4/cp=2: {e}",
                 single_enc_name(c.vision, c.enc)
@@ -283,8 +285,7 @@ pub fn validate_llm_l_memory() {
         .find(|c| c.llm == Size::L && c.vision && c.enc == Size::L)
         .expect("Table 9 carries a VLM-L @ LLM-L row");
     assert!(
-        memory::check(&plan_for(witness, 4, 1), memory::A40_BUDGET_BYTES)
-            .is_err(),
+        memory::check(&plan_for(witness, 4, 1), a40_budget).is_err(),
         "VLM-L @ LLM-L with CP off should exceed the A40 budget \
          (Appendix D)"
     );

@@ -590,6 +590,8 @@ pub fn auto_frontier(spec: &MllmSpec, groups: usize) -> Table {
 /// pins tp=4 for LLM-L. Returns `(tp, cp, peak_bytes, fits)` rows.
 pub fn memory_feasibility() -> (Table, Vec<(usize, usize, u64, bool)>) {
     validate_llm_l_memory();
+    let a40_budget =
+        crate::api::ClusterSpec::a40_default().mem_budget_bytes();
     let row = TABLE9
         .iter()
         .find(|c| c.llm == Size::L && c.vision && c.enc == Size::L)
@@ -600,7 +602,7 @@ pub fn memory_feasibility() -> (Table, Vec<(usize, usize, u64, bool)>) {
         &format!(
             "Appendix D — LLM-L memory feasibility (VLM-L, aware split \
              llm_pp={llm_pp}/enc_pp={enc_pp}, {:.0} GB A40 budget)",
-            memory::gb(memory::A40_BUDGET_BYTES)
+            memory::gb(a40_budget)
         ),
         &["tp", "cp", "peak GB/GPU", "worst stage", "within budget"],
     );
@@ -617,7 +619,7 @@ pub fn memory_feasibility() -> (Table, Vec<(usize, usize, u64, bool)>) {
             Device::a40(),
         );
         let peak = plan.peak_device_bytes();
-        let fits = peak <= memory::A40_BUDGET_BYTES;
+        let fits = peak <= a40_budget;
         let worst = plan
             .stage_mem
             .iter()
@@ -638,15 +640,17 @@ pub fn memory_feasibility() -> (Table, Vec<(usize, usize, u64, bool)>) {
 }
 
 /// Autotuner vs the fixed-policy planners at a device budget: each
-/// baseline at its default split, then the searched best. The tuned row
-/// must never lose to a baseline on iteration time — the tuner's space is
-/// a superset of the baselines' configurations.
+/// baseline at its default split, then the searched best (reached
+/// through the planning facade, [`crate::api::PlanningService`], like
+/// every other tuned-plan consumer). The tuned row must never lose to a
+/// baseline on iteration time — the tuner's space is a superset of the
+/// baselines' configurations.
 pub fn tuner_vs_baselines(
     spec: &MllmSpec,
     devices: usize,
     budget: usize,
 ) -> (Table, Vec<(String, f64)>) {
-    use crate::tuner::{tune, Objective, TuneRequest};
+    use crate::api::{PlanRequest, PlanningService};
     let mm = MultimodalModule::from_spec(spec);
     let n_enc = mm.encoders.len();
     let groups = devices / 4; // baselines use tp=2, cp=2
@@ -685,12 +689,12 @@ pub fn tuner_vs_baselines(
         ]);
         rows.push((strategy.name().to_string(), m.iteration_ms));
     }
-    let mut req = TuneRequest::new(spec.clone(), devices);
-    req.objective = Objective::Makespan;
-    req.budget = budget;
-    match tune(&req) {
-        Ok(out) => {
-            let best = out.entry.best();
+    let req = PlanRequest::default_for(spec.clone())
+        .devices(devices)
+        .budget(budget);
+    match PlanningService::new().plan(&req) {
+        Ok(report) => {
+            let best = report.winner();
             t.row(&[
                 format!("tuned: {}", best.candidate.label()),
                 format!("{:.1}", best.iteration_ms),

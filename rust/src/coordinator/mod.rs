@@ -7,32 +7,32 @@ pub mod experiments;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cost::Device;
-use crate::modality::Plan;
+use crate::api::{PlanReport, PlanRequest, PlanningService};
 use crate::model::{MllmSpec, Size};
 use crate::runtime::Manifest;
 use crate::train::{
     FrozenPolicy, PipelineTrainer, SyntheticDataset, Trainer,
 };
-use crate::tuner::{self, TuneOutcome, TuneRequest};
 use crate::util::json::Json;
 
 pub use experiments::{E2eRow, FrozenRow, MaskType};
 
-/// The tuner hook: resolve the fastest known plan for `spec` on `devices`
-/// GPUs, consulting (and filling) the persistent cache when given one.
-/// `train` and `reproduce` callers get an executable [`Plan`] plus the
-/// [`TuneOutcome`] that says whether it came from the cache.
+/// The tuner hook — a thin wrapper over the planning facade
+/// ([`crate::api::PlanningService`]): resolve the fastest known plan for
+/// `spec` on `devices` A40s, consulting (and filling) the persistent
+/// cache when given one. Callers get the full [`PlanReport`] — the
+/// executable plan, the frontier, the memory verdicts, and the
+/// provenance that says whether the cache answered.
 pub fn tuned_plan(
     spec: &MllmSpec,
     devices: usize,
     cache: Option<&str>,
-) -> Result<(Plan, TuneOutcome)> {
-    let mut req = TuneRequest::new(spec.clone(), devices);
-    req.cache_path = cache.map(|s| s.to_string());
-    let outcome = tuner::tune(&req)?;
-    let plan = outcome.instantiate(spec, Device::a40());
-    Ok((plan, outcome))
+) -> Result<PlanReport> {
+    let mut req = PlanRequest::default_for(spec.clone()).devices(devices);
+    if let Some(p) = cache {
+        req = req.cache_file(p);
+    }
+    Ok(PlanningService::new().plan(&req)?)
 }
 
 /// Run one named experiment (or `all`). Returns the rendered report.
@@ -335,13 +335,13 @@ mod tests {
     #[test]
     fn tuned_plan_hook_returns_an_executable_plan() {
         let spec = MllmSpec::vlm(Size::M, Size::S);
-        let (plan, outcome) = tuned_plan(&spec, 8, None).unwrap();
-        assert!(!outcome.cache_hit);
-        assert!(plan.n_gpus <= 8);
-        let m = plan.simulate();
+        let report = tuned_plan(&spec, 8, None).unwrap();
+        assert!(!report.provenance.cache_hit);
+        assert!(report.plan.n_gpus <= 8);
+        let m = report.plan.simulate();
         assert!(
-            (m.iteration_ms - outcome.entry.best().iteration_ms).abs()
-                < 1e-6
+            (m.iteration_ms - report.winner().iteration_ms).abs() < 1e-6
         );
+        assert!(report.fits_budget());
     }
 }

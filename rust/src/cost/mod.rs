@@ -32,7 +32,13 @@ impl Device {
         // bs=2×1577 tokens) is reproduced within ~5% (see cost::tests).
         // This is a single scalar calibration — every result we derive from
         // the model is a *ratio* of times, which the scalar cancels out of.
-        Device { peak_flops: 149.7e12, mfu: 0.67 }
+        // The canonical numbers live in `crate::api::cluster` so the
+        // ClusterSpec the planning facade threads everywhere is the single
+        // source of hardware truth.
+        Device {
+            peak_flops: crate::api::cluster::A40_PEAK_FLOPS,
+            mfu: crate::api::cluster::A40_MFU,
+        }
     }
 
     pub fn effective_flops(&self) -> f64 {

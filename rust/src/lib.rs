@@ -34,10 +34,17 @@
 //!   pipeline depth × TP/CP × microbatches × frozen policy) with
 //!   cost-model lower-bound pruning, multi-threaded simulation, and a
 //!   JSON-persisted plan cache keyed by a workload/cluster signature.
+//! * [`api`] — the planning-service facade: [`api::PlanRequest`] →
+//!   [`api::PlanningService::plan`] → [`api::PlanReport`], with
+//!   [`api::ClusterSpec`] as the single source of hardware truth
+//!   (per-device memory, flops/MFU, interconnect bandwidth) and typed
+//!   [`api::PlanError`]s at the boundary. The CLI, the coordinator hook,
+//!   and the examples are thin wrappers over it.
 //! * [`coordinator`] — leader entrypoint gluing plan → build → run, and
 //!   the `reproduce` harness that regenerates every evaluation table and
 //!   figure of the paper.
 
+pub mod api;
 pub mod util;
 pub mod model;
 pub mod bam;

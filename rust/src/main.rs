@@ -13,11 +13,17 @@
 //!
 //! `<mllm>` names follow §6.1: `VLM-M`, `ALM-L`, `VALM-SM`…, optionally
 //! prefixed with an LLM size (`llm=S`).
+//!
+//! `plan`, `tune`, and `memory` accept `--cluster <file>` (a JSON
+//! `ClusterSpec`: per-device memory, flops/MFU, interconnect bandwidth —
+//! see `examples/clusters/`); without it they plan for the paper's
+//! 16 × A40 testbed. All three are thin wrappers over the planning
+//! facade (`cornstarch::api`).
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use cornstarch::api::{ClusterSpec, PlanRequest, PlanningService};
 use cornstarch::coordinator::{self, TrainOpts};
-use cornstarch::cost::Device;
 use cornstarch::memory;
 use cornstarch::modality::{
     planner, MultimodalModule, MultimodalParallelSpec, Plan, Strategy,
@@ -25,9 +31,7 @@ use cornstarch::modality::{
 use cornstarch::model::{MllmSpec, Size};
 use cornstarch::runtime::Manifest;
 use cornstarch::train::FrozenPolicy;
-use cornstarch::tuner::{
-    tune, FrozenSetting, Objective, TuneRequest,
-};
+use cornstarch::tuner::{FrozenSetting, Objective};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -57,22 +61,33 @@ fn run(args: &[String]) -> Result<()> {
         }
         "plan" => {
             let spec = parse_mllm(rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"), rest)?;
+            let cluster =
+                parse_cluster(rest)?.unwrap_or_else(ClusterSpec::a40_default);
             let strategy_flag = flag(rest, "--strategy");
             if strategy_flag.as_deref() == Some("tuned") {
-                // Consume the tuner (and its cache) through the
-                // coordinator hook.
-                let devices = flag_num(rest, "--devices")?.unwrap_or(16);
-                let cache = flag(rest, "--cache");
-                let (plan, outcome) =
-                    coordinator::tuned_plan(&spec, devices, cache.as_deref())?;
+                // Thin wrapper over the planning facade (same request
+                // the programmatic `PlanningService::plan` answers).
+                let mut req =
+                    PlanRequest::default_for(spec.clone()).cluster(cluster);
+                if let Some(d) = flag_num(rest, "--devices")? {
+                    req = req.devices(d);
+                }
+                if let Some(c) = flag(rest, "--cache") {
+                    req = req.cache_file(&c);
+                }
+                let report = PlanningService::new().plan(&req)?;
                 println!(
                     "{} / tuned on {} GPUs ({})",
                     spec.name(),
-                    devices,
-                    if outcome.cache_hit { "cache hit" } else { "searched" }
+                    req.cluster.devices,
+                    if report.provenance.cache_hit {
+                        "cache hit"
+                    } else {
+                        "searched"
+                    }
                 );
-                println!("  {}", outcome.entry.best().candidate.label());
-                print_plan(&plan);
+                println!("  {}", report.winner().candidate.label());
+                print_plan(&report.plan);
                 return Ok(());
             }
             let strategy = match strategy_flag.as_deref() {
@@ -84,13 +99,15 @@ fn run(args: &[String]) -> Result<()> {
             let enc_pp = flag_num(rest, "--enc-pp")?.unwrap_or(1);
             let mm = MultimodalModule::from_spec(&spec);
             let n_enc = mm.encoders.len();
-            let ps = MultimodalParallelSpec::paper_default(
+            let ps = MultimodalParallelSpec::for_cluster(
                 &vec![enc_pp; n_enc],
                 llm_pp,
                 flag_num(rest, "--tp")?.unwrap_or(2),
                 flag_num(rest, "--cp")?.unwrap_or(2),
+                &cluster,
             );
-            let plan = planner::plan(strategy, &mm, &ps, Device::a40());
+            let plan =
+                planner::plan(strategy, &mm, &ps, cluster.device_model());
             println!("{} / {}", spec.name(), strategy.name());
             print_plan(&plan);
         }
@@ -99,51 +116,75 @@ fn run(args: &[String]) -> Result<()> {
                 rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"),
                 rest,
             )?;
-            let devices = flag_num(rest, "--devices")?.unwrap_or(16);
-            let mut req = TuneRequest::new(spec.clone(), devices);
+            let cluster =
+                parse_cluster(rest)?.unwrap_or_else(ClusterSpec::a40_default);
+            let mut req =
+                PlanRequest::default_for(spec.clone()).cluster(cluster);
+            if let Some(d) = flag_num(rest, "--devices")? {
+                req = req.devices(d);
+            }
             if let Some(b) = flag_num(rest, "--budget")? {
-                req.budget = b;
+                req = req.budget(b);
             }
             if let Some(t) = flag_num(rest, "--threads")? {
-                req.threads = t.max(1);
+                req = req.threads(t);
             }
-            req.cache_path = flag(rest, "--cache");
+            if let Some(c) = flag(rest, "--cache") {
+                req = req.cache_file(&c);
+            }
             if let Some(o) = flag(rest, "--objective") {
-                req.objective = Objective::parse(&o).ok_or_else(|| {
+                req = req.objective(Objective::parse(&o).ok_or_else(|| {
                     anyhow!("bad --objective {o:?} (makespan|tput-per-gpu)")
-                })?;
+                })?);
             }
             if let Some(p) = flag(rest, "--policy") {
                 let f = FrozenSetting::parse(&p).ok_or_else(|| {
                     anyhow!("bad --policy {p:?} (paper|all|frozen)")
                 })?;
-                req.space.frozen_choices = vec![f];
+                let mut space = req.resolved_space();
+                space.frozen_choices = vec![f];
+                req = req.space(space);
             }
             if has_flag(rest, "--sweep-policies") {
-                req.space.frozen_choices = FrozenSetting::ALL.to_vec();
+                let mut space = req.resolved_space();
+                space.frozen_choices = FrozenSetting::ALL.to_vec();
+                req = req.space(space);
             }
             let top = flag_num(rest, "--top")?.unwrap_or(1).max(1);
-            req.top = req.top.max(top);
+            let depth = req.top.max(top);
+            req = req.top(depth);
             let t0 = std::time::Instant::now();
-            let out = tune(&req)?;
+            let report = PlanningService::new().plan(&req)?;
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-            let e = out.entry.best();
+            let e = report.winner();
             println!(
-                "{} on {} GPUs — objective {}",
+                "{} on {} ({} GPUs) — objective {}",
                 spec.name(),
-                devices,
+                req.cluster.name,
+                req.cluster.devices,
                 req.objective.key()
             );
-            if out.cache_hit {
+            println!(
+                "  cluster: {:.0} GB/device, {:.1} TF peak × {} MFU, \
+                 {} GB/s interconnect",
+                memory::gb(req.cluster.mem_budget_bytes()),
+                req.cluster.device.peak_flops / 1e12,
+                req.cluster.device.mfu,
+                req.cluster.interconnect_gbps
+            );
+            if report.provenance.cache_hit {
                 println!(
-                    "  cache hit ({}) — no simulation",
-                    req.cache_path.as_deref().unwrap_or("in-memory")
+                    "  cache hit ({}) — no search",
+                    flag(rest, "--cache").as_deref().unwrap_or("in-memory")
                 );
             } else {
                 println!(
                     "  searched {} candidates: {} simulated, {} pruned \
                      by lower bound ({:.0} ms wall)",
-                    out.total_candidates, out.evaluated, out.pruned, wall_ms
+                    report.provenance.total_candidates,
+                    report.provenance.evaluated,
+                    report.provenance.pruned,
+                    wall_ms
                 );
             }
             println!("  best: {}", e.candidate.label());
@@ -157,9 +198,11 @@ fn run(args: &[String]) -> Result<()> {
                 e.cp_algorithm
             );
             if top > 1 {
-                println!("  frontier (top {}):", top.min(out.entry.frontier.len()));
-                for (i, p) in
-                    out.entry.frontier.iter().take(top).enumerate()
+                println!(
+                    "  frontier (top {}):",
+                    top.min(report.frontier.len())
+                );
+                for (i, p) in report.frontier.iter().take(top).enumerate()
                 {
                     println!(
                         "    #{}: {:.1} ms | {:.3} in/s/GPU | {} GPUs | \
@@ -173,14 +216,15 @@ fn run(args: &[String]) -> Result<()> {
                     );
                 }
             }
-            let plan = out.instantiate(&spec, Device::a40());
-            print_plan(&plan);
+            print_plan(&report.plan);
         }
         "memory" => {
             let spec = parse_mllm(
                 rest.first().map(|s| s.as_str()).unwrap_or("VLM-L"),
                 rest,
             )?;
+            let cluster =
+                parse_cluster(rest)?.unwrap_or_else(ClusterSpec::a40_default);
             let strategy = match flag(rest, "--strategy").as_deref() {
                 None => Strategy::Cornstarch,
                 Some(s) => Strategy::from_key(s)
@@ -192,7 +236,7 @@ fn run(args: &[String]) -> Result<()> {
                 flag_num(rest, "--microbatches")?.unwrap_or(24);
             let budget = flag_num(rest, "--budget-gb")?
                 .map(|g| g as u64 * 1_000_000_000)
-                .unwrap_or(memory::A40_BUDGET_BYTES);
+                .unwrap_or_else(|| cluster.mem_budget_bytes());
             let plan = planner::plan_uniform(
                 strategy,
                 &spec,
@@ -201,7 +245,7 @@ fn run(args: &[String]) -> Result<()> {
                 flag_num(rest, "--tp")?.unwrap_or(2),
                 flag_num(rest, "--cp")?.unwrap_or(2),
                 microbatches,
-                Device::a40(),
+                cluster.device_model(),
             );
             println!(
                 "{} / {} — {} microbatches",
@@ -310,16 +354,29 @@ fn print_help() {
          train [--model M] [--steps N] [--microbatches N] [--lr X]\n        \
          [--single-process] [--policy paper|all|frozen] [--log-json P]\n  \
          plan <MLLM> [--strategy S|tuned] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
-         [--devices N] [--cache P]      (tuned strategy only)\n  \
-         tune <MLLM> [--devices N] [--budget K] [--cache P] [--threads N]\n        \
+         [--cluster F] [--devices N] [--cache P]   (tuned strategy only)\n  \
+         tune <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
          [--objective makespan|tput-per-gpu] [--policy paper|all|frozen]\n        \
          [--sweep-policies] [--top N]   (top-N frontier from one search)\n  \
          memory <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
-         [--microbatches N] [--budget-gb G]\n  \
+         [--cluster F] [--microbatches N] [--budget-gb G]\n  \
          auto <MLLM> [--groups N]\n  \
          attn-check [--artifact attn512] [--repeats N]\n  \
          list-models"
     );
+}
+
+/// `--cluster <file>`: load a JSON `ClusterSpec` (`None` when the flag is
+/// absent — callers fall back to the A40 testbed default).
+fn parse_cluster(args: &[String]) -> Result<Option<ClusterSpec>> {
+    match flag(args, "--cluster") {
+        Some(p) => {
+            let spec = ClusterSpec::load(std::path::Path::new(&p))
+                .with_context(|| format!("loading cluster spec {p}"))?;
+            Ok(Some(spec))
+        }
+        None => Ok(None),
+    }
 }
 
 fn flag(args: &[String], name: &str) -> Option<String> {

@@ -214,6 +214,22 @@ impl MultimodalParallelSpec {
         }
     }
 
+    /// [`Self::paper_default`] with the cross-stage comm hop priced off a
+    /// cluster's interconnect bandwidth instead of the paper constant.
+    /// The A40 default cluster reproduces the 0.5 ms constant exactly, so
+    /// default-cluster plans are byte-identical to `paper_default` ones.
+    pub fn for_cluster(
+        encoder_pp: &[usize],
+        llm_pp: usize,
+        tp: usize,
+        cp: usize,
+        cluster: &crate::api::ClusterSpec,
+    ) -> Self {
+        let mut s = Self::paper_default(encoder_pp, llm_pp, tp, cp);
+        s.comm_ms = cluster.comm_hop_ms();
+        s
+    }
+
     /// `apply()` from Listing 1: parallelize the MLLM with Cornstarch's
     /// multimodality-aware planner (modality parallelism + frozen-aware
     /// partitioning). Baselines are reachable via [`planner::plan`].
@@ -277,6 +293,19 @@ mod tests {
         assert_eq!(s.gpus(), 12);
         let mspec = MultimodalParallelSpec::paper_default(&[1, 1], 4, 2, 2);
         assert_eq!(mspec.total_gpus(), (4 + 1 + 1) * 4);
+    }
+
+    #[test]
+    fn for_cluster_prices_comm_off_the_bandwidth() {
+        let a40 = crate::api::ClusterSpec::a40_default();
+        let def = MultimodalParallelSpec::paper_default(&[1], 4, 2, 2);
+        let clu = MultimodalParallelSpec::for_cluster(&[1], 4, 2, 2, &a40);
+        // golden parity: the A40 default reproduces the paper constant
+        assert_eq!(clu.comm_ms, def.comm_ms);
+        let mut slow = a40.clone();
+        slow.interconnect_gbps /= 2.0;
+        let s = MultimodalParallelSpec::for_cluster(&[1], 4, 2, 2, &slow);
+        assert_eq!(s.comm_ms, 2.0 * def.comm_ms);
     }
 
     #[test]

@@ -2,14 +2,21 @@
 //!
 //! Entries are keyed by a *signature* — a deterministic string over the
 //! workload (MLLM composition, frozen policy, microbatching) and the
-//! cluster/search bounds ([`super::space::SearchSpace::fingerprint`] plus
-//! the objective and budget) — so a cached answer is only ever returned
-//! for an identical query. Each entry stores the search's **top-k
+//! search bounds ([`super::space::SearchSpace::fingerprint`] plus the
+//! objective and budget) — **and** by the cluster fingerprint
+//! ([`crate::api::ClusterSpec::fingerprint`]) the plan was searched for,
+//! stored on every entry: a lookup must match both, so an answer tuned
+//! for one hardware pool can never serve another (a different memory
+//! budget readmits different candidates; a different bandwidth prices
+//! comm differently). An entry whose stored fingerprint is *absent* is
+//! rejected at load, not defaulted — a pre-`ClusterSpec` entry must not
+//! satisfy a v3 lookup. Each entry stores the search's **top-k
 //! frontier** (best first), not just a single winner: consumers trade
 //! throughput against GPU count and memory headroom without
 //! re-searching. The store is a single JSON file written atomically
 //! (temp file + rename); a missing, corrupt, or version-skewed file
-//! degrades to an empty cache, never an error.
+//! (including the retired v2 layout) degrades to an empty cache, never
+//! an error.
 
 use std::path::{Path, PathBuf};
 
@@ -93,6 +100,10 @@ impl PlanSummary {
 #[derive(Clone, Debug, PartialEq)]
 pub struct CacheEntry {
     pub signature: String,
+    /// Fingerprint of the [`crate::api::ClusterSpec`] the entry was
+    /// searched for. A lookup must present the same fingerprint; entries
+    /// persisted without one (pre-v3 files) are rejected at load.
+    pub cluster: String,
     /// Best-first frontier; never empty — `frontier[0]` is the winner.
     pub frontier: Vec<PlanSummary>,
     /// Frontier depth the writing query searched for. May exceed
@@ -120,6 +131,7 @@ impl CacheEntry {
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("signature", Json::Str(self.signature.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
             ("top_k", Json::Int(self.top_k as i64)),
             ("evaluated", Json::Int(self.evaluated as i64)),
             (
@@ -144,6 +156,10 @@ impl CacheEntry {
         }
         Some(CacheEntry {
             signature: j.get("signature")?.as_str()?.to_string(),
+            // Absent fingerprint => reject the entry (the `?`), never
+            // default it: an entry that does not say what hardware it
+            // was tuned for must not answer any lookup.
+            cluster: j.get("cluster")?.as_str()?.to_string(),
             frontier,
             top_k: j
                 .get("top_k")?
@@ -169,7 +185,10 @@ pub struct PlanCache {
 /// incompatibly; files with another version are ignored wholesale.
 /// v2: top-k `frontier` per signature (was a flat single winner) plus
 /// per-plan `peak_mem_bytes` from the memory model.
-const CACHE_VERSION: i64 = 2;
+/// v3: per-entry `cluster` fingerprint ([`crate::api::ClusterSpec`]);
+/// entries without one are rejected at load, and v2 files degrade to an
+/// empty cache.
+const CACHE_VERSION: i64 = 3;
 
 impl PlanCache {
     pub fn in_memory() -> Self {
@@ -203,8 +222,17 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
-    pub fn lookup(&self, signature: &str) -> Option<&CacheEntry> {
-        self.entries.iter().find(|e| e.signature == signature)
+    /// Find the entry for `signature` that was searched for `cluster`
+    /// (a [`crate::api::ClusterSpec::fingerprint`]). Both must match: a
+    /// plan tuned for one hardware pool never answers for another.
+    pub fn lookup(
+        &self,
+        signature: &str,
+        cluster: &str,
+    ) -> Option<&CacheEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.signature == signature && e.cluster == cluster)
     }
 
     /// Insert or replace the entry for its signature.
@@ -281,11 +309,14 @@ mod tests {
     fn entry(sig: &str, llm_pp: usize) -> CacheEntry {
         CacheEntry {
             signature: sig.to_string(),
+            cluster: "n=16|mem=40000000000".to_string(),
             frontier: vec![summary(llm_pp), summary(llm_pp + 1)],
             top_k: 2,
             evaluated: 37,
         }
     }
+
+    const FP: &str = "n=16|mem=40000000000";
 
     fn tmp_path(name: &str) -> PathBuf {
         let mut p = std::env::temp_dir();
@@ -304,9 +335,11 @@ mod tests {
         c.save().unwrap();
         let c2 = PlanCache::load(&path);
         assert_eq!(c2.len(), 2);
-        assert_eq!(c2.lookup("sig-a"), Some(&entry("sig-a", 3)));
-        assert_eq!(c2.lookup("sig-b"), Some(&entry("sig-b", 4)));
-        assert!(c2.lookup("sig-c").is_none());
+        assert_eq!(c2.lookup("sig-a", FP), Some(&entry("sig-a", 3)));
+        assert_eq!(c2.lookup("sig-b", FP), Some(&entry("sig-b", 4)));
+        assert!(c2.lookup("sig-c", FP).is_none());
+        // same signature, other hardware: never an answer
+        assert!(c2.lookup("sig-a", "n=16|mem=80000000000").is_none());
         let _ = std::fs::remove_file(&path);
     }
 
@@ -318,7 +351,7 @@ mod tests {
         c.insert(entry("s", 2));
         c.save().unwrap();
         let c2 = PlanCache::load(&path);
-        let e = c2.lookup("s").unwrap();
+        let e = c2.lookup("s", FP).unwrap();
         assert_eq!(e.frontier.len(), 2);
         assert_eq!(e.best(), &e.frontier[0]);
         assert_eq!(e.best().candidate.llm_pp, 2);
@@ -344,7 +377,7 @@ mod tests {
         c.insert(entry("s", 2));
         c.insert(entry("s", 5));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.lookup("s").unwrap().best().candidate.llm_pp, 5);
+        assert_eq!(c.lookup("s", FP).unwrap().best().candidate.llm_pp, 5);
     }
 
     #[test]
@@ -359,8 +392,8 @@ mod tests {
         b.save().unwrap(); // must not drop sig-a
         let c = PlanCache::load(&path);
         assert_eq!(c.len(), 2);
-        assert!(c.lookup("sig-a").is_some());
-        assert!(c.lookup("sig-b").is_some());
+        assert!(c.lookup("sig-a", FP).is_some());
+        assert!(c.lookup("sig-b", FP).is_some());
         let _ = std::fs::remove_file(&path);
     }
 
@@ -375,8 +408,9 @@ mod tests {
 
     #[test]
     fn version_skew_is_ignored_wholesale() {
-        // Both a future version and the retired v1 single-winner layout
-        // degrade to an empty cache (and are rebuilt on the next save).
+        // A future version, the retired v1 single-winner layout, and the
+        // retired v2 cluster-less frontier layout all degrade to an
+        // empty cache (and are rebuilt on the next save).
         let path = tmp_path("version");
         std::fs::write(&path, r#"{"version":999,"entries":[{}]}"#).unwrap();
         assert!(PlanCache::load(&path).is_empty());
@@ -386,6 +420,37 @@ mod tests {
         )
         .unwrap();
         assert!(PlanCache::load(&path).is_empty());
+        std::fs::write(
+            &path,
+            r#"{"version":2,"entries":[{"signature":"s","top_k":1,"evaluated":5,"frontier":[{"strategy":"cornstarch","enc_pps":[1],"llm_pp":3,"tp":2,"cp":2,"microbatches":24,"frozen":"paper","iteration_ms":1.0,"throughput_per_gpu":0.1,"n_gpus":16,"peak_mem_bytes":1000,"cp_algorithm":"LPT"}]}]}"#,
+        )
+        .unwrap();
+        assert!(PlanCache::load(&path).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn entry_without_cluster_fingerprint_is_rejected() {
+        // A v3-versioned file whose entry lacks the stored cluster
+        // fingerprint must drop that entry — never default it. (This is
+        // exactly the shape a hand-migrated v2 entry would have.)
+        let path = tmp_path("nocluster");
+        let mut good = entry("kept", 3);
+        good.cluster = "n=16|mem=40000000000".to_string();
+        let mut store = PlanCache::load(&path);
+        store.insert(good);
+        store.save().unwrap();
+        // strip the "cluster" field from the written JSON (the writer
+        // renders compact `"k":v` pairs)
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped =
+            text.replace(r#""cluster":"n=16|mem=40000000000","#, "");
+        assert_ne!(text, stripped, "fixture must actually strip the field");
+        std::fs::write(&path, stripped).unwrap();
+        assert!(
+            PlanCache::load(&path).is_empty(),
+            "a fingerprint-less entry satisfied a v3 load"
+        );
         let _ = std::fs::remove_file(&path);
     }
 
@@ -394,7 +459,7 @@ mod tests {
         let path = tmp_path("nofrontier");
         std::fs::write(
             &path,
-            r#"{"version":2,"entries":[{"signature":"s","evaluated":1,"frontier":[]}]}"#,
+            r#"{"version":3,"entries":[{"signature":"s","cluster":"n=16","evaluated":1,"frontier":[]}]}"#,
         )
         .unwrap();
         assert!(PlanCache::load(&path).is_empty());

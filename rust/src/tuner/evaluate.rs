@@ -10,8 +10,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::api::ClusterSpec;
 use crate::bam;
-use crate::cost::Device;
 use crate::cp::{makespan, Algorithm};
 use crate::modality::{
     planner, MultimodalModule, MultimodalParallelSpec, Plan,
@@ -41,22 +41,36 @@ pub fn module_for(spec: &MllmSpec, cand: &Candidate) -> MultimodalModule {
     mm
 }
 
-/// The parallel spec a candidate denotes.
-pub fn spec_for(cand: &Candidate) -> MultimodalParallelSpec {
-    let mut ps = MultimodalParallelSpec::paper_default(
+/// The parallel spec a candidate denotes on `cluster` (comm hops priced
+/// off the cluster's interconnect bandwidth).
+pub fn spec_for(
+    cand: &Candidate,
+    cluster: &ClusterSpec,
+) -> MultimodalParallelSpec {
+    let mut ps = MultimodalParallelSpec::for_cluster(
         &cand.enc_pps,
         cand.llm_pp,
         cand.tp,
         cand.cp,
+        cluster,
     );
     ps.num_microbatches = cand.num_microbatches;
     ps
 }
 
 /// Build the stage DAG for one candidate without simulating it.
-pub fn build_plan(spec: &MllmSpec, cand: &Candidate, device: Device) -> Plan {
+pub fn build_plan(
+    spec: &MllmSpec,
+    cand: &Candidate,
+    cluster: &ClusterSpec,
+) -> Plan {
     let mm = module_for(spec, cand);
-    planner::plan(cand.strategy, &mm, &spec_for(cand), device)
+    planner::plan(
+        cand.strategy,
+        &mm,
+        &spec_for(cand, cluster),
+        cluster.device_model(),
+    )
 }
 
 /// Cheap lower bound on the plan's iteration time, used by the search to
@@ -116,9 +130,9 @@ fn evaluation_of(cand: &Candidate, plan: &Plan) -> Evaluation {
 pub fn evaluate_one(
     spec: &MllmSpec,
     cand: &Candidate,
-    device: Device,
+    cluster: &ClusterSpec,
 ) -> Evaluation {
-    let plan = build_plan(spec, cand, device);
+    let plan = build_plan(spec, cand, cluster);
     evaluation_of(cand, &plan)
 }
 
@@ -160,14 +174,14 @@ pub fn simulate_plans_parallel(
 pub fn evaluate_parallel(
     spec: &MllmSpec,
     candidates: &[Candidate],
-    device: Device,
+    cluster: &ClusterSpec,
     threads: usize,
 ) -> Vec<Evaluation> {
     let threads = threads.max(1).min(candidates.len().max(1));
     if threads <= 1 {
         return candidates
             .iter()
-            .map(|c| evaluate_one(spec, c, device))
+            .map(|c| evaluate_one(spec, c, cluster))
             .collect();
     }
     let cursor = AtomicUsize::new(0);
@@ -180,7 +194,7 @@ pub fn evaluate_parallel(
                 if i >= candidates.len() {
                     break;
                 }
-                let ev = evaluate_one(spec, &candidates[i], device);
+                let ev = evaluate_one(spec, &candidates[i], cluster);
                 *slots[i].lock().unwrap() = Some(ev);
             });
         }
@@ -236,14 +250,14 @@ mod tests {
     #[test]
     fn lower_bound_never_exceeds_simulated_makespan() {
         let spec = MllmSpec::vlm(Size::M, Size::M);
-        let d = Device::a40();
+        let d = ClusterSpec::a40_default();
         for c in [
             cand(Strategy::Cornstarch, vec![1], 3),
             cand(Strategy::Cornstarch, vec![2], 4),
             cand(Strategy::Colocated, vec![1], 3),
             cand(Strategy::Replicated, vec![], 4),
         ] {
-            let plan = build_plan(&spec, &c, d);
+            let plan = build_plan(&spec, &c, &d);
             let lb = lower_bound_ms(&plan);
             let sim = plan.simulate().iteration_ms;
             assert!(
@@ -258,12 +272,12 @@ mod tests {
     #[test]
     fn parallel_evaluation_matches_serial() {
         let spec = MllmSpec::vlm(Size::M, Size::S);
-        let d = Device::a40();
+        let d = ClusterSpec::a40_default();
         let cands: Vec<Candidate> = (1..=4)
             .map(|pp| cand(Strategy::Cornstarch, vec![1], pp))
             .collect();
-        let serial = evaluate_parallel(&spec, &cands, d, 1);
-        let par = evaluate_parallel(&spec, &cands, d, 4);
+        let serial = evaluate_parallel(&spec, &cands, &d, 1);
+        let par = evaluate_parallel(&spec, &cands, &d, 4);
         assert_eq!(serial.len(), par.len());
         for (s, p) in serial.iter().zip(&par) {
             assert_eq!(s.candidate, p.candidate);
@@ -277,13 +291,13 @@ mod tests {
     #[test]
     fn frozen_setting_changes_the_score() {
         let spec = MllmSpec::vlm(Size::M, Size::M);
-        let d = Device::a40();
+        let d = ClusterSpec::a40_default();
         let mut a = cand(Strategy::Cornstarch, vec![1], 3);
         let mut b = a.clone();
         a.frozen = FrozenSetting::AllFrozen;
         b.frozen = FrozenSetting::AllTrainable;
-        let ea = evaluate_one(&spec, &a, d);
-        let eb = evaluate_one(&spec, &b, d);
+        let ea = evaluate_one(&spec, &a, &d);
+        let eb = evaluate_one(&spec, &b, &d);
         // full training must cost strictly more than pure frozen replay
         assert!(ea.iteration_ms < eb.iteration_ms);
     }
@@ -292,13 +306,13 @@ mod tests {
     fn candidate_gpu_accounting_matches_the_planner() {
         // Including the colocated case, where encoders share stages.
         let spec = MllmSpec::valm(Size::M, Size::M, Size::M);
-        let d = Device::a40();
+        let d = ClusterSpec::a40_default();
         for c in [
             cand(Strategy::Cornstarch, vec![1, 2], 3),
             cand(Strategy::Colocated, vec![2, 2], 3),
             cand(Strategy::Replicated, vec![], 4),
         ] {
-            let plan = build_plan(&spec, &c, d);
+            let plan = build_plan(&spec, &c, &d);
             assert_eq!(plan.n_gpus, c.n_gpus(), "{}", c.label());
         }
     }

@@ -33,19 +33,33 @@ pub use evaluate::{build_plan, evaluate_parallel, Evaluation};
 pub use search::{search, search_top, Objective, SearchReport};
 pub use space::{enumerate, Candidate, FrozenSetting, SearchSpace};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::cost::Device;
+use crate::api::ClusterSpec;
 use crate::modality::Plan;
 use crate::model::MllmSpec;
 
 /// Frontier depth a search keeps (and the cache persists) by default.
 pub const DEFAULT_TOP_K: usize = 5;
 
+/// Default evaluation-worker count: every core, capped at 8 (simulation
+/// waves saturate well before that on the paper-scale spaces).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
 /// A tuning query.
 #[derive(Clone, Debug)]
 pub struct TuneRequest {
     pub spec: MllmSpec,
+    /// The hardware truth: device pool size, per-device memory, the
+    /// flops/MFU time model, and the interconnect the comm hops are
+    /// priced off. Joins the cache signature (and is stored per entry),
+    /// so a plan tuned for one cluster never answers for another.
+    pub cluster: ClusterSpec,
     pub space: SearchSpace,
     pub objective: Objective,
     /// Max candidates to simulate; 0 = unlimited (exact over the space).
@@ -60,43 +74,73 @@ pub struct TuneRequest {
     pub top: usize,
     /// JSON cache path; `None` searches fresh every time.
     pub cache_path: Option<String>,
-    pub device: Device,
 }
 
 impl TuneRequest {
+    /// The paper's scenario: `devices` × A40.
     pub fn new(spec: MllmSpec, devices: usize) -> Self {
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8);
+        TuneRequest::for_cluster(
+            spec,
+            ClusterSpec::a40_default().with_devices(devices),
+        )
+    }
+
+    /// Tune for an arbitrary cluster; the search space is sized to it
+    /// ([`SearchSpace::for_cluster`]).
+    pub fn for_cluster(spec: MllmSpec, cluster: ClusterSpec) -> Self {
         TuneRequest {
             spec,
-            space: SearchSpace::paper_default(devices),
+            space: SearchSpace::for_cluster(&cluster),
+            cluster,
             objective: Objective::Makespan,
             budget: 0,
-            threads,
+            threads: default_threads(),
             top: DEFAULT_TOP_K,
             cache_path: None,
-            device: Device::a40(),
         }
     }
 
-    /// The cache key: everything that can change the answer (including
-    /// the device model — a plan tuned for one throughput profile must
-    /// not answer for another).
+    /// The cache key: everything that can change the answer, including
+    /// the cluster fingerprint — a plan tuned for one hardware pool must
+    /// not answer for another.
     pub fn signature(&self) -> String {
         format!(
-            "mllm={}|llm={}|{}|obj={}|budget={}|flops={:.4e}|mfu={}",
+            "mllm={}|llm={}|{}|obj={}|budget={}|{}",
             self.spec.name(),
             self.spec.llm.name,
             self.space.fingerprint(),
             self.objective.key(),
             self.budget,
-            self.device.peak_flops,
-            self.device.mfu,
+            self.cluster.fingerprint(),
         )
     }
 }
+
+/// Why a tuning query failed — the typed form [`tune_with`] returns and
+/// the planning facade ([`crate::api`]) maps onto
+/// [`crate::api::PlanError`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TuneError {
+    /// Enumeration produced no candidate that fits the device pool and
+    /// the per-device memory budget.
+    NoFeasiblePlan { mllm: String, devices: usize },
+    /// The persistent cache could not be written.
+    CacheIo(String),
+}
+
+impl std::fmt::Display for TuneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TuneError::NoFeasiblePlan { mllm, devices } => write!(
+                f,
+                "no feasible plan for {mllm} on {devices} device(s)"
+            ),
+            TuneError::CacheIo(m) => write!(f, "plan cache: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TuneError {}
 
 /// The tuner's answer.
 #[derive(Clone, Debug)]
@@ -113,34 +157,39 @@ pub struct TuneOutcome {
 
 impl TuneOutcome {
     /// Rebuild the executable stage DAG the cached winner denotes.
-    pub fn instantiate(&self, spec: &MllmSpec, device: Device) -> Plan {
-        build_plan(spec, &self.entry.best().candidate, device)
+    pub fn instantiate(
+        &self,
+        spec: &MllmSpec,
+        cluster: &ClusterSpec,
+    ) -> Plan {
+        build_plan(spec, &self.entry.best().candidate, cluster)
     }
 
     /// Rebuild the stage DAG of frontier entry `rank` (0 = winner).
     pub fn instantiate_ranked(
         &self,
         spec: &MllmSpec,
-        device: Device,
+        cluster: &ClusterSpec,
         rank: usize,
     ) -> Option<Plan> {
         self.entry
             .frontier
             .get(rank)
-            .map(|p| build_plan(spec, &p.candidate, device))
+            .map(|p| build_plan(spec, &p.candidate, cluster))
     }
 }
 
 /// Tune: consult the cache, otherwise search, then persist the top-k
-/// frontier (best first).
-pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
+/// frontier (best first). Typed-error core behind [`tune`].
+pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
     let mut cache = match &req.cache_path {
         Some(p) => PlanCache::load(std::path::Path::new(p)),
         None => PlanCache::in_memory(),
     };
     let sig = req.signature();
+    let fingerprint = req.cluster.fingerprint();
     let top = req.top.max(1);
-    if let Some(entry) = cache.lookup(&sig) {
+    if let Some(entry) = cache.lookup(&sig, &fingerprint) {
         if entry.satisfies_top(top) {
             return Ok(TuneOutcome {
                 entry: entry.clone(),
@@ -159,15 +208,12 @@ pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
         req.objective,
         req.budget,
         req.threads,
-        req.device,
+        &req.cluster,
         top,
     )
-    .ok_or_else(|| {
-        anyhow!(
-            "no feasible plan for {} on {} device(s)",
-            req.spec.name(),
-            req.space.devices
-        )
+    .ok_or_else(|| TuneError::NoFeasiblePlan {
+        mllm: req.spec.name(),
+        devices: req.space.devices,
     })?;
     let frontier: Vec<cache::PlanSummary> = report
         .frontier
@@ -188,12 +234,15 @@ pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
         .collect();
     let entry = CacheEntry {
         signature: sig,
+        cluster: fingerprint,
         frontier,
         top_k: top,
         evaluated: report.evaluated,
     };
     cache.insert(entry.clone());
-    cache.save()?;
+    cache
+        .save()
+        .map_err(|e| TuneError::CacheIo(format!("{e:#}")))?;
     Ok(TuneOutcome {
         entry,
         cache_hit: false,
@@ -201,6 +250,11 @@ pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
         evaluated: report.evaluated,
         pruned: report.pruned,
     })
+}
+
+/// [`tune_with`] with the error erased to `anyhow` for CLI-style callers.
+pub fn tune(req: &TuneRequest) -> Result<TuneOutcome> {
+    tune_with(req).map_err(anyhow::Error::new)
 }
 
 #[cfg(test)]
@@ -241,7 +295,8 @@ mod tests {
         assert!(f.iter().all(|p| p.peak_mem_bytes <= budget));
         // runners-up instantiate too
         if f.len() > 1 {
-            let plan = out.instantiate_ranked(&r.spec, r.device, 1).unwrap();
+            let plan =
+                out.instantiate_ranked(&r.spec, &r.cluster, 1).unwrap();
             let m = plan.simulate();
             assert!(
                 (m.iteration_ms - f[1].iteration_ms).abs() < 1e-6,
@@ -307,10 +362,25 @@ mod tests {
     }
 
     #[test]
+    fn different_clusters_get_different_signatures() {
+        let a = req(8);
+        let mut b = req(8);
+        b.cluster.device.mem_bytes = 80_000_000_000;
+        assert_ne!(
+            a.signature(),
+            b.signature(),
+            "a plan tuned for one memory budget must not answer another"
+        );
+        let mut c = req(8);
+        c.cluster.interconnect_gbps /= 2.0;
+        assert_ne!(a.signature(), c.signature());
+    }
+
+    #[test]
     fn instantiate_rebuilds_a_consistent_plan() {
         let r = req(16);
         let out = tune(&r).unwrap();
-        let plan = out.instantiate(&r.spec, r.device);
+        let plan = out.instantiate(&r.spec, &r.cluster);
         let m = plan.simulate();
         assert!(
             (m.iteration_ms - out.entry.best().iteration_ms).abs() < 1e-6,

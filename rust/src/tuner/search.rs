@@ -11,7 +11,7 @@
 //! incumbent the whole tail is pruned — the search is exact over the
 //! enumerated space whenever the simulation budget is not exhausted.
 
-use crate::cost::Device;
+use crate::api::ClusterSpec;
 use crate::model::MllmSpec;
 
 use super::evaluate::{
@@ -99,9 +99,9 @@ pub fn search(
     objective: Objective,
     budget: usize,
     threads: usize,
-    device: Device,
+    cluster: &ClusterSpec,
 ) -> Option<SearchReport> {
-    search_top(spec, space, objective, budget, threads, device, 1)
+    search_top(spec, space, objective, budget, threads, cluster, 1)
 }
 
 /// Run the search keeping the `top_k` best plans (the frontier the plan
@@ -113,13 +113,13 @@ pub fn search_top(
     objective: Objective,
     budget: usize,
     threads: usize,
-    device: Device,
+    cluster: &ClusterSpec,
     top_k: usize,
 ) -> Option<SearchReport> {
     let mm = crate::modality::MultimodalModule::from_spec(spec);
     // The enumeration's memory filter had to build every candidate's
     // plan anyway; reuse those for bounding and simulation.
-    let pairs = enumerate_with_plans(&mm, space, device);
+    let pairs = enumerate_with_plans(&mm, space, cluster);
     search_pairs(pairs, objective, budget, threads, top_k)
 }
 
@@ -131,10 +131,10 @@ pub fn search_candidates(
     objective: Objective,
     budget: usize,
     threads: usize,
-    device: Device,
+    cluster: &ClusterSpec,
 ) -> Option<SearchReport> {
     search_candidates_top(
-        spec, candidates, objective, budget, threads, device, 1,
+        spec, candidates, objective, budget, threads, cluster, 1,
     )
 }
 
@@ -146,13 +146,13 @@ pub fn search_candidates_top(
     objective: Objective,
     budget: usize,
     threads: usize,
-    device: Device,
+    cluster: &ClusterSpec,
     top_k: usize,
 ) -> Option<SearchReport> {
     let pairs: Vec<(Candidate, crate::modality::Plan)> = candidates
         .into_iter()
         .map(|c| {
-            let plan = build_plan(spec, &c, device);
+            let plan = build_plan(spec, &c, cluster);
             (c, plan)
         })
         .collect();
@@ -240,7 +240,6 @@ fn search_pairs(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::Device;
     use crate::modality::{MultimodalModule, Strategy};
     use crate::model::{MllmSpec, Size};
     use crate::tuner::space::SearchSpace;
@@ -257,7 +256,7 @@ mod tests {
             Objective::Makespan,
             budget,
             threads,
-            Device::a40(),
+            &ClusterSpec::a40_default(),
         )
         .expect("feasible space")
     }
@@ -275,26 +274,17 @@ mod tests {
     fn unlimited_budget_matches_exhaustive_minimum() {
         let spec = MllmSpec::vlm(Size::M, Size::S);
         let space = SearchSpace::paper_default(12);
+        let cl = ClusterSpec::a40_default();
         let mm = MultimodalModule::from_spec(&spec);
         let cands = crate::tuner::space::enumerate(&mm, &space);
         let exhaustive = crate::tuner::evaluate::evaluate_parallel(
-            &spec,
-            &cands,
-            Device::a40(),
-            4,
+            &spec, &cands, &cl, 4,
         )
         .into_iter()
         .map(|e| e.iteration_ms)
         .fold(f64::INFINITY, f64::min);
-        let r = search(
-            &spec,
-            &space,
-            Objective::Makespan,
-            0,
-            4,
-            Device::a40(),
-        )
-        .unwrap();
+        let r =
+            search(&spec, &space, Objective::Makespan, 0, 4, &cl).unwrap();
         assert!(
             (r.best.iteration_ms - exhaustive).abs() < 1e-9,
             "search {:.3} vs exhaustive {:.3}",
@@ -309,8 +299,8 @@ mod tests {
     fn top_k_frontier_matches_exhaustive_ranking() {
         let spec = MllmSpec::vlm(Size::M, Size::S);
         let space = SearchSpace::paper_default(12);
-        let d = Device::a40();
-        let r = search_top(&spec, &space, Objective::Makespan, 0, 4, d, 5)
+        let d = ClusterSpec::a40_default();
+        let r = search_top(&spec, &space, Objective::Makespan, 0, 4, &d, 5)
             .unwrap();
         assert!(!r.frontier.is_empty() && r.frontier.len() <= 5);
         assert!(
@@ -325,7 +315,7 @@ mod tests {
         let mm = MultimodalModule::from_spec(&spec);
         let cands = crate::tuner::space::enumerate(&mm, &space);
         let mut all: Vec<f64> = crate::tuner::evaluate::evaluate_parallel(
-            &spec, &cands, d, 4,
+            &spec, &cands, &d, 4,
         )
         .into_iter()
         .map(|e| e.iteration_ms)
@@ -354,7 +344,7 @@ mod tests {
         // The acceptance property: the searched best is at least as fast
         // as each strategy's default configuration at the same budget.
         let spec = MllmSpec::vlm(Size::M, Size::M);
-        let d = Device::a40();
+        let d = crate::cost::Device::a40();
         let r = run(&spec, 16, 0, 4);
         let mm = MultimodalModule::from_spec(&spec);
         for (strategy, enc, llm) in [
@@ -382,10 +372,12 @@ mod tests {
     fn throughput_objective_prefers_denser_plans() {
         let spec = MllmSpec::vlm(Size::M, Size::M);
         let space = SearchSpace::paper_default(16);
-        let d = Device::a40();
-        let mk = search(&spec, &space, Objective::Makespan, 0, 4, d).unwrap();
-        let tp = search(&spec, &space, Objective::ThroughputPerGpu, 0, 4, d)
-            .unwrap();
+        let d = ClusterSpec::a40_default();
+        let mk =
+            search(&spec, &space, Objective::Makespan, 0, 4, &d).unwrap();
+        let tp =
+            search(&spec, &space, Objective::ThroughputPerGpu, 0, 4, &d)
+                .unwrap();
         assert!(
             tp.best.throughput_per_gpu >= mk.best.throughput_per_gpu - 1e-12
         );

@@ -11,7 +11,7 @@
 //! the capacity model of [`crate::memory`]: OOM-infeasible candidates are
 //! rejected here, before the search ever simulates them.
 
-use crate::cost::Device;
+use crate::api::ClusterSpec;
 use crate::modality::{ModalityModule, MultimodalModule, Strategy};
 
 /// Which modules train — the §4.2 dimension DistTrain-style placement
@@ -153,8 +153,18 @@ impl SearchSpace {
             max_pp: 6,
             strategies: Strategy::ALL.to_vec(),
             frozen_choices: vec![FrozenSetting::Paper],
-            memory_budget_bytes: Some(crate::memory::A40_BUDGET_BYTES),
+            memory_budget_bytes: Some(crate::api::cluster::A40_MEM_BYTES),
         }
+    }
+
+    /// The paper's search bounds sized to a cluster: the device pool and
+    /// the per-GPU memory budget both come from the [`ClusterSpec`]
+    /// instead of the hard-coded A40 testbed.
+    pub fn for_cluster(cluster: &ClusterSpec) -> Self {
+        let mut s = SearchSpace::paper_default(cluster.devices.max(1));
+        s.devices = cluster.devices;
+        s.memory_budget_bytes = Some(cluster.mem_budget_bytes());
+        s
     }
 
     /// Stable fingerprint of the space bounds — part of the cache key, so
@@ -192,16 +202,17 @@ fn enc_max_stages(e: &crate::modality::ModalityModule) -> usize {
 /// joint microbatch sweep meaningful: a deep warm-up window at a high
 /// microbatch count is rejected here instead of being simulated.
 ///
-/// The memory verdicts are device-throughput-independent (partition
-/// bounds only depend on relative layer costs), so the device used for
-/// the internal plans cannot change which candidates survive.
+/// The memory verdicts are cluster-independent given the space's budget
+/// (partition bounds only depend on relative layer costs, and peak bytes
+/// do not depend on the time model), so the cluster used for the
+/// internal plans cannot change which candidates survive.
 pub fn enumerate(mm: &MultimodalModule, space: &SearchSpace) -> Vec<Candidate> {
     if space.memory_budget_bytes.is_none() {
         // No capacity filter: the cross product is the answer — skip
         // plan construction entirely.
         return raw_candidates(mm, space);
     }
-    enumerate_with_plans(mm, space, Device::a40())
+    enumerate_with_plans(mm, space, &ClusterSpec::a40_default())
         .into_iter()
         .map(|(c, _)| c)
         .collect()
@@ -235,13 +246,14 @@ fn raw_candidates(
 }
 
 /// [`enumerate`], keeping the plan each candidate denotes (built on
-/// `device`). This is the search's entry point: the plan the memory
-/// filter had to build anyway is reused for lower-bounding and
-/// simulation, so no candidate pays plan construction twice.
+/// `cluster`'s time model and comm pricing). This is the search's entry
+/// point: the plan the memory filter had to build anyway is reused for
+/// lower-bounding and simulation, so no candidate pays plan construction
+/// twice.
 pub fn enumerate_with_plans(
     mm: &MultimodalModule,
     space: &SearchSpace,
-    device: Device,
+    cluster: &ClusterSpec,
 ) -> Vec<(Candidate, crate::modality::Plan)> {
     let raw = raw_candidates(mm, space);
     // One frozen-rewritten module per policy, not one clone per
@@ -264,8 +276,8 @@ pub fn enumerate_with_plans(
         let plan = crate::modality::planner::plan(
             c.strategy,
             mm_f,
-            &super::evaluate::spec_for(&c),
-            device,
+            &super::evaluate::spec_for(&c, cluster),
+            cluster.device_model(),
         );
         if space
             .memory_budget_bytes
@@ -472,6 +484,21 @@ mod tests {
     }
 
     #[test]
+    fn for_cluster_takes_devices_and_memory_from_the_spec() {
+        let a40 = ClusterSpec::a40_default();
+        let s = SearchSpace::for_cluster(&a40);
+        let d = SearchSpace::paper_default(16);
+        assert_eq!(s.devices, 16);
+        assert_eq!(s.memory_budget_bytes, d.memory_budget_bytes);
+        assert_eq!(s.fingerprint(), d.fingerprint());
+        let mut big = a40.clone().with_devices(8);
+        big.device.mem_bytes = 80_000_000_000;
+        let s = SearchSpace::for_cluster(&big);
+        assert_eq!(s.devices, 8);
+        assert_eq!(s.memory_budget_bytes, Some(80_000_000_000));
+    }
+
+    #[test]
     fn memory_filter_prunes_oom_microbatch_counts() {
         // A deep tp=1 pipeline grows its 1F1B warm-up window with the
         // microbatch count; a budget between the best m=2 peak and the
@@ -486,8 +513,9 @@ mod tests {
         space.microbatch_choices = vec![2, 8];
         space.memory_budget_bytes = None;
         let all = enumerate(&mm, &space);
+        let cl = ClusterSpec::a40_default();
         let peak = |c: &Candidate| {
-            crate::tuner::evaluate::build_plan(&spec, c, Device::a40())
+            crate::tuner::evaluate::build_plan(&spec, c, &cl)
                 .peak_device_bytes()
         };
         let min_of = |m: usize| {

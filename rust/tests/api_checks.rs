@@ -1,0 +1,427 @@
+//! Planning-facade acceptance.
+//!
+//! * golden: `PlanRequest::default_for(mllm)` reproduces byte-for-byte
+//!   the plan `cornstarch plan --strategy tuned` chose before the
+//!   redesign (paper-default spec constants, A40 device model);
+//! * cluster: the CLI's `--cluster examples/clusters/a40x8.json` request
+//!   and the programmatic `PlanningService::plan` answer identically,
+//!   and a non-A40 spec (80 GB/device) readmits OOM-pruned candidates
+//!   and changes the chosen plan;
+//! * cache: schema v3 round-trips through disk property-style, v2 files
+//!   degrade to an empty cache, and a v3 entry stripped of its cluster
+//!   fingerprint is rejected rather than defaulted.
+
+use cornstarch::api::{
+    ClusterSpec, PlanError, PlanRequest, PlanningService,
+};
+use cornstarch::cost::Device;
+use cornstarch::modality::{
+    planner, MultimodalModule, MultimodalParallelSpec, Strategy,
+};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::tuner::{
+    build_plan, enumerate, tune, CacheEntry, Candidate, FrozenSetting,
+    PlanCache, PlanSummary, SearchSpace, TuneRequest,
+};
+use cornstarch::util::check::{check, Gen};
+
+/// The pre-redesign tuned path reproduced explicitly: the winning
+/// candidate instantiated with `MultimodalParallelSpec::paper_default`
+/// (0.5 ms comm constant) on `Device::a40()` — exactly what
+/// `cornstarch plan --strategy tuned` built before `ClusterSpec`
+/// existed.
+fn legacy_plan_for(
+    spec: &MllmSpec,
+    cand: &Candidate,
+) -> cornstarch::modality::Plan {
+    let mut mm = MultimodalModule::from_spec(spec);
+    cand.frozen.apply(&mut mm);
+    let mut ps = MultimodalParallelSpec::paper_default(
+        &cand.enc_pps,
+        cand.llm_pp,
+        cand.tp,
+        cand.cp,
+    );
+    ps.num_microbatches = cand.num_microbatches;
+    planner::plan(cand.strategy, &mm, &ps, Device::a40())
+}
+
+fn assert_plans_identical(
+    a: &cornstarch::modality::Plan,
+    b: &cornstarch::modality::Plan,
+) {
+    assert_eq!(a.stage_names, b.stage_names);
+    assert_eq!(a.stage_mem, b.stage_mem);
+    assert_eq!(a.n_gpus, b.n_gpus);
+    assert_eq!(a.num_microbatches, b.num_microbatches);
+    assert_eq!(a.microbatch_size, b.microbatch_size);
+    assert!(a.graph.comm_ms == b.graph.comm_ms, "comm pricing drifted");
+    assert_eq!(a.graph.nodes.len(), b.graph.nodes.len());
+    for (x, y) in a.graph.nodes.iter().zip(&b.graph.nodes) {
+        assert_eq!(x.device, y.device);
+        assert_eq!(x.preds, y.preds);
+        // bit-exact, not approximate: the facade must not perturb the
+        // time model at all
+        assert!(x.cost.fwd_ms == y.cost.fwd_ms);
+        assert!(x.cost.bwd_ms == y.cost.bwd_ms);
+    }
+}
+
+/// Golden: the facade's default request answers with byte-for-byte the
+/// plan the pre-redesign `plan --strategy tuned` path chose.
+#[test]
+fn golden_default_request_reproduces_the_pre_redesign_tuned_plan() {
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+
+    // the old door: TuneRequest::new + tune + instantiate
+    let mut treq = TuneRequest::new(spec.clone(), 16);
+    treq.threads = 2;
+    let outcome = tune(&treq).unwrap();
+
+    // the new door: the facade's default request
+    let req = PlanRequest::default_for(spec.clone()).threads(2);
+    let report = PlanningService::new().plan(&req).unwrap();
+
+    assert_eq!(
+        report.winner().candidate,
+        outcome.entry.best().candidate,
+        "facade chose a different candidate than the tuned path"
+    );
+    assert!(
+        (report.winner().iteration_ms
+            - outcome.entry.best().iteration_ms)
+            .abs()
+            < 1e-12
+    );
+    // and byte-for-byte against the pre-redesign plan construction
+    let legacy = legacy_plan_for(&spec, &report.winner().candidate);
+    assert_plans_identical(&report.plan, &legacy);
+    let m = legacy.simulate();
+    assert!((m.iteration_ms - report.timeline.iteration_ms).abs() < 1e-9);
+}
+
+/// Acceptance: `cornstarch tune <mllm> --cluster examples/clusters/
+/// a40x8.json` (the real binary) and the programmatic
+/// `PlanningService::plan()` answer the same request identically — the
+/// CLI output must carry exactly the programmatic winner, its timing,
+/// and the loaded cluster's pool.
+#[test]
+fn cli_cluster_file_and_programmatic_requests_answer_identically() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/clusters/a40x8.json"
+    );
+    let cluster = ClusterSpec::load(std::path::Path::new(path)).unwrap();
+    assert_eq!(cluster.devices, 8);
+    assert_eq!(cluster.mem_budget_bytes(), 40_000_000_000);
+    // same numbers as the A40 default, smaller pool
+    assert_eq!(
+        cluster.fingerprint(),
+        ClusterSpec::a40_default().with_devices(8).fingerprint()
+    );
+
+    // the programmatic answer
+    let spec = MllmSpec::vlm(Size::M, Size::S);
+    let req = PlanRequest::default_for(spec)
+        .cluster(cluster)
+        .threads(2);
+    let report = PlanningService::new().plan(&req).unwrap();
+    let best = report.winner();
+    assert!(report.plan.n_gpus <= 8);
+
+    // the CLI answer, from the actual binary
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cornstarch"))
+        .args(["tune", "VLM-S", "--cluster", path, "--threads", "2"])
+        .output()
+        .expect("spawning the cornstarch binary");
+    assert!(
+        out.status.success(),
+        "tune --cluster failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains(&best.candidate.label()),
+        "CLI winner differs from programmatic winner {:?}:\n{text}",
+        best.candidate.label()
+    );
+    assert!(
+        text.contains(&format!("iteration {:.1} ms", best.iteration_ms)),
+        "CLI iteration differs from programmatic {:.1} ms:\n{text}",
+        best.iteration_ms
+    );
+    assert!(
+        text.contains("(8 GPUs)"),
+        "CLI did not plan for the cluster file's 8-device pool:\n{text}"
+    );
+    assert!(
+        text.contains(&format!(
+            "searched {} candidates",
+            report.provenance.total_candidates
+        )),
+        "CLI searched a different space:\n{text}"
+    );
+}
+
+/// Acceptance: a non-A40 spec (80 GB/device) readmits candidates the
+/// A40's memory budget OOM-pruned.
+#[test]
+fn bigger_device_memory_readmits_oom_pruned_candidates() {
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+    let mm = MultimodalModule::from_spec(&spec);
+    let a40 = ClusterSpec::a40_default();
+    let mut big = a40.clone();
+    big.device.name = "A100-80G".to_string();
+    big.device.mem_bytes = 80_000_000_000;
+
+    // modeled peaks of the whole (unfiltered) space
+    let mut unbounded = SearchSpace::for_cluster(&a40);
+    unbounded.memory_budget_bytes = None;
+    let all = enumerate(&mm, &unbounded);
+    let peaks: Vec<u64> = all
+        .iter()
+        .map(|c| build_plan(&spec, c, &a40).peak_device_bytes())
+        .collect();
+    let a40_budget = a40.mem_budget_bytes();
+    assert!(
+        peaks.iter().any(|&p| p > a40_budget),
+        "scenario must contain candidates the A40 budget OOM-prunes"
+    );
+    let readmitted = peaks
+        .iter()
+        .filter(|&&p| p > a40_budget && p <= big.device.mem_bytes)
+        .count();
+    assert!(
+        readmitted > 0,
+        "an 80 GB device class must readmit some pruned candidate"
+    );
+    // the filtered enumerations agree exactly with the peak census
+    let n_a40 = enumerate(&mm, &SearchSpace::for_cluster(&a40)).len();
+    let n_big = enumerate(&mm, &SearchSpace::for_cluster(&big)).len();
+    assert_eq!(n_a40 + readmitted, n_big);
+}
+
+/// Acceptance: the cluster's memory capacity measurably changes the
+/// chosen plan — tightening the budget below the A40 winner's peak
+/// forces a different winner.
+#[test]
+fn memory_capacity_changes_the_chosen_plan() {
+    let spec = MllmSpec::vlm(Size::M, Size::M);
+    let service = PlanningService::new();
+    let base = service
+        .plan(&PlanRequest::default_for(spec.clone()).threads(2))
+        .unwrap();
+    let winner_peak = base.winner().peak_mem_bytes;
+
+    // there must be feasible candidates strictly below the winner's peak
+    let mm = MultimodalModule::from_spec(&spec);
+    let a40 = ClusterSpec::a40_default();
+    let mut unbounded = SearchSpace::for_cluster(&a40);
+    unbounded.memory_budget_bytes = None;
+    let min_peak = enumerate(&mm, &unbounded)
+        .iter()
+        .map(|c| build_plan(&spec, c, &a40).peak_device_bytes())
+        .min()
+        .unwrap();
+    assert!(
+        min_peak < winner_peak,
+        "premise: the makespan winner is not the min-memory plan"
+    );
+
+    let mut tight = a40;
+    tight.device.name = "tight".to_string();
+    tight.device.mem_bytes = winner_peak - 1;
+    let tightened = service
+        .plan(
+            &PlanRequest::default_for(spec.clone())
+                .cluster(tight)
+                .threads(2),
+        )
+        .unwrap();
+    assert_ne!(
+        tightened.winner().candidate,
+        base.winner().candidate,
+        "a smaller memory budget must change the chosen plan"
+    );
+    assert!(tightened.winner().peak_mem_bytes < winner_peak);
+    assert!(tightened.fits_budget());
+    // and the A40 winner is strictly faster — the tight cluster paid for
+    // its budget with iteration time
+    assert!(
+        base.winner().iteration_ms
+            <= tightened.winner().iteration_ms + 1e-9
+    );
+}
+
+/// Typed errors at the boundary: a bad cluster file and an infeasible
+/// pool are distinguishable without string matching.
+#[test]
+fn facade_errors_are_typed() {
+    match ClusterSpec::load(std::path::Path::new("/no/such/cluster.json"))
+    {
+        Err(PlanError::InvalidCluster(_)) => {}
+        other => panic!("expected InvalidCluster, got {other:?}"),
+    }
+    let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::M))
+        .devices(1)
+        .threads(2);
+    match PlanningService::new().plan(&req) {
+        Err(PlanError::NoFeasiblePlan { mllm, devices }) => {
+            assert_eq!(devices, 1);
+            assert!(mllm.contains("VLM"));
+        }
+        other => panic!("expected NoFeasiblePlan, got {other:?}"),
+    }
+}
+
+fn random_summary(g: &mut Gen) -> PlanSummary {
+    let strategy = match g.usize(0, 3) {
+        0 => Strategy::Cornstarch,
+        1 => Strategy::Colocated,
+        _ => Strategy::Replicated,
+    };
+    let n_enc = if strategy == Strategy::Replicated {
+        0
+    } else {
+        g.usize(1, 3)
+    };
+    PlanSummary {
+        candidate: Candidate {
+            strategy,
+            enc_pps: (0..n_enc).map(|_| g.usize(1, 7)).collect(),
+            llm_pp: g.usize(1, 7),
+            tp: 1 << g.usize(0, 3),
+            cp: 1 << g.usize(0, 2),
+            num_microbatches: g.usize(1, 33),
+            frozen: FrozenSetting::ALL[g.usize(0, 3)],
+        },
+        iteration_ms: g.usize(1, 1_000_000) as f64 / 10.0,
+        throughput_per_gpu: g.usize(1, 10_000) as f64 / 1e4,
+        n_gpus: g.usize(1, 65),
+        peak_mem_bytes: g.rng.below(80_000_000_000),
+        cp_algorithm: ["LPT", "Zigzag", "Ring", "none"][g.usize(0, 4)]
+            .to_string(),
+    }
+}
+
+/// Cache schema property: random v3 entries round-trip through disk
+/// exactly; rewriting the same file as v2 degrades to an empty cache;
+/// stripping an entry's cluster fingerprint rejects that entry.
+#[test]
+fn cache_v3_roundtrip_and_v2_degradation_property() {
+    check("cache v2→v3 schema", 25, |g| {
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "cornstarch-api-cache-prop-{}-{:x}.json",
+            std::process::id(),
+            g.seed
+        ));
+        let _ = std::fs::remove_file(&path);
+
+        let n_entries = g.usize(1, 4);
+        let mut store = PlanCache::load(&path);
+        let mut entries = Vec::new();
+        for i in 0..n_entries {
+            let depth = g.usize(1, 4);
+            let frontier: Vec<PlanSummary> =
+                (0..depth).map(|_| random_summary(g)).collect();
+            let e = CacheEntry {
+                signature: format!("sig-{i}-{:x}", g.seed),
+                cluster: format!(
+                    "n={}|mem={}",
+                    g.usize(1, 65),
+                    g.rng.below(1u64 << 40)
+                ),
+                frontier,
+                top_k: depth,
+                evaluated: g.usize(1, 100),
+            };
+            store.insert(e.clone());
+            entries.push(e);
+        }
+        store.save().unwrap();
+
+        // v3 round-trip is exact
+        let loaded = PlanCache::load(&path);
+        assert_eq!(loaded.len(), entries.len());
+        for e in &entries {
+            assert_eq!(
+                loaded.lookup(&e.signature, &e.cluster),
+                Some(e),
+                "v3 entry did not round-trip"
+            );
+            // and the fingerprint is load-bearing: a different cluster
+            // never answers
+            assert!(loaded
+                .lookup(&e.signature, "n=1|mem=1")
+                .is_none());
+        }
+
+        let text = std::fs::read_to_string(&path).unwrap();
+
+        // the same payload stamped v2 degrades to an empty cache
+        let v2 = text.replace("\"version\":3", "\"version\":2");
+        assert_ne!(text, v2);
+        std::fs::write(&path, &v2).unwrap();
+        assert!(
+            PlanCache::load(&path).is_empty(),
+            "a v2 file must degrade to empty, not serve v3 lookups"
+        );
+
+        // a v3 file whose entries lost their fingerprints drops them all
+        let first = &entries[0];
+        let mut stripped = text.clone();
+        for e in &entries {
+            stripped = stripped
+                .replace(&format!("\"cluster\":\"{}\",", e.cluster), "");
+        }
+        assert!(!stripped.contains(&format!("\"{}\"", first.cluster)));
+        std::fs::write(&path, &stripped).unwrap();
+        assert!(
+            PlanCache::load(&path).is_empty(),
+            "fingerprint-less entries must be rejected, not defaulted"
+        );
+
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+/// End-to-end cache degradation: a facade query that wrote a v3 cache
+/// still answers (by re-searching) after the file is downgraded to v2,
+/// and heals the file back to v3.
+#[test]
+fn facade_resurveys_after_v2_downgrade() {
+    let mut path = std::env::temp_dir();
+    path.push(format!(
+        "cornstarch-api-cache-downgrade-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let cache = path.to_string_lossy().into_owned();
+
+    let spec = MllmSpec::vlm(Size::M, Size::S);
+    let req = PlanRequest::default_for(spec)
+        .devices(8)
+        .threads(2)
+        .cache_file(&cache);
+    let service = PlanningService::new();
+    let first = service.plan(&req).unwrap();
+    assert!(!first.provenance.cache_hit);
+    assert!(service.plan(&req).unwrap().provenance.cache_hit);
+
+    // downgrade the file to v2: the next query must re-search, not err
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replace("\"version\":3", "\"version\":2"))
+        .unwrap();
+    let after = service.plan(&req).unwrap();
+    assert!(
+        !after.provenance.cache_hit,
+        "a v2 file must not satisfy a v3 lookup"
+    );
+    assert_eq!(after.winner(), first.winner());
+    // and the store healed to v3
+    assert!(std::fs::read_to_string(&path)
+        .unwrap()
+        .contains("\"version\":3"));
+    let _ = std::fs::remove_file(&path);
+}

@@ -12,9 +12,9 @@
 //!   whose modeled peak memory exceeds the A40 budget, and the cached
 //!   top-k frontier serves ranked alternatives without re-searching.
 
+use cornstarch::api::ClusterSpec;
 use cornstarch::cost::Device;
 use cornstarch::cp::{exact_min_makespan, makespan, Algorithm};
-use cornstarch::memory;
 use cornstarch::modality::{
     planner, MultimodalModule, MultimodalParallelSpec, Strategy,
 };
@@ -93,8 +93,11 @@ fn tuned_vlm_m_16_devices_beats_all_baseline_planners() {
     // The winner must fit the GPU budget, the A40 memory budget, and be
     // executable.
     assert!(out.entry.best().n_gpus <= 16);
-    assert!(out.entry.best().peak_mem_bytes <= memory::A40_BUDGET_BYTES);
-    let plan = out.instantiate(&spec, d);
+    assert!(
+        out.entry.best().peak_mem_bytes
+            <= ClusterSpec::a40_default().mem_budget_bytes()
+    );
+    let plan = out.instantiate(&spec, &ClusterSpec::a40_default());
     let m = plan.simulate();
     assert!((m.iteration_ms - out.entry.best().iteration_ms).abs() < 1e-6);
 }
@@ -114,7 +117,7 @@ fn default_space_only_offers_memory_feasible_candidates() {
     let cands = enumerate(&mm, &space);
     assert!(!cands.is_empty());
     for c in &cands {
-        let plan = build_plan(&spec, c, Device::a40());
+        let plan = build_plan(&spec, c, &ClusterSpec::a40_default());
         assert!(
             plan.peak_device_bytes() <= budget,
             "OOM candidate would be simulated: {}",
@@ -147,9 +150,8 @@ fn cached_frontier_offers_ranked_alternatives() {
     assert!(f
         .windows(2)
         .all(|w| w[0].iteration_ms <= w[1].iteration_ms + 1e-12));
-    assert!(f
-        .iter()
-        .all(|p| p.peak_mem_bytes <= memory::A40_BUDGET_BYTES));
+    let budget = ClusterSpec::a40_default().mem_budget_bytes();
+    assert!(f.iter().all(|p| p.peak_mem_bytes <= budget));
     let _ = std::fs::remove_file(&path);
 }
 
@@ -176,7 +178,7 @@ fn tuner_cache_roundtrip_returns_identical_plan() {
 
     // The cached candidate instantiates to the same simulated makespan.
     let spec = MllmSpec::vlm(Size::M, Size::M);
-    let plan = second.instantiate(&spec, Device::a40());
+    let plan = second.instantiate(&spec, &ClusterSpec::a40_default());
     assert!(
         (plan.simulate().iteration_ms - first.entry.best().iteration_ms)
             .abs()
