@@ -85,8 +85,8 @@ fn main() -> Result<()> {
     )?;
     let mut big = ClusterSpec::a40_default().with_devices(16);
     big.name = "a100ish-80g".to_string();
-    big.device.name = "A100-80G".to_string();
-    big.device.mem_bytes = 80_000_000_000;
+    big.groups[0].device.name = "A100-80G".to_string();
+    big.groups[0].device.mem_bytes = 80_000_000_000;
     let roomy = service
         .plan(&PlanRequest::default_for(spec.clone()).cluster(big))?;
     println!(
@@ -141,6 +141,29 @@ fn main() -> Result<()> {
             p.n_gpus,
             memory::gb(p.peak_mem_bytes),
             p.candidate.label()
+        );
+    }
+
+    // ---- heterogeneous pools: placement is a search dimension ----
+    // 4 cheap A40s + 4 big A100s: the tuner decides which device group
+    // each pipeline chain lands on, so the frozen encoder rides the
+    // 40 GB cards while the LLM claims the 80 GB ones.
+    let hetero = service.plan(
+        &PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::L))
+            .cluster(ClusterSpec::a40_a100_demo()),
+    )?;
+    println!(
+        "\nVLM-L on 4xA40 + 4xA100-80G: {} ({:.1} ms)",
+        hetero.winner().candidate.label(),
+        hetero.winner().iteration_ms
+    );
+    for v in &hetero.stage_verdicts {
+        println!(
+            "  {:<16} -> {:<10} {:>6.1} / {:.0} GB",
+            v.stage,
+            v.device,
+            memory::gb(v.peak_bytes),
+            memory::gb(v.budget_bytes)
         );
     }
 

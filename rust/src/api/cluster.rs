@@ -3,15 +3,17 @@
 //! Every planning entry point used to bake in one scenario: the A40 as a
 //! single MFU scalar in [`crate::cost::Device::a40`] and a single memory
 //! constant in `crate::memory`. A `ClusterSpec` names all of it in one
-//! typed value — how many devices, what one device can hold
-//! ([`DeviceClass::mem_bytes`]), how fast it computes
-//! ([`DeviceClass::peak_flops`] × [`DeviceClass::mfu`]), and how fast
-//! stages talk to each other ([`ClusterSpec::interconnect_gbps`]) — and
-//! threads through `cost` (per-device-class time scaling), `memory`
-//! (budget per device), `tuner` (search-space bounds and the cache
-//! signature), and `sim` (comm hops priced off the bandwidth).
+//! typed value — and, since the heterogeneous-pools redesign, it names it
+//! **per device group**: a pool is a list of [`DeviceGroup`]s, each with
+//! its own GPU count, [`DeviceClass`] (memory capacity + flops/MFU time
+//! model), and link bandwidth. A mixed pool like 4×A40 + 4×A100-80G lets
+//! the planner put frozen encoder stages on the cheap 40 GB cards while
+//! the LLM claims the 80 GB ones — the hardware dual of the paper's
+//! frozen-vs-trainable module heterogeneity (§4.2).
 //!
-//! Specs load from JSON (`cornstarch tune <mllm> --cluster <file>`):
+//! Specs load from JSON (`cornstarch tune <mllm> --cluster <file>`), in
+//! either form. The legacy single-device form keeps parsing as a
+//! one-group pool (and one-group specs render back to it byte-for-byte):
 //!
 //! ```json
 //! {
@@ -20,6 +22,23 @@
 //!   "device": { "name": "A40", "mem_gb": 40.0,
 //!               "peak_tflops": 149.7, "mfu": 0.67 },
 //!   "interconnect_gbps": 32.0
+//! }
+//! ```
+//!
+//! or the heterogeneous `groups` form (`examples/clusters/
+//! a40x4-a100x4.json`):
+//!
+//! ```json
+//! {
+//!   "name": "a40x4-a100x4",
+//!   "groups": [
+//!     { "count": 4, "link_gbps": 32.0,
+//!       "device": { "name": "A40", "mem_gb": 40.0,
+//!                   "peak_tflops": 149.7, "mfu": 0.67 } },
+//!     { "count": 4, "link_gbps": 300.0,
+//!       "device": { "name": "A100-80G", "mem_gb": 80.0,
+//!                   "peak_tflops": 312.0, "mfu": 0.55 } }
+//!   ]
 //! }
 //! ```
 
@@ -74,146 +93,283 @@ impl DeviceClass {
         }
     }
 
+    /// The A100-80G of the heterogeneous demo pool.
+    pub fn a100_80g() -> Self {
+        DeviceClass {
+            name: "A100-80G".to_string(),
+            mem_bytes: 80_000_000_000,
+            peak_flops: 312.0e12,
+            mfu: 0.55,
+        }
+    }
+
     /// The throughput model [`crate::cost`] consumes.
     pub fn time_model(&self) -> Device {
         Device { peak_flops: self.peak_flops, mfu: self.mfu }
     }
 }
 
-/// The hardware a [`super::PlanRequest`] plans against: a homogeneous
-/// pool of `devices` GPUs of one [`DeviceClass`] connected at
-/// `interconnect_gbps`. (Heterogeneous pools are the next scenario this
-/// type exists to make expressible.)
+/// One named pool of identical devices inside a [`ClusterSpec`]: how
+/// many, what each can hold and compute, and how fast its links move
+/// activations. A hop between two groups is priced at the slower of the
+/// two links (the bottleneck).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceGroup {
+    pub device: DeviceClass,
+    /// GPUs in this group.
+    pub count: usize,
+    /// Link bandwidth of this group's devices in decimal GB/s.
+    pub link_gbps: f64,
+}
+
+impl DeviceGroup {
+    /// Milliseconds one activation/gradient hop over this group's link
+    /// costs: [`NOMINAL_HOP_BYTES`] over the bandwidth.
+    pub fn hop_ms(&self) -> f64 {
+        (NOMINAL_HOP_BYTES as f64 * 1e3) / (self.link_gbps * 1e9)
+    }
+
+    /// Stable fingerprint segment — everything that can change a
+    /// planning answer, deliberately excluding the display names.
+    fn fingerprint(&self) -> String {
+        format!(
+            "n={}|mem={}|flops={:.6e}|mfu={}|bw={}",
+            self.count,
+            self.device.mem_bytes,
+            self.device.peak_flops,
+            self.device.mfu,
+            self.link_gbps,
+        )
+    }
+}
+
+/// The hardware a [`super::PlanRequest`] plans against: a pool of one or
+/// more [`DeviceGroup`]s. A single group is the homogeneous cluster every
+/// pre-hetero consumer assumed; several groups make the joint
+/// model×device assignment a search dimension (`tuner::space` enumerates
+/// which cluster group each pipeline chain lands on).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterSpec {
     pub name: String,
-    /// Total GPU count the planner may occupy.
-    pub devices: usize,
-    pub device: DeviceClass,
-    /// Cross-stage interconnect bandwidth in decimal GB/s.
-    pub interconnect_gbps: f64,
+    /// The device pools; never empty. `groups[0]` is the *primary* group
+    /// — the one the homogeneous compatibility views
+    /// ([`ClusterSpec::device_model`], [`ClusterSpec::comm_hop_ms`])
+    /// refer to.
+    pub groups: Vec<DeviceGroup>,
 }
 
 impl ClusterSpec {
+    /// A homogeneous pool of `count` devices of one class.
+    pub fn homogeneous(
+        name: &str,
+        device: DeviceClass,
+        count: usize,
+        link_gbps: f64,
+    ) -> Self {
+        ClusterSpec {
+            name: name.to_string(),
+            groups: vec![DeviceGroup { device, count, link_gbps }],
+        }
+    }
+
     /// The paper's §6.1 testbed: 16 × A40. This is the default every
     /// entry point falls back to, and it reproduces the pre-redesign
     /// constants exactly (0.5 ms comm hop, 40 GB budget, 0.67 MFU).
     pub fn a40_default() -> Self {
+        ClusterSpec::homogeneous(
+            "a40",
+            DeviceClass::a40(),
+            16,
+            A40_INTERCONNECT_GBPS,
+        )
+    }
+
+    /// The heterogeneous demo pool: 4 × A40 (cheap 40 GB cards for the
+    /// frozen encoders) + 4 × A100-80G (big-memory cards for the LLM).
+    /// Mirrored by `examples/clusters/a40x4-a100x4.json`.
+    pub fn a40_a100_demo() -> Self {
         ClusterSpec {
-            name: "a40".to_string(),
-            devices: 16,
-            device: DeviceClass::a40(),
-            interconnect_gbps: A40_INTERCONNECT_GBPS,
+            name: "a40x4-a100x4".to_string(),
+            groups: vec![
+                DeviceGroup {
+                    device: DeviceClass::a40(),
+                    count: 4,
+                    link_gbps: A40_INTERCONNECT_GBPS,
+                },
+                DeviceGroup {
+                    device: DeviceClass::a100_80g(),
+                    count: 4,
+                    link_gbps: 300.0,
+                },
+            ],
         }
     }
 
-    /// Same device class and interconnect, different pool size.
+    /// Total GPU count the planner may occupy, across all groups.
+    pub fn devices(&self) -> usize {
+        self.groups.iter().map(|g| g.count).sum()
+    }
+
+    /// More than one device group?
+    pub fn is_heterogeneous(&self) -> bool {
+        self.groups.len() > 1
+    }
+
+    /// Same device class and interconnect, different pool size. Only
+    /// meaningful for single-group clusters — a multi-group pool is
+    /// resized per group, not as a whole.
     pub fn with_devices(mut self, devices: usize) -> Self {
-        self.devices = devices;
+        assert!(
+            self.groups.len() == 1,
+            "with_devices resizes a homogeneous pool; edit the groups of \
+             a heterogeneous one individually"
+        );
+        self.groups[0].count = devices;
         self
     }
 
-    /// The throughput model [`crate::cost`] consumes.
+    /// The throughput model of the **primary** group — the homogeneous
+    /// view fixed-strategy planners use. Heterogeneity-aware consumers
+    /// key per-chain time models off [`ClusterSpec::group_device`]
+    /// instead.
     pub fn device_model(&self) -> Device {
-        self.device.time_model()
+        self.groups[0].device.time_model()
     }
 
-    /// Per-device memory budget the capacity checks compare against.
+    /// The time model of group `g` (the per-device model a stage
+    /// assigned to that group is priced with).
+    pub fn group_device(&self, g: usize) -> Device {
+        self.groups[g].device.time_model()
+    }
+
+    /// Per-device memory budget of group `g`.
+    pub fn group_mem_bytes(&self, g: usize) -> u64 {
+        self.groups[g].device.mem_bytes
+    }
+
+    /// The most permissive per-device budget in the pool. For a
+    /// homogeneous cluster this is *the* budget; heterogeneous capacity
+    /// checks hold every stage to the budget of the group it actually
+    /// lands on ([`crate::memory::stage_budgets`]), so the scalar is only
+    /// a coarse upper bound there.
     pub fn mem_budget_bytes(&self) -> u64 {
-        self.device.mem_bytes
+        self.groups
+            .iter()
+            .map(|g| g.device.mem_bytes)
+            .max()
+            .unwrap_or(0)
     }
 
-    /// Milliseconds one cross-stage activation/gradient hop costs:
-    /// [`NOMINAL_HOP_BYTES`] over the interconnect. The A40 default
-    /// yields exactly the 0.5 ms the pre-`ClusterSpec` model charged.
+    /// Milliseconds one cross-stage hop over the **primary** group's
+    /// link costs. The A40 default yields exactly the 0.5 ms the
+    /// pre-`ClusterSpec` model charged.
     pub fn comm_hop_ms(&self) -> f64 {
-        (NOMINAL_HOP_BYTES as f64 * 1e3) / (self.interconnect_gbps * 1e9)
+        self.groups[0].hop_ms()
+    }
+
+    /// Hop cost between groups `a` and `b`: the slower of the two links
+    /// is the bottleneck the transfer pays.
+    pub fn hop_ms_between(&self, a: usize, b: usize) -> f64 {
+        self.groups[a].hop_ms().max(self.groups[b].hop_ms())
     }
 
     /// Stable fingerprint of everything that can change a planning
     /// answer — joins the tuner's cache signature, and is stored per
     /// cache entry so an entry written for one cluster can never answer
-    /// for another. Deliberately excludes the display names.
+    /// for another. Covers the **full pool** (every group's count,
+    /// memory, flops/MFU, and link), so a heterogeneous pool and a
+    /// homogeneous one of the same total size never alias. Single-group
+    /// fingerprints are byte-identical to the pre-hetero format.
     pub fn fingerprint(&self) -> String {
-        format!(
-            "n={}|mem={}|flops={:.6e}|mfu={}|bw={}",
-            self.devices,
-            self.device.mem_bytes,
-            self.device.peak_flops,
-            self.device.mfu,
-            self.interconnect_gbps,
-        )
+        self.groups
+            .iter()
+            .map(|g| g.fingerprint())
+            .collect::<Vec<_>>()
+            .join("+")
     }
 
     /// Reject specs the planning layers cannot price.
     pub fn validate(&self) -> Result<(), PlanError> {
         let bad = |m: String| Err(PlanError::InvalidCluster(m));
-        if self.devices == 0 {
-            return bad("`devices` must be >= 1".to_string());
+        if self.groups.is_empty() {
+            return bad("a cluster needs at least one device group".into());
         }
-        if self.device.mem_bytes == 0 {
-            return bad("`device.mem_gb` must be > 0".to_string());
-        }
-        if !self.device.peak_flops.is_finite()
-            || self.device.peak_flops <= 0.0
-        {
-            return bad("`device.peak_tflops` must be > 0".to_string());
-        }
-        if !self.device.mfu.is_finite()
-            || self.device.mfu <= 0.0
-            || self.device.mfu > 1.0
-        {
-            return bad(format!(
-                "`device.mfu` must be in (0, 1], got {}",
-                self.device.mfu
-            ));
-        }
-        if !self.interconnect_gbps.is_finite()
-            || self.interconnect_gbps <= 0.0
-        {
-            return bad("`interconnect_gbps` must be > 0".to_string());
+        for (i, g) in self.groups.iter().enumerate() {
+            if g.count == 0 {
+                return bad(format!("group {i}: `count` must be >= 1"));
+            }
+            if g.device.mem_bytes == 0 {
+                return bad(format!("group {i}: `mem_gb` must be > 0"));
+            }
+            if !g.device.peak_flops.is_finite() || g.device.peak_flops <= 0.0
+            {
+                return bad(format!(
+                    "group {i}: `peak_tflops` must be > 0"
+                ));
+            }
+            if !g.device.mfu.is_finite()
+                || g.device.mfu <= 0.0
+                || g.device.mfu > 1.0
+            {
+                return bad(format!(
+                    "group {i}: `mfu` must be in (0, 1], got {}",
+                    g.device.mfu
+                ));
+            }
+            if !g.link_gbps.is_finite() || g.link_gbps <= 0.0 {
+                return bad(format!(
+                    "group {i}: `link_gbps` must be > 0"
+                ));
+            }
         }
         Ok(())
     }
 
-    /// Serialize to the `--cluster` JSON schema.
-    pub fn to_json(&self) -> Json {
+    fn device_to_json(d: &DeviceClass) -> Json {
         Json::obj(vec![
-            ("name", Json::Str(self.name.clone())),
-            ("devices", Json::Int(self.devices as i64)),
-            (
-                "device",
-                Json::obj(vec![
-                    ("name", Json::Str(self.device.name.clone())),
-                    (
-                        "mem_gb",
-                        Json::Num(self.device.mem_bytes as f64 / 1e9),
-                    ),
-                    (
-                        "peak_tflops",
-                        Json::Num(self.device.peak_flops / 1e12),
-                    ),
-                    ("mfu", Json::Num(self.device.mfu)),
-                ]),
-            ),
-            ("interconnect_gbps", Json::Num(self.interconnect_gbps)),
+            ("name", Json::Str(d.name.clone())),
+            ("mem_gb", Json::Num(d.mem_bytes as f64 / 1e9)),
+            ("peak_tflops", Json::Num(d.peak_flops / 1e12)),
+            ("mfu", Json::Num(d.mfu)),
         ])
     }
 
-    /// Parse the `--cluster` JSON schema (does not validate ranges; see
-    /// [`ClusterSpec::validate`]).
-    pub fn from_json(j: &Json) -> Result<ClusterSpec, String> {
-        let devices = j
-            .get("devices")
-            .and_then(Json::as_i64)
-            .and_then(|v| usize::try_from(v).ok())
-            .ok_or_else(|| {
-                "cluster JSON needs a non-negative integer `devices`"
-                    .to_string()
-            })?;
-        let d = j
-            .get("device")
-            .ok_or_else(|| "cluster JSON needs a `device` object".to_string())?;
+    /// Serialize to the `--cluster` JSON schema. A single-group spec
+    /// renders the legacy single-device form byte-for-byte; multi-group
+    /// specs render the `groups` form.
+    pub fn to_json(&self) -> Json {
+        if let [g] = self.groups.as_slice() {
+            return Json::obj(vec![
+                ("name", Json::Str(self.name.clone())),
+                ("devices", Json::Int(g.count as i64)),
+                ("device", Self::device_to_json(&g.device)),
+                ("interconnect_gbps", Json::Num(g.link_gbps)),
+            ]);
+        }
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("count", Json::Int(g.count as i64)),
+                                (
+                                    "device",
+                                    Self::device_to_json(&g.device),
+                                ),
+                                ("link_gbps", Json::Num(g.link_gbps)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn device_from_json(d: &Json) -> Result<DeviceClass, String> {
         let mem_gb = d.get("mem_gb").and_then(Json::as_f64).ok_or_else(|| {
             "`device.mem_gb` (decimal GB per device) is required".to_string()
         })?;
@@ -225,6 +381,79 @@ impl ClusterSpec {
             .get("mfu")
             .and_then(Json::as_f64)
             .ok_or_else(|| "`device.mfu` is required".to_string())?;
+        Ok(DeviceClass {
+            name: d
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            mem_bytes: (mem_gb * 1e9) as u64,
+            peak_flops: peak_tflops * 1e12,
+            mfu,
+        })
+    }
+
+    /// Parse the `--cluster` JSON schema, either form (does not validate
+    /// ranges; see [`ClusterSpec::validate`]).
+    pub fn from_json(j: &Json) -> Result<ClusterSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("unnamed")
+            .to_string();
+        if let Some(gs) = j.get("groups").and_then(Json::as_arr) {
+            if gs.is_empty() {
+                return Err(
+                    "`groups` must carry at least one device group".into()
+                );
+            }
+            let groups = gs
+                .iter()
+                .enumerate()
+                .map(|(i, g)| {
+                    let count = g
+                        .get("count")
+                        .and_then(Json::as_i64)
+                        .and_then(|v| usize::try_from(v).ok())
+                        .ok_or_else(|| {
+                            format!(
+                                "group {i} needs a non-negative integer \
+                                 `count`"
+                            )
+                        })?;
+                    let d = g.get("device").ok_or_else(|| {
+                        format!("group {i} needs a `device` object")
+                    })?;
+                    let link_gbps = g
+                        .get("link_gbps")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| {
+                            format!(
+                                "group {i} needs `link_gbps` (decimal GB/s)"
+                            )
+                        })?;
+                    Ok(DeviceGroup {
+                        device: Self::device_from_json(d)?,
+                        count,
+                        link_gbps,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            return Ok(ClusterSpec { name, groups });
+        }
+        // Legacy single-device form: a one-group pool.
+        let devices = j
+            .get("devices")
+            .and_then(Json::as_i64)
+            .and_then(|v| usize::try_from(v).ok())
+            .ok_or_else(|| {
+                "cluster JSON needs a non-negative integer `devices` (or a \
+                 `groups` array)"
+                    .to_string()
+            })?;
+        let d = j
+            .get("device")
+            .ok_or_else(|| "cluster JSON needs a `device` object".to_string())?;
         let interconnect_gbps = j
             .get("interconnect_gbps")
             .and_then(Json::as_f64)
@@ -232,23 +461,12 @@ impl ClusterSpec {
                 "`interconnect_gbps` (decimal GB/s) is required".to_string()
             })?;
         Ok(ClusterSpec {
-            name: j
-                .get("name")
-                .and_then(Json::as_str)
-                .unwrap_or("unnamed")
-                .to_string(),
-            devices,
-            device: DeviceClass {
-                name: d
-                    .get("name")
-                    .and_then(Json::as_str)
-                    .unwrap_or("custom")
-                    .to_string(),
-                mem_bytes: (mem_gb * 1e9) as u64,
-                peak_flops: peak_tflops * 1e12,
-                mfu,
-            },
-            interconnect_gbps,
+            name,
+            groups: vec![DeviceGroup {
+                device: Self::device_from_json(d)?,
+                count: devices,
+                link_gbps: interconnect_gbps,
+            }],
         })
     }
 
@@ -285,6 +503,8 @@ mod tests {
         assert_eq!(d.peak_flops, legacy.peak_flops);
         assert_eq!(d.mfu, legacy.mfu);
         assert_eq!(c.mem_budget_bytes(), 40_000_000_000);
+        assert_eq!(c.devices(), 16);
+        assert!(!c.is_heterogeneous());
         // the comm hop must be EXACTLY the 0.5 ms constant the planners
         // charged before the redesign — golden-plan parity depends on it
         assert_eq!(c.comm_hop_ms(), 0.5);
@@ -304,17 +524,41 @@ mod tests {
     }
 
     #[test]
+    fn hetero_json_roundtrip_preserves_the_pool() {
+        let c = ClusterSpec::a40_a100_demo();
+        let j = c.to_json();
+        let back = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(back, c);
+        let reparsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(ClusterSpec::from_json(&reparsed).unwrap(), c);
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.devices(), 8);
+    }
+
+    #[test]
+    fn single_group_renders_the_legacy_schema() {
+        // A one-group pool must keep reading AND writing the old
+        // single-device form, so pre-hetero files and tools interoperate.
+        let mut c = ClusterSpec::a40_default().with_devices(8);
+        c.name = "a40x8".to_string();
+        let text = c.to_json().render();
+        assert!(text.contains("\"devices\""), "{text}");
+        assert!(text.contains("\"interconnect_gbps\""), "{text}");
+        assert!(!text.contains("\"groups\""), "{text}");
+    }
+
+    #[test]
     fn fingerprint_tracks_semantics_not_names() {
         let a = ClusterSpec::a40_default();
         let mut renamed = a.clone();
         renamed.name = "somewhere-else".to_string();
-        renamed.device.name = "A40-PCIe".to_string();
+        renamed.groups[0].device.name = "A40-PCIe".to_string();
         assert_eq!(a.fingerprint(), renamed.fingerprint());
         let mut bigger = a.clone();
-        bigger.device.mem_bytes = 80_000_000_000;
+        bigger.groups[0].device.mem_bytes = 80_000_000_000;
         assert_ne!(a.fingerprint(), bigger.fingerprint());
         let mut slower_net = a.clone();
-        slower_net.interconnect_gbps = 16.0;
+        slower_net.groups[0].link_gbps = 16.0;
         assert_ne!(a.fingerprint(), slower_net.fingerprint());
         assert_ne!(
             a.fingerprint(),
@@ -323,10 +567,37 @@ mod tests {
     }
 
     #[test]
+    fn hetero_fingerprint_never_aliases_a_homogeneous_pool() {
+        let hetero = ClusterSpec::a40_a100_demo();
+        let a40x8 = ClusterSpec::a40_default().with_devices(8);
+        assert_ne!(hetero.fingerprint(), a40x8.fingerprint());
+        // group order is load-bearing (group indices name assignments)
+        let mut flipped = hetero.clone();
+        flipped.groups.reverse();
+        assert_ne!(hetero.fingerprint(), flipped.fingerprint());
+        // single-group fingerprints keep the pre-hetero format
+        assert!(a40x8.fingerprint().starts_with("n=8|mem=40000000000|"));
+        assert!(!a40x8.fingerprint().contains('+'));
+        assert!(hetero.fingerprint().contains('+'));
+    }
+
+    #[test]
+    fn hop_pricing_takes_the_bottleneck_link() {
+        let c = ClusterSpec::a40_a100_demo();
+        // within the A40 group: the PCIe-class 0.5 ms
+        assert_eq!(c.hop_ms_between(0, 0), 0.5);
+        // within the A100 group: the fast NVLink-class link
+        assert!(c.hop_ms_between(1, 1) < 0.1);
+        // crossing groups pays the slower link
+        assert_eq!(c.hop_ms_between(0, 1), 0.5);
+        assert_eq!(c.hop_ms_between(1, 0), 0.5);
+    }
+
+    #[test]
     fn halved_bandwidth_doubles_the_comm_hop() {
         let a = ClusterSpec::a40_default();
         let mut slow = a.clone();
-        slow.interconnect_gbps = a.interconnect_gbps / 2.0;
+        slow.groups[0].link_gbps = a.groups[0].link_gbps / 2.0;
         assert_eq!(slow.comm_hop_ms(), 2.0 * a.comm_hop_ms());
     }
 
@@ -334,22 +605,35 @@ mod tests {
     fn validate_rejects_nonsense() {
         let ok = ClusterSpec::a40_default();
         let mut c = ok.clone();
-        c.devices = 0;
+        c.groups[0].count = 0;
         assert!(c.validate().is_err());
         let mut c = ok.clone();
-        c.device.mfu = 1.5;
+        c.groups[0].device.mfu = 1.5;
         assert!(c.validate().is_err());
         let mut c = ok.clone();
-        c.device.mem_bytes = 0;
+        c.groups[0].device.mem_bytes = 0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.groups[0].link_gbps = 0.0;
         assert!(c.validate().is_err());
         let mut c = ok;
-        c.interconnect_gbps = 0.0;
+        c.groups.clear();
         assert!(c.validate().is_err());
+        // a bad group anywhere in a heterogeneous pool is caught too
+        let mut h = ClusterSpec::a40_a100_demo();
+        h.groups[1].device.mfu = 0.0;
+        assert!(h.validate().is_err());
     }
 
     #[test]
     fn from_json_reports_missing_fields() {
         let j = Json::parse(r#"{"devices": 8}"#).unwrap();
+        let err = ClusterSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("device"), "{err}");
+        let j = Json::parse(r#"{"groups": []}"#).unwrap();
+        assert!(ClusterSpec::from_json(&j).is_err());
+        let j =
+            Json::parse(r#"{"groups": [{"count": 4}]}"#).unwrap();
         let err = ClusterSpec::from_json(&j).unwrap_err();
         assert!(err.contains("device"), "{err}");
         assert!(ClusterSpec::load(Path::new(

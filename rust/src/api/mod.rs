@@ -13,20 +13,24 @@
 //! The CLI subcommands (`cornstarch plan/tune/memory`),
 //! [`crate::coordinator::tuned_plan`], the `reproduce` tuner experiment,
 //! and `examples/autotune.rs` are all thin wrappers over this module —
-//! the facade is the stable surface new scenarios (heterogeneous pools,
-//! multi-tenant serving, plan diffing) build on.
+//! the facade is the stable surface new scenarios (multi-tenant serving,
+//! plan diffing) build on; heterogeneous device pools are the first one
+//! built on it.
 //!
-//! [`ClusterSpec`] is the single source of hardware truth: per-device
-//! memory capacity, the flops/MFU time model, and interconnect bandwidth,
-//! loadable from JSON (`--cluster <file>`, see [`cluster`] for the
-//! schema). Errors at this boundary are the typed [`PlanError`], not
-//! `anyhow` strings.
+//! [`ClusterSpec`] is the single source of hardware truth: one or more
+//! named device groups, each with per-device memory capacity, a
+//! flops/MFU time model, and link bandwidth, loadable from JSON
+//! (`--cluster <file>`, see [`cluster`] for both schemas). On a
+//! multi-group pool the tuner also searches *where* each pipeline chain
+//! lands, so frozen encoders can ride the cheap cards while the LLM
+//! claims the big-memory ones (`reproduce hetero`). Errors at this
+//! boundary are the typed [`PlanError`], not `anyhow` strings.
 
 pub mod cluster;
 pub mod error;
 pub mod report;
 
-pub use cluster::{ClusterSpec, DeviceClass};
+pub use cluster::{ClusterSpec, DeviceClass, DeviceGroup};
 pub use error::PlanError;
 pub use report::{PlanReport, Provenance, StageVerdict, TimelineSummary};
 
@@ -66,6 +70,11 @@ pub struct PlanRequest {
     /// and [`PlanRequest::devices`] builders re-sync an override's device
     /// pool and memory budget; the other bounds are the override's own.
     pub space: Option<SearchSpace>,
+    /// Set by a builder that received arguments it cannot honor (e.g.
+    /// [`PlanRequest::devices`] on a multi-group pool); builders cannot
+    /// return errors, so [`PlanningService::plan`] surfaces this as a
+    /// typed [`PlanError::InvalidRequest`] instead of panicking.
+    invalid: Option<String>,
 }
 
 impl PlanRequest {
@@ -83,6 +92,7 @@ impl PlanRequest {
             top: tuner::DEFAULT_TOP_K,
             cache: CachePolicy::Fresh,
             space: None,
+            invalid: None,
         }
     }
 
@@ -91,16 +101,29 @@ impl PlanRequest {
     /// to the new cluster's device pool and memory budget.
     pub fn cluster(mut self, cluster: ClusterSpec) -> Self {
         if let Some(space) = &mut self.space {
-            space.devices = cluster.devices;
+            space.devices = cluster.devices();
             space.memory_budget_bytes = Some(cluster.mem_budget_bytes());
         }
         self.cluster = cluster;
         self
     }
 
-    /// Resize the cluster's device pool (keeps the device class).
+    /// Resize the cluster's device pool (keeps the device class). Only
+    /// meaningful for homogeneous clusters; on a multi-group pool the
+    /// request is marked invalid and [`PlanningService::plan`] returns
+    /// [`PlanError::InvalidRequest`] (resize a heterogeneous pool per
+    /// group via [`PlanRequest::cluster`] instead).
     pub fn devices(mut self, devices: usize) -> Self {
-        self.cluster.devices = devices;
+        if self.cluster.is_heterogeneous() {
+            self.invalid = Some(
+                "`devices` resizes a homogeneous pool; edit the group \
+                 counts of a heterogeneous cluster and pass it via \
+                 `cluster` instead"
+                    .to_string(),
+            );
+            return self;
+        }
+        self.cluster = self.cluster.clone().with_devices(devices);
         if let Some(space) = &mut self.space {
             space.devices = devices;
         }
@@ -179,6 +202,9 @@ impl PlanningService {
     /// Answer a [`PlanRequest`]: validate, consult the cache, search if
     /// needed, and package the winner as a [`PlanReport`].
     pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
+        if let Some(why) = &req.invalid {
+            return Err(PlanError::InvalidRequest(why.clone()));
+        }
         req.cluster.validate()?;
         if req.top == 0 {
             return Err(PlanError::InvalidRequest(
@@ -199,15 +225,25 @@ impl PlanningService {
         let mut frontier = outcome.entry.frontier;
         frontier.truncate(req.top.max(1));
         let m = plan.simulate();
-        let budget_bytes = req.cluster.mem_budget_bytes();
+        // Every stage's verdict is held to the budget of the device
+        // group it actually lands on — on a heterogeneous pool an
+        // encoder stage on a 40 GB card and an LLM stage on an 80 GB
+        // card answer to different budgets.
+        let budgets = crate::memory::stage_budgets(&plan, &req.cluster);
         let stage_verdicts = plan
             .stage_names
             .iter()
+            .enumerate()
             .zip(&plan.stage_mem)
-            .map(|(name, sm)| StageVerdict {
-                stage: name.clone(),
-                peak_bytes: sm.peak_bytes(),
-                budget_bytes,
+            .zip(&budgets)
+            .map(|(((i, name), sm), &budget_bytes)| {
+                let g = plan.stage_groups.get(i).copied().unwrap_or(0);
+                StageVerdict {
+                    stage: name.clone(),
+                    device: req.cluster.groups[g].device.name.clone(),
+                    peak_bytes: sm.peak_bytes(),
+                    budget_bytes,
+                }
             })
             .collect();
         let timeline = TimelineSummary {
@@ -246,7 +282,7 @@ mod tests {
     fn default_request_is_the_paper_scenario() {
         let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::M));
         assert_eq!(req.cluster, ClusterSpec::a40_default());
-        assert_eq!(req.cluster.devices, 16);
+        assert_eq!(req.cluster.devices(), 16);
         assert_eq!(req.objective, Objective::Makespan);
         assert_eq!(req.cache, CachePolicy::Fresh);
         let space = req.resolved_space();
@@ -262,7 +298,7 @@ mod tests {
         let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S));
         let space = req.resolved_space();
         let req = req.space(space).devices(8);
-        assert_eq!(req.cluster.devices, 8);
+        assert_eq!(req.cluster.devices(), 8);
         assert_eq!(req.resolved_space().devices, 8);
     }
 
@@ -271,7 +307,7 @@ mod tests {
         let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S));
         let space = req.resolved_space(); // A40 bounds: 16 dev, 40 GB
         let mut big = ClusterSpec::a40_default().with_devices(8);
-        big.device.mem_bytes = 80_000_000_000;
+        big.groups[0].device.mem_bytes = 80_000_000_000;
         let req = req.space(space).cluster(big);
         let resolved = req.resolved_space();
         assert_eq!(resolved.devices, 8);
@@ -279,10 +315,23 @@ mod tests {
     }
 
     #[test]
+    fn devices_on_a_heterogeneous_pool_is_a_typed_error_not_a_panic() {
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+            .cluster(ClusterSpec::a40_a100_demo())
+            .devices(8); // builders cannot error; plan() must
+        match PlanningService::new().plan(&req) {
+            Err(PlanError::InvalidRequest(m)) => {
+                assert!(m.contains("group"), "{m}")
+            }
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn invalid_cluster_is_a_typed_error() {
         let mut req =
             PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S));
-        req.cluster.device.mfu = 0.0;
+        req.cluster.groups[0].device.mfu = 0.0;
         match PlanningService::new().plan(&req) {
             Err(PlanError::InvalidCluster(_)) => {}
             other => panic!("expected InvalidCluster, got {other:?}"),

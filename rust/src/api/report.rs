@@ -8,14 +8,19 @@ use crate::memory;
 use crate::modality::Plan;
 use crate::tuner::PlanSummary;
 
-/// One stage's memory verdict against the cluster's per-device budget.
+/// One stage's memory verdict against the budget of the device it lands
+/// on — on a heterogeneous pool different stages answer to different
+/// budgets.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StageVerdict {
     /// Stage name (`enc:vision[0]`, `llm[2]`, …).
     pub stage: String,
+    /// Device-class name of the group this stage landed on (`A40`,
+    /// `A100-80G`, …).
+    pub device: String,
     /// Modeled peak per-GPU bytes of this stage.
     pub peak_bytes: u64,
-    /// The cluster's per-device budget the peak is held against.
+    /// The per-device budget of the stage's group.
     pub budget_bytes: u64,
 }
 
@@ -119,8 +124,9 @@ impl PlanReport {
         for v in &self.stage_verdicts {
             let _ = writeln!(
                 s,
-                "    {:<16} {:>7.2} GB / {:.0} GB {}",
+                "    {:<16} {:<10} {:>7.2} GB / {:.0} GB {}",
                 v.stage,
+                v.device,
                 memory::gb(v.peak_bytes),
                 memory::gb(v.budget_bytes),
                 if v.fits() { "fits" } else { "OOM" },
@@ -138,6 +144,7 @@ mod tests {
     fn stage_verdict_headroom_signs() {
         let fits = StageVerdict {
             stage: "llm[0]".to_string(),
+            device: "A100-80G".to_string(),
             peak_bytes: 30,
             budget_bytes: 40,
         };
@@ -145,6 +152,7 @@ mod tests {
         assert_eq!(fits.headroom_bytes(), 10);
         let oom = StageVerdict {
             stage: "llm[0]".to_string(),
+            device: "A40".to_string(),
             peak_bytes: 50,
             budget_bytes: 40,
         };

@@ -145,11 +145,16 @@ pub fn reproduce(which: &str) -> Result<String> {
         known = true;
         push(experiments::memory_feasibility().0);
     }
+    if all || which == "hetero" {
+        known = true;
+        push(experiments::hetero_pools().0);
+    }
     if !known {
         bail!(
             "unknown experiment {which:?}; known: all, table1, fig2, fig3b, \
              fig9, fig10, fig13, fig14, fig15, table2, table3, table4, \
-             table7, table8, table10, table11, fig12, auto, tuner, memory"
+             table7, table8, table10, table11, fig12, auto, tuner, memory, \
+             hetero"
         );
     }
     Ok(out)

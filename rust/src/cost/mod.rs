@@ -11,6 +11,13 @@
 //!
 //! Calibrated against the paper's Figure 3b breakdown (CLIP + Mistral-7b
 //! on one A40); see `calibrate` and the `reproduce fig3b` target.
+//!
+//! [`Device`] is deliberately a *value*, not a global: on a heterogeneous
+//! pool every pipeline chain is priced with the time model of the device
+//! group its assignment lands it on
+//! ([`crate::api::DeviceClass::time_model`] →
+//! [`crate::modality::planner::plan_assigned`]), so one plan can mix A40-
+//! and A100-priced stages.
 
 pub mod flops;
 

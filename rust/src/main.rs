@@ -70,6 +70,8 @@ fn run(args: &[String]) -> Result<()> {
                 let mut req =
                     PlanRequest::default_for(spec.clone()).cluster(cluster);
                 if let Some(d) = flag_num(rest, "--devices")? {
+                    // on a multi-group pool the facade answers this
+                    // with a typed InvalidRequest
                     req = req.devices(d);
                 }
                 if let Some(c) = flag(rest, "--cache") {
@@ -79,7 +81,7 @@ fn run(args: &[String]) -> Result<()> {
                 println!(
                     "{} / tuned on {} GPUs ({})",
                     spec.name(),
-                    req.cluster.devices,
+                    req.cluster.devices(),
                     if report.provenance.cache_hit {
                         "cache hit"
                     } else {
@@ -95,6 +97,12 @@ fn run(args: &[String]) -> Result<()> {
                 Some(s) => Strategy::from_key(s)
                     .ok_or_else(|| anyhow!("unknown strategy {s}"))?,
             };
+            anyhow::ensure!(
+                !cluster.is_heterogeneous(),
+                "fixed-strategy plans price a single device class; use \
+                 `--strategy tuned` to search placements on a \
+                 heterogeneous pool"
+            );
             let llm_pp = flag_num(rest, "--llm-pp")?.unwrap_or(4);
             let enc_pp = flag_num(rest, "--enc-pp")?.unwrap_or(1);
             let mm = MultimodalModule::from_spec(&spec);
@@ -121,6 +129,8 @@ fn run(args: &[String]) -> Result<()> {
             let mut req =
                 PlanRequest::default_for(spec.clone()).cluster(cluster);
             if let Some(d) = flag_num(rest, "--devices")? {
+                // on a multi-group pool the facade answers this with a
+                // typed InvalidRequest
                 req = req.devices(d);
             }
             if let Some(b) = flag_num(rest, "--budget")? {
@@ -161,17 +171,21 @@ fn run(args: &[String]) -> Result<()> {
                 "{} on {} ({} GPUs) — objective {}",
                 spec.name(),
                 req.cluster.name,
-                req.cluster.devices,
+                req.cluster.devices(),
                 req.objective.key()
             );
-            println!(
-                "  cluster: {:.0} GB/device, {:.1} TF peak × {} MFU, \
-                 {} GB/s interconnect",
-                memory::gb(req.cluster.mem_budget_bytes()),
-                req.cluster.device.peak_flops / 1e12,
-                req.cluster.device.mfu,
-                req.cluster.interconnect_gbps
-            );
+            for g in &req.cluster.groups {
+                println!(
+                    "  group {}×{}: {:.0} GB/device, {:.1} TF peak × {} \
+                     MFU, {} GB/s link",
+                    g.count,
+                    g.device.name,
+                    memory::gb(g.device.mem_bytes),
+                    g.device.peak_flops / 1e12,
+                    g.device.mfu,
+                    g.link_gbps
+                );
+            }
             if report.provenance.cache_hit {
                 println!(
                     "  cache hit ({}) — no search",
@@ -230,6 +244,13 @@ fn run(args: &[String]) -> Result<()> {
                 Some(s) => Strategy::from_key(s)
                     .ok_or_else(|| anyhow!("unknown strategy {s}"))?,
             };
+            anyhow::ensure!(
+                !cluster.is_heterogeneous(),
+                "`memory` judges one device class at a time; on a \
+                 heterogeneous pool use `plan --strategy tuned`, whose \
+                 report holds every stage to the budget of the group it \
+                 lands on"
+            );
             let llm_pp = flag_num(rest, "--llm-pp")?.unwrap_or(4);
             let enc_pp = flag_num(rest, "--enc-pp")?.unwrap_or(1);
             let microbatches =

@@ -234,6 +234,76 @@ pub fn check(plan: &Plan, budget_bytes: u64) -> Result<()> {
     Ok(())
 }
 
+/// Per-stage memory budgets under a (possibly heterogeneous) cluster:
+/// each stage's verdict is held to the budget of the device group it
+/// actually lands on (`Plan::stage_groups`). A plan without recorded
+/// groups (legacy homogeneous construction) is budgeted on group 0.
+pub fn stage_budgets(
+    plan: &Plan,
+    cluster: &crate::api::ClusterSpec,
+) -> Vec<u64> {
+    (0..plan.stage_mem.len())
+        .map(|i| {
+            let g = plan.stage_groups.get(i).copied().unwrap_or(0);
+            cluster.group_mem_bytes(g)
+        })
+        .collect()
+}
+
+/// Does every stage fit both the budget of the device group it lands on
+/// AND an optional caller-imposed cap (`None` disables the check
+/// entirely)? This is the tuner's heterogeneous capacity filter — the
+/// cap is the search space's scalar `memory_budget_bytes`, which a
+/// caller may set *tighter* than any group's budget; the per-stage
+/// budget is always the minimum of the two.
+pub fn fits_assigned(
+    plan: &Plan,
+    cluster: &crate::api::ClusterSpec,
+    cap: Option<u64>,
+) -> bool {
+    let Some(cap) = cap else {
+        return true;
+    };
+    plan.stage_mem
+        .iter()
+        .zip(stage_budgets(plan, cluster))
+        .all(|(sm, budget)| sm.peak_bytes() <= budget.min(cap))
+}
+
+/// Hold every stage of a plan to the budget of the device it lands on —
+/// the heterogeneous-pools generalization of [`check`]. The error names
+/// the first over-budget stage and the group whose budget it broke.
+pub fn check_assigned(
+    plan: &Plan,
+    cluster: &crate::api::ClusterSpec,
+) -> Result<()> {
+    let budgets = stage_budgets(plan, cluster);
+    for (idx, (sm, &budget)) in
+        plan.stage_mem.iter().zip(&budgets).enumerate()
+    {
+        if sm.peak_bytes() > budget {
+            let name = plan
+                .stage_names
+                .get(idx)
+                .map(String::as_str)
+                .unwrap_or("?");
+            let g = plan.stage_groups.get(idx).copied().unwrap_or(0);
+            bail!(
+                "stage {idx} ({name}) needs {:.2} GB ({:.2} GB static + \
+                 {:.2} GB/microbatch × {} in flight) > {:.2} GB budget of \
+                 group {g} ({})",
+                gb(sm.peak_bytes()),
+                gb(sm.static_bytes()),
+                gb(sm.act_bytes_per_mb),
+                sm.in_flight,
+                gb(budget),
+                cluster.groups[g].device.name
+            );
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +418,40 @@ mod tests {
         let err = check(&p, 1).unwrap_err().to_string();
         assert!(err.contains("GB budget"), "{err}");
         assert!(err.contains("in flight"), "{err}");
+    }
+
+    #[test]
+    fn assigned_check_uses_each_stages_group_budget() {
+        use crate::api::ClusterSpec;
+        use crate::modality::MultimodalModule;
+
+        let cluster = ClusterSpec::a40_a100_demo();
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let mm = MultimodalModule::from_spec(&spec);
+        let ps = MultimodalParallelSpec::paper_default(&[1], 2, 2, 2);
+        let plan = planner::plan_assigned(
+            Strategy::Cornstarch,
+            &mm,
+            &ps,
+            &cluster,
+            &[0, 1],
+        );
+        let budgets = stage_budgets(&plan, &cluster);
+        assert_eq!(budgets.len(), plan.stage_mem.len());
+        assert_eq!(budgets[0], cluster.group_mem_bytes(0));
+        assert_eq!(budgets[1], cluster.group_mem_bytes(1));
+        assert!(budgets[1] > budgets[0], "demo premise: A100 has more");
+        // shrink the A40 group below the encoder stage's peak: the
+        // assigned check must name the encoder stage and the A40 group,
+        // while the flat check against the pool max would still pass
+        let mut tight = cluster.clone();
+        tight.groups[0].device.mem_bytes =
+            plan.stage_mem[0].peak_bytes() - 1;
+        let err = check_assigned(&plan, &tight).unwrap_err().to_string();
+        assert!(err.contains("enc:vision[0]"), "{err}");
+        assert!(err.contains("group 0"), "{err}");
+        assert!(check(&plan, tight.mem_budget_bytes()).is_ok());
+        assert!(check_assigned(&plan, &cluster).is_ok());
     }
 
     #[test]

@@ -303,7 +303,7 @@ mod tests {
         // golden parity: the A40 default reproduces the paper constant
         assert_eq!(clu.comm_ms, def.comm_ms);
         let mut slow = a40.clone();
-        slow.interconnect_gbps /= 2.0;
+        slow.groups[0].link_gbps /= 2.0;
         let s = MultimodalParallelSpec::for_cluster(&[1], 4, 2, 2, &slow);
         assert_eq!(s.comm_ms, 2.0 * def.comm_ms);
     }

@@ -81,9 +81,27 @@ pub struct Plan {
     /// Per-stage per-GPU memory accounting ([`crate::memory`]), parallel
     /// to `graph.nodes`.
     pub stage_mem: Vec<StageMemory>,
+    /// Cluster device-group index each stage lands on, parallel to
+    /// `graph.nodes`. All zeros for plans built against a homogeneous
+    /// pool; heterogeneous assignments ([`plan_assigned`]) record which
+    /// group's time model priced the stage and which group's memory
+    /// budget its verdict is held to.
+    pub stage_groups: Vec<usize>,
     pub n_gpus: usize,
     pub num_microbatches: usize,
     pub microbatch_size: usize,
+}
+
+/// The hardware one pipeline chain is planned onto: the device time
+/// model its layer costs are priced with, the cluster group index its
+/// stages occupy, and the per-hop cost of that group's link. This is how
+/// the cost layer's per-device time models are keyed by a heterogeneous
+/// assignment.
+#[derive(Clone, Copy, Debug)]
+pub struct ChainHw {
+    pub device: Device,
+    pub group: usize,
+    pub link_ms: f64,
 }
 
 /// Iteration-level metrics computed by replaying the plan through the
@@ -224,18 +242,95 @@ fn partition(
     (bounds, sums)
 }
 
-/// Plan an MLLM under `strategy`. GPU accounting: every pipeline stage is
-/// one device group of `tp×cp` GPUs; Replicated reuses the LLM's groups.
+/// Plan an MLLM under `strategy` on a homogeneous pool: every chain is
+/// priced with the same `device` and the flat `spec.comm_ms` hop. GPU
+/// accounting: every pipeline stage is one device group of `tp×cp` GPUs;
+/// Replicated reuses the LLM's groups.
 pub fn plan(
     strategy: Strategy,
     mm: &MultimodalModule,
     spec: &MultimodalParallelSpec,
     device: Device,
 ) -> Plan {
+    let hw = ChainHw { device, group: 0, link_ms: spec.comm_ms };
+    let enc_hw = vec![hw; mm.encoders.len()];
+    plan_on_hw(strategy, mm, spec, &enc_hw, hw)
+}
+
+/// Plan an MLLM under `strategy` with each pipeline chain assigned to a
+/// device group of `cluster` — the heterogeneous-pools entry point.
+///
+/// `chain_groups` names a cluster group per chain: one entry per encoder
+/// (in `mm.encoders` order) followed by the LLM's, except
+/// [`Strategy::Replicated`], which has a single chain (encoders ride the
+/// LLM stages) and takes exactly one entry. An empty slice means "all on
+/// group 0". Every chain's layer costs are priced with its group's time
+/// model; within-chain hops pay the group's link, and cross-chain hops
+/// pay the slower of the two links (the bottleneck).
+pub fn plan_assigned(
+    strategy: Strategy,
+    mm: &MultimodalModule,
+    spec: &MultimodalParallelSpec,
+    cluster: &crate::api::ClusterSpec,
+    chain_groups: &[usize],
+) -> Plan {
+    let n_chains = match strategy {
+        Strategy::Replicated => 1,
+        _ => mm.encoders.len() + 1,
+    };
+    let zeros;
+    let groups: &[usize] = if chain_groups.is_empty() {
+        zeros = vec![0usize; n_chains];
+        &zeros
+    } else {
+        chain_groups
+    };
+    assert_eq!(
+        groups.len(),
+        n_chains,
+        "{} wants one group per chain ({n_chains}), got {:?}",
+        strategy.name(),
+        groups
+    );
+    let hw_of = |g: usize| ChainHw {
+        device: cluster.group_device(g),
+        group: g,
+        link_ms: cluster.groups[g].hop_ms(),
+    };
+    let llm_hw = hw_of(*groups.last().unwrap());
+    let enc_hw: Vec<ChainHw> = match strategy {
+        Strategy::Replicated => Vec::new(),
+        _ => groups[..groups.len() - 1]
+            .iter()
+            .map(|&g| hw_of(g))
+            .collect(),
+    };
+    plan_on_hw(strategy, mm, spec, &enc_hw, llm_hw)
+}
+
+fn plan_on_hw(
+    strategy: Strategy,
+    mm: &MultimodalModule,
+    spec: &MultimodalParallelSpec,
+    enc_hw: &[ChainHw],
+    llm_hw: ChainHw,
+) -> Plan {
     match strategy {
-        Strategy::Cornstarch => plan_modality_parallel(mm, spec, device),
-        Strategy::Colocated => plan_colocated(mm, spec, device),
-        Strategy::Replicated => plan_replicated(mm, spec, device),
+        Strategy::Cornstarch => {
+            plan_modality_parallel(mm, spec, enc_hw, llm_hw)
+        }
+        Strategy::Colocated => {
+            // All encoders fuse stage-wise into one chain, so they must
+            // share one device group (§6.3's equal-stage constraint has
+            // a hardware twin).
+            assert!(
+                enc_hw.windows(2).all(|w| w[0].group == w[1].group),
+                "encoders-colocated requires all encoders on one group"
+            );
+            let enc = enc_hw.first().copied().unwrap_or(llm_hw);
+            plan_colocated(mm, spec, enc, llm_hw)
+        }
+        Strategy::Replicated => plan_replicated(mm, spec, llm_hw),
     }
 }
 
@@ -323,7 +418,11 @@ pub fn plan_chain(
     let bounds = partition_min_max(&weights, total_stages);
     let costs = stage_sums(&layers, &bounds, spec.grad_ckpt);
     let mut stage_mem = memory::stage_sums(&mems, &bounds);
-    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    let mut graph = StageGraph {
+        nodes: Vec::new(),
+        comm_ms: spec.comm_ms,
+        device_link_ms: Vec::new(),
+    };
     graph.add_chain("stage", &costs, 0, &[]);
     memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     // A stage is named for the module owning its first layer.
@@ -337,6 +436,7 @@ pub fn plan_chain(
         graph,
         stage_names: names,
         stage_mem,
+        stage_groups: vec![0; total_stages],
         n_gpus: total_stages * gps,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -346,19 +446,32 @@ pub fn plan_chain(
 fn plan_modality_parallel(
     mm: &MultimodalModule,
     spec: &MultimodalParallelSpec,
-    device: Device,
+    enc_hw: &[ChainHw],
+    llm_hw: ChainHw,
 ) -> Plan {
     assert_eq!(spec.encoder_specs.len(), mm.encoders.len());
+    assert_eq!(enc_hw.len(), mm.encoders.len());
     let aware = true; // Cornstarch always partitions frozen-aware
-    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    let mut graph = StageGraph {
+        nodes: Vec::new(),
+        comm_ms: spec.comm_ms,
+        device_link_ms: Vec::new(),
+    };
     let mut names = Vec::new();
     let mut stage_mem: Vec<StageMemory> = Vec::new();
+    let mut stage_groups: Vec<usize> = Vec::new();
     let mut dev = 0usize;
     let mut enc_tails = Vec::new();
     let mut n_gpus = 0usize;
-    for (e, ps) in mm.encoders.iter().zip(&spec.encoder_specs) {
-        let layers =
-            encoder_layer_costs(e, &mm.llm.geom, device, ps.gpus_per_stage());
+    for ((e, ps), hw) in
+        mm.encoders.iter().zip(&spec.encoder_specs).zip(enc_hw)
+    {
+        let layers = encoder_layer_costs(
+            e,
+            &mm.llm.geom,
+            hw.device,
+            ps.gpus_per_stage(),
+        );
         let (bounds, costs) = partition(&layers, ps.pp, aware, spec.grad_ckpt);
         let mems = memory::encoder_layer_memory(
             e,
@@ -371,12 +484,16 @@ fn plan_modality_parallel(
         for i in 0..costs.len() {
             names.push(format!("enc:{}[{}]", e.name, i));
         }
+        stage_groups.extend(std::iter::repeat_n(hw.group, ps.pp));
+        graph
+            .device_link_ms
+            .extend(std::iter::repeat_n(hw.link_ms, ps.pp));
         dev += ps.pp;
         n_gpus += ps.gpus();
         enc_tails.push(*ids.last().unwrap());
     }
     let lp = &spec.llm_spec;
-    let layers = llm_layer_costs(mm, device, lp.gpus_per_stage());
+    let layers = llm_layer_costs(mm, llm_hw.device, lp.gpus_per_stage());
     let (bounds, costs) = partition(&layers, lp.pp, aware, spec.grad_ckpt);
     stage_mem.extend(memory::stage_sums(
         &memory::llm_layer_memory(mm, lp, mm.microbatch_size),
@@ -386,6 +503,10 @@ fn plan_modality_parallel(
     for i in 0..costs.len() {
         names.push(format!("llm[{i}]"));
     }
+    stage_groups.extend(std::iter::repeat_n(llm_hw.group, lp.pp));
+    graph
+        .device_link_ms
+        .extend(std::iter::repeat_n(llm_hw.link_ms, lp.pp));
     n_gpus += lp.gpus();
     memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     Plan {
@@ -393,6 +514,7 @@ fn plan_modality_parallel(
         graph,
         stage_names: names,
         stage_mem,
+        stage_groups,
         n_gpus,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -402,7 +524,8 @@ fn plan_modality_parallel(
 fn plan_colocated(
     mm: &MultimodalModule,
     spec: &MultimodalParallelSpec,
-    device: Device,
+    enc_hw: ChainHw,
+    llm_hw: ChainHw,
 ) -> Plan {
     // All encoders share ONE stage count (the colocated constraint the
     // paper calls out in §6.3: "all encoders in the colocated module must
@@ -417,9 +540,14 @@ fn plan_colocated(
         "encoders-colocated requires equal encoder stage counts"
     );
     let gps = spec.llm_spec.gpus_per_stage();
-    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    let mut graph = StageGraph {
+        nodes: Vec::new(),
+        comm_ms: spec.comm_ms,
+        device_link_ms: Vec::new(),
+    };
     let mut names = Vec::new();
     let mut stage_mem: Vec<StageMemory> = Vec::new();
+    let mut stage_groups: Vec<usize> = Vec::new();
     let mut enc_tail = Vec::new();
     let mut dev = 0usize;
     if enc_pp > 0 && !mm.encoders.is_empty() {
@@ -429,7 +557,8 @@ fn plan_colocated(
         let mut fused = vec![StageCost { fwd_ms: 0.0, bwd_ms: 0.0 }; enc_pp];
         let mut fused_mem = vec![StageMemory::default(); enc_pp];
         for e in &mm.encoders {
-            let layers = encoder_layer_costs(e, &mm.llm.geom, device, gps);
+            let layers =
+                encoder_layer_costs(e, &mm.llm.geom, enc_hw.device, gps);
             let (bounds, costs) = partition(&layers, enc_pp, false, spec.grad_ckpt);
             let mems = memory::encoder_layer_memory(
                 e,
@@ -452,10 +581,14 @@ fn plan_colocated(
             names.push(format!("enc[{i}]"));
         }
         stage_mem.extend(fused_mem);
+        stage_groups.extend(std::iter::repeat_n(enc_hw.group, enc_pp));
+        graph
+            .device_link_ms
+            .extend(std::iter::repeat_n(enc_hw.link_ms, enc_pp));
         enc_tail.push(*ids.last().unwrap());
         dev = enc_pp;
     }
-    let layers = llm_layer_costs(mm, device, gps);
+    let layers = llm_layer_costs(mm, llm_hw.device, gps);
     let (bounds, costs) = partition(&layers, spec.llm_spec.pp, false, spec.grad_ckpt);
     stage_mem.extend(memory::stage_sums(
         &memory::llm_layer_memory(mm, &spec.llm_spec, mm.microbatch_size),
@@ -465,6 +598,10 @@ fn plan_colocated(
     for i in 0..costs.len() {
         names.push(format!("llm[{i}]"));
     }
+    stage_groups.extend(std::iter::repeat_n(llm_hw.group, spec.llm_spec.pp));
+    graph
+        .device_link_ms
+        .extend(std::iter::repeat_n(llm_hw.link_ms, spec.llm_spec.pp));
     memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     let n_gpus = (enc_pp + spec.llm_spec.pp) * gps;
     Plan {
@@ -472,6 +609,7 @@ fn plan_colocated(
         graph,
         stage_names: names,
         stage_mem,
+        stage_groups,
         n_gpus,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -481,21 +619,22 @@ fn plan_colocated(
 fn plan_replicated(
     mm: &MultimodalModule,
     spec: &MultimodalParallelSpec,
-    device: Device,
+    hw: ChainHw,
 ) -> Plan {
     let gps = spec.llm_spec.gpus_per_stage();
     let pp = spec.llm_spec.pp;
-    let layers = llm_layer_costs(mm, device, gps);
+    let layers = llm_layer_costs(mm, hw.device, gps);
     let (bounds, mut costs) = partition(&layers, pp, false, spec.grad_ckpt);
     // Every stage redundantly re-runs ALL encoders per microbatch
     // (Figure 1b / Figure 2a): add the full encoder fwd (+frozen-rule bwd)
     // to every stage — and the full encoder weights + activations to
-    // every stage's memory.
+    // every stage's memory. The encoders execute on the LLM's devices, so
+    // they are priced with the LLM chain's time model.
     let mut enc_fwd = 0.0;
     let mut enc_bwd = 0.0;
     let mut enc_mem = StageMemory::default();
     for e in &mm.encoders {
-        for l in encoder_layer_costs(e, &mm.llm.geom, device, gps) {
+        for l in encoder_layer_costs(e, &mm.llm.geom, hw.device, gps) {
             enc_fwd += l.fwd_ms;
             enc_bwd += l.bwd_ms(spec.grad_ckpt);
         }
@@ -519,7 +658,11 @@ fn plan_replicated(
     for sm in &mut stage_mem {
         sm.absorb(&enc_mem);
     }
-    let mut graph = StageGraph { nodes: Vec::new(), comm_ms: spec.comm_ms };
+    let mut graph = StageGraph {
+        nodes: Vec::new(),
+        comm_ms: spec.comm_ms,
+        device_link_ms: vec![hw.link_ms; pp],
+    };
     graph.add_chain("llm", &costs, 0, &[]);
     memory::assign_in_flight(&mut stage_mem, &graph, spec.num_microbatches);
     let names = (0..pp).map(|i| format!("llm[{i}]")).collect();
@@ -528,6 +671,7 @@ fn plan_replicated(
         graph,
         stage_names: names,
         stage_mem,
+        stage_groups: vec![hw.group; pp],
         n_gpus: pp * gps,
         num_microbatches: spec.num_microbatches,
         microbatch_size: mm.microbatch_size,
@@ -661,6 +805,91 @@ mod tests {
             m_cs.throughput_per_gpu,
             m_rep.throughput_per_gpu
         );
+    }
+
+    #[test]
+    fn assigned_plan_prices_each_chain_with_its_group() {
+        let cluster = crate::api::ClusterSpec::a40_a100_demo();
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let mm = MultimodalModule::from_spec(&spec);
+        let ps = MultimodalParallelSpec::paper_default(&[1], 2, 1, 1);
+        // encoder on the A40 group (0), LLM on the A100 group (1)
+        let split =
+            plan_assigned(Strategy::Cornstarch, &mm, &ps, &cluster, &[0, 1]);
+        assert_eq!(split.stage_groups, vec![0, 1, 1]);
+        // the same shape all on the A40 group
+        let a40 =
+            plan_assigned(Strategy::Cornstarch, &mm, &ps, &cluster, &[0, 0]);
+        assert_eq!(a40.stage_groups, vec![0, 0, 0]);
+        // encoder stages identical (same device), LLM stages faster on
+        // the A100's higher effective flops
+        assert!(
+            split.graph.nodes[0].cost.fwd_ms == a40.graph.nodes[0].cost.fwd_ms
+        );
+        let a100_eff = cluster.group_device(1).effective_flops();
+        let a40_eff = cluster.group_device(0).effective_flops();
+        assert!(a100_eff > a40_eff, "demo premise: A100 faster");
+        for s in 1..3 {
+            assert!(
+                split.graph.nodes[s].cost.fwd_ms
+                    < a40.graph.nodes[s].cost.fwd_ms
+            );
+        }
+        // links: encoder device slow, LLM devices fast; the crossing
+        // edge pays the slow (bottleneck) link
+        assert_eq!(split.graph.device_link_ms.len(), 3);
+        assert_eq!(split.graph.hop_ms(0, 1), cluster.hop_ms_between(0, 1));
+        assert_eq!(split.graph.hop_ms(1, 2), cluster.hop_ms_between(1, 1));
+        assert!(split.graph.hop_ms(1, 2) < split.graph.hop_ms(0, 1));
+        // and the heterogeneous split simulates faster than all-A40
+        assert!(
+            split.simulate().iteration_ms < a40.simulate().iteration_ms
+        );
+    }
+
+    #[test]
+    fn assigned_plan_on_one_group_matches_the_homogeneous_planner() {
+        // plan_assigned on a single-group cluster must be byte-identical
+        // to the legacy plan() path — golden parity depends on it.
+        let cluster = crate::api::ClusterSpec::a40_default();
+        let spec = MllmSpec::valm(Size::M, Size::M, Size::M);
+        let mm = MultimodalModule::from_spec(&spec);
+        for (strategy, enc_pp, groups) in [
+            (Strategy::Cornstarch, vec![1usize, 2], vec![0usize, 0, 0]),
+            (Strategy::Colocated, vec![2, 2], vec![0, 0, 0]),
+            (Strategy::Replicated, vec![], vec![0]),
+        ] {
+            let ps = MultimodalParallelSpec::for_cluster(
+                &enc_pp, 3, 2, 2, &cluster,
+            );
+            let legacy = plan(strategy, &mm, &ps, cluster.device_model());
+            let assigned =
+                plan_assigned(strategy, &mm, &ps, &cluster, &groups);
+            assert_eq!(legacy.stage_names, assigned.stage_names);
+            assert_eq!(legacy.stage_groups, assigned.stage_groups);
+            assert_eq!(legacy.n_gpus, assigned.n_gpus);
+            for (a, b) in
+                legacy.graph.nodes.iter().zip(&assigned.graph.nodes)
+            {
+                assert!(a.cost.fwd_ms == b.cost.fwd_ms);
+                assert!(a.cost.bwd_ms == b.cost.bwd_ms);
+                assert_eq!(a.device, b.device);
+                assert_eq!(a.preds, b.preds);
+            }
+            let (ml, ma) =
+                (legacy.simulate(), assigned.simulate());
+            assert!(ml.iteration_ms == ma.iteration_ms);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one group per chain")]
+    fn assigned_plan_rejects_wrong_assignment_arity() {
+        let cluster = crate::api::ClusterSpec::a40_a100_demo();
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let mm = MultimodalModule::from_spec(&spec);
+        let ps = MultimodalParallelSpec::paper_default(&[1], 2, 1, 1);
+        plan_assigned(Strategy::Cornstarch, &mm, &ps, &cluster, &[0]);
     }
 
     #[test]

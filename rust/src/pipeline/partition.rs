@@ -216,6 +216,30 @@ mod tests {
     }
 
     #[test]
+    fn boundaries_are_invariant_under_uniform_scaling() {
+        // The invariant heterogeneous device assignment relies on: a
+        // module's per-layer costs all scale by the same factor when the
+        // chain moves to a faster/slower device group, and the min-max
+        // split of uniformly scaled costs is the same split — so the
+        // partition depends only on the module's *shape*, never on which
+        // group it was assigned to.
+        check("partition invariant under cost scaling", 40, |g| {
+            let n = g.usize(2, 40);
+            let s = g.usize(1, n + 1);
+            let costs: Vec<f64> =
+                (0..n).map(|_| g.rng.f64() * 5.0 + 0.01).collect();
+            // e.g. A40 -> A100: ~0.58x; also try slower devices
+            let scale = g.rng.f64() * 3.0 + 0.1;
+            let scaled: Vec<f64> = costs.iter().map(|c| c * scale).collect();
+            assert_eq!(
+                partition_min_max(&costs, s),
+                partition_min_max(&scaled, s),
+                "scale {scale} moved a boundary"
+            );
+        });
+    }
+
+    #[test]
     fn stage_sums_add_up() {
         let layers = uniform_layers(6, 2.0, true, true);
         let sums = stage_sums(&layers, &[0, 3, 6], true);

@@ -32,8 +32,15 @@ pub struct StageNode {
 #[derive(Clone, Debug, Default)]
 pub struct StageGraph {
     pub nodes: Vec<StageNode>,
-    /// ms added to every cross-device dependency (activation transfer).
+    /// ms added to every cross-device dependency (activation transfer)
+    /// when no per-device link cost is recorded — the homogeneous
+    /// single-link model every pre-hetero plan used.
     pub comm_ms: f64,
+    /// Per-device link cost (ms per hop), indexed by [`StageNode::device`].
+    /// When filled, a cross-device hop between `a` and `b` pays the
+    /// *slower* of the two links (the bottleneck of a heterogeneous
+    /// pool); when empty, every hop pays [`StageGraph::comm_ms`].
+    pub device_link_ms: Vec<f64>,
 }
 
 impl StageGraph {
@@ -67,6 +74,20 @@ impl StageGraph {
 
     pub fn n_devices(&self) -> usize {
         self.nodes.iter().map(|n| n.device + 1).max().unwrap_or(0)
+    }
+
+    /// Comm cost (ms) of a dependency hop from device `a` to device `b`:
+    /// 0 on-device, the bottleneck (max) of the two recorded link costs
+    /// across devices, or the flat [`StageGraph::comm_ms`] when no
+    /// per-device links are recorded.
+    pub fn hop_ms(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        match (self.device_link_ms.get(a), self.device_link_ms.get(b)) {
+            (Some(&la), Some(&lb)) => la.max(lb),
+            _ => self.comm_ms,
+        }
     }
 
     pub fn successors(&self) -> Vec<Vec<usize>> {
@@ -136,12 +157,7 @@ pub fn onef1b_tasks(g: &StageGraph, m: usize) -> Vec<TaskSpec> {
                 .preds
                 .iter()
                 .map(|&p| {
-                    let lat = if g.nodes[p].device != node.device {
-                        g.comm_ms
-                    } else {
-                        0.0
-                    };
-                    (fwd_id(p, mb), lat)
+                    (fwd_id(p, mb), g.hop_ms(g.nodes[p].device, node.device))
                 })
                 .collect();
             // 1F1B memory token: at most depth(s) microbatches in flight.
@@ -165,11 +181,7 @@ pub fn onef1b_tasks(g: &StageGraph, m: usize) -> Vec<TaskSpec> {
             let node = &g.nodes[s];
             let mut deps: Vec<(usize, f64)> = vec![(fwd_id(s, mb), 0.0)];
             for &q in &succ[s] {
-                let lat = if g.nodes[q].device != node.device {
-                    g.comm_ms
-                } else {
-                    0.0
-                };
+                let lat = g.hop_ms(g.nodes[q].device, node.device);
                 deps.push((bwd_id(q, mb), lat));
             }
             tasks.push(TaskSpec {
@@ -257,6 +269,37 @@ mod tests {
             .find(|t| t.kind == TaskKind::Fwd && t.stage == 1)
             .unwrap();
         assert_eq!(f_s1.deps[0].1, 0.5);
+    }
+
+    #[test]
+    fn per_device_links_price_the_bottleneck() {
+        let mut g = StageGraph::default();
+        g.comm_ms = 0.5;
+        g.add_chain("llm", &chain(1.0, 2.0, 3), 0, &[]);
+        // without link costs, every cross-device hop pays the flat rate
+        assert_eq!(g.hop_ms(0, 1), 0.5);
+        assert_eq!(g.hop_ms(1, 1), 0.0);
+        // devices 0..1 on a slow-linked group, device 2 on a fast one:
+        // the crossing hop pays the slower link
+        g.device_link_ms = vec![0.5, 0.5, 0.05];
+        assert_eq!(g.hop_ms(0, 1), 0.5);
+        assert_eq!(g.hop_ms(1, 2), 0.5);
+        assert_eq!(g.hop_ms(2, 2), 0.0);
+        // the emitted task graph carries the per-edge price
+        let tasks = onef1b_tasks(&g, 1);
+        let f_s2 = tasks
+            .iter()
+            .find(|t| t.kind == TaskKind::Fwd && t.stage == 2)
+            .unwrap();
+        assert_eq!(f_s2.deps[0].1, 0.5);
+        // a fast-fast hop would price at the fast link
+        g.device_link_ms = vec![0.05, 0.05, 0.05];
+        let tasks = onef1b_tasks(&g, 1);
+        let f_s2 = tasks
+            .iter()
+            .find(|t| t.kind == TaskKind::Fwd && t.stage == 2)
+            .unwrap();
+        assert_eq!(f_s2.deps[0].1, 0.05);
     }
 
     #[test]

@@ -8,17 +8,25 @@
 //! stored on every entry: a lookup must match both, so an answer tuned
 //! for one hardware pool can never serve another (a different memory
 //! budget readmits different candidates; a different bandwidth prices
-//! comm differently). An entry whose stored fingerprint is *absent* is
-//! rejected at load, not defaulted — a pre-`ClusterSpec` entry must not
-//! satisfy a v3 lookup. Each entry stores the search's **top-k
-//! frontier** (best first), not just a single winner: consumers trade
-//! throughput against GPU count and memory headroom without
-//! re-searching. The store is a single JSON file written atomically
-//! (temp file + rename); a missing, corrupt, or version-skewed file
-//! (including the retired v2 layout) degrades to an empty cache, never
-//! an error.
+//! comm differently). Since schema v4 the fingerprint covers the **full
+//! heterogeneous pool** (every device group's count, memory, flops/MFU,
+//! and link), and each cached plan stores its chain→group assignment
+//! (`groups`) — so a heterogeneous answer never aliases, or is served
+//! to, a homogeneous query of the same size. An entry whose stored
+//! fingerprint or assignment is *absent* is rejected at load, not
+//! defaulted. Each entry stores the search's **top-k frontier** (best
+//! first), not just a single winner: consumers trade throughput against
+//! GPU count and memory headroom without re-searching. The store is a
+//! single JSON file written atomically (unique temp file + rename)
+//! under a process-wide per-path lock, merging entries other writers
+//! persisted since our load — concurrent tuners sharing one file lose
+//! nothing; a missing, corrupt, or version-skewed file (including the
+//! retired v1–v3 layouts) degrades to an empty cache, never an error.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{Context, Result};
 
@@ -51,6 +59,15 @@ impl PlanSummary {
                     c.enc_pps.iter().map(|&p| Json::Int(p as i64)).collect(),
                 ),
             ),
+            (
+                "groups",
+                Json::Arr(
+                    c.chain_groups
+                        .iter()
+                        .map(|&g| Json::Int(g as i64))
+                        .collect(),
+                ),
+            ),
             ("llm_pp", Json::Int(c.llm_pp as i64)),
             ("tp", Json::Int(c.tp as i64)),
             ("cp", Json::Int(c.cp as i64)),
@@ -74,6 +91,15 @@ impl PlanSummary {
             .iter()
             .map(|v| v.as_i64().and_then(|x| usize::try_from(x).ok()))
             .collect();
+        // v4: the group assignment is load-bearing (it decides which
+        // device prices each chain) — an entry without one is rejected,
+        // never defaulted.
+        let chain_groups: Option<Vec<usize>> = j
+            .get("groups")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_i64().and_then(|x| usize::try_from(x).ok()))
+            .collect();
         Some(PlanSummary {
             candidate: Candidate {
                 strategy: Strategy::from_key(j.get("strategy")?.as_str()?)?,
@@ -83,6 +109,7 @@ impl PlanSummary {
                 cp: us("cp")?,
                 num_microbatches: us("microbatches")?,
                 frozen: FrozenSetting::parse(j.get("frozen")?.as_str()?)?,
+                chain_groups: chain_groups?,
             },
             iteration_ms: j.get("iteration_ms")?.as_f64()?,
             throughput_per_gpu: j.get("throughput_per_gpu")?.as_f64()?,
@@ -188,7 +215,43 @@ pub struct PlanCache {
 /// v3: per-entry `cluster` fingerprint ([`crate::api::ClusterSpec`]);
 /// entries without one are rejected at load, and v2 files degrade to an
 /// empty cache.
-const CACHE_VERSION: i64 = 3;
+/// v4: heterogeneous pools — the cluster fingerprint covers every device
+/// group of the pool (a mixed pool never aliases a homogeneous one of
+/// the same size), and each cached plan stores its `groups` chain
+/// assignment; plans without one are rejected at load, and v3 files
+/// degrade to an empty cache.
+const CACHE_VERSION: i64 = 4;
+
+/// Process-wide per-path lock serializing [`PlanCache::save`]: two
+/// threads saving different signatures to one file must not interleave
+/// their load-merge-rename sequences (the later rename would silently
+/// drop the earlier writer's entries). The key is canonicalized (or at
+/// least absolutized for not-yet-existing files) so `plans.json` and
+/// `./plans.json` take the same lock. Cross-*process* writers are
+/// still best-effort merged by the re-read inside `save`.
+fn save_lock(path: &Path) -> Arc<Mutex<()>> {
+    static LOCKS: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<()>>>>> =
+        OnceLock::new();
+    // Canonicalize the parent directory (which exists even before the
+    // first save creates the file) and rejoin the file name, so every
+    // spelling of one target — relative, absolute, through symlinks —
+    // keys the same mutex on every save.
+    let key = match (path.parent(), path.file_name()) {
+        (Some(dir), Some(file)) => {
+            let dir = if dir.as_os_str().is_empty() {
+                Path::new(".")
+            } else {
+                dir
+            };
+            dir.canonicalize()
+                .map(|d| d.join(file))
+                .unwrap_or_else(|_| path.to_path_buf())
+        }
+        _ => path.to_path_buf(),
+    };
+    let map = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
+    map.lock().unwrap().entry(key).or_default().clone()
+}
 
 impl PlanCache {
     pub fn in_memory() -> Self {
@@ -253,13 +316,20 @@ impl PlanCache {
 
     /// Persist to the bound path (no-op for in-memory caches). Atomic:
     /// write a sibling temp file, then rename over the target. Entries
-    /// another process wrote since our load are re-read and kept (ours
-    /// win per signature), so concurrent tuners sharing one file don't
-    /// drop each other's results.
+    /// another writer persisted since our load are re-read and kept
+    /// (ours win per signature), so concurrent tuners sharing one file
+    /// don't drop each other's results. The whole read-merge-rename
+    /// sequence holds a process-wide per-path lock — without it, two
+    /// in-process writers could both load the same base, and whichever
+    /// renamed last would erase the other's entries — and the temp file
+    /// name is unique per write so cross-process writers never clobber
+    /// each other's staging file.
     pub fn save(&self) -> Result<()> {
         let Some(path) = &self.path else {
             return Ok(());
         };
+        let lock = save_lock(path);
+        let _guard = lock.lock().unwrap();
         let mut merged = PlanCache::load(path).entries;
         for e in &self.entries {
             match merged.iter_mut().find(|m| m.signature == e.signature) {
@@ -274,7 +344,12 @@ impl PlanCache {
                 Json::Arr(merged.iter().map(|e| e.to_json()).collect()),
             ),
         ]);
-        let tmp = path.with_extension("tmp");
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::write(&tmp, doc.render())
             .with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, path)
@@ -297,6 +372,7 @@ mod tests {
                 cp: 2,
                 num_microbatches: 24,
                 frozen: FrozenSetting::Paper,
+                chain_groups: vec![0, 0, 1],
             },
             iteration_ms: 123.5 + llm_pp as f64,
             throughput_per_gpu: 0.042,
@@ -408,9 +484,10 @@ mod tests {
 
     #[test]
     fn version_skew_is_ignored_wholesale() {
-        // A future version, the retired v1 single-winner layout, and the
-        // retired v2 cluster-less frontier layout all degrade to an
-        // empty cache (and are rebuilt on the next save).
+        // A future version and the retired v1 (flat single winner), v2
+        // (cluster-less frontier), and v3 (assignment-less,
+        // single-group-fingerprint) layouts all degrade to an empty
+        // cache (and are rebuilt on the next save).
         let path = tmp_path("version");
         std::fs::write(&path, r#"{"version":999,"entries":[{}]}"#).unwrap();
         assert!(PlanCache::load(&path).is_empty());
@@ -426,6 +503,75 @@ mod tests {
         )
         .unwrap();
         assert!(PlanCache::load(&path).is_empty());
+        std::fs::write(
+            &path,
+            r#"{"version":3,"entries":[{"signature":"s","cluster":"n=16|mem=40000000000|flops=1.497000e14|mfu=0.67|bw=32","top_k":1,"evaluated":5,"frontier":[{"strategy":"cornstarch","enc_pps":[1],"llm_pp":3,"tp":2,"cp":2,"microbatches":24,"frozen":"paper","iteration_ms":1.0,"throughput_per_gpu":0.1,"n_gpus":16,"peak_mem_bytes":1000,"cp_algorithm":"LPT"}]}]}"#,
+        )
+        .unwrap();
+        assert!(PlanCache::load(&path).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plan_without_group_assignment_is_rejected() {
+        // A v4-versioned file whose plan lacks the `groups` assignment
+        // must drop that entry — exactly the shape of a hand-migrated v3
+        // plan, whose chains nothing says how to price.
+        let path = tmp_path("nogroups");
+        let mut store = PlanCache::load(&path);
+        store.insert(entry("kept", 3));
+        store.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped = text.replace(r#""groups":[0,0,1],"#, "");
+        assert_ne!(text, stripped, "fixture must actually strip the field");
+        std::fs::write(&path, stripped).unwrap();
+        assert!(
+            PlanCache::load(&path).is_empty(),
+            "an assignment-less plan satisfied a v4 load"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_no_entries() {
+        // The multi-writer regression the per-path save lock exists for:
+        // many threads, each persisting a different signature to the
+        // same file, racing load-merge-rename. Every signature must
+        // survive and the file must stay valid JSON throughout.
+        let path = tmp_path("concurrent");
+        let _ = std::fs::remove_file(&path);
+        let n_threads = 8;
+        let writes_per_thread = 5;
+        std::thread::scope(|scope| {
+            for t in 0..n_threads {
+                let path = path.clone();
+                scope.spawn(move || {
+                    for w in 0..writes_per_thread {
+                        let mut c = PlanCache::load(&path);
+                        c.insert(entry(&format!("sig-{t}-{w}"), t + 1));
+                        c.save().unwrap();
+                    }
+                });
+            }
+        });
+        let merged = PlanCache::load(&path);
+        assert_eq!(
+            merged.len(),
+            n_threads * writes_per_thread,
+            "concurrent saves dropped entries"
+        );
+        for t in 0..n_threads {
+            for w in 0..writes_per_thread {
+                let e = merged
+                    .lookup(&format!("sig-{t}-{w}"), FP)
+                    .unwrap_or_else(|| panic!("lost sig-{t}-{w}"));
+                assert_eq!(e.best().candidate.llm_pp, t + 1);
+            }
+        }
+        // and the surviving file is a single well-formed v4 document
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        assert!(text.contains("\"version\":4"));
         let _ = std::fs::remove_file(&path);
     }
 

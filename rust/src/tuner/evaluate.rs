@@ -58,31 +58,44 @@ pub fn spec_for(
     ps
 }
 
-/// Build the stage DAG for one candidate without simulating it.
+/// Build the stage DAG for one candidate without simulating it. A
+/// candidate carrying a heterogeneous group assignment
+/// ([`Candidate::chain_groups`]) is planned with each chain priced on
+/// its assigned group's device and link; otherwise the homogeneous
+/// single-class path is used (byte-for-byte the pre-hetero plan).
 pub fn build_plan(
     spec: &MllmSpec,
     cand: &Candidate,
     cluster: &ClusterSpec,
 ) -> Plan {
     let mm = module_for(spec, cand);
-    planner::plan(
-        cand.strategy,
-        &mm,
-        &spec_for(cand, cluster),
-        cluster.device_model(),
-    )
+    let ps = spec_for(cand, cluster);
+    if cand.chain_groups.is_empty() && !cluster.is_heterogeneous() {
+        planner::plan(cand.strategy, &mm, &ps, cluster.device_model())
+    } else {
+        planner::plan_assigned(
+            cand.strategy,
+            &mm,
+            &ps,
+            cluster,
+            &cand.chain_groups,
+        )
+    }
 }
 
-/// Cheap lower bound on the plan's iteration time, used by the search to
-/// prune without simulating:
+/// The tuner's two lower bounds on a plan's 1F1B makespan, `(device_busy,
+/// critical_path)`:
 ///
-/// * the bottleneck device must run all `m` of its microbatches'
-///   fwd+bwd serially, and
-/// * one microbatch must traverse the longest stage path (fwd down,
-///   bwd back up, plus a comm hop per cross-device edge).
+/// * **device-busy** — the bottleneck device must run all `m` of its
+///   microbatches' fwd+bwd serially;
+/// * **critical-path** — one microbatch must traverse the longest stage
+///   path (fwd down, bwd back up, plus a comm hop each way per
+///   cross-device edge, priced per edge on heterogeneous links).
 ///
-/// Both are valid lower bounds on the 1F1B makespan; we take the max.
-pub fn lower_bound_ms(plan: &Plan) -> f64 {
+/// Each is individually a valid lower bound; the search prunes on their
+/// max ([`lower_bound_ms`]), and the property harness in
+/// `tests/hetero_checks.rs` holds the simulator to both.
+pub fn bounds_ms(plan: &Plan) -> (f64, f64) {
     let m = plan.num_microbatches as f64;
     // Per-device serial work (stages sharing a device accumulate).
     let n_dev = plan.graph.n_devices();
@@ -101,17 +114,21 @@ pub fn lower_bound_ms(plan: &Plan) -> f64 {
     for (i, node) in plan.graph.nodes.iter().enumerate() {
         let mut best = 0.0f64;
         for &p in &node.preds {
-            let comm = if plan.graph.nodes[p].device != node.device {
-                2.0 * plan.graph.comm_ms
-            } else {
-                0.0
-            };
+            let comm =
+                2.0 * plan.graph.hop_ms(plan.graph.nodes[p].device, node.device);
             best = best.max(path[p] + comm);
         }
         path[i] = best + node.cost.total();
         critical = critical.max(path[i]);
     }
-    busy_lb.max(critical)
+    (busy_lb, critical)
+}
+
+/// Cheap lower bound on the plan's iteration time, used by the search to
+/// prune without simulating: the max of the two bounds of [`bounds_ms`].
+pub fn lower_bound_ms(plan: &Plan) -> f64 {
+    let (busy, critical) = bounds_ms(plan);
+    busy.max(critical)
 }
 
 /// Simulate an already-built plan.
@@ -244,6 +261,7 @@ mod tests {
             cp: 2,
             num_microbatches: 8,
             frozen: FrozenSetting::Paper,
+            chain_groups: Vec::new(),
         }
     }
 
@@ -267,6 +285,24 @@ mod tests {
             );
             assert!(lb > 0.0);
         }
+    }
+
+    #[test]
+    fn assigned_candidate_builds_the_assigned_plan() {
+        let spec = MllmSpec::vlm(Size::M, Size::M);
+        let cluster = ClusterSpec::a40_a100_demo();
+        let mut c = cand(Strategy::Cornstarch, vec![1], 2);
+        c.tp = 1;
+        c.cp = 1;
+        c.chain_groups = vec![0, 1];
+        let plan = build_plan(&spec, &c, &cluster);
+        assert_eq!(plan.stage_groups, vec![0, 1, 1]);
+        // the lower bounds stay lower bounds under per-edge links
+        let (busy, critical) = bounds_ms(&plan);
+        let sim = plan.simulate().iteration_ms;
+        assert!(busy <= sim + 1e-6);
+        assert!(critical <= sim + 1e-6);
+        assert_eq!(lower_bound_ms(&plan), busy.max(critical));
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //! * [`space`] — [`space::Candidate`] enumeration under the device budget
 //!   AND the per-GPU memory capacity of [`crate::memory`]: OOM-infeasible
 //!   candidates (including microbatch counts whose 1F1B warm-up window
-//!   cannot fit) are rejected before anything simulates them;
+//!   cannot fit) are rejected before anything simulates them. On a
+//!   heterogeneous pool the chain→device-group assignment is one more
+//!   enumerated dimension, pruned by per-group GPU capacity and by the
+//!   memory budget of the group each stage lands on;
 //! * [`search`] — bounded best-first search with cost-model lower-bound
 //!   pruning ([`search::Objective`] selects what is optimized), keeping a
 //!   top-k frontier rather than a single winner;
@@ -29,7 +32,7 @@ pub mod search;
 pub mod space;
 
 pub use cache::{CacheEntry, PlanCache, PlanSummary};
-pub use evaluate::{build_plan, evaluate_parallel, Evaluation};
+pub use evaluate::{bounds_ms, build_plan, evaluate_parallel, Evaluation};
 pub use search::{search, search_top, Objective, SearchReport};
 pub use space::{enumerate, Candidate, FrozenSetting, SearchSpace};
 
@@ -190,7 +193,15 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
     let fingerprint = req.cluster.fingerprint();
     let top = req.top.max(1);
     if let Some(entry) = cache.lookup(&sig, &fingerprint) {
-        if entry.satisfies_top(top) {
+        // A stored plan's chain→group assignment must be well-formed
+        // for this cluster (arity, range, Colocated uniformity) — a
+        // corrupted entry that passed the schema check must degrade to
+        // a re-search, never a downstream panic when the plan is
+        // instantiated.
+        let assignments_ok = entry.frontier.iter().all(|p| {
+            p.candidate.assignment_is_valid(req.cluster.groups.len())
+        });
+        if assignments_ok && entry.satisfies_top(top) {
             return Ok(TuneOutcome {
                 entry: entry.clone(),
                 cache_hit: true,
@@ -199,8 +210,9 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
                 pruned: 0,
             });
         }
-        // Stored frontier is shallower than this query wants: fall
-        // through to a fresh search and overwrite the entry.
+        // Stored frontier is shallower than this query wants (or holds
+        // a malformed assignment): fall through to a fresh search and
+        // overwrite the entry.
     }
     let report = search_top(
         &req.spec,
@@ -365,15 +377,21 @@ mod tests {
     fn different_clusters_get_different_signatures() {
         let a = req(8);
         let mut b = req(8);
-        b.cluster.device.mem_bytes = 80_000_000_000;
+        b.cluster.groups[0].device.mem_bytes = 80_000_000_000;
         assert_ne!(
             a.signature(),
             b.signature(),
             "a plan tuned for one memory budget must not answer another"
         );
         let mut c = req(8);
-        c.cluster.interconnect_gbps /= 2.0;
+        c.cluster.groups[0].link_gbps /= 2.0;
         assert_ne!(a.signature(), c.signature());
+        // a heterogeneous pool of the same total size never aliases a
+        // homogeneous one
+        let mut h = req(8);
+        h.cluster = ClusterSpec::a40_a100_demo();
+        h.space = SearchSpace::for_cluster(&h.cluster);
+        assert_ne!(a.signature(), h.signature());
     }
 
     #[test]
@@ -393,6 +411,35 @@ mod tests {
             plan.peak_device_bytes(),
             out.entry.best().peak_mem_bytes
         );
+    }
+
+    #[test]
+    fn corrupt_group_assignment_in_cache_resurveys_instead_of_panicking() {
+        let mut path = std::env::temp_dir();
+        path.push(format!(
+            "cornstarch-tune-badgroups-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut r = req(8);
+        r.cache_path = Some(path.to_string_lossy().into_owned());
+        let first = tune(&r).unwrap();
+        assert!(!first.cache_hit);
+        // corrupt every cached plan's assignment to an out-of-range
+        // group index (the A40 default has exactly one group, index 0)
+        let text = std::fs::read_to_string(&path).unwrap();
+        let bad = text.replace("\"groups\":[]", "\"groups\":[7]");
+        assert_ne!(text, bad, "fixture must actually corrupt the file");
+        std::fs::write(&path, bad).unwrap();
+        let second = tune(&r).unwrap();
+        assert!(
+            !second.cache_hit,
+            "an out-of-range assignment must not be served as a hit"
+        );
+        assert_eq!(first.entry.best().candidate, second.entry.best().candidate);
+        // and the re-search healed the entry: next query hits again
+        assert!(tune(&r).unwrap().cache_hit);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //! visit order is bound-ascending, once a wave's first bound exceeds the
 //! incumbent the whole tail is pruned — the search is exact over the
 //! enumerated space whenever the simulation budget is not exhausted.
+//!
+//! The search core is assignment-agnostic: on a heterogeneous pool the
+//! enumeration ([`super::space::enumerate_with_plans`]) expands each
+//! geometric candidate into its feasible chain→device-group placements,
+//! and every (candidate, plan) pair flows through the same bound → prune
+//! → simulate machinery — the lower bounds already price per-edge links
+//! through [`crate::pipeline::StageGraph::hop_ms`].
 
 use crate::api::ClusterSpec;
 use crate::model::MllmSpec;

@@ -87,6 +87,13 @@ pub struct Candidate {
     pub cp: usize,
     pub num_microbatches: usize,
     pub frozen: FrozenSetting,
+    /// Cluster device-group per pipeline chain — the heterogeneous-pools
+    /// dimension: one entry per encoder (in `enc_pps` order) followed by
+    /// the LLM's, except [`Strategy::Replicated`] which has exactly one
+    /// chain. Empty means "the single group of a homogeneous pool" —
+    /// candidates enumerated against one-group clusters stay empty, so
+    /// homogeneous labels, cache entries, and equality are unchanged.
+    pub chain_groups: Vec<usize>,
 }
 
 impl Candidate {
@@ -106,16 +113,81 @@ impl Candidate {
 
     /// Compact human-readable form for tables and logs.
     pub fn label(&self) -> String {
+        let groups = if self.chain_groups.is_empty() {
+            String::new()
+        } else {
+            format!(" groups={:?}", self.chain_groups)
+        };
         format!(
-            "{} llm_pp={} enc_pp={:?} tp={} cp={} mb={} policy={}",
+            "{} llm_pp={} enc_pp={:?} tp={} cp={} mb={} policy={}{}",
             self.strategy.key(),
             self.llm_pp,
             self.enc_pps,
             self.tp,
             self.cp,
             self.num_microbatches,
-            self.frozen.key()
+            self.frozen.key(),
+            groups
         )
+    }
+
+    /// Is this candidate's [`Candidate::chain_groups`] assignment
+    /// well-formed for a pool of `n_groups` device groups? Empty is
+    /// always valid (everything on group 0); otherwise the arity must
+    /// match the strategy's chain count, every index must be in range,
+    /// and Colocated's encoders must share one group. Used by the cache
+    /// to reject corrupted entries before they can panic the planner.
+    pub fn assignment_is_valid(&self, n_groups: usize) -> bool {
+        if self.chain_groups.is_empty() {
+            return n_groups >= 1;
+        }
+        let n_chains = match self.strategy {
+            Strategy::Replicated => 1,
+            _ => self.enc_pps.len() + 1,
+        };
+        if self.chain_groups.len() != n_chains {
+            return false;
+        }
+        if self.chain_groups.iter().any(|&g| g >= n_groups) {
+            return false;
+        }
+        if self.strategy == Strategy::Colocated {
+            let enc = &self.chain_groups[..self.enc_pps.len()];
+            if enc.windows(2).any(|w| w[0] != w[1]) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// GPUs this candidate occupies in each of `n_groups` cluster
+    /// groups, under its [`Candidate::chain_groups`] assignment (an
+    /// empty assignment charges everything to group 0). Colocated fuses
+    /// all encoders into one chain; Replicated has the LLM chain only.
+    pub fn gpus_per_group(&self, n_groups: usize) -> Vec<usize> {
+        let gps = self.tp * self.cp;
+        let mut used = vec![0usize; n_groups.max(1)];
+        let group_of = |chain: usize| -> usize {
+            self.chain_groups.get(chain).copied().unwrap_or(0)
+        };
+        match self.strategy {
+            Strategy::Replicated => {
+                used[group_of(0)] += self.llm_pp * gps;
+            }
+            Strategy::Colocated => {
+                if let Some(&enc_pp) = self.enc_pps.first() {
+                    used[group_of(0)] += enc_pp * gps;
+                }
+                used[group_of(self.enc_pps.len())] += self.llm_pp * gps;
+            }
+            Strategy::Cornstarch => {
+                for (i, &pp) in self.enc_pps.iter().enumerate() {
+                    used[group_of(i)] += pp * gps;
+                }
+                used[group_of(self.enc_pps.len())] += self.llm_pp * gps;
+            }
+        }
+        used
     }
 }
 
@@ -159,10 +231,15 @@ impl SearchSpace {
 
     /// The paper's search bounds sized to a cluster: the device pool and
     /// the per-GPU memory budget both come from the [`ClusterSpec`]
-    /// instead of the hard-coded A40 testbed.
+    /// instead of the hard-coded A40 testbed. For a heterogeneous pool
+    /// `devices` is the total across groups and the scalar budget is the
+    /// most permissive group's (enumeration then holds every stage to
+    /// the budget of the group it actually lands on — the scalar only
+    /// says "the capacity filter is on").
     pub fn for_cluster(cluster: &ClusterSpec) -> Self {
-        let mut s = SearchSpace::paper_default(cluster.devices.max(1));
-        s.devices = cluster.devices;
+        let total = cluster.devices();
+        let mut s = SearchSpace::paper_default(total.max(1));
+        s.devices = total;
         s.memory_budget_bytes = Some(cluster.mem_budget_bytes());
         s
     }
@@ -250,6 +327,14 @@ fn raw_candidates(
 /// point: the plan the memory filter had to build anyway is reused for
 /// lower-bounding and simulation, so no candidate pays plan construction
 /// twice.
+///
+/// On a heterogeneous cluster the group assignment is an extra search
+/// dimension: every geometric candidate is expanded into the feasible
+/// ways of placing its pipeline chains onto the cluster's device groups
+/// (per-group GPU capacity respected), and each placement's stages are
+/// held to the memory budget of the group they land on — so a frozen
+/// encoder chain can survive on a 40 GB group while the LLM claims the
+/// 80 GB one, and an OOM placement dies here, never simulated.
 pub fn enumerate_with_plans(
     mm: &MultimodalModule,
     space: &SearchSpace,
@@ -267,26 +352,100 @@ pub fn enumerate_with_plans(
             (f, mm_f)
         })
         .collect();
+    let n_groups = cluster.groups.len();
     let mut out = Vec::with_capacity(raw.len());
     for c in raw {
         let (_, mm_f) = variants
             .iter()
             .find(|(f, _)| *f == c.frozen)
             .expect("candidate frozen setting comes from the space");
-        let plan = crate::modality::planner::plan(
-            c.strategy,
-            mm_f,
-            &super::evaluate::spec_for(&c, cluster),
-            cluster.device_model(),
-        );
-        if space
-            .memory_budget_bytes
-            .is_none_or(|budget| plan.peak_device_bytes() <= budget)
-        {
-            out.push((c, plan));
+        if n_groups <= 1 {
+            // Homogeneous pool: the assignment is trivial (and stays
+            // empty, preserving pre-hetero candidates byte-for-byte).
+            let plan = crate::modality::planner::plan(
+                c.strategy,
+                mm_f,
+                &super::evaluate::spec_for(&c, cluster),
+                cluster.device_model(),
+            );
+            if space
+                .memory_budget_bytes
+                .is_none_or(|budget| plan.peak_device_bytes() <= budget)
+            {
+                out.push((c, plan));
+            }
+            continue;
+        }
+        for groups in assignment_choices(&c, n_groups) {
+            let mut cand = c.clone();
+            cand.chain_groups = groups;
+            let demand = cand.gpus_per_group(n_groups);
+            if demand
+                .iter()
+                .zip(&cluster.groups)
+                .any(|(&used, g)| used > g.count)
+            {
+                continue;
+            }
+            let plan = crate::modality::planner::plan_assigned(
+                cand.strategy,
+                mm_f,
+                &super::evaluate::spec_for(&cand, cluster),
+                cluster,
+                &cand.chain_groups,
+            );
+            // Each stage must fit min(space cap, its group's budget):
+            // the group budget is the hardware truth, and a caller may
+            // tighten the scalar cap below every group.
+            if crate::memory::fits_assigned(
+                &plan,
+                cluster,
+                space.memory_budget_bytes,
+            ) {
+                out.push((cand, plan));
+            }
         }
     }
     out
+}
+
+/// All group assignments of a candidate's chains onto `n_groups` cluster
+/// groups, before capacity filtering: Replicated has one chain (the
+/// LLM's), Colocated pins every encoder to one shared group (the fused
+/// stages hold all encoders), Cornstarch assigns each chain freely.
+fn assignment_choices(c: &Candidate, n_groups: usize) -> Vec<Vec<usize>> {
+    let n_enc = c.enc_pps.len();
+    match c.strategy {
+        Strategy::Replicated => (0..n_groups).map(|g| vec![g]).collect(),
+        Strategy::Colocated => {
+            let mut out = Vec::with_capacity(n_groups * n_groups);
+            for ge in 0..n_groups {
+                for gl in 0..n_groups {
+                    let mut v = vec![ge; n_enc];
+                    v.push(gl);
+                    out.push(v);
+                }
+            }
+            out
+        }
+        Strategy::Cornstarch => {
+            // Cartesian product over n_enc encoder chains + the LLM.
+            let mut out: Vec<Vec<usize>> = vec![Vec::new()];
+            for _ in 0..=n_enc {
+                let mut next =
+                    Vec::with_capacity(out.len() * n_groups);
+                for base in &out {
+                    for g in 0..n_groups {
+                        let mut v = base.clone();
+                        v.push(g);
+                        next.push(v);
+                    }
+                }
+                out = next;
+            }
+            out
+        }
+    }
 }
 
 /// Append all feasible (llm_pp, enc_pps) splits of `groups` device groups
@@ -318,6 +477,7 @@ fn push_pp_splits(
                     cp,
                     num_microbatches: mb,
                     frozen,
+                    chain_groups: Vec::new(),
                 });
             }
         }
@@ -340,6 +500,7 @@ fn push_pp_splits(
                             cp,
                             num_microbatches: mb,
                             frozen,
+                            chain_groups: Vec::new(),
                         });
                     }
                 }
@@ -366,6 +527,7 @@ fn push_pp_splits(
                             cp,
                             num_microbatches: mb,
                             frozen,
+                            chain_groups: Vec::new(),
                         });
                     },
                 );
@@ -492,10 +654,154 @@ mod tests {
         assert_eq!(s.memory_budget_bytes, d.memory_budget_bytes);
         assert_eq!(s.fingerprint(), d.fingerprint());
         let mut big = a40.clone().with_devices(8);
-        big.device.mem_bytes = 80_000_000_000;
+        big.groups[0].device.mem_bytes = 80_000_000_000;
         let s = SearchSpace::for_cluster(&big);
         assert_eq!(s.devices, 8);
         assert_eq!(s.memory_budget_bytes, Some(80_000_000_000));
+        // heterogeneous: total pool, most permissive budget
+        let hetero = ClusterSpec::a40_a100_demo();
+        let s = SearchSpace::for_cluster(&hetero);
+        assert_eq!(s.devices, 8);
+        assert_eq!(s.memory_budget_bytes, Some(80_000_000_000));
+    }
+
+    #[test]
+    fn hetero_enumeration_expands_and_prunes_assignments() {
+        let cluster = ClusterSpec::a40_a100_demo();
+        let mm = vlm_mm();
+        let mut space = SearchSpace::for_cluster(&cluster);
+        space.tp_choices = vec![2];
+        space.cp_choices = vec![2];
+        space.microbatch_choices = vec![8];
+        space.strategies = vec![Strategy::Cornstarch];
+        let pairs = enumerate_with_plans(&mm, &space, &cluster);
+        assert!(!pairs.is_empty());
+        for (c, plan) in &pairs {
+            // every candidate carries a full assignment...
+            assert_eq!(c.chain_groups.len(), c.enc_pps.len() + 1);
+            assert!(c.chain_groups.iter().all(|&g| g < 2));
+            // ...that respects per-group GPU capacity...
+            let demand = c.gpus_per_group(2);
+            assert!(demand[0] <= 4 && demand[1] <= 4, "{}", c.label());
+            // ...and per-group memory where each stage lands
+            for (sm, &g) in plan.stage_mem.iter().zip(&plan.stage_groups)
+            {
+                assert!(
+                    sm.peak_bytes() <= cluster.group_mem_bytes(g),
+                    "{}",
+                    c.label()
+                );
+            }
+            assert_eq!(plan.stage_groups.len(), plan.graph.nodes.len());
+        }
+        // both groups actually get used by some candidate
+        assert!(pairs
+            .iter()
+            .any(|(c, _)| c.chain_groups.contains(&0)));
+        assert!(pairs
+            .iter()
+            .any(|(c, _)| c.chain_groups.contains(&1)));
+        // the same geometry appears under several assignments
+        let geom_of = |c: &Candidate| {
+            (c.enc_pps.clone(), c.llm_pp, c.num_microbatches)
+        };
+        let first = geom_of(&pairs[0].0);
+        assert!(
+            pairs.iter().filter(|(c, _)| geom_of(c) == first).count() > 1,
+            "assignment expansion collapsed"
+        );
+    }
+
+    #[test]
+    fn assignment_validity_checks_arity_range_and_colocation() {
+        let mut c = Candidate {
+            strategy: Strategy::Cornstarch,
+            enc_pps: vec![1, 2],
+            llm_pp: 2,
+            tp: 1,
+            cp: 1,
+            num_microbatches: 8,
+            frozen: FrozenSetting::Paper,
+            chain_groups: Vec::new(),
+        };
+        assert!(c.assignment_is_valid(1));
+        assert!(c.assignment_is_valid(2));
+        c.chain_groups = vec![0, 1, 1];
+        assert!(c.assignment_is_valid(2));
+        assert!(!c.assignment_is_valid(1), "index out of range");
+        c.chain_groups = vec![0, 1];
+        assert!(!c.assignment_is_valid(2), "wrong arity");
+        c.strategy = Strategy::Colocated;
+        c.chain_groups = vec![0, 1, 1];
+        assert!(!c.assignment_is_valid(2), "colocated encoders split");
+        c.chain_groups = vec![1, 1, 0];
+        assert!(c.assignment_is_valid(2));
+        c.strategy = Strategy::Replicated;
+        c.enc_pps = Vec::new();
+        c.chain_groups = vec![1];
+        assert!(c.assignment_is_valid(2));
+        c.chain_groups = vec![0, 0];
+        assert!(!c.assignment_is_valid(2), "replicated has one chain");
+    }
+
+    #[test]
+    fn hetero_filter_respects_a_tighter_scalar_cap() {
+        // The space's scalar budget is a cap ON TOP of the per-group
+        // budgets: a caller may tighten it below every group, and
+        // heterogeneous enumeration must honor it (min of the two).
+        let cluster = ClusterSpec::a40_a100_demo();
+        let mm = vlm_mm();
+        let mut space = SearchSpace::for_cluster(&cluster);
+        space.tp_choices = vec![2];
+        space.cp_choices = vec![2];
+        space.microbatch_choices = vec![8];
+        space.strategies = vec![Strategy::Cornstarch];
+        let all = enumerate_with_plans(&mm, &space, &cluster);
+        assert!(!all.is_empty());
+        let max_peak = all
+            .iter()
+            .map(|(_, p)| p.peak_device_bytes())
+            .max()
+            .unwrap();
+        space.memory_budget_bytes = Some(max_peak - 1);
+        let capped = enumerate_with_plans(&mm, &space, &cluster);
+        assert!(
+            capped.len() < all.len(),
+            "a cap below the worst surviving peak must prune something"
+        );
+        for (_, p) in &capped {
+            assert!(p.peak_device_bytes() < max_peak);
+        }
+    }
+
+    #[test]
+    fn hetero_assignment_capacity_is_respected_per_group() {
+        // A lopsided pool: 1 A40 + 4 A100. A 2-stage encoder chain can
+        // never land on the single-device group at tp=cp=1.
+        let mut cluster = ClusterSpec::a40_a100_demo();
+        cluster.groups[0].count = 1;
+        let mm = vlm_mm();
+        let mut space = SearchSpace::for_cluster(&cluster);
+        space.tp_choices = vec![1];
+        space.cp_choices = vec![1];
+        space.microbatch_choices = vec![8];
+        space.strategies = vec![Strategy::Cornstarch];
+        // capacity is the dimension under test, not memory
+        space.memory_budget_bytes = None;
+        let pairs = enumerate_with_plans(&mm, &space, &cluster);
+        assert!(!pairs.is_empty());
+        for (c, _) in &pairs {
+            let demand = c.gpus_per_group(2);
+            assert!(demand[0] <= 1, "over-packed group 0: {}", c.label());
+            assert!(demand[1] <= 4, "over-packed group 1: {}", c.label());
+        }
+        // some multi-stage encoder chain exists and lands on the big
+        // group — the single-device group cannot host it
+        assert!(pairs.iter().any(|(c, _)| c.enc_pps == vec![2]
+            && c.chain_groups[0] == 1));
+        assert!(pairs
+            .iter()
+            .all(|(c, _)| !(c.enc_pps == vec![2] && c.chain_groups[0] == 0)));
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //!   and the programmatic `PlanningService::plan` answer identically,
 //!   and a non-A40 spec (80 GB/device) readmits OOM-pruned candidates
 //!   and changes the chosen plan;
-//! * cache: schema v3 round-trips through disk property-style, v2 files
-//!   degrade to an empty cache, and a v3 entry stripped of its cluster
+//! * cache: schema v4 round-trips through disk property-style, v3 files
+//!   degrade to an empty cache, and a v4 entry stripped of its cluster
 //!   fingerprint is rejected rather than defaulted.
 
 use cornstarch::api::{
@@ -112,7 +112,7 @@ fn cli_cluster_file_and_programmatic_requests_answer_identically() {
         "/../examples/clusters/a40x8.json"
     );
     let cluster = ClusterSpec::load(std::path::Path::new(path)).unwrap();
-    assert_eq!(cluster.devices, 8);
+    assert_eq!(cluster.devices(), 8);
     assert_eq!(cluster.mem_budget_bytes(), 40_000_000_000);
     // same numbers as the A40 default, smaller pool
     assert_eq!(
@@ -171,8 +171,8 @@ fn bigger_device_memory_readmits_oom_pruned_candidates() {
     let mm = MultimodalModule::from_spec(&spec);
     let a40 = ClusterSpec::a40_default();
     let mut big = a40.clone();
-    big.device.name = "A100-80G".to_string();
-    big.device.mem_bytes = 80_000_000_000;
+    big.groups[0].device.name = "A100-80G".to_string();
+    big.groups[0].device.mem_bytes = 80_000_000_000;
 
     // modeled peaks of the whole (unfiltered) space
     let mut unbounded = SearchSpace::for_cluster(&a40);
@@ -189,7 +189,7 @@ fn bigger_device_memory_readmits_oom_pruned_candidates() {
     );
     let readmitted = peaks
         .iter()
-        .filter(|&&p| p > a40_budget && p <= big.device.mem_bytes)
+        .filter(|&&p| p > a40_budget && p <= big.groups[0].device.mem_bytes)
         .count();
     assert!(
         readmitted > 0,
@@ -229,8 +229,8 @@ fn memory_capacity_changes_the_chosen_plan() {
     );
 
     let mut tight = a40;
-    tight.device.name = "tight".to_string();
-    tight.device.mem_bytes = winner_peak - 1;
+    tight.groups[0].device.name = "tight".to_string();
+    tight.groups[0].device.mem_bytes = winner_peak - 1;
     let tightened = service
         .plan(
             &PlanRequest::default_for(spec.clone())
@@ -285,6 +285,18 @@ fn random_summary(g: &mut Gen) -> PlanSummary {
     } else {
         g.usize(1, 3)
     };
+    // Half the entries carry a heterogeneous assignment (one group per
+    // chain), half are homogeneous (empty) — both must round-trip.
+    let n_chains = if strategy == Strategy::Replicated {
+        1
+    } else {
+        n_enc + 1
+    };
+    let chain_groups = if g.bool() {
+        (0..n_chains).map(|_| g.usize(0, 3)).collect()
+    } else {
+        Vec::new()
+    };
     PlanSummary {
         candidate: Candidate {
             strategy,
@@ -294,6 +306,7 @@ fn random_summary(g: &mut Gen) -> PlanSummary {
             cp: 1 << g.usize(0, 2),
             num_microbatches: g.usize(1, 33),
             frozen: FrozenSetting::ALL[g.usize(0, 3)],
+            chain_groups,
         },
         iteration_ms: g.usize(1, 1_000_000) as f64 / 10.0,
         throughput_per_gpu: g.usize(1, 10_000) as f64 / 1e4,
@@ -304,12 +317,12 @@ fn random_summary(g: &mut Gen) -> PlanSummary {
     }
 }
 
-/// Cache schema property: random v3 entries round-trip through disk
-/// exactly; rewriting the same file as v2 degrades to an empty cache;
+/// Cache schema property: random v4 entries round-trip through disk
+/// exactly; rewriting the same file as v3 degrades to an empty cache;
 /// stripping an entry's cluster fingerprint rejects that entry.
 #[test]
-fn cache_v3_roundtrip_and_v2_degradation_property() {
-    check("cache v2→v3 schema", 25, |g| {
+fn cache_v4_roundtrip_and_v3_degradation_property() {
+    check("cache v3→v4 schema", 25, |g| {
         let mut path = std::env::temp_dir();
         path.push(format!(
             "cornstarch-api-cache-prop-{}-{:x}.json",
@@ -341,14 +354,14 @@ fn cache_v3_roundtrip_and_v2_degradation_property() {
         }
         store.save().unwrap();
 
-        // v3 round-trip is exact
+        // v4 round-trip is exact
         let loaded = PlanCache::load(&path);
         assert_eq!(loaded.len(), entries.len());
         for e in &entries {
             assert_eq!(
                 loaded.lookup(&e.signature, &e.cluster),
                 Some(e),
-                "v3 entry did not round-trip"
+                "v4 entry did not round-trip"
             );
             // and the fingerprint is load-bearing: a different cluster
             // never answers
@@ -359,16 +372,16 @@ fn cache_v3_roundtrip_and_v2_degradation_property() {
 
         let text = std::fs::read_to_string(&path).unwrap();
 
-        // the same payload stamped v2 degrades to an empty cache
-        let v2 = text.replace("\"version\":3", "\"version\":2");
-        assert_ne!(text, v2);
-        std::fs::write(&path, &v2).unwrap();
+        // the same payload stamped v3 degrades to an empty cache
+        let v3 = text.replace("\"version\":4", "\"version\":3");
+        assert_ne!(text, v3);
+        std::fs::write(&path, &v3).unwrap();
         assert!(
             PlanCache::load(&path).is_empty(),
-            "a v2 file must degrade to empty, not serve v3 lookups"
+            "a v3 file must degrade to empty, not serve v4 lookups"
         );
 
-        // a v3 file whose entries lost their fingerprints drops them all
+        // a v4 file whose entries lost their fingerprints drops them all
         let first = &entries[0];
         let mut stripped = text.clone();
         for e in &entries {
@@ -386,11 +399,11 @@ fn cache_v3_roundtrip_and_v2_degradation_property() {
     });
 }
 
-/// End-to-end cache degradation: a facade query that wrote a v3 cache
-/// still answers (by re-searching) after the file is downgraded to v2,
-/// and heals the file back to v3.
+/// End-to-end cache degradation: a facade query that wrote a v4 cache
+/// still answers (by re-searching) after the file is downgraded to v3,
+/// and heals the file back to v4.
 #[test]
-fn facade_resurveys_after_v2_downgrade() {
+fn facade_resurveys_after_v3_downgrade() {
     let mut path = std::env::temp_dir();
     path.push(format!(
         "cornstarch-api-cache-downgrade-{}.json",
@@ -409,19 +422,19 @@ fn facade_resurveys_after_v2_downgrade() {
     assert!(!first.provenance.cache_hit);
     assert!(service.plan(&req).unwrap().provenance.cache_hit);
 
-    // downgrade the file to v2: the next query must re-search, not err
+    // downgrade the file to v3: the next query must re-search, not err
     let text = std::fs::read_to_string(&path).unwrap();
-    std::fs::write(&path, text.replace("\"version\":3", "\"version\":2"))
+    std::fs::write(&path, text.replace("\"version\":4", "\"version\":3"))
         .unwrap();
     let after = service.plan(&req).unwrap();
     assert!(
         !after.provenance.cache_hit,
-        "a v2 file must not satisfy a v3 lookup"
+        "a v3 file must not satisfy a v4 lookup"
     );
     assert_eq!(after.winner(), first.winner());
-    // and the store healed to v3
+    // and the store healed to v4
     assert!(std::fs::read_to_string(&path)
         .unwrap()
-        .contains("\"version\":3"));
+        .contains("\"version\":4"));
     let _ = std::fs::remove_file(&path);
 }

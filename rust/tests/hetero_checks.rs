@@ -1,0 +1,312 @@
+//! Heterogeneous device pools, end-to-end, plus the lower-bound property
+//! harness the search's exactness claim rests on.
+//!
+//! * acceptance: planning the paper's VLM-L on the mixed
+//!   `a40x4-a100x4.json` pool places every LLM stage on the A100 group
+//!   and at least one frozen encoder stage on the A40 group, beats the
+//!   best all-A40 plan of the same size on simulated makespan, and its
+//!   cache v4 entry carries a fingerprint distinct from (and never
+//!   satisfied by) the homogeneous `a40x8` signature;
+//! * golden: an old single-device cluster JSON still reproduces the
+//!   PR 3 plan byte-for-byte — the hetero generalization must not
+//!   perturb homogeneous answers at all;
+//! * property: for randomly sampled candidates (seeded via `util::rng`),
+//!   the simulated 1F1B makespan is ≥ BOTH tuner lower bounds
+//!   (device-busy and critical-path), on homogeneous and mixed pools
+//!   alike — the invariant that makes lower-bound pruning safe.
+
+use cornstarch::api::{
+    ClusterSpec, PlanRequest, PlanningService,
+};
+use cornstarch::cost::Device;
+use cornstarch::modality::{
+    planner, MultimodalModule, MultimodalParallelSpec, Strategy,
+};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::tuner::{
+    bounds_ms, build_plan, Candidate, FrozenSetting, PlanCache,
+};
+use cornstarch::util::check::{check, Gen};
+
+fn demo_cluster_path() -> &'static str {
+    concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/clusters/a40x4-a100x4.json"
+    )
+}
+
+/// The JSON example and the in-code demo constructor must stay in sync —
+/// the reproduce harness uses the constructor, the CLI docs the file.
+#[test]
+fn demo_cluster_file_matches_the_constructor() {
+    let from_file =
+        ClusterSpec::load(std::path::Path::new(demo_cluster_path()))
+            .unwrap();
+    assert_eq!(from_file, ClusterSpec::a40_a100_demo());
+    assert!(from_file.is_heterogeneous());
+    assert_eq!(from_file.devices(), 8);
+    assert_eq!(from_file.groups[0].device.name, "A40");
+    assert_eq!(from_file.groups[1].device.name, "A100-80G");
+}
+
+/// The ISSUE's acceptance scenario, end to end through the facade.
+#[test]
+fn vlm_l_on_the_mixed_pool_splits_frozen_encoders_from_the_llm() {
+    let mut cache_path = std::env::temp_dir();
+    cache_path.push(format!(
+        "cornstarch-hetero-accept-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&cache_path);
+    let cache = cache_path.to_string_lossy().into_owned();
+
+    let spec = MllmSpec::vlm(Size::M, Size::L); // the paper's VLM-L
+    let hetero_cluster =
+        ClusterSpec::load(std::path::Path::new(demo_cluster_path()))
+            .unwrap();
+    let service = PlanningService::new();
+    let hetero = service
+        .plan(
+            &PlanRequest::default_for(spec.clone())
+                .cluster(hetero_cluster.clone())
+                .threads(2)
+                .cache_file(&cache),
+        )
+        .unwrap();
+
+    // Placement: every LLM stage claims the 80 GB A100 group; at least
+    // one frozen encoder stage rides the cheap A40 group.
+    let plan = &hetero.plan;
+    assert_eq!(plan.stage_groups.len(), plan.stage_names.len());
+    let mut saw_llm = false;
+    let mut enc_on_a40 = false;
+    for (name, &g) in plan.stage_names.iter().zip(&plan.stage_groups) {
+        if name.starts_with("llm") {
+            saw_llm = true;
+            assert_eq!(
+                g, 1,
+                "LLM stage {name} landed off the A100 group"
+            );
+        }
+        // "enc:" (modality-parallel) or "enc[" (colocated fusion)
+        if name.starts_with("enc") && g == 0 {
+            enc_on_a40 = true;
+        }
+    }
+    assert!(saw_llm);
+    assert!(
+        enc_on_a40,
+        "no frozen encoder stage landed on the A40 group: {:?} / {:?}",
+        plan.stage_names, plan.stage_groups
+    );
+    // The report's verdicts say the same thing in hardware names, and
+    // every stage fits the budget of the device it actually landed on.
+    assert!(hetero.fits_budget());
+    assert!(hetero
+        .stage_verdicts
+        .iter()
+        .any(|v| v.stage.starts_with("enc") && v.device == "A40"));
+    assert!(hetero
+        .stage_verdicts
+        .iter()
+        .filter(|v| v.stage.starts_with("llm"))
+        .all(|v| v.device == "A100-80G"
+            && v.budget_bytes == 80_000_000_000));
+
+    // The mixed pool beats the best all-A40 plan of the same size.
+    let a40x8 = ClusterSpec::a40_default().with_devices(8);
+    let all_a40 = service
+        .plan(
+            &PlanRequest::default_for(spec.clone())
+                .cluster(a40x8.clone())
+                .threads(2),
+        )
+        .unwrap();
+    assert!(
+        hetero.timeline.iteration_ms < all_a40.timeline.iteration_ms,
+        "mixed pool {:.1} ms did not beat all-A40 {:.1} ms",
+        hetero.timeline.iteration_ms,
+        all_a40.timeline.iteration_ms
+    );
+
+    // Cache v4: the persisted entry's fingerprint covers the full pool,
+    // never aliases the homogeneous a40x8 signature, and a lookup under
+    // the homogeneous fingerprint is never satisfied by it.
+    assert_ne!(hetero.provenance.cluster, a40x8.fingerprint());
+    assert_ne!(hetero.provenance.signature, all_a40.provenance.signature);
+    let store = PlanCache::load(&cache_path);
+    assert!(!store.is_empty());
+    let entry = store
+        .lookup(&hetero.provenance.signature, &hetero.provenance.cluster)
+        .expect("the hetero answer was persisted");
+    assert_eq!(entry.cluster, hetero_cluster.fingerprint());
+    assert!(store
+        .lookup(&hetero.provenance.signature, &a40x8.fingerprint())
+        .is_none());
+    // the winning plan's assignment round-tripped through the cache
+    assert!(!entry.best().candidate.chain_groups.is_empty());
+    assert_eq!(
+        entry.best().candidate,
+        hetero.winner().candidate
+    );
+
+    // And a warm re-query instantiates the identical heterogeneous plan.
+    let warm = service
+        .plan(
+            &PlanRequest::default_for(spec.clone())
+                .cluster(hetero_cluster)
+                .threads(2)
+                .cache_file(&cache),
+        )
+        .unwrap();
+    assert!(warm.provenance.cache_hit);
+    assert_eq!(warm.winner(), hetero.winner());
+    assert_eq!(warm.plan.stage_groups, hetero.plan.stage_groups);
+    assert!(
+        (warm.timeline.iteration_ms - hetero.timeline.iteration_ms).abs()
+            < 1e-9
+    );
+    let _ = std::fs::remove_file(&cache_path);
+}
+
+/// Golden: a pre-hetero single-device cluster JSON answers with
+/// byte-for-byte the PR 3 plan (paper spec constants, A40 device model).
+#[test]
+fn old_single_device_cluster_json_reproduces_the_golden_plan() {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/clusters/a40x8.json"
+    );
+    let cluster = ClusterSpec::load(std::path::Path::new(path)).unwrap();
+    assert!(!cluster.is_heterogeneous());
+
+    let spec = MllmSpec::vlm(Size::M, Size::S);
+    let report = PlanningService::new()
+        .plan(
+            &PlanRequest::default_for(spec.clone())
+                .cluster(cluster)
+                .threads(2),
+        )
+        .unwrap();
+    // homogeneous candidates stay assignment-free (cache keys, labels,
+    // and equality are unchanged from PR 3)
+    assert!(report.winner().candidate.chain_groups.is_empty());
+    assert!(report
+        .plan
+        .stage_groups
+        .iter()
+        .all(|&g| g == 0));
+
+    // the pre-redesign construction: paper-default spec + Device::a40()
+    let cand = &report.winner().candidate;
+    let mut mm = MultimodalModule::from_spec(&spec);
+    cand.frozen.apply(&mut mm);
+    let mut ps = MultimodalParallelSpec::paper_default(
+        &cand.enc_pps,
+        cand.llm_pp,
+        cand.tp,
+        cand.cp,
+    );
+    ps.num_microbatches = cand.num_microbatches;
+    let legacy = planner::plan(cand.strategy, &mm, &ps, Device::a40());
+
+    assert_eq!(report.plan.stage_names, legacy.stage_names);
+    assert_eq!(report.plan.stage_mem, legacy.stage_mem);
+    assert_eq!(report.plan.n_gpus, legacy.n_gpus);
+    assert!(report.plan.graph.comm_ms == legacy.graph.comm_ms);
+    for (a, b) in report.plan.graph.nodes.iter().zip(&legacy.graph.nodes)
+    {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.preds, b.preds);
+        // bit-exact, not approximate: the hetero generalization must
+        // not perturb the homogeneous time model at all
+        assert!(a.cost.fwd_ms == b.cost.fwd_ms);
+        assert!(a.cost.bwd_ms == b.cost.bwd_ms);
+    }
+    let m = legacy.simulate();
+    assert!(
+        (m.iteration_ms - report.timeline.iteration_ms).abs() < 1e-9
+    );
+}
+
+fn random_spec(g: &mut Gen) -> MllmSpec {
+    match g.usize(0, 3) {
+        0 => MllmSpec::vlm(Size::M, Size::M),
+        1 => MllmSpec::alm(Size::M, Size::S),
+        _ => MllmSpec::valm(Size::S, Size::M, Size::M),
+    }
+}
+
+fn random_candidate(g: &mut Gen, spec: &MllmSpec, n_groups: usize) -> Candidate {
+    let n_enc = spec.vision.is_some() as usize + spec.audio.is_some() as usize;
+    let strategy = match g.usize(0, 3) {
+        0 => Strategy::Cornstarch,
+        1 => Strategy::Colocated,
+        _ => Strategy::Replicated,
+    };
+    let enc_pps: Vec<usize> = match strategy {
+        Strategy::Replicated => Vec::new(),
+        // colocated demands equal encoder stage counts
+        Strategy::Colocated => vec![g.usize(1, 4); n_enc],
+        Strategy::Cornstarch => (0..n_enc).map(|_| g.usize(1, 4)).collect(),
+    };
+    let chain_groups = if n_groups <= 1 {
+        Vec::new()
+    } else {
+        match strategy {
+            Strategy::Replicated => vec![g.usize(0, n_groups)],
+            // colocated fuses encoders onto one shared group
+            Strategy::Colocated => {
+                let ge = g.usize(0, n_groups);
+                let mut v = vec![ge; n_enc];
+                v.push(g.usize(0, n_groups));
+                v
+            }
+            Strategy::Cornstarch => {
+                (0..=n_enc).map(|_| g.usize(0, n_groups)).collect()
+            }
+        }
+    };
+    Candidate {
+        strategy,
+        enc_pps,
+        llm_pp: g.usize(1, 5),
+        tp: 1 << g.usize(0, 2),
+        cp: 1 << g.usize(0, 2),
+        num_microbatches: g.usize(1, 17),
+        frozen: FrozenSetting::ALL[g.usize(0, 3)],
+        chain_groups,
+    }
+}
+
+/// The search's exactness claim rests on this invariant and it was
+/// previously untested: for ANY candidate, the simulated 1F1B makespan
+/// is at least the device-busy bound AND at least the critical-path
+/// bound. If either ever exceeded the simulation, bound-ascending
+/// pruning could discard the true optimum.
+#[test]
+fn simulated_makespan_dominates_both_lower_bounds() {
+    let clusters = [
+        ClusterSpec::a40_default(),
+        ClusterSpec::a40_a100_demo(),
+    ];
+    check("sim >= device-busy and critical-path bounds", 60, |g| {
+        let spec = random_spec(g);
+        let cluster = &clusters[g.usize(0, clusters.len())];
+        let cand = random_candidate(g, &spec, cluster.groups.len());
+        let plan = build_plan(&spec, &cand, cluster);
+        let (busy, critical) = bounds_ms(&plan);
+        let sim = plan.simulate().iteration_ms;
+        assert!(
+            busy <= sim + 1e-6,
+            "device-busy bound {busy:.3} > sim {sim:.3} for {}",
+            cand.label()
+        );
+        assert!(
+            critical <= sim + 1e-6,
+            "critical-path bound {critical:.3} > sim {sim:.3} for {}",
+            cand.label()
+        );
+        assert!(busy > 0.0 && critical > 0.0);
+    });
+}

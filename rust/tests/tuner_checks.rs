@@ -41,6 +41,54 @@ fn exact_never_worse_than_lpt_on_small_instances() {
     });
 }
 
+/// Hold every CP distribution to the branch-and-bound exact oracle on
+/// all three multimodal mask generators — EP and MP included, which the
+/// EE-only tests used to leave uncovered: no heuristic may beat the ILP
+/// optimum, and greedy LPT must stay within the paper's imbalance bound
+/// (Graham's (4/3 − 1/(3G))·OPT) on every generator.
+#[test]
+fn cp_heuristics_respect_the_exact_oracle_on_all_mask_types() {
+    use cornstarch::bam::{self, Bam};
+
+    type Generator = fn(&mut Rng, usize) -> Bam;
+    let generators: [(&str, Generator); 3] = [
+        ("EP", |rng, t| bam::generators::random_ep(rng, t, 3)),
+        ("EE", |rng, t| bam::generators::random_ee(rng, t, 3)),
+        ("MP", |rng, t| bam::generators::random_mp(rng, t)),
+    ];
+    for (name, generate) in generators {
+        check(&format!("{name} masks vs exact oracle"), 12, |g| {
+            // Small instances keep branch-and-bound tractable: ~12
+            // blocks of 128 tokens over 2..4 ranks.
+            let t = 128 * g.usize(8, 13);
+            let ranks = g.usize(2, 5);
+            let mask = generate(&mut g.rng, t);
+            let w = bam::block_workloads(&mask.workloads(), 128);
+            let opt = exact_min_makespan(&w, ranks);
+            for alg in [
+                Algorithm::Lpt,
+                Algorithm::Zigzag,
+                Algorithm::Ring,
+                Algorithm::Random { seed: g.seed },
+            ] {
+                let mk = makespan(&w, &alg.assign(&w, ranks), ranks);
+                assert!(
+                    mk >= opt,
+                    "{name}: {} makespan {mk} beat the exact {opt}",
+                    alg.name()
+                );
+            }
+            let lpt = makespan(&w, &Algorithm::Lpt.assign(&w, ranks), ranks);
+            let bound =
+                (4.0 / 3.0 - 1.0 / (3.0 * ranks as f64)) * opt as f64;
+            assert!(
+                lpt as f64 <= bound + 1e-9,
+                "{name}: LPT {lpt} above Graham bound {bound:.1} (OPT {opt})"
+            );
+        });
+    }
+}
+
 #[test]
 fn exact_matches_lpt_when_lpt_is_provably_optimal() {
     // Uniform workloads in multiples of the rank count: LPT achieves the
