@@ -1,0 +1,404 @@
+//! `PlanDiff` — a stable, human-readable delta between two
+//! [`PlanReport`]s.
+//!
+//! A re-plan (a new cluster file, a deepened search, a fleet re-carve)
+//! changes an answer operators may already be running. The diff says
+//! *what* changed, in a deterministic order, so "the tuner moved the
+//! encoder off the A40s and grew the microbatch count" is one glance,
+//! not two full reports side by side:
+//!
+//! * **configuration** — winner-candidate fields (strategy, pipeline
+//!   depths, TP/CP, microbatches, frozen policy, chain→group assignment)
+//!   and the cluster fingerprint the plan is valid for;
+//! * **stages** — stages added or removed, stages moved to another
+//!   device class, and per-stage peak-memory changes;
+//! * **timeline** — iteration time, whole-job throughput, GPU count,
+//!   and peak per-GPU memory.
+//!
+//! Diffing a report against itself yields an empty diff whose rendering
+//! is the fixed string `"plan diff: no differences\n"` (held by a
+//! golden-file test). The CLI front-ends are `cornstarch diff <mllm>`
+//! (one model, two clusters) and `cornstarch diff fleet` (naive split vs
+//! searched carve, per tenant — see [`super::fleet`]).
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::memory;
+
+use super::report::PlanReport;
+
+/// One scalar field that differs between the two plans.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FieldDelta {
+    /// Field name (`strategy`, `tp`, `iteration`, …).
+    pub field: &'static str,
+    pub before: String,
+    pub after: String,
+}
+
+/// One per-stage difference.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StageDelta {
+    /// The stage exists in both plans but landed on another device class.
+    Moved { stage: String, from: String, to: String },
+    /// The stage exists in both plans with a different modeled peak.
+    Resized { stage: String, from_bytes: u64, to_bytes: u64 },
+    /// The stage exists only in the *before* plan.
+    Removed { stage: String, device: String },
+    /// The stage exists only in the *after* plan.
+    Added { stage: String, device: String },
+}
+
+/// The delta between two [`PlanReport`]s (see [`PlanDiff::between`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanDiff {
+    /// Winner-candidate and cluster fields that changed.
+    pub fields: Vec<FieldDelta>,
+    /// Stage-level changes: modifications in *before* stage order, then
+    /// removals, then additions in *after* stage order.
+    pub stages: Vec<StageDelta>,
+    /// Timeline-summary changes.
+    pub timeline: Vec<FieldDelta>,
+}
+
+fn push_delta(
+    out: &mut Vec<FieldDelta>,
+    field: &'static str,
+    before: String,
+    after: String,
+) {
+    if before != after {
+        out.push(FieldDelta { field, before, after });
+    }
+}
+
+/// Relative change suffix, e.g. `" (-10.9%)"`; empty when the base is 0.
+fn pct(before: f64, after: f64) -> String {
+    if before == 0.0 {
+        return String::new();
+    }
+    format!(" ({:+.1}%)", (after - before) / before * 100.0)
+}
+
+/// Render-granularity floors for continuous quantities: a change the
+/// rendering cannot show (`24.00 GB -> 24.00 GB`) is noise, not a
+/// difference, so anything smaller is not reported. Discrete fields
+/// (counts, names, assignments) always compare exactly.
+const ITERATION_EPS_MS: f64 = 0.05; // rendered at {:.1} ms
+const THROUGHPUT_EPS: f64 = 0.005; // rendered at {:.2} input/s
+const PEAK_EPS_BYTES: u64 = 10_000_000; // rendered at {:.2} GB
+
+impl PlanDiff {
+    /// Compute the delta from `before` to `after`. Discrete fields
+    /// compare exactly; continuous quantities (times, throughput, peak
+    /// memory) compare at render granularity, so a reported delta always
+    /// *shows* a difference. A report diffed against itself is empty,
+    /// and the output order is deterministic, so the same pair of
+    /// reports always renders the same text.
+    pub fn between(before: &PlanReport, after: &PlanReport) -> PlanDiff {
+        let mut fields = Vec::new();
+        let same_cluster =
+            before.provenance.cluster == after.provenance.cluster;
+        push_delta(
+            &mut fields,
+            "cluster",
+            before.provenance.cluster.clone(),
+            after.provenance.cluster.clone(),
+        );
+        let a = &before.winner().candidate;
+        let b = &after.winner().candidate;
+        push_delta(
+            &mut fields,
+            "strategy",
+            a.strategy.key().to_string(),
+            b.strategy.key().to_string(),
+        );
+        push_delta(
+            &mut fields,
+            "policy",
+            a.frozen.key().to_string(),
+            b.frozen.key().to_string(),
+        );
+        push_delta(
+            &mut fields,
+            "llm_pp",
+            a.llm_pp.to_string(),
+            b.llm_pp.to_string(),
+        );
+        push_delta(
+            &mut fields,
+            "enc_pp",
+            format!("{:?}", a.enc_pps),
+            format!("{:?}", b.enc_pps),
+        );
+        push_delta(&mut fields, "tp", a.tp.to_string(), b.tp.to_string());
+        push_delta(&mut fields, "cp", a.cp.to_string(), b.cp.to_string());
+        push_delta(
+            &mut fields,
+            "microbatches",
+            a.num_microbatches.to_string(),
+            b.num_microbatches.to_string(),
+        );
+        // Chain-group indices are relative to each report's own cluster
+        // group list; across two *different* clusters (a fleet re-carve)
+        // comparing raw indices would mislead — there the per-stage
+        // [`StageDelta::Moved`] entries, which name device classes, tell
+        // the true story.
+        if same_cluster {
+            push_delta(
+                &mut fields,
+                "groups",
+                format!("{:?}", a.chain_groups),
+                format!("{:?}", b.chain_groups),
+            );
+        }
+
+        // Stage deltas, keyed by stage name.
+        let before_by_name: HashMap<&str, usize> = before
+            .stage_verdicts
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.stage.as_str(), i))
+            .collect();
+        let after_by_name: HashMap<&str, usize> = after
+            .stage_verdicts
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.stage.as_str(), i))
+            .collect();
+        let mut stages = Vec::new();
+        for v in &before.stage_verdicts {
+            if let Some(&j) = after_by_name.get(v.stage.as_str()) {
+                let w = &after.stage_verdicts[j];
+                if v.device != w.device {
+                    stages.push(StageDelta::Moved {
+                        stage: v.stage.clone(),
+                        from: v.device.clone(),
+                        to: w.device.clone(),
+                    });
+                }
+                if v.peak_bytes.abs_diff(w.peak_bytes) >= PEAK_EPS_BYTES {
+                    stages.push(StageDelta::Resized {
+                        stage: v.stage.clone(),
+                        from_bytes: v.peak_bytes,
+                        to_bytes: w.peak_bytes,
+                    });
+                }
+            }
+        }
+        for v in &before.stage_verdicts {
+            if !after_by_name.contains_key(v.stage.as_str()) {
+                stages.push(StageDelta::Removed {
+                    stage: v.stage.clone(),
+                    device: v.device.clone(),
+                });
+            }
+        }
+        for w in &after.stage_verdicts {
+            if !before_by_name.contains_key(w.stage.as_str()) {
+                stages.push(StageDelta::Added {
+                    stage: w.stage.clone(),
+                    device: w.device.clone(),
+                });
+            }
+        }
+
+        // Timeline deltas (exact compares; formatting only for display).
+        let ta = &before.timeline;
+        let tb = &after.timeline;
+        let mut timeline = Vec::new();
+        if (ta.iteration_ms - tb.iteration_ms).abs() >= ITERATION_EPS_MS {
+            timeline.push(FieldDelta {
+                field: "iteration",
+                before: format!("{:.1} ms", ta.iteration_ms),
+                after: format!(
+                    "{:.1} ms{}",
+                    tb.iteration_ms,
+                    pct(ta.iteration_ms, tb.iteration_ms)
+                ),
+            });
+        }
+        if (ta.throughput - tb.throughput).abs() >= THROUGHPUT_EPS {
+            timeline.push(FieldDelta {
+                field: "throughput",
+                before: format!("{:.2} input/s", ta.throughput),
+                after: format!(
+                    "{:.2} input/s{}",
+                    tb.throughput,
+                    pct(ta.throughput, tb.throughput)
+                ),
+            });
+        }
+        push_delta(
+            &mut timeline,
+            "gpus",
+            ta.n_gpus.to_string(),
+            tb.n_gpus.to_string(),
+        );
+        if ta.peak_device_bytes.abs_diff(tb.peak_device_bytes)
+            >= PEAK_EPS_BYTES
+        {
+            timeline.push(FieldDelta {
+                field: "peak memory",
+                before: format!("{:.2} GB/GPU", memory::gb(ta.peak_device_bytes)),
+                after: format!("{:.2} GB/GPU", memory::gb(tb.peak_device_bytes)),
+            });
+        }
+
+        PlanDiff { fields, stages, timeline }
+    }
+
+    /// True when the two reports agree on every compared field — the
+    /// guarantee a re-plan that changed nothing renders as
+    /// `"plan diff: no differences"`.
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+            && self.stages.is_empty()
+            && self.timeline.is_empty()
+    }
+
+    /// Deterministic human-readable rendering: configuration fields,
+    /// then stage changes, then timeline changes.
+    pub fn render(&self) -> String {
+        if self.is_empty() {
+            return "plan diff: no differences\n".to_string();
+        }
+        let mut s = String::from("plan diff:\n");
+        for f in &self.fields {
+            let _ = writeln!(s, "  {}: {} -> {}", f.field, f.before, f.after);
+        }
+        if !self.stages.is_empty() {
+            s.push_str("  stages:\n");
+            for d in &self.stages {
+                match d {
+                    StageDelta::Moved { stage, from, to } => {
+                        let _ = writeln!(s, "    ~ {stage}: {from} -> {to}");
+                    }
+                    StageDelta::Resized { stage, from_bytes, to_bytes } => {
+                        let _ = writeln!(
+                            s,
+                            "    ~ {stage}: peak {:.2} GB -> {:.2} GB",
+                            memory::gb(*from_bytes),
+                            memory::gb(*to_bytes)
+                        );
+                    }
+                    StageDelta::Removed { stage, device } => {
+                        let _ = writeln!(s, "    - {stage} ({device})");
+                    }
+                    StageDelta::Added { stage, device } => {
+                        let _ = writeln!(s, "    + {stage} ({device})");
+                    }
+                }
+            }
+        }
+        if !self.timeline.is_empty() {
+            s.push_str("  timeline:\n");
+            for f in &self.timeline {
+                let _ =
+                    writeln!(s, "    {}: {} -> {}", f.field, f.before, f.after);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{PlanRequest, PlanningService};
+    use crate::model::{MllmSpec, Size};
+
+    #[test]
+    fn self_diff_is_empty_and_renders_the_fixed_line() {
+        let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+            .devices(8)
+            .threads(2);
+        let report = PlanningService::new().plan(&req).unwrap();
+        let d = PlanDiff::between(&report, &report);
+        assert!(d.is_empty());
+        assert_eq!(d.render(), "plan diff: no differences\n");
+    }
+
+    #[test]
+    fn different_pools_produce_a_stable_nonempty_diff() {
+        let service = PlanningService::new();
+        let small = service
+            .plan(
+                &PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+                    .devices(8)
+                    .threads(2),
+            )
+            .unwrap();
+        let big = service
+            .plan(
+                &PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+                    .devices(16)
+                    .threads(2),
+            )
+            .unwrap();
+        let d = PlanDiff::between(&small, &big);
+        assert!(!d.is_empty());
+        // the cluster fingerprint always distinguishes the two pools
+        assert!(d.fields.iter().any(|f| f.field == "cluster"));
+        let text = d.render();
+        assert!(text.contains("->"), "{text}");
+        // deterministic: the same pair renders the same text
+        assert_eq!(text, PlanDiff::between(&small, &big).render());
+        // and the reverse diff swaps direction, not content volume
+        let rev = PlanDiff::between(&big, &small);
+        assert_eq!(rev.fields.len(), d.fields.len());
+    }
+
+    #[test]
+    fn render_sections_are_shaped_and_ordered() {
+        let d = PlanDiff {
+            fields: vec![FieldDelta {
+                field: "tp",
+                before: "1".to_string(),
+                after: "2".to_string(),
+            }],
+            stages: vec![
+                StageDelta::Moved {
+                    stage: "llm[0]".to_string(),
+                    from: "A40".to_string(),
+                    to: "A100-80G".to_string(),
+                },
+                StageDelta::Resized {
+                    stage: "llm[0]".to_string(),
+                    from_bytes: 24_000_000_000,
+                    to_bytes: 30_000_000_000,
+                },
+                StageDelta::Removed {
+                    stage: "enc:vision[1]".to_string(),
+                    device: "A40".to_string(),
+                },
+                StageDelta::Added {
+                    stage: "llm[3]".to_string(),
+                    device: "A100-80G".to_string(),
+                },
+            ],
+            timeline: vec![FieldDelta {
+                field: "iteration",
+                before: "123.4 ms".to_string(),
+                after: "110.0 ms (-10.9%)".to_string(),
+            }],
+        };
+        assert!(!d.is_empty());
+        let text = d.render();
+        let fields_at = text.find("tp: 1 -> 2").unwrap();
+        let stages_at = text.find("stages:").unwrap();
+        let timeline_at = text.find("timeline:").unwrap();
+        assert!(fields_at < stages_at && stages_at < timeline_at, "{text}");
+        assert!(text.contains("~ llm[0]: A40 -> A100-80G"), "{text}");
+        assert!(text.contains("~ llm[0]: peak 24.00 GB -> 30.00 GB"), "{text}");
+        assert!(text.contains("- enc:vision[1] (A40)"), "{text}");
+        assert!(text.contains("+ llm[3] (A100-80G)"), "{text}");
+    }
+
+    #[test]
+    fn pct_handles_zero_base() {
+        assert_eq!(pct(0.0, 5.0), "");
+        assert_eq!(pct(100.0, 90.0), " (-10.0%)");
+    }
+}

@@ -17,6 +17,10 @@ pub enum PlanError {
     /// Every candidate in the search space is infeasible on this
     /// cluster — over the device budget or over the per-device memory.
     NoFeasiblePlan { mllm: String, devices: usize },
+    /// No carve of the shared pool can host every tenant of a
+    /// [`super::FleetRequest`] within its fairness floor (see
+    /// [`super::fleet`]).
+    InfeasibleFleet(String),
     /// The persistent plan cache could not be written.
     Cache(String),
 }
@@ -36,6 +40,9 @@ impl fmt::Display for PlanError {
                  candidate exceeds the device budget or the per-device \
                  memory capacity"
             ),
+            PlanError::InfeasibleFleet(m) => {
+                write!(f, "infeasible fleet: {m}")
+            }
             PlanError::Cache(m) => write!(f, "plan cache error: {m}"),
         }
     }
@@ -58,5 +65,8 @@ mod tests {
         assert!(PlanError::InvalidCluster("x".into())
             .to_string()
             .contains("cluster"));
+        assert!(PlanError::InfeasibleFleet("no carve".into())
+            .to_string()
+            .contains("fleet"));
     }
 }

@@ -1,0 +1,1011 @@
+//! Fleet planning: N named tenants sharing one heterogeneous pool.
+//!
+//! A single [`PlanRequest`] claims its whole [`ClusterSpec`]. But a real
+//! pool serves *concurrent* jobs — say a VLM-L finetune and a
+//! Whisper-encoder pretrain — and the frozen-aware planner makes the
+//! split interesting: the finetune's frozen encoder barely needs the big
+//! cards, so handing it every A100 while the pretrain rides the A40s can
+//! beat a naive even split on both jobs at once.
+//!
+//! The fleet layer makes that carve a search:
+//!
+//! ```text
+//! FleetRequest ──► PlanningService::plan_fleet() ──► FleetReport
+//!   tenants: name → PlanRequest     enumerate pool carves      per-tenant PlanReports,
+//!   shared ClusterSpec              (per-group compositions),  the chosen FleetPartition,
+//!   fairness floor                  prune by device/memory,    aggregate throughput,
+//!                                   plan each sub-pool,        provenance
+//!                                   maximize Σ throughput
+//! ```
+//!
+//! A [`FleetPartition`] hands each tenant a per-group device count; every
+//! device is assigned to exactly one tenant (a tenant's plan need not
+//! *use* its whole slice). Carves are pruned the way
+//! [`crate::tuner::space`] prunes chain→group assignments — a tenant
+//! slice with zero devices, or with less total memory than the tenant's
+//! model weights, is discarded before any search runs. Each surviving
+//! sub-pool is planned through the ordinary [`PlanningService::plan`], so
+//! the persistent plan cache applies: a tenant's cache entry is keyed by
+//! its sub-pool's [`ClusterSpec::fingerprint`], i.e. **fleet entries
+//! fingerprint the carve**, and re-carving a pool re-uses every sub-pool
+//! plan it has seen before.
+//!
+//! The winner maximizes aggregate simulated throughput (Σ samples/s)
+//! subject to a per-tenant *fairness floor*: each tenant must keep at
+//! least `floor ×` the throughput it would get running **alone** on the
+//! whole pool. `cornstarch fleet` is the CLI front-end, `reproduce fleet`
+//! the demo (two tenants on the 4×A40 + 4×A100 pool beating the naive
+//! static halving), and [`PlanDiff`](super::PlanDiff) renders what a
+//! re-carve changed.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::memory;
+use crate::model::MllmSpec;
+
+use super::cluster::{ClusterSpec, DeviceGroup};
+use super::diff::PlanDiff;
+use super::error::PlanError;
+use super::report::PlanReport;
+use super::{PlanRequest, PlanningService};
+
+/// Carve-enumeration guard: a pool whose exhaustive carve count exceeds
+/// this is rejected as an [`PlanError::InvalidRequest`] instead of
+/// spinning (compositions grow combinatorially with group sizes and
+/// tenant count).
+pub const MAX_PARTITIONS: usize = 20_000;
+
+/// One named tenant of a [`FleetRequest`]: a workload plus its planning
+/// options. The request's own `cluster` is ignored — the fleet search
+/// replaces it with each candidate sub-pool carve (cache policy,
+/// objective, budget, threads, and frontier depth are honored as-is).
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    pub name: String,
+    pub request: PlanRequest,
+}
+
+/// A multi-tenant planning query over one shared pool.
+#[derive(Clone, Debug)]
+pub struct FleetRequest {
+    /// The shared hardware truth all tenants carve.
+    pub cluster: ClusterSpec,
+    pub tenants: Vec<Tenant>,
+    /// Fairness floor in `[0, 1]`: each tenant's carved throughput must
+    /// be at least this fraction of its *solo* throughput (the whole
+    /// pool to itself). `0.0` disables the floor.
+    pub fairness_floor: f64,
+    /// Fleet-wide plan-cache path, applied to every tenant — those
+    /// already added *and* those added later, so the builder order does
+    /// not matter (see [`FleetRequest::cache_file`]).
+    pub cache: Option<String>,
+}
+
+impl FleetRequest {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        FleetRequest {
+            cluster,
+            tenants: Vec::new(),
+            fairness_floor: 0.0,
+            cache: None,
+        }
+    }
+
+    /// Add a named tenant (names must be unique within the request). A
+    /// fleet-wide [`FleetRequest::cache_file`] set earlier is applied to
+    /// the new tenant's request.
+    pub fn tenant(mut self, name: &str, mut request: PlanRequest) -> Self {
+        if let Some(path) = &self.cache {
+            request = request.cache_file(path);
+        }
+        self.tenants.push(Tenant { name: name.to_string(), request });
+        self
+    }
+
+    /// Set the per-tenant fairness floor (see [`FleetRequest::fairness_floor`]).
+    pub fn fairness_floor(mut self, floor: f64) -> Self {
+        self.fairness_floor = floor;
+        self
+    }
+
+    /// Point every tenant's plan cache at `path` — tenants already
+    /// added are rewritten and tenants added later inherit it, so this
+    /// composes with [`FleetRequest::tenant`] in either order. Entries
+    /// are keyed by each sub-pool carve's fingerprint, so tenants
+    /// sharing one file never alias each other's answers.
+    pub fn cache_file(mut self, path: &str) -> Self {
+        self.cache = Some(path.to_string());
+        for t in &mut self.tenants {
+            t.request = t.request.clone().cache_file(path);
+        }
+        self
+    }
+
+    /// The baseline carve operators reach for without a search: split
+    /// every group's devices evenly across tenants (earlier tenants
+    /// absorb the remainder). For two tenants this is the naive static
+    /// halving `reproduce fleet` compares against. On a tenant-less
+    /// request this returns an empty (invalid) partition so the planning
+    /// entry points can answer with their typed
+    /// [`PlanError::InvalidRequest`] instead of panicking here.
+    pub fn naive_partition(&self) -> FleetPartition {
+        if self.tenants.is_empty() {
+            return FleetPartition { slices: Vec::new() };
+        }
+        FleetPartition::even(&self.cluster, self.tenants.len())
+    }
+
+    fn validate(&self) -> Result<(), PlanError> {
+        self.cluster.validate()?;
+        if self.tenants.is_empty() {
+            return Err(PlanError::InvalidRequest(
+                "a fleet request needs at least one tenant".to_string(),
+            ));
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                return Err(PlanError::InvalidRequest(format!(
+                    "duplicate tenant name {:?}",
+                    t.name
+                )));
+            }
+        }
+        if !self.fairness_floor.is_finite()
+            || !(0.0..=1.0).contains(&self.fairness_floor)
+        {
+            return Err(PlanError::InvalidRequest(format!(
+                "fairness floor must be in [0, 1], got {}",
+                self.fairness_floor
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One way of splitting a shared pool across tenants:
+/// `slices[tenant][group]` devices of cluster group `group` go to tenant
+/// `tenant`. The carves [`enumerate_partitions`] produces assign every
+/// device of every group to exactly one tenant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetPartition {
+    pub slices: Vec<Vec<usize>>,
+}
+
+impl FleetPartition {
+    /// The even split (see [`FleetRequest::naive_partition`]).
+    pub fn even(cluster: &ClusterSpec, tenants: usize) -> Self {
+        assert!(tenants >= 1, "a partition needs at least one tenant");
+        let slices = (0..tenants)
+            .map(|t| {
+                cluster
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        g.count / tenants
+                            + usize::from(t < g.count % tenants)
+                    })
+                    .collect()
+            })
+            .collect();
+        FleetPartition { slices }
+    }
+
+    /// Total devices tenant `t` holds across all groups.
+    pub fn tenant_devices(&self, t: usize) -> usize {
+        self.slices[t].iter().sum()
+    }
+
+    /// Does this carve fit `cluster` — slice widths matching the group
+    /// list and no group's devices double-assigned (per-group sums within
+    /// the group's count)?
+    pub fn respects(&self, cluster: &ClusterSpec) -> bool {
+        let n_groups = cluster.groups.len();
+        if self.slices.iter().any(|s| s.len() != n_groups) {
+            return false;
+        }
+        cluster.groups.iter().enumerate().all(|(g, grp)| {
+            self.slices.iter().map(|s| s[g]).sum::<usize>() <= grp.count
+        })
+    }
+
+    /// Tenant `t`'s slice as a standalone [`ClusterSpec`] (zero-count
+    /// groups dropped — [`ClusterSpec::validate`] rejects empty groups).
+    /// `None` when the slice holds no devices at all. The sub-pool keeps
+    /// each group's device class and link, so its fingerprint — and with
+    /// it every cache entry planned against it — identifies the carve.
+    pub fn subpool(
+        &self,
+        cluster: &ClusterSpec,
+        t: usize,
+        tenant_name: &str,
+    ) -> Option<ClusterSpec> {
+        let groups: Vec<DeviceGroup> = cluster
+            .groups
+            .iter()
+            .zip(&self.slices[t])
+            .filter(|(_, &count)| count > 0)
+            .map(|(g, &count)| DeviceGroup {
+                device: g.device.clone(),
+                count,
+                link_gbps: g.link_gbps,
+            })
+            .collect();
+        if groups.is_empty() {
+            return None;
+        }
+        Some(ClusterSpec {
+            name: format!("{}:{}", cluster.name, tenant_name),
+            groups,
+        })
+    }
+
+    /// Compact stable form for provenance and logs, e.g. `[0,4]+[4,0]`
+    /// (tenant-major, group-minor).
+    pub fn label(&self) -> String {
+        self.slices
+            .iter()
+            .map(|s| {
+                let cells: Vec<String> =
+                    s.iter().map(|c| c.to_string()).collect();
+                format!("[{}]", cells.join(","))
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// All length-`t` vectors of non-negative counts summing exactly to `n`.
+fn compositions(n: usize, t: usize) -> Vec<Vec<usize>> {
+    if t == 1 {
+        return vec![vec![n]];
+    }
+    let mut out = Vec::new();
+    for first in 0..=n {
+        for mut rest in compositions(n - first, t - 1) {
+            let mut v = Vec::with_capacity(t);
+            v.push(first);
+            v.append(&mut rest);
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// `C(n + t - 1, t - 1)` — how many compositions [`compositions`] yields,
+/// computed without materializing them (the enumeration guard).
+fn compositions_count(n: usize, t: usize) -> u128 {
+    let a = (n + t - 1) as u128;
+    let mut b = (t - 1) as u128;
+    if b > a - b {
+        b = a - b;
+    }
+    let mut r: u128 = 1;
+    for i in 1..=b {
+        r = r.saturating_mul(a - b + i) / i;
+    }
+    r
+}
+
+/// Every exact carve of `cluster` across `tenants`: the cross product of
+/// per-group compositions. Each group's devices are fully assigned (sum
+/// over tenants equals the group count), so no device is ever idle by
+/// construction and none is double-assigned — the invariants
+/// `tests/fleet_checks.rs` holds this enumeration to.
+pub fn enumerate_partitions(
+    cluster: &ClusterSpec,
+    tenants: usize,
+) -> Vec<FleetPartition> {
+    assert!(tenants >= 1, "a partition needs at least one tenant");
+    let per_group: Vec<Vec<Vec<usize>>> = cluster
+        .groups
+        .iter()
+        .map(|g| compositions(g.count, tenants))
+        .collect();
+    let mut parts: Vec<Vec<Vec<usize>>> = vec![vec![Vec::new(); tenants]];
+    for options in &per_group {
+        let mut next = Vec::with_capacity(parts.len() * options.len());
+        for base in &parts {
+            for opt in options {
+                let mut p = base.clone();
+                for (t, slice) in p.iter_mut().enumerate() {
+                    slice.push(opt[t]);
+                }
+                next.push(p);
+            }
+        }
+        parts = next;
+    }
+    parts
+        .into_iter()
+        .map(|slices| FleetPartition { slices })
+        .collect()
+}
+
+/// A lower bound on the pool memory a tenant's workload needs anywhere:
+/// its model weights (bf16), which must all be resident at least once
+/// regardless of sharding or frozen policy. Slices whose total memory
+/// cannot even hold the weights are pruned before any search runs.
+fn min_weight_bytes(spec: &MllmSpec) -> u64 {
+    let mut params = spec.llm.params();
+    if let Some(v) = &spec.vision {
+        params += v.params();
+    }
+    if let Some(a) = &spec.audio {
+        params += a.params();
+    }
+    params * memory::PARAM_BYTES
+}
+
+/// Total memory (bytes) of tenant `t`'s slice under `part`.
+fn slice_mem_bytes(
+    part: &FleetPartition,
+    cluster: &ClusterSpec,
+    t: usize,
+) -> u64 {
+    cluster
+        .groups
+        .iter()
+        .zip(&part.slices[t])
+        .map(|(g, &count)| g.device.mem_bytes * count as u64)
+        .sum()
+}
+
+/// One tenant's share of a [`FleetReport`].
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    /// Devices granted per cluster group (this tenant's row of the
+    /// chosen [`FleetPartition`]).
+    pub slice: Vec<usize>,
+    /// Throughput (samples/s) the tenant would get with the whole pool
+    /// to itself — the fairness baseline.
+    pub solo_throughput: f64,
+    pub report: PlanReport,
+}
+
+impl TenantReport {
+    /// Simulated whole-job throughput under the carve (samples/s).
+    pub fn throughput(&self) -> f64 {
+        self.report.timeline.throughput
+    }
+
+    /// Carved throughput as a fraction of solo throughput — the quantity
+    /// the fairness floor constrains.
+    pub fn fairness(&self) -> f64 {
+        if self.solo_throughput > 0.0 {
+            self.throughput() / self.solo_throughput
+        } else {
+            0.0
+        }
+    }
+}
+
+/// How a fleet answer was found.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetProvenance {
+    /// Fingerprint of the shared pool.
+    pub cluster: String,
+    pub fairness_floor: f64,
+    /// Carves enumerated.
+    pub partitions_considered: usize,
+    /// Carves discarded by the static device/memory filter.
+    pub partitions_pruned: usize,
+    /// Distinct (tenant, sub-pool) planning queries actually issued
+    /// (memoized within the search; cache hits still count).
+    pub plans_searched: usize,
+    /// Carves where every tenant was feasible and above the floor.
+    pub partitions_feasible: usize,
+}
+
+/// The fleet search's answer (see [`PlanningService::plan_fleet`]).
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Display name of the shared pool.
+    pub cluster_name: String,
+    /// Device-class display name per cluster group, for rendering the
+    /// carve (`["A40", "A100-80G"]`).
+    pub group_names: Vec<String>,
+    /// Per-tenant answers, in request order.
+    pub tenants: Vec<TenantReport>,
+    /// The chosen carve (rows parallel to `tenants`).
+    pub partition: FleetPartition,
+    /// Σ tenant throughput (samples/s) — the searched objective.
+    pub aggregate_throughput: f64,
+    pub provenance: FleetProvenance,
+}
+
+impl FleetReport {
+    /// Per-tenant [`PlanDiff`]s from `baseline`'s allocation to this one.
+    /// Tenants are matched **by name** (not position), so reports whose
+    /// requests listed tenants in different orders still pair correctly;
+    /// tenants absent from the baseline are skipped. The front-end of
+    /// `cornstarch diff fleet`.
+    pub fn diff_from(
+        &self,
+        baseline: &FleetReport,
+    ) -> Vec<(String, PlanDiff)> {
+        self.tenants
+            .iter()
+            .filter_map(|s| {
+                baseline
+                    .tenants
+                    .iter()
+                    .find(|b| b.name == s.name)
+                    .map(|b| {
+                        (
+                            s.name.clone(),
+                            PlanDiff::between(&b.report, &s.report),
+                        )
+                    })
+            })
+            .collect()
+    }
+
+    /// Human-readable rendering: the carve, each tenant's plan line, the
+    /// aggregate, and provenance.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let total: usize = self
+            .partition
+            .slices
+            .iter()
+            .map(|sl| sl.iter().sum::<usize>())
+            .sum();
+        let _ = writeln!(
+            s,
+            "fleet plan — {} tenants on {} ({} GPUs, fairness floor {:.2})",
+            self.tenants.len(),
+            self.cluster_name,
+            total,
+            self.provenance.fairness_floor
+        );
+        s.push_str("  carve:\n");
+        for t in &self.tenants {
+            let cells: Vec<String> = t
+                .slice
+                .iter()
+                .zip(&self.group_names)
+                .map(|(c, g)| format!("{c}x {g}"))
+                .collect();
+            let _ = writeln!(s, "    {:<18} {}", t.name, cells.join(" + "));
+        }
+        s.push_str("  tenants:\n");
+        for t in &self.tenants {
+            let _ = writeln!(
+                s,
+                "    {:<18} {} | iteration {:.1} ms | {:.2} input/s | \
+                 {:.2}x solo",
+                t.name,
+                t.report.winner().candidate.label(),
+                t.report.timeline.iteration_ms,
+                t.throughput(),
+                t.fairness()
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  aggregate: {:.2} input/s",
+            self.aggregate_throughput
+        );
+        let _ = writeln!(
+            s,
+            "  provenance: {} carves considered, {} pruned, {} sub-pool \
+             plans, {} feasible",
+            self.provenance.partitions_considered,
+            self.provenance.partitions_pruned,
+            self.provenance.plans_searched,
+            self.provenance.partitions_feasible
+        );
+        s
+    }
+}
+
+impl PlanningService {
+    /// Each tenant alone on the whole shared pool — the fairness
+    /// baselines. A tenant that cannot run even there makes the fleet
+    /// infeasible outright.
+    fn solo_reports(
+        &self,
+        req: &FleetRequest,
+    ) -> Result<Vec<PlanReport>, PlanError> {
+        req.tenants
+            .iter()
+            .map(|t| {
+                self.plan(
+                    &t.request.clone().cluster(req.cluster.clone()),
+                )
+                .map_err(|e| match e {
+                    PlanError::NoFeasiblePlan { .. } => {
+                        PlanError::InfeasibleFleet(format!(
+                            "tenant {:?} is infeasible even with the whole \
+                             pool to itself: {e}",
+                            t.name
+                        ))
+                    }
+                    other => other,
+                })
+            })
+            .collect()
+    }
+
+    /// Search the carve space: enumerate exact partitions, prune slices
+    /// that cannot host their tenant, plan every surviving sub-pool
+    /// (memoized by carve fingerprint), and keep the feasible carve with
+    /// the highest aggregate throughput that honors the fairness floor.
+    pub fn plan_fleet(
+        &self,
+        req: &FleetRequest,
+    ) -> Result<FleetReport, PlanError> {
+        req.validate()?;
+        let n_tenants = req.tenants.len();
+        // Saturating fold: the guard itself must not overflow on a pool
+        // whose carve count exceeds u128 (saturation lands far above the
+        // cap, which is all the comparison needs).
+        let carve_count: u128 = req
+            .cluster
+            .groups
+            .iter()
+            .map(|g| compositions_count(g.count, n_tenants))
+            .fold(1u128, |acc, c| acc.saturating_mul(c));
+        if carve_count > MAX_PARTITIONS as u128 {
+            return Err(PlanError::InvalidRequest(format!(
+                "{carve_count} carves of {} across {n_tenants} tenants \
+                 exceed the exhaustive-search cap of {MAX_PARTITIONS}; \
+                 reduce the tenant count or split the pool",
+                req.cluster.name
+            )));
+        }
+        let solo = self.solo_reports(req)?;
+        let min_bytes: Vec<u64> = req
+            .tenants
+            .iter()
+            .map(|t| min_weight_bytes(&t.request.mllm))
+            .collect();
+
+        let mut memo: HashMap<(usize, String), Option<PlanReport>> =
+            HashMap::new();
+        let mut plans_searched = 0usize;
+        let mut pruned = 0usize;
+        let mut feasible = 0usize;
+        let mut best: Option<(f64, FleetPartition, Vec<PlanReport>)> = None;
+        let partitions = enumerate_partitions(&req.cluster, n_tenants);
+        let considered = partitions.len();
+        'carves: for part in partitions {
+            // Static pruning, the carve-level analogue of the tuner's
+            // per-group capacity/memory filters: an empty slice, or one
+            // whose total memory cannot hold the tenant's weights, dies
+            // before any search.
+            for t in 0..n_tenants {
+                if part.tenant_devices(t) == 0
+                    || slice_mem_bytes(&part, &req.cluster, t) < min_bytes[t]
+                {
+                    pruned += 1;
+                    continue 'carves;
+                }
+            }
+            let mut reports: Vec<PlanReport> =
+                Vec::with_capacity(n_tenants);
+            let mut ok = true;
+            for (t, tenant) in req.tenants.iter().enumerate() {
+                let sub = part
+                    .subpool(&req.cluster, t, &tenant.name)
+                    .expect("pruning kept only non-empty slices");
+                let key = (t, sub.fingerprint());
+                let cached = match memo.get(&key) {
+                    Some(r) => r.clone(),
+                    None => {
+                        let r = match self
+                            .plan(&tenant.request.clone().cluster(sub))
+                        {
+                            Ok(rep) => Some(rep),
+                            Err(PlanError::NoFeasiblePlan { .. }) => None,
+                            Err(e) => return Err(e),
+                        };
+                        plans_searched += 1;
+                        memo.insert(key, r.clone());
+                        r
+                    }
+                };
+                match cached {
+                    Some(rep) => reports.push(rep),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            if reports.iter().zip(&solo).any(|(r, s)| {
+                r.timeline.throughput
+                    < req.fairness_floor * s.timeline.throughput
+            }) {
+                continue;
+            }
+            feasible += 1;
+            let agg: f64 =
+                reports.iter().map(|r| r.timeline.throughput).sum();
+            if best.as_ref().is_none_or(|(b, _, _)| agg > *b + 1e-12) {
+                best = Some((agg, part, reports));
+            }
+        }
+        let Some((_, partition, reports)) = best else {
+            return Err(PlanError::InfeasibleFleet(format!(
+                "no carve of {} hosts all {n_tenants} tenants within the \
+                 {:.2} fairness floor ({considered} considered, {pruned} \
+                 pruned)",
+                req.cluster.name, req.fairness_floor
+            )));
+        };
+        Ok(self.assemble(
+            req,
+            partition,
+            reports,
+            &solo,
+            FleetProvenance {
+                cluster: req.cluster.fingerprint(),
+                fairness_floor: req.fairness_floor,
+                partitions_considered: considered,
+                partitions_pruned: pruned,
+                plans_searched,
+                partitions_feasible: feasible,
+            },
+        ))
+    }
+
+    /// Evaluate one *fixed* carve (e.g. the naive even split) through the
+    /// same per-tenant planning path, without enforcing the fairness
+    /// floor — the floor constrains the *search*; a handed-in carve is
+    /// reported as-is so baselines can be compared and diffed.
+    pub fn plan_fleet_partition(
+        &self,
+        req: &FleetRequest,
+        partition: &FleetPartition,
+    ) -> Result<FleetReport, PlanError> {
+        req.validate()?;
+        if partition.slices.len() != req.tenants.len()
+            || !partition.respects(&req.cluster)
+        {
+            return Err(PlanError::InvalidRequest(format!(
+                "partition {} does not fit {} tenants on {}",
+                partition.label(),
+                req.tenants.len(),
+                req.cluster.name
+            )));
+        }
+        let solo = self.solo_reports(req)?;
+        let mut plans_searched = 0usize;
+        let mut reports = Vec::with_capacity(req.tenants.len());
+        for (t, tenant) in req.tenants.iter().enumerate() {
+            let Some(sub) =
+                partition.subpool(&req.cluster, t, &tenant.name)
+            else {
+                return Err(PlanError::InfeasibleFleet(format!(
+                    "tenant {:?} holds no devices under carve {}",
+                    tenant.name,
+                    partition.label()
+                )));
+            };
+            plans_searched += 1;
+            let rep = self
+                .plan(&tenant.request.clone().cluster(sub))
+                .map_err(|e| match e {
+                    PlanError::NoFeasiblePlan { .. } => {
+                        PlanError::InfeasibleFleet(format!(
+                            "tenant {:?} is infeasible on its slice under \
+                             carve {}: {e}",
+                            tenant.name,
+                            partition.label()
+                        ))
+                    }
+                    other => other,
+                })?;
+            reports.push(rep);
+        }
+        let provenance = FleetProvenance {
+            cluster: req.cluster.fingerprint(),
+            // a handed-in carve is evaluated floor-free; recording the
+            // request's floor here would render a below-floor baseline
+            // as a violated constraint rather than one never applied
+            fairness_floor: 0.0,
+            partitions_considered: 1,
+            partitions_pruned: 0,
+            plans_searched,
+            partitions_feasible: 1,
+        };
+        Ok(self.assemble(req, partition.clone(), reports, &solo, provenance))
+    }
+
+    fn assemble(
+        &self,
+        req: &FleetRequest,
+        partition: FleetPartition,
+        reports: Vec<PlanReport>,
+        solo: &[PlanReport],
+        provenance: FleetProvenance,
+    ) -> FleetReport {
+        let aggregate_throughput =
+            reports.iter().map(|r| r.timeline.throughput).sum();
+        let tenants = req
+            .tenants
+            .iter()
+            .zip(reports)
+            .zip(solo)
+            .enumerate()
+            .map(|(t, ((tenant, report), s))| TenantReport {
+                name: tenant.name.clone(),
+                slice: partition.slices[t].clone(),
+                solo_throughput: s.timeline.throughput,
+                report,
+            })
+            .collect();
+        FleetReport {
+            cluster_name: req.cluster.name.clone(),
+            group_names: req
+                .cluster
+                .groups
+                .iter()
+                .map(|g| g.device.name.clone())
+                .collect(),
+            tenants,
+            partition,
+            aggregate_throughput,
+            provenance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Size;
+
+    fn small_request(spec: MllmSpec) -> PlanRequest {
+        PlanRequest::default_for(spec).threads(2)
+    }
+
+    fn tiny_fleet(devices: usize) -> FleetRequest {
+        FleetRequest::new(
+            ClusterSpec::a40_default().with_devices(devices),
+        )
+        .tenant("a", small_request(MllmSpec::vlm(Size::S, Size::S)))
+        .tenant("b", small_request(MllmSpec::alm(Size::S, Size::S)))
+        .fairness_floor(0.1)
+    }
+
+    #[test]
+    fn compositions_cover_exactly_and_count_matches() {
+        let c = compositions(4, 2);
+        assert_eq!(c.len(), 5);
+        assert_eq!(compositions_count(4, 2), 5);
+        for v in &c {
+            assert_eq!(v.len(), 2);
+            assert_eq!(v.iter().sum::<usize>(), 4);
+        }
+        assert_eq!(compositions(3, 1), vec![vec![3]]);
+        assert_eq!(compositions_count(3, 1), 1);
+        assert_eq!(compositions(2, 3).len(), 6); // C(4, 2)
+        assert_eq!(compositions_count(2, 3), 6);
+    }
+
+    #[test]
+    fn partitions_assign_every_device_exactly_once() {
+        let cluster = ClusterSpec::a40_a100_demo();
+        let parts = enumerate_partitions(&cluster, 2);
+        assert_eq!(parts.len(), 25); // 5 splits of each 4-device group
+        for p in &parts {
+            assert!(p.respects(&cluster));
+            for (g, grp) in cluster.groups.iter().enumerate() {
+                let sum: usize = p.slices.iter().map(|s| s[g]).sum();
+                assert_eq!(sum, grp.count, "{}", p.label());
+            }
+        }
+        // all distinct
+        for (i, p) in parts.iter().enumerate() {
+            assert!(!parts[..i].contains(p));
+        }
+    }
+
+    #[test]
+    fn even_partition_is_the_naive_halving() {
+        let cluster = ClusterSpec::a40_a100_demo();
+        let p = FleetPartition::even(&cluster, 2);
+        assert_eq!(p.slices, vec![vec![2, 2], vec![2, 2]]);
+        assert!(p.respects(&cluster));
+        // remainders go to earlier tenants
+        let odd = ClusterSpec::a40_default().with_devices(5);
+        let p3 = FleetPartition::even(&odd, 3);
+        assert_eq!(p3.slices, vec![vec![2], vec![2], vec![1]]);
+        assert_eq!(p3.label(), "[2]+[2]+[1]");
+    }
+
+    #[test]
+    fn subpool_keeps_device_classes_and_drops_empty_groups() {
+        let cluster = ClusterSpec::a40_a100_demo();
+        let p = FleetPartition { slices: vec![vec![0, 4], vec![4, 0]] };
+        let sub = p.subpool(&cluster, 0, "llm-job").unwrap();
+        assert_eq!(sub.groups.len(), 1);
+        assert_eq!(sub.groups[0].device.name, "A100-80G");
+        assert_eq!(sub.groups[0].count, 4);
+        assert!(sub.validate().is_ok());
+        assert!(sub.name.contains("llm-job"));
+        let empty = FleetPartition { slices: vec![vec![0, 0]] };
+        assert!(empty.subpool(&cluster, 0, "x").is_none());
+        // two different carves of the same pool have different
+        // fingerprints — what keys the plan cache per carve
+        let q = FleetPartition { slices: vec![vec![1, 3], vec![3, 1]] };
+        assert_ne!(
+            sub.fingerprint(),
+            q.subpool(&cluster, 0, "llm-job").unwrap().fingerprint()
+        );
+    }
+
+    #[test]
+    fn fleet_request_validation_catches_nonsense() {
+        let cluster = ClusterSpec::a40_default().with_devices(4);
+        let empty = FleetRequest::new(cluster.clone());
+        assert!(matches!(
+            PlanningService::new().plan_fleet(&empty),
+            Err(PlanError::InvalidRequest(_))
+        ));
+        let dup = FleetRequest::new(cluster.clone())
+            .tenant("t", small_request(MllmSpec::vlm(Size::S, Size::S)))
+            .tenant("t", small_request(MllmSpec::alm(Size::S, Size::S)));
+        assert!(matches!(
+            PlanningService::new().plan_fleet(&dup),
+            Err(PlanError::InvalidRequest(_))
+        ));
+        let bad_floor = tiny_fleet(4).fairness_floor(1.5);
+        assert!(matches!(
+            PlanningService::new().plan_fleet(&bad_floor),
+            Err(PlanError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn tiny_pool_fleet_carves_and_aggregates() {
+        let req = tiny_fleet(4);
+        let service = PlanningService::new();
+        let report = service.plan_fleet(&req).unwrap();
+        assert_eq!(report.tenants.len(), 2);
+        assert!(report.partition.respects(&req.cluster));
+        // every device assigned, none double-assigned
+        let total: usize =
+            (0..2).map(|t| report.partition.tenant_devices(t)).sum();
+        assert_eq!(total, 4);
+        for t in &report.tenants {
+            assert!(t.throughput() > 0.0);
+            assert!(t.report.fits_budget());
+            assert!(
+                t.fairness() >= req.fairness_floor,
+                "{} below floor",
+                t.name
+            );
+            // the plan fits inside the granted slice
+            assert!(t.report.plan.n_gpus <= t.slice.iter().sum::<usize>());
+        }
+        let agg: f64 =
+            report.tenants.iter().map(TenantReport::throughput).sum();
+        assert!((agg - report.aggregate_throughput).abs() < 1e-9);
+        assert!(report.provenance.partitions_feasible >= 1);
+        assert_eq!(report.provenance.partitions_considered, 5);
+        let text = report.render();
+        assert!(text.contains("carve:"), "{text}");
+        assert!(text.contains("aggregate:"), "{text}");
+    }
+
+    #[test]
+    fn searched_carve_never_loses_to_the_even_split() {
+        let req = tiny_fleet(4);
+        let service = PlanningService::new();
+        let searched = service.plan_fleet(&req).unwrap();
+        let naive = service
+            .plan_fleet_partition(&req, &req.naive_partition())
+            .unwrap();
+        assert!(
+            searched.aggregate_throughput
+                >= naive.aggregate_throughput - 1e-9,
+            "searched {:.3} vs naive {:.3}",
+            searched.aggregate_throughput,
+            naive.aggregate_throughput
+        );
+        // diffing the two allocations is stable and structured
+        let diffs = searched.diff_from(&naive);
+        assert_eq!(diffs.len(), 2);
+        let again = searched.diff_from(&naive);
+        for ((name, d), (name2, d2)) in diffs.iter().zip(&again) {
+            assert!(!name.is_empty());
+            assert_eq!(name, name2);
+            assert_eq!(d.render(), d2.render());
+        }
+    }
+
+    #[test]
+    fn one_device_pool_cannot_host_two_tenants() {
+        let req = tiny_fleet(1);
+        match PlanningService::new().plan_fleet(&req) {
+            Err(PlanError::InfeasibleFleet(m)) => {
+                assert!(m.contains("carve") || m.contains("tenant"), "{m}")
+            }
+            other => panic!("expected InfeasibleFleet, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partition_mode_rejects_misshapen_carves() {
+        let req = tiny_fleet(4);
+        let service = PlanningService::new();
+        // wrong tenant arity
+        let bad = FleetPartition { slices: vec![vec![4]] };
+        assert!(matches!(
+            service.plan_fleet_partition(&req, &bad),
+            Err(PlanError::InvalidRequest(_))
+        ));
+        // over-assigned group
+        let over = FleetPartition { slices: vec![vec![3], vec![3]] };
+        assert!(matches!(
+            service.plan_fleet_partition(&req, &over),
+            Err(PlanError::InvalidRequest(_))
+        ));
+        // empty slice surfaces as an infeasible fleet, not a panic
+        let empty = FleetPartition { slices: vec![vec![4], vec![0]] };
+        assert!(matches!(
+            service.plan_fleet_partition(&req, &empty),
+            Err(PlanError::InfeasibleFleet(_))
+        ));
+    }
+
+    #[test]
+    fn carve_explosion_is_a_typed_error() {
+        // 3 groups of 40 devices and 6 tenants: astronomically many
+        // carves — must be rejected, not enumerated.
+        let mut cluster = ClusterSpec::a40_a100_demo();
+        cluster.groups[0].count = 40;
+        cluster.groups[1].count = 40;
+        cluster.groups.push(cluster.groups[0].clone());
+        let mut req = FleetRequest::new(cluster);
+        for i in 0..6 {
+            req = req.tenant(
+                &format!("t{i}"),
+                small_request(MllmSpec::vlm(Size::S, Size::S)),
+            );
+        }
+        match PlanningService::new().plan_fleet(&req) {
+            Err(PlanError::InvalidRequest(m)) => {
+                assert!(m.contains("carves"), "{m}")
+            }
+            other => panic!("expected InvalidRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cache_file_applies_regardless_of_builder_order() {
+        use crate::api::CachePolicy;
+        let cluster = ClusterSpec::a40_default().with_devices(4);
+        let before = FleetRequest::new(cluster.clone())
+            .cache_file("/tmp/fleet.json")
+            .tenant("a", small_request(MllmSpec::vlm(Size::S, Size::S)));
+        let after = FleetRequest::new(cluster)
+            .tenant("a", small_request(MllmSpec::vlm(Size::S, Size::S)))
+            .cache_file("/tmp/fleet.json");
+        for req in [&before, &after] {
+            assert_eq!(
+                req.tenants[0].request.cache,
+                CachePolicy::File("/tmp/fleet.json".to_string())
+            );
+        }
+    }
+
+    #[test]
+    fn min_weight_bytes_is_the_bf16_model_footprint() {
+        let spec = MllmSpec::vlm(Size::S, Size::S);
+        let mut want = spec.llm.params();
+        want += spec.vision.as_ref().unwrap().params();
+        assert_eq!(min_weight_bytes(&spec), want * 2);
+        // pruning threshold: one tiny slice cannot host an L-sized LLM
+        let big = MllmSpec::vlm(Size::L, Size::L);
+        assert!(min_weight_bytes(&big) > 40_000_000_000);
+    }
+}

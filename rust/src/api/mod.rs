@@ -10,12 +10,14 @@
 //!   cache policy                 cluster's bandwidth           provenance
 //! ```
 //!
-//! The CLI subcommands (`cornstarch plan/tune/memory`),
+//! The CLI subcommands (`cornstarch plan/tune/memory/fleet/diff`),
 //! [`crate::coordinator::tuned_plan`], the `reproduce` tuner experiment,
 //! and `examples/autotune.rs` are all thin wrappers over this module —
-//! the facade is the stable surface new scenarios (multi-tenant serving,
-//! plan diffing) build on; heterogeneous device pools are the first one
-//! built on it.
+//! the facade is the stable surface new scenarios build on.
+//! Heterogeneous device pools were the first one; [`fleet`]
+//! (multi-tenant carving of one shared pool, [`FleetRequest`] →
+//! [`PlanningService::plan_fleet`] → [`FleetReport`]) and [`diff`]
+//! ([`PlanDiff`], what a re-plan changed) are built the same way.
 //!
 //! [`ClusterSpec`] is the single source of hardware truth: one or more
 //! named device groups, each with per-device memory capacity, a
@@ -27,11 +29,18 @@
 //! boundary are the typed [`PlanError`], not `anyhow` strings.
 
 pub mod cluster;
+pub mod diff;
 pub mod error;
+pub mod fleet;
 pub mod report;
 
 pub use cluster::{ClusterSpec, DeviceClass, DeviceGroup};
+pub use diff::{FieldDelta, PlanDiff, StageDelta};
 pub use error::PlanError;
+pub use fleet::{
+    enumerate_partitions, FleetPartition, FleetProvenance, FleetReport,
+    FleetRequest, Tenant, TenantReport,
+};
 pub use report::{PlanReport, Provenance, StageVerdict, TimelineSummary};
 
 use crate::model::MllmSpec;
@@ -190,7 +199,27 @@ impl PlanRequest {
 
 /// The planning service. Stateless today (state lives in the request's
 /// cache policy); the type exists so the surface can grow configuration
-/// without breaking callers.
+/// without breaking callers. Single-job queries go through
+/// [`PlanningService::plan`]; multi-tenant queries over one shared pool
+/// go through [`PlanningService::plan_fleet`] (see [`fleet`]).
+///
+/// # Example
+///
+/// Build a [`PlanRequest`], plan it, read the [`PlanReport`]:
+///
+/// ```
+/// use cornstarch::api::{PlanRequest, PlanningService};
+/// use cornstarch::model::{MllmSpec, Size};
+///
+/// let request = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+///     .devices(8)
+///     .threads(2);
+/// let report = PlanningService::new().plan(&request)?;
+/// assert!(report.fits_budget());
+/// assert_eq!(report.winner().n_gpus, report.timeline.n_gpus);
+/// println!("{}", report.render());
+/// # Ok::<(), cornstarch::api::PlanError>(())
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct PlanningService;
 

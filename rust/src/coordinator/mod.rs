@@ -15,7 +15,7 @@ use crate::train::{
 };
 use crate::util::json::Json;
 
-pub use experiments::{E2eRow, FrozenRow, MaskType};
+pub use experiments::{E2eRow, FleetRow, FrozenRow, MaskType};
 
 /// The tuner hook — a thin wrapper over the planning facade
 /// ([`crate::api::PlanningService`]): resolve the fastest known plan for
@@ -149,12 +149,16 @@ pub fn reproduce(which: &str) -> Result<String> {
         known = true;
         push(experiments::hetero_pools().0);
     }
+    if all || which == "fleet" {
+        known = true;
+        push(experiments::fleet_planning().0);
+    }
     if !known {
         bail!(
             "unknown experiment {which:?}; known: all, table1, fig2, fig3b, \
              fig9, fig10, fig13, fig14, fig15, table2, table3, table4, \
              table7, table8, table10, table11, fig12, auto, tuner, memory, \
-             hetero"
+             hetero, fleet"
         );
     }
     Ok(out)

@@ -38,8 +38,10 @@
 //!   [`api::PlanningService::plan`] → [`api::PlanReport`], with
 //!   [`api::ClusterSpec`] as the single source of hardware truth
 //!   (per-device memory, flops/MFU, interconnect bandwidth) and typed
-//!   [`api::PlanError`]s at the boundary. The CLI, the coordinator hook,
-//!   and the examples are thin wrappers over it.
+//!   [`api::PlanError`]s at the boundary; [`api::fleet`] carves one
+//!   shared pool across N tenants and [`api::PlanDiff`] renders what a
+//!   re-plan changed. The CLI, the coordinator hook, and the examples
+//!   are thin wrappers over it.
 //! * [`coordinator`] — leader entrypoint gluing plan → build → run, and
 //!   the `reproduce` harness that regenerates every evaluation table and
 //!   figure of the paper.

@@ -6,6 +6,8 @@
 //! cornstarch plan <mllm> [opts]         print a parallelization plan
 //! cornstarch tune <mllm> [opts]         autotune the fastest plan
 //! cornstarch memory <mllm> [opts]       per-stage memory model verdict
+//! cornstarch fleet [opts]               carve one pool across N tenants
+//! cornstarch diff [fleet|<mllm>] [opts] what a re-plan changed
 //! cornstarch auto <mllm> [--groups N]   Algorithm 1 frontier
 //! cornstarch attn-check [--artifact A]  PJRT cross-check of the CP model
 //! cornstarch list-models                artifacts available to `train`
@@ -14,15 +16,20 @@
 //! `<mllm>` names follow §6.1: `VLM-M`, `ALM-L`, `VALM-SM`…, optionally
 //! prefixed with an LLM size (`llm=S`).
 //!
-//! `plan`, `tune`, and `memory` accept `--cluster <file>` (a JSON
-//! `ClusterSpec`: per-device memory, flops/MFU, interconnect bandwidth —
-//! see `examples/clusters/`); without it they plan for the paper's
-//! 16 × A40 testbed. All three are thin wrappers over the planning
-//! facade (`cornstarch::api`).
+//! `plan`, `tune`, `memory`, `fleet`, and `diff` accept `--cluster
+//! <file>` (a JSON `ClusterSpec`: per-device memory, flops/MFU,
+//! interconnect bandwidth — see `examples/clusters/README.md`); without
+//! it the single-job commands plan for the paper's 16 × A40 testbed and
+//! the fleet commands carve the mixed 4×A40 + 4×A100-80G demo pool. All
+//! of them are thin wrappers over the planning facade
+//! (`cornstarch::api`).
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use cornstarch::api::{ClusterSpec, PlanRequest, PlanningService};
+use cornstarch::api::{
+    ClusterSpec, FleetRequest, PlanDiff, PlanReport, PlanRequest,
+    PlanningService,
+};
 use cornstarch::coordinator::{self, TrainOpts};
 use cornstarch::memory;
 use cornstarch::modality::{
@@ -276,6 +283,108 @@ fn run(args: &[String]) -> Result<()> {
             );
             print_memory(&plan, budget);
         }
+        "fleet" => {
+            let cluster = parse_cluster(rest)?
+                .unwrap_or_else(ClusterSpec::a40_a100_demo);
+            let freq = parse_fleet(rest, cluster)?;
+            let service = PlanningService::new();
+            let report = service.plan_fleet(&freq)?;
+            print!("{}", report.render());
+            if has_flag(rest, "--vs-naive") {
+                let naive = service
+                    .plan_fleet_partition(&freq, &freq.naive_partition())?;
+                println!(
+                    "naive static split {}: {:.2} input/s -> searched \
+                     carve {}: {:.2} input/s ({:+.1}%)",
+                    naive.partition.label(),
+                    naive.aggregate_throughput,
+                    report.partition.label(),
+                    report.aggregate_throughput,
+                    (report.aggregate_throughput
+                        / naive.aggregate_throughput
+                        - 1.0)
+                        * 100.0
+                );
+            }
+        }
+        "diff" => {
+            let service = PlanningService::new();
+            let first = rest.first().map(|s| s.as_str()).unwrap_or("fleet");
+            anyhow::ensure!(
+                !first.starts_with("--"),
+                "`cornstarch diff` wants `fleet` or an MLLM name before \
+                 the flags (e.g. `diff fleet --cluster F` or `diff VLM-M \
+                 --vs-devices 8`)"
+            );
+            if first == "fleet" {
+                // Fleet mode: what the searched carve changed vs the
+                // naive static split, tenant by tenant.
+                let cluster = parse_cluster(rest)?
+                    .unwrap_or_else(ClusterSpec::a40_a100_demo);
+                let freq = parse_fleet(rest, cluster)?;
+                let searched = service.plan_fleet(&freq)?;
+                let naive = service
+                    .plan_fleet_partition(&freq, &freq.naive_partition())?;
+                println!(
+                    "fleet diff on {} — naive static split {} -> searched \
+                     carve {}",
+                    freq.cluster.name,
+                    naive.partition.label(),
+                    searched.partition.label()
+                );
+                for (name, d) in searched.diff_from(&naive) {
+                    println!("tenant {name}:");
+                    print!("{}", d.render());
+                }
+                println!(
+                    "aggregate: {:.2} -> {:.2} input/s ({:+.1}%)",
+                    naive.aggregate_throughput,
+                    searched.aggregate_throughput,
+                    (searched.aggregate_throughput
+                        / naive.aggregate_throughput
+                        - 1.0)
+                        * 100.0
+                );
+            } else {
+                // Single-model mode: the same workload tuned on two
+                // clusters (or two pool sizes).
+                let spec = parse_mllm(first, rest)?;
+                let base_cluster = parse_cluster(rest)?
+                    .unwrap_or_else(ClusterSpec::a40_default);
+                let vs_cluster = match flag(rest, "--vs-cluster") {
+                    Some(p) => ClusterSpec::load(std::path::Path::new(&p))
+                        .with_context(|| {
+                            format!("loading cluster spec {p}")
+                        })?,
+                    None => base_cluster.clone(),
+                };
+                let build = |cluster: ClusterSpec,
+                             devices: Option<usize>|
+                 -> Result<PlanReport> {
+                    let mut req = PlanRequest::default_for(spec.clone())
+                        .cluster(cluster);
+                    if let Some(d) = devices {
+                        req = req.devices(d);
+                    }
+                    if let Some(b) = flag_num(rest, "--budget")? {
+                        req = req.budget(b);
+                    }
+                    if let Some(t) = flag_num(rest, "--threads")? {
+                        req = req.threads(t);
+                    }
+                    if let Some(c) = flag(rest, "--cache") {
+                        req = req.cache_file(&c);
+                    }
+                    Ok(service.plan(&req)?)
+                };
+                let before =
+                    build(base_cluster, flag_num(rest, "--devices")?)?;
+                let after =
+                    build(vs_cluster, flag_num(rest, "--vs-devices")?)?;
+                println!("{} — before -> after", spec.name());
+                print!("{}", PlanDiff::between(&before, &after).render());
+            }
+        }
         "auto" => {
             let spec = parse_mllm(
                 rest.first().map(|s| s.as_str()).unwrap_or("VALM-MM"),
@@ -381,6 +490,11 @@ fn print_help() {
          [--sweep-policies] [--top N]   (top-N frontier from one search)\n  \
          memory <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
          [--cluster F] [--microbatches N] [--budget-gb G]\n  \
+         fleet [--cluster F] [--tenants VLM-L,ALM-M] [--floor X] [--budget K]\n        \
+         [--cache P] [--threads N] [--vs-naive]   (multi-tenant pool carve)\n  \
+         diff fleet [--cluster F] [--tenants ...] [--floor X]   (carve vs naive split)\n  \
+         diff <MLLM> [--cluster F] [--vs-cluster F2] [--devices N] [--vs-devices M]\n        \
+         (mode word or model first, then flags; bare `diff` = `diff fleet`)\n  \
          auto <MLLM> [--groups N]\n  \
          attn-check [--artifact attn512] [--repeats N]\n  \
          list-models"
@@ -411,6 +525,67 @@ fn flag_num(args: &[String], name: &str) -> Result<Option<usize>> {
     flag(args, name)
         .map(|v| v.parse::<usize>().map_err(|_| anyhow!("{name} wants a number, got {v:?}")))
         .transpose()
+}
+
+fn flag_f64(args: &[String], name: &str) -> Result<Option<f64>> {
+    flag(args, name)
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| anyhow!("{name} wants a number, got {v:?}"))
+        })
+        .transpose()
+}
+
+/// Build a `FleetRequest` from `--tenants <MLLM,MLLM,…>` (default
+/// `VLM-L,ALM-M` — the motivating pair: a VLM-L finetune sharing the
+/// pool with a Whisper-encoder pretrain), `--floor`, and the usual
+/// planning flags applied to every tenant. Duplicate workload names get
+/// a `#i` suffix so tenant names stay unique. Without `--cache` the
+/// fleet uses a shared temp-dir cache file, so `--vs-naive`, `diff
+/// fleet`, and repeated runs reuse every sub-pool and solo plan instead
+/// of re-searching (entries are keyed by the carve's fingerprint).
+fn parse_fleet(rest: &[String], cluster: ClusterSpec) -> Result<FleetRequest> {
+    let list = flag(rest, "--tenants")
+        .unwrap_or_else(|| "VLM-L,ALM-M".to_string());
+    let floor = flag_f64(rest, "--floor")?.unwrap_or(0.25);
+    let cache = flag(rest, "--cache").unwrap_or_else(|| {
+        // per-user default path: a fixed temp-dir name would collide
+        // (and fail on permissions) between users sharing one machine
+        let user = std::env::var("USER")
+            .or_else(|_| std::env::var("USERNAME"))
+            .unwrap_or_else(|_| "default".to_string());
+        std::env::temp_dir()
+            .join(format!("cornstarch-fleet-cache-{user}.json"))
+            .to_string_lossy()
+            .into_owned()
+    });
+    let mut freq = FleetRequest::new(cluster)
+        .fairness_floor(floor)
+        .cache_file(&cache);
+    let mut names: Vec<String> = Vec::new();
+    for (i, raw) in list.split(',').enumerate() {
+        let mllm = raw.trim();
+        anyhow::ensure!(
+            !mllm.is_empty(),
+            "empty tenant in --tenants {list:?}"
+        );
+        let spec = parse_mllm(mllm, rest)?;
+        let name = if names.iter().any(|n| n.as_str() == mllm) {
+            format!("{mllm}#{i}")
+        } else {
+            mllm.to_string()
+        };
+        names.push(name.clone());
+        let mut preq = PlanRequest::default_for(spec);
+        if let Some(b) = flag_num(rest, "--budget")? {
+            preq = preq.budget(b);
+        }
+        if let Some(t) = flag_num(rest, "--threads")? {
+            preq = preq.threads(t);
+        }
+        freq = freq.tenant(&name, preq);
+    }
+    Ok(freq)
 }
 
 fn has_flag(args: &[String], name: &str) -> bool {

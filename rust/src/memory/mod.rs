@@ -42,21 +42,6 @@ use crate::modality::{ModalityModule, MultimodalModule, ParallelSpec};
 use crate::model::ModuleGeom;
 use crate::pipeline::StageGraph;
 
-/// The A40 testbed's usable per-GPU budget (Appendix D): 48 GB HBM minus
-/// the runtime/fragmentation reserve the paper plans against.
-///
-/// Deprecated: hardware truth now lives in [`crate::api::ClusterSpec`] —
-/// budgets come from the request's cluster
-/// (`ClusterSpec::a40_default().mem_budget_bytes()` reproduces this
-/// value). The re-export stays so out-of-tree callers get a warning, not
-/// a break.
-#[deprecated(
-    note = "use crate::api::ClusterSpec (e.g. \
-            ClusterSpec::a40_default().mem_budget_bytes()); the planning \
-            budget now comes from the request's cluster"
-)]
-pub const A40_BUDGET_BYTES: u64 = crate::api::cluster::A40_MEM_BYTES;
-
 /// Bytes → decimal gigabytes, for tables and error messages.
 pub fn gb(bytes: u64) -> f64 {
     bytes as f64 / 1e9

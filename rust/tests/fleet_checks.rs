@@ -1,0 +1,198 @@
+//! Acceptance and invariant tests for the fleet-planning layer and
+//! `PlanDiff`:
+//!
+//! * the ISSUE criterion — `reproduce fleet` shows the searched
+//!   two-tenant carve of the 4×A40 + 4×A100-80G pool strictly beating
+//!   the naive static halving on aggregate simulated throughput, and the
+//!   per-tenant diff between the two allocations is a stable non-empty
+//!   delta;
+//! * partition invariants — every enumerated carve respects per-group
+//!   GPU counts and assigns no device to two tenants;
+//! * the golden-file guarantee — `PlanDiff` of a plan against itself is
+//!   empty and renders exactly the committed fixture.
+
+use cornstarch::api::{
+    enumerate_partitions, ClusterSpec, FleetPartition, FleetRequest,
+    PlanDiff, PlanRequest, PlanningService,
+};
+use cornstarch::coordinator::experiments;
+use cornstarch::model::{MllmSpec, Size};
+
+/// The committed rendering of an empty diff — byte-for-byte.
+const EMPTY_DIFF_GOLDEN: &str = include_str!("golden/plan_diff_empty.txt");
+
+#[test]
+fn every_carve_respects_group_counts_and_never_double_assigns() {
+    for (cluster, tenants) in [
+        (ClusterSpec::a40_a100_demo(), 2usize),
+        (ClusterSpec::a40_a100_demo(), 3),
+        (ClusterSpec::a40_default().with_devices(6), 2),
+    ] {
+        let parts = enumerate_partitions(&cluster, tenants);
+        assert!(!parts.is_empty());
+        for p in &parts {
+            assert_eq!(p.slices.len(), tenants);
+            assert!(p.respects(&cluster), "{}", p.label());
+            for (g, grp) in cluster.groups.iter().enumerate() {
+                let assigned: usize =
+                    p.slices.iter().map(|s| s[g]).sum();
+                // every device handed out exactly once: the per-group sum
+                // matches the group's count, so none is double-assigned
+                // and none is silently dropped
+                assert_eq!(assigned, grp.count, "{}", p.label());
+            }
+        }
+        // no carve repeats
+        for (i, p) in parts.iter().enumerate() {
+            assert!(!parts[..i].contains(p), "duplicate carve {}", p.label());
+        }
+    }
+}
+
+#[test]
+fn subpools_of_a_carve_never_overlap() {
+    let cluster = ClusterSpec::a40_a100_demo();
+    for p in enumerate_partitions(&cluster, 2) {
+        let mut used = vec![0usize; cluster.groups.len()];
+        for (t, slice) in p.slices.iter().enumerate() {
+            if let Some(sub) = p.subpool(&cluster, t, "t") {
+                assert!(sub.validate().is_ok(), "{}", p.label());
+                assert_eq!(
+                    sub.devices(),
+                    slice.iter().sum::<usize>(),
+                    "{}",
+                    p.label()
+                );
+            }
+            for (g, &c) in slice.iter().enumerate() {
+                used[g] += c;
+            }
+        }
+        for (g, grp) in cluster.groups.iter().enumerate() {
+            assert!(used[g] <= grp.count, "{}", p.label());
+        }
+    }
+}
+
+#[test]
+fn self_diff_is_empty_and_matches_the_golden_file() {
+    let req = PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+        .devices(8)
+        .threads(2);
+    let report = PlanningService::new().plan(&req).unwrap();
+    let diff = PlanDiff::between(&report, &report);
+    assert!(diff.is_empty(), "a plan diffed against itself must be empty");
+    assert_eq!(diff.render(), EMPTY_DIFF_GOLDEN);
+}
+
+/// The ISSUE's acceptance criterion, end to end. One call produces both
+/// allocations (searched + naive) and the rendered per-tenant delta.
+#[test]
+fn reproduce_fleet_beats_naive_halving_and_diffs_the_allocations() {
+    let (table, row) = experiments::fleet_planning();
+
+    // strictly better aggregate simulated throughput than the halving
+    assert!(
+        row.searched_tput > row.naive_tput,
+        "searched carve {:.3} input/s must strictly beat the naive \
+         halving {:.3} input/s",
+        row.searched_tput,
+        row.naive_tput
+    );
+
+    // the chosen carve is an exact, non-overlapping split of 4 + 4
+    assert_eq!(row.partition.len(), 2);
+    let cluster = ClusterSpec::a40_a100_demo();
+    for (g, grp) in cluster.groups.iter().enumerate() {
+        let assigned: usize =
+            row.partition.iter().map(|s| s[g]).sum();
+        assert_eq!(assigned, grp.count, "partition {:?}", row.partition);
+    }
+    // ...and it is NOT the halving (otherwise the strict win above is
+    // impossible anyway; this names the failure more directly)
+    assert_ne!(
+        row.partition,
+        vec![vec![2, 2], vec![2, 2]],
+        "searched carve collapsed to the naive halving"
+    );
+
+    // the diff between the two fleet allocations is non-empty and stable
+    assert!(!row.diff.is_empty());
+    assert!(row.diff.contains("tenant "), "{}", row.diff);
+    assert!(row.diff.contains("->"), "{}", row.diff);
+    // at least one tenant's cluster fingerprint changed: the carve moved
+    // devices between tenants
+    assert!(row.diff.contains("cluster:"), "{}", row.diff);
+    // deterministic: a second run renders the identical delta
+    let (_, row2) = experiments::fleet_planning();
+    assert_eq!(row.diff, row2.diff);
+    assert_eq!(row.partition, row2.partition);
+
+    // the rendered table names both allocations
+    let text = table.render();
+    assert!(text.contains("naive aggregate"), "{text}");
+    assert!(text.contains("searched aggregate"), "{text}");
+    assert!(text.contains("improvement"), "{text}");
+}
+
+#[test]
+fn fleet_reports_honor_their_own_fairness_floor() {
+    // Small homogeneous pool so the test stays cheap: the searched carve
+    // must keep every tenant at or above the floor it was asked for.
+    let req = FleetRequest::new(ClusterSpec::a40_default().with_devices(4))
+        .tenant(
+            "a",
+            PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S))
+                .threads(2),
+        )
+        .tenant(
+            "b",
+            PlanRequest::default_for(MllmSpec::alm(Size::S, Size::S))
+                .threads(2),
+        )
+        .fairness_floor(0.2);
+    let report = PlanningService::new().plan_fleet(&req).unwrap();
+    for t in &report.tenants {
+        assert!(
+            t.fairness() >= 0.2,
+            "tenant {} at {:.2}x solo breaks the 0.2 floor",
+            t.name,
+            t.fairness()
+        );
+        assert!(t.report.fits_budget(), "tenant {} over budget", t.name);
+    }
+    // the naive split of the same request evaluates without the floor
+    let naive = PlanningService::new()
+        .plan_fleet_partition(&req, &req.naive_partition())
+        .unwrap();
+    assert!(
+        report.aggregate_throughput >= naive.aggregate_throughput - 1e-9
+    );
+    // both carves assign all 4 devices
+    for rep in [&report, &naive] {
+        let total: usize = rep
+            .partition
+            .slices
+            .iter()
+            .map(|s| s.iter().sum::<usize>())
+            .sum();
+        assert_eq!(total, 4);
+    }
+}
+
+#[test]
+fn naive_partition_is_the_even_split_of_every_group() {
+    let freq = FleetRequest::new(ClusterSpec::a40_a100_demo())
+        .tenant(
+            "a",
+            PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S)),
+        )
+        .tenant(
+            "b",
+            PlanRequest::default_for(MllmSpec::alm(Size::S, Size::S)),
+        );
+    assert_eq!(
+        freq.naive_partition(),
+        FleetPartition { slices: vec![vec![2, 2], vec![2, 2]] }
+    );
+}
