@@ -3,11 +3,13 @@
 //! and worker counts, plus the cache's O(1) repeated-query path.
 
 use cornstarch::api::ClusterSpec;
-use cornstarch::bench::Bencher;
+use cornstarch::bench::{median, Bencher};
 use cornstarch::model::{MllmSpec, Size};
+use cornstarch::telemetry::{self, key as tkey};
 use cornstarch::tuner::{
     enumerate, search, tune, Objective, SearchSpace, TuneRequest,
 };
+use cornstarch::util::json::Json;
 
 fn main() {
     let d = ClusterSpec::a40_default();
@@ -20,9 +22,9 @@ fn main() {
     ] {
         let mm = cornstarch::modality::MultimodalModule::from_spec(&spec);
         let n = enumerate(&mm, &SearchSpace::paper_default(devices)).len();
-        println!("{name} on {devices} GPUs: {n} candidates");
+        telemetry::info(&format!("{name} on {devices} GPUs: {n} candidates"));
     }
-    println!();
+    telemetry::info("");
 
     let mut b = Bencher::new("autotuner search wall time");
     for (name, spec, devices) in [
@@ -66,6 +68,60 @@ fn main() {
         std::hint::black_box(out);
     });
     let _ = std::fs::remove_file(&path);
+
+    // ---- the ROADMAP perf point: VLM-L on the mixed 4×A40 + 4×A100
+    // pool, counted by the telemetry registry (candidates/s, prune
+    // rate, end-to-end tune wall time) and written to BENCH_tuner.json
+    // so the trajectory is diffable across PRs.
+    let mut hetero = TuneRequest::for_cluster(
+        MllmSpec::vlm(Size::M, Size::L),
+        ClusterSpec::a40_a100_demo(),
+    );
+    hetero.threads = 4;
+    let before = telemetry::snapshot();
+    let mut walls = Vec::new();
+    b.bench("VLM-L @ a40x4-a100x4 t=4", || {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(tune(&hetero).expect("hetero tune"));
+        walls.push(t0.elapsed().as_secs_f64() * 1e3);
+    });
+    let fired = telemetry::snapshot().delta_since(&before);
+    let runs = fired.get(tkey::CACHE_MISS).max(1);
+    let enumerated = fired.get(tkey::CANDIDATES_ENUMERATED) / runs;
+    let pruned = (fired.get(tkey::PRUNED_LOWER_BOUND)
+        + fired.get(tkey::PRUNED_MEMORY)
+        + fired.get(tkey::PRUNED_GROUP_CAPACITY))
+        / runs;
+    let evaluated = fired.get(tkey::EVALUATED) / runs;
+    let wall_ms = median(&walls);
+    let candidates_per_s = enumerated as f64 / (wall_ms / 1e3);
+    let prune_rate = pruned as f64 / enumerated.max(1) as f64;
+    telemetry::report(&format!(
+        "VLM-L @ a40x4-a100x4: {enumerated} candidates ({evaluated} \
+         simulated, {pruned} pruned = {:.0}% prune rate), {:.0} \
+         candidates/s, {wall_ms:.1} ms/tune",
+        prune_rate * 100.0,
+        candidates_per_s
+    ));
+    let bench_json = Json::obj(vec![
+        ("bench", Json::Str("tuner".to_string())),
+        ("case", Json::Str("VLM-L @ a40x4-a100x4".to_string())),
+        ("candidates_enumerated", Json::Int(enumerated as i64)),
+        ("candidates_evaluated", Json::Int(evaluated as i64)),
+        ("candidates_pruned", Json::Int(pruned as i64)),
+        ("prune_rate", Json::Num(prune_rate)),
+        ("candidates_per_s", Json::Num(candidates_per_s)),
+        ("tune_wall_ms", Json::Num(wall_ms)),
+        ("threads", Json::Int(4)),
+    ]);
+    let out = std::env::var("CORNSTARCH_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_tuner.json".to_string());
+    match std::fs::write(&out, bench_json.render()) {
+        Ok(()) => telemetry::info(&format!("wrote {out}")),
+        Err(e) => telemetry::error(&format!(
+            "error: writing {out}: {e}"
+        )),
+    }
 
     b.report();
 }

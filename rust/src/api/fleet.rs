@@ -43,11 +43,12 @@ use std::fmt::Write as _;
 
 use crate::memory;
 use crate::model::MllmSpec;
+use crate::telemetry::{self, key as tkey};
 
 use super::cluster::{ClusterSpec, DeviceGroup};
 use super::diff::PlanDiff;
 use super::error::PlanError;
-use super::report::PlanReport;
+use super::report::{PlanReport, SearchStats};
 use super::{PlanRequest, PlanningService};
 
 /// Carve-enumeration guard: a pool whose exhaustive carve count exceeds
@@ -396,6 +397,10 @@ pub struct FleetProvenance {
     pub plans_searched: usize,
     /// Carves where every tenant was feasible and above the floor.
     pub partitions_feasible: usize,
+    /// The aggregate search counters the whole fleet call fired
+    /// (summed over every per-tenant sub-pool search), sourced from
+    /// the [`crate::telemetry`] registry. Deterministic.
+    pub stats: SearchStats,
 }
 
 /// The fleet search's answer (see [`PlanningService::plan_fleet`]).
@@ -497,6 +502,11 @@ impl FleetReport {
             self.provenance.plans_searched,
             self.provenance.partitions_feasible
         );
+        let _ = writeln!(
+            s,
+            "  search stats: {}",
+            self.provenance.stats.render_line()
+        );
         s
     }
 }
@@ -539,6 +549,16 @@ impl PlanningService {
     ) -> Result<FleetReport, PlanError> {
         req.validate()?;
         let n_tenants = req.tenants.len();
+        let _fleet_span = telemetry::span(&format!(
+            "plan_fleet {} tenants={n_tenants}",
+            req.cluster.name
+        ));
+        // Provenance is re-sourced from the telemetry registry: the
+        // loop below bumps the named counters at exactly the sites the
+        // bespoke locals used to live, and the delta over this call
+        // becomes the report's FleetProvenance — same numbers, one
+        // accounting door.
+        let counters_before = telemetry::snapshot();
         // Saturating fold: the guard itself must not overflow on a pool
         // whose carve count exceeds u128 (saturation lands far above the
         // cap, which is all the comparison needs).
@@ -565,12 +585,9 @@ impl PlanningService {
 
         let mut memo: HashMap<(usize, String), Option<PlanReport>> =
             HashMap::new();
-        let mut plans_searched = 0usize;
-        let mut pruned = 0usize;
-        let mut feasible = 0usize;
         let mut best: Option<(f64, FleetPartition, Vec<PlanReport>)> = None;
         let partitions = enumerate_partitions(&req.cluster, n_tenants);
-        let considered = partitions.len();
+        telemetry::count(tkey::CARVES_CONSIDERED, partitions.len() as u64);
         'carves: for part in partitions {
             // Static pruning, the carve-level analogue of the tuner's
             // per-group capacity/memory filters: an empty slice, or one
@@ -580,7 +597,7 @@ impl PlanningService {
                 if part.tenant_devices(t) == 0
                     || slice_mem_bytes(&part, &req.cluster, t) < min_bytes[t]
                 {
-                    pruned += 1;
+                    telemetry::incr(tkey::CARVES_PRUNED);
                     continue 'carves;
                 }
             }
@@ -602,7 +619,7 @@ impl PlanningService {
                             Err(PlanError::NoFeasiblePlan { .. }) => None,
                             Err(e) => return Err(e),
                         };
-                        plans_searched += 1;
+                        telemetry::incr(tkey::PLANS_SEARCHED);
                         memo.insert(key, r.clone());
                         r
                     }
@@ -624,19 +641,22 @@ impl PlanningService {
             }) {
                 continue;
             }
-            feasible += 1;
+            telemetry::incr(tkey::CARVES_FEASIBLE);
             let agg: f64 =
                 reports.iter().map(|r| r.timeline.throughput).sum();
             if best.as_ref().is_none_or(|(b, _, _)| agg > *b + 1e-12) {
                 best = Some((agg, part, reports));
             }
         }
+        let fired = telemetry::snapshot().delta_since(&counters_before);
         let Some((_, partition, reports)) = best else {
             return Err(PlanError::InfeasibleFleet(format!(
                 "no carve of {} hosts all {n_tenants} tenants within the \
-                 {:.2} fairness floor ({considered} considered, {pruned} \
-                 pruned)",
-                req.cluster.name, req.fairness_floor
+                 {:.2} fairness floor ({} considered, {} pruned)",
+                req.cluster.name,
+                req.fairness_floor,
+                fired.get(tkey::CARVES_CONSIDERED),
+                fired.get(tkey::CARVES_PRUNED),
             )));
         };
         Ok(self.assemble(
@@ -647,10 +667,13 @@ impl PlanningService {
             FleetProvenance {
                 cluster: req.cluster.fingerprint(),
                 fairness_floor: req.fairness_floor,
-                partitions_considered: considered,
-                partitions_pruned: pruned,
-                plans_searched,
-                partitions_feasible: feasible,
+                partitions_considered: fired.get(tkey::CARVES_CONSIDERED)
+                    as usize,
+                partitions_pruned: fired.get(tkey::CARVES_PRUNED) as usize,
+                plans_searched: fired.get(tkey::PLANS_SEARCHED) as usize,
+                partitions_feasible: fired.get(tkey::CARVES_FEASIBLE)
+                    as usize,
+                stats: SearchStats::from_delta(&fired),
             },
         ))
     }
@@ -675,8 +698,12 @@ impl PlanningService {
                 req.cluster.name
             )));
         }
+        let _carve_span = telemetry::span(&format!(
+            "plan_fleet_partition {}",
+            partition.label()
+        ));
+        let counters_before = telemetry::snapshot();
         let solo = self.solo_reports(req)?;
-        let mut plans_searched = 0usize;
         let mut reports = Vec::with_capacity(req.tenants.len());
         for (t, tenant) in req.tenants.iter().enumerate() {
             let Some(sub) =
@@ -688,7 +715,7 @@ impl PlanningService {
                     partition.label()
                 )));
             };
-            plans_searched += 1;
+            telemetry::incr(tkey::PLANS_SEARCHED);
             let rep = self
                 .plan(&tenant.request.clone().cluster(sub))
                 .map_err(|e| match e {
@@ -704,6 +731,7 @@ impl PlanningService {
                 })?;
             reports.push(rep);
         }
+        let fired = telemetry::snapshot().delta_since(&counters_before);
         let provenance = FleetProvenance {
             cluster: req.cluster.fingerprint(),
             // a handed-in carve is evaluated floor-free; recording the
@@ -712,8 +740,9 @@ impl PlanningService {
             fairness_floor: 0.0,
             partitions_considered: 1,
             partitions_pruned: 0,
-            plans_searched,
+            plans_searched: fired.get(tkey::PLANS_SEARCHED) as usize,
             partitions_feasible: 1,
+            stats: SearchStats::from_delta(&fired),
         };
         Ok(self.assemble(req, partition.clone(), reports, &solo, provenance))
     }

@@ -41,9 +41,12 @@ pub use fleet::{
     enumerate_partitions, FleetPartition, FleetProvenance, FleetReport,
     FleetRequest, Tenant, TenantReport,
 };
-pub use report::{PlanReport, Provenance, StageVerdict, TimelineSummary};
+pub use report::{
+    PlanReport, Provenance, SearchStats, StageVerdict, TimelineSummary,
+};
 
 use crate::model::MllmSpec;
+use crate::telemetry;
 use crate::tuner::{
     self, Objective, SearchSpace, TuneError, TuneRequest,
 };
@@ -231,6 +234,9 @@ impl PlanningService {
     /// Answer a [`PlanRequest`]: validate, consult the cache, search if
     /// needed, and package the winner as a [`PlanReport`].
     pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
+        let _root_span =
+            telemetry::span(&format!("plan {}", req.mllm.name()));
+        let counters_before = telemetry::snapshot();
         if let Some(why) = &req.invalid {
             return Err(PlanError::InvalidRequest(why.clone()));
         }
@@ -254,6 +260,18 @@ impl PlanningService {
         let mut frontier = outcome.entry.frontier;
         frontier.truncate(req.top.max(1));
         let m = plan.simulate();
+        if telemetry::trace_enabled() {
+            // The winner's simulated schedule as a virtual-time trace
+            // lane (one per device) — per-stage fwd/bwd slices.
+            crate::sim::emit_timeline(
+                &m.sim,
+                &crate::pipeline::onef1b_tasks(
+                    &plan.graph,
+                    plan.num_microbatches,
+                ),
+                &plan.stage_names,
+            );
+        }
         // Every stage's verdict is held to the budget of the device
         // group it actually lands on — on a heterogeneous pool an
         // encoder stage on a 40 GB card and an LLM stage on an 80 GB
@@ -283,6 +301,12 @@ impl PlanningService {
             n_gpus: plan.n_gpus,
             peak_device_bytes: plan.peak_device_bytes(),
         };
+        // Re-source the deterministic counters this call fired from the
+        // telemetry registry: the delta over the call is the report's
+        // SearchStats block (all zeros except `cache_hits` on a hit).
+        let stats = SearchStats::from_delta(
+            &telemetry::snapshot().delta_since(&counters_before),
+        );
         let provenance = Provenance {
             planner: "tuner",
             cache_hit: outcome.cache_hit,
@@ -291,6 +315,7 @@ impl PlanningService {
             total_candidates: outcome.total_candidates,
             evaluated: outcome.evaluated,
             pruned: outcome.pruned,
+            stats,
         };
         Ok(PlanReport {
             plan,

@@ -6,7 +6,9 @@
 
 use crate::memory;
 use crate::modality::Plan;
+use crate::telemetry::{key as tkey, Snapshot};
 use crate::tuner::PlanSummary;
+use crate::util::json::Json;
 
 /// One stage's memory verdict against the budget of the device it lands
 /// on — on a heterogeneous pool different stages answer to different
@@ -50,6 +52,94 @@ pub struct TimelineSummary {
     pub peak_device_bytes: u64,
 }
 
+/// Deterministic search counters for one planning call, sourced from
+/// the [`crate::telemetry`] registry (the delta the call produced).
+/// Same request, same numbers — timings live in the trace, never here.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Raw configurations the space enumeration produced.
+    pub candidates_enumerated: u64,
+    /// Candidates cut by the cost-model lower bound / budget.
+    pub pruned_lower_bound: u64,
+    /// Candidates cut by the per-device memory model.
+    pub pruned_memory: u64,
+    /// Hetero placements cut for oversubscribing a device group.
+    pub pruned_group_capacity: u64,
+    /// Candidates simulated.
+    pub evaluated: u64,
+    /// Plan-cache lookups answered without a search.
+    pub cache_hits: u64,
+    /// Plan-cache lookups that fell through to a search.
+    pub cache_misses: u64,
+    /// Plan-cache persists to disk.
+    pub cache_writes: u64,
+}
+
+impl SearchStats {
+    /// Read the stats out of a scoped counter delta
+    /// ([`Snapshot::delta_since`]).
+    pub fn from_delta(d: &Snapshot) -> SearchStats {
+        SearchStats {
+            candidates_enumerated: d.get(tkey::CANDIDATES_ENUMERATED),
+            pruned_lower_bound: d.get(tkey::PRUNED_LOWER_BOUND),
+            pruned_memory: d.get(tkey::PRUNED_MEMORY),
+            pruned_group_capacity: d.get(tkey::PRUNED_GROUP_CAPACITY),
+            evaluated: d.get(tkey::EVALUATED),
+            cache_hits: d.get(tkey::CACHE_HIT),
+            cache_misses: d.get(tkey::CACHE_MISS),
+            cache_writes: d.get(tkey::CACHE_WRITE),
+        }
+    }
+
+    /// Every prune reason summed.
+    pub fn pruned_total(&self) -> u64 {
+        self.pruned_lower_bound
+            + self.pruned_memory
+            + self.pruned_group_capacity
+    }
+
+    /// The one-line rendering embedded in report provenance.
+    pub fn render_line(&self) -> String {
+        format!(
+            "{} enumerated | {} pruned ({} bound, {} memory, {} \
+             capacity) | {} simulated | cache {} hit / {} miss / {} \
+             write",
+            self.candidates_enumerated,
+            self.pruned_total(),
+            self.pruned_lower_bound,
+            self.pruned_memory,
+            self.pruned_group_capacity,
+            self.evaluated,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_writes,
+        )
+    }
+
+    /// JSON object with one integer field per counter.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "candidates_enumerated",
+                Json::Int(self.candidates_enumerated as i64),
+            ),
+            (
+                "pruned_lower_bound",
+                Json::Int(self.pruned_lower_bound as i64),
+            ),
+            ("pruned_memory", Json::Int(self.pruned_memory as i64)),
+            (
+                "pruned_group_capacity",
+                Json::Int(self.pruned_group_capacity as i64),
+            ),
+            ("evaluated", Json::Int(self.evaluated as i64)),
+            ("cache_hits", Json::Int(self.cache_hits as i64)),
+            ("cache_misses", Json::Int(self.cache_misses as i64)),
+            ("cache_writes", Json::Int(self.cache_writes as i64)),
+        ])
+    }
+}
+
 /// Where the answer came from.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Provenance {
@@ -66,6 +156,9 @@ pub struct Provenance {
     pub total_candidates: usize,
     pub evaluated: usize,
     pub pruned: usize,
+    /// The telemetry counters this call fired (deterministic; the
+    /// search-side numbers above are cross-checked against it).
+    pub stats: SearchStats,
 }
 
 /// The planning service's answer (see [`super::PlanningService::plan`]).
@@ -109,6 +202,11 @@ impl PlanReport {
             self.provenance.total_candidates,
             self.provenance.evaluated,
             self.provenance.pruned,
+        );
+        let _ = writeln!(
+            s,
+            "  search stats: {}",
+            self.provenance.stats.render_line()
         );
         let _ = writeln!(s, "  cluster: {}", self.provenance.cluster);
         let _ = writeln!(

@@ -74,7 +74,7 @@ impl Bencher {
                 format!("{:.3}", p(0.90)),
             ]);
         }
-        println!("{}", t.render());
+        crate::telemetry::report(t.render().trim_end());
     }
 }
 

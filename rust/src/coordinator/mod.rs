@@ -204,10 +204,10 @@ pub fn train(opts: &TrainOpts) -> Result<Vec<f32>> {
     let mut wall = Vec::with_capacity(opts.steps);
 
     let mut run = |stats: crate::train::StepStats| {
-        println!(
+        crate::telemetry::info(&format!(
             "step {:>4}  loss {:.4}  ({:.0} ms, {} mb)",
             stats.step, stats.loss, stats.wall_ms, stats.microbatches
-        );
+        ));
         losses.push(stats.loss);
         wall.push(stats.wall_ms);
     };
@@ -215,10 +215,11 @@ pub fn train(opts: &TrainOpts) -> Result<Vec<f32>> {
     if opts.pipelined {
         let mut tr =
             PipelineTrainer::new(&manifest, &opts.model, opts.policy, opts.lr)?;
-        println!(
-            "pipeline executor: {} stages (modality-parallel encoders + LLM chain)",
+        crate::telemetry::info(&format!(
+            "pipeline executor: {} stages (modality-parallel encoders + \
+             LLM chain)",
             tr.n_stages()
-        );
+        ));
         for step in 0..opts.steps {
             let batch: Vec<_> = (0..opts.microbatches)
                 .map(|i| ds.sample((step * opts.microbatches + i) as u64))
@@ -247,7 +248,7 @@ pub fn train(opts: &TrainOpts) -> Result<Vec<f32>> {
             ("wall_ms", Json::arr_f64(&wall)),
         ]);
         std::fs::write(path, j.render())?;
-        println!("wrote {path}");
+        crate::telemetry::info(&format!("wrote {path}"));
     }
     Ok(losses)
 }

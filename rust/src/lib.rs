@@ -45,6 +45,10 @@
 //! * [`coordinator`] — leader entrypoint gluing plan → build → run, and
 //!   the `reproduce` harness that regenerates every evaluation table and
 //!   figure of the paper.
+//! * [`telemetry`] — zero-dependency observability: per-thread counters
+//!   with deterministic snapshots, RAII wall-clock spans exported as
+//!   Chrome trace-event JSON (`--trace`), and the one leveled-logging
+//!   door (`--quiet` / `-v`) every progress print goes through.
 
 pub mod api;
 pub mod util;
@@ -61,3 +65,4 @@ pub mod runtime;
 pub mod train;
 pub mod coordinator;
 pub mod bench;
+pub mod telemetry;

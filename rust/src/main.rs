@@ -5,6 +5,7 @@
 //! cornstarch train [opts]               train a model over the artifacts
 //! cornstarch plan <mllm> [opts]         print a parallelization plan
 //! cornstarch tune <mllm> [opts]         autotune the fastest plan
+//! cornstarch stats <mllm> [opts]        deterministic search counters
 //! cornstarch memory <mllm> [opts]       per-stage memory model verdict
 //! cornstarch fleet [opts]               carve one pool across N tenants
 //! cornstarch diff [fleet|<mllm>] [opts] what a re-plan changed
@@ -12,6 +13,12 @@
 //! cornstarch attn-check [--artifact A]  PJRT cross-check of the CP model
 //! cornstarch list-models                artifacts available to `train`
 //! ```
+//!
+//! Global flags (any command): `--trace <file>` exports spans as Chrome
+//! trace-event JSON (Perfetto / `chrome://tracing`); `--quiet`/`-q`
+//! suppresses progress lines (report output stays on stdout); `-v`
+//! adds per-wave search and cache-IO detail. Every progress print goes
+//! through the one [`cornstarch::telemetry::log`] door.
 //!
 //! `<mllm>` names follow §6.1: `VLM-M`, `ALM-L`, `VALM-SM`…, optionally
 //! prefixed with an LLM size (`llm=S`).
@@ -37,15 +44,64 @@ use cornstarch::modality::{
 };
 use cornstarch::model::{MllmSpec, Size};
 use cornstarch::runtime::Manifest;
+use cornstarch::telemetry::{self, Verbosity};
 use cornstarch::train::FrozenPolicy;
 use cornstarch::tuner::{FrozenSetting, Objective};
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = run(&args) {
-        eprintln!("error: {e:#}");
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // Global flags are stripped before dispatch so every command's
+    // positional parsing (`rest.first()` is the MLLM name) is unaffected.
+    let had_trace = has_flag(&args, "--trace");
+    let trace_path = take_flag_value(&mut args, "--trace");
+    if had_trace && trace_path.is_none() {
+        telemetry::error("error: --trace wants an output file path");
+        std::process::exit(2);
+    }
+    if take_flag(&mut args, "-v") || take_flag(&mut args, "--verbose") {
+        telemetry::set_verbosity(Verbosity::Verbose);
+    }
+    if take_flag(&mut args, "--quiet") || take_flag(&mut args, "-q") {
+        telemetry::set_verbosity(Verbosity::Quiet);
+    }
+    if trace_path.is_some() {
+        telemetry::enable_trace();
+    }
+    let outcome = run(&args);
+    if let Some(path) = &trace_path {
+        match telemetry::write_trace(path) {
+            Ok(()) => telemetry::info(&format!(
+                "wrote {} trace events to {path} (load in Perfetto or \
+                 chrome://tracing)",
+                telemetry::trace_len()
+            )),
+            Err(e) => telemetry::error(&format!(
+                "error: writing trace {path}: {e}"
+            )),
+        }
+    }
+    if let Err(e) = outcome {
+        telemetry::error(&format!("error: {e:#}"));
         std::process::exit(1);
     }
+}
+
+/// Remove every occurrence of a bare global flag; `true` if it appeared.
+fn take_flag(args: &mut Vec<String>, name: &str) -> bool {
+    let before = args.len();
+    args.retain(|a| a != name);
+    args.len() != before
+}
+
+/// Remove the first `name <value>` pair and return the value.
+fn take_flag_value(args: &mut Vec<String>, name: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == name)?;
+    if i + 1 >= args.len() {
+        return None;
+    }
+    let value = args.remove(i + 1);
+    args.remove(i);
+    Some(value)
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -57,14 +113,17 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "reproduce" => {
             let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
-            print!("{}", coordinator::reproduce(which)?);
+            telemetry::report(coordinator::reproduce(which)?.trim_end());
         }
         "train" => {
             let opts = parse_train(rest)?;
             let losses = coordinator::train(&opts)?;
             let first = losses.first().copied().unwrap_or(f32::NAN);
             let last = losses.last().copied().unwrap_or(f32::NAN);
-            println!("loss: {first:.4} -> {last:.4} over {} steps", losses.len());
+            telemetry::report(&format!(
+                "loss: {first:.4} -> {last:.4} over {} steps",
+                losses.len()
+            ));
         }
         "plan" => {
             let spec = parse_mllm(rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"), rest)?;
@@ -85,7 +144,7 @@ fn run(args: &[String]) -> Result<()> {
                     req = req.cache_file(&c);
                 }
                 let report = PlanningService::new().plan(&req)?;
-                println!(
+                telemetry::report(&format!(
                     "{} / tuned on {} GPUs ({})",
                     spec.name(),
                     req.cluster.devices(),
@@ -94,8 +153,11 @@ fn run(args: &[String]) -> Result<()> {
                     } else {
                         "searched"
                     }
-                );
-                println!("  {}", report.winner().candidate.label());
+                ));
+                telemetry::report(&format!(
+                    "  {}",
+                    report.winner().candidate.label()
+                ));
                 print_plan(&report.plan);
                 return Ok(());
             }
@@ -123,7 +185,11 @@ fn run(args: &[String]) -> Result<()> {
             );
             let plan =
                 planner::plan(strategy, &mm, &ps, cluster.device_model());
-            println!("{} / {}", spec.name(), strategy.name());
+            telemetry::report(&format!(
+                "{} / {}",
+                spec.name(),
+                strategy.name()
+            ));
             print_plan(&plan);
         }
         "tune" => {
@@ -174,15 +240,15 @@ fn run(args: &[String]) -> Result<()> {
             let report = PlanningService::new().plan(&req)?;
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             let e = report.winner();
-            println!(
+            telemetry::report(&format!(
                 "{} on {} ({} GPUs) — objective {}",
                 spec.name(),
                 req.cluster.name,
                 req.cluster.devices(),
                 req.objective.key()
-            );
+            ));
             for g in &req.cluster.groups {
-                println!(
+                telemetry::info(&format!(
                     "  group {}×{}: {:.0} GB/device, {:.1} TF peak × {} \
                      MFU, {} GB/s link",
                     g.count,
@@ -191,25 +257,29 @@ fn run(args: &[String]) -> Result<()> {
                     g.device.peak_flops / 1e12,
                     g.device.mfu,
                     g.link_gbps
-                );
+                ));
             }
             if report.provenance.cache_hit {
-                println!(
+                telemetry::info(&format!(
                     "  cache hit ({}) — no search",
                     flag(rest, "--cache").as_deref().unwrap_or("in-memory")
-                );
+                ));
             } else {
-                println!(
+                telemetry::info(&format!(
                     "  searched {} candidates: {} simulated, {} pruned \
                      by lower bound ({:.0} ms wall)",
                     report.provenance.total_candidates,
                     report.provenance.evaluated,
                     report.provenance.pruned,
                     wall_ms
-                );
+                ));
             }
-            println!("  best: {}", e.candidate.label());
-            println!(
+            telemetry::debug(&format!(
+                "  search stats: {}",
+                report.provenance.stats.render_line()
+            ));
+            telemetry::report(&format!("  best: {}", e.candidate.label()));
+            telemetry::report(&format!(
                 "  iteration {:.1} ms | {:.3} input/s/GPU | {} GPUs | \
                  peak {:.1} GB/GPU | cp dist: {}",
                 e.iteration_ms,
@@ -217,15 +287,15 @@ fn run(args: &[String]) -> Result<()> {
                 e.n_gpus,
                 memory::gb(e.peak_mem_bytes),
                 e.cp_algorithm
-            );
+            ));
             if top > 1 {
-                println!(
+                telemetry::report(&format!(
                     "  frontier (top {}):",
                     top.min(report.frontier.len())
-                );
+                ));
                 for (i, p) in report.frontier.iter().take(top).enumerate()
                 {
-                    println!(
+                    telemetry::report(&format!(
                         "    #{}: {:.1} ms | {:.3} in/s/GPU | {} GPUs | \
                          peak {:.1} GB | {}",
                         i + 1,
@@ -234,10 +304,78 @@ fn run(args: &[String]) -> Result<()> {
                         p.n_gpus,
                         memory::gb(p.peak_mem_bytes),
                         p.candidate.label()
-                    );
+                    ));
                 }
             }
             print_plan(&report.plan);
+        }
+        "stats" => {
+            // Deterministic search counters for one `plan()` call: the
+            // `SearchStats` provenance block plus the raw counter delta
+            // the call fired. `--json` prints the stats object alone,
+            // machine-readable (pair with `--quiet` for clean stdout).
+            let spec = parse_mllm(
+                rest.first().map(|s| s.as_str()).unwrap_or("VLM-M"),
+                rest,
+            )?;
+            let cluster =
+                parse_cluster(rest)?.unwrap_or_else(ClusterSpec::a40_default);
+            let mut req =
+                PlanRequest::default_for(spec.clone()).cluster(cluster);
+            if let Some(d) = flag_num(rest, "--devices")? {
+                req = req.devices(d);
+            }
+            if let Some(b) = flag_num(rest, "--budget")? {
+                req = req.budget(b);
+            }
+            if let Some(t) = flag_num(rest, "--threads")? {
+                req = req.threads(t);
+            }
+            if let Some(c) = flag(rest, "--cache") {
+                req = req.cache_file(&c);
+            }
+            let before = telemetry::snapshot();
+            let t0 = std::time::Instant::now();
+            let report = PlanningService::new().plan(&req)?;
+            let wall_s = t0.elapsed().as_secs_f64();
+            let delta = telemetry::snapshot().delta_since(&before);
+            let stats = report.provenance.stats;
+            if has_flag(rest, "--json") {
+                telemetry::report(&stats.to_json().render());
+                return Ok(());
+            }
+            telemetry::report(&format!(
+                "{} on {} ({} GPUs) — {}",
+                spec.name(),
+                req.cluster.name,
+                req.cluster.devices(),
+                if report.provenance.cache_hit {
+                    "cache hit"
+                } else {
+                    "searched"
+                }
+            ));
+            telemetry::report(&format!("  {}", stats.render_line()));
+            if !delta.is_empty() {
+                telemetry::report("  counters:");
+                for line in delta.render().lines() {
+                    telemetry::report(&format!("  {line}"));
+                }
+            }
+            if !report.provenance.cache_hit && wall_s > 0.0 {
+                // wall-clock rates are machine-dependent: info, not report
+                telemetry::info(&format!(
+                    "  rate: {:.0} candidates/s enumerated, {:.0} sims/s \
+                     ({:.0} ms wall)",
+                    stats.candidates_enumerated as f64 / wall_s,
+                    stats.evaluated as f64 / wall_s,
+                    wall_s * 1e3
+                ));
+            }
+            telemetry::report(&format!(
+                "  best: {}",
+                report.winner().candidate.label()
+            ));
         }
         "memory" => {
             let spec = parse_mllm(
@@ -275,12 +413,12 @@ fn run(args: &[String]) -> Result<()> {
                 microbatches,
                 cluster.device_model(),
             );
-            println!(
+            telemetry::report(&format!(
                 "{} / {} — {} microbatches",
                 spec.name(),
                 strategy.name(),
                 microbatches
-            );
+            ));
             print_memory(&plan, budget);
         }
         "fleet" => {
@@ -289,11 +427,11 @@ fn run(args: &[String]) -> Result<()> {
             let freq = parse_fleet(rest, cluster)?;
             let service = PlanningService::new();
             let report = service.plan_fleet(&freq)?;
-            print!("{}", report.render());
+            telemetry::report(report.render().trim_end());
             if has_flag(rest, "--vs-naive") {
                 let naive = service
                     .plan_fleet_partition(&freq, &freq.naive_partition())?;
-                println!(
+                telemetry::report(&format!(
                     "naive static split {}: {:.2} input/s -> searched \
                      carve {}: {:.2} input/s ({:+.1}%)",
                     naive.partition.label(),
@@ -304,7 +442,7 @@ fn run(args: &[String]) -> Result<()> {
                         / naive.aggregate_throughput
                         - 1.0)
                         * 100.0
-                );
+                ));
             }
         }
         "diff" => {
@@ -325,18 +463,18 @@ fn run(args: &[String]) -> Result<()> {
                 let searched = service.plan_fleet(&freq)?;
                 let naive = service
                     .plan_fleet_partition(&freq, &freq.naive_partition())?;
-                println!(
+                telemetry::report(&format!(
                     "fleet diff on {} — naive static split {} -> searched \
                      carve {}",
                     freq.cluster.name,
                     naive.partition.label(),
                     searched.partition.label()
-                );
+                ));
                 for (name, d) in searched.diff_from(&naive) {
-                    println!("tenant {name}:");
-                    print!("{}", d.render());
+                    telemetry::report(&format!("tenant {name}:"));
+                    telemetry::report(d.render().trim_end());
                 }
-                println!(
+                telemetry::report(&format!(
                     "aggregate: {:.2} -> {:.2} input/s ({:+.1}%)",
                     naive.aggregate_throughput,
                     searched.aggregate_throughput,
@@ -344,7 +482,7 @@ fn run(args: &[String]) -> Result<()> {
                         / naive.aggregate_throughput
                         - 1.0)
                         * 100.0
-                );
+                ));
             } else {
                 // Single-model mode: the same workload tuned on two
                 // clusters (or two pool sizes).
@@ -381,8 +519,13 @@ fn run(args: &[String]) -> Result<()> {
                     build(base_cluster, flag_num(rest, "--devices")?)?;
                 let after =
                     build(vs_cluster, flag_num(rest, "--vs-devices")?)?;
-                println!("{} — before -> after", spec.name());
-                print!("{}", PlanDiff::between(&before, &after).render());
+                telemetry::report(&format!(
+                    "{} — before -> after",
+                    spec.name()
+                ));
+                telemetry::report(
+                    PlanDiff::between(&before, &after).render().trim_end(),
+                );
             }
         }
         "auto" => {
@@ -391,29 +534,31 @@ fn run(args: &[String]) -> Result<()> {
                 rest,
             )?;
             let groups = flag_num(rest, "--groups")?.unwrap_or(6);
-            print!(
-                "{}",
+            telemetry::report(
                 coordinator::experiments::auto_frontier(&spec, groups)
                     .render()
+                    .trim_end(),
             );
         }
         "attn-check" => {
             let artifact =
                 flag(rest, "--artifact").unwrap_or_else(|| "attn512".into());
             let repeats = flag_num(rest, "--repeats")?.unwrap_or(5);
-            print!("{}", coordinator::attn_crosscheck(&artifact, repeats)?);
+            telemetry::report(
+                coordinator::attn_crosscheck(&artifact, repeats)?.trim_end(),
+            );
         }
         "list-models" => {
             let m = Manifest::load(Manifest::default_root())
                 .context("run `make artifacts` first")?;
             for model in &m.models {
-                println!(
+                telemetry::report(&format!(
                     "{:<10} tokens={} components={} llm_stages={}",
                     model.name,
                     model.total_tokens,
                     model.components.len(),
                     model.n_llm_stages()
-                );
+                ));
             }
         }
         "help" | "--help" | "-h" => print_help(),
@@ -424,33 +569,35 @@ fn run(args: &[String]) -> Result<()> {
 
 fn print_plan(plan: &Plan) {
     let m = plan.simulate();
-    println!("  stages:");
+    telemetry::report("  stages:");
     for (name, node) in plan.stage_names.iter().zip(&plan.graph.nodes) {
-        println!(
+        telemetry::report(&format!(
             "    {:<16} dev {:<2} fwd {:>8.2} ms  bwd {:>8.2} ms",
             name, node.device, node.cost.fwd_ms, node.cost.bwd_ms
-        );
+        ));
     }
     let (lo, hi) = plan.stage_time_range();
-    println!("  stage fwd+bwd range: {lo:.1} ~ {hi:.1} ms");
-    println!(
+    telemetry::report(&format!(
+        "  stage fwd+bwd range: {lo:.1} ~ {hi:.1} ms"
+    ));
+    telemetry::report(&format!(
         "  iteration {:.1} ms | {:.2} input/s | {:.3} input/s/GPU ({} GPUs) | bubble {:.1}%",
         m.iteration_ms,
         m.throughput,
         m.throughput_per_gpu,
         plan.n_gpus,
         m.bubble_ratio * 100.0
-    );
-    println!(
+    ));
+    telemetry::report(&format!(
         "  peak memory {:.1} GB/GPU (modeled)",
         memory::gb(plan.peak_device_bytes())
-    );
+    ));
 }
 
 fn print_memory(plan: &Plan, budget_bytes: u64) {
-    println!("  stages (per-GPU bytes from the memory model):");
+    telemetry::report("  stages (per-GPU bytes from the memory model):");
     for (name, sm) in plan.stage_names.iter().zip(&plan.stage_mem) {
-        println!(
+        telemetry::report(&format!(
             "    {:<16} params {:>6.2} GB  grads {:>6.2} GB  optim \
              {:>6.2} GB  act {:>6.2} GB/mb x{:<2}  peak {:>6.2} GB",
             name,
@@ -460,23 +607,23 @@ fn print_memory(plan: &Plan, budget_bytes: u64) {
             memory::gb(sm.act_bytes_per_mb),
             sm.in_flight,
             memory::gb(sm.peak_bytes())
-        );
+        ));
     }
     let peak = plan.peak_device_bytes();
     match memory::check(plan, budget_bytes) {
-        Ok(()) => println!(
+        Ok(()) => telemetry::report(&format!(
             "  peak {:.2} GB/GPU — fits the {:.0} GB budget \
              ({:.1} GB headroom)",
             memory::gb(peak),
             memory::gb(budget_bytes),
             memory::gb(budget_bytes - peak)
-        ),
-        Err(e) => println!("  OOM: {e}"),
+        )),
+        Err(e) => telemetry::report(&format!("  OOM: {e}")),
     }
 }
 
 fn print_help() {
-    println!(
+    telemetry::report(
         "cornstarch — multimodality-aware distributed MLLM training \
          (paper reproduction)\n\n\
          commands:\n  \
@@ -488,6 +635,8 @@ fn print_help() {
          tune <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
          [--objective makespan|tput-per-gpu] [--policy paper|all|frozen]\n        \
          [--sweep-policies] [--top N]   (top-N frontier from one search)\n  \
+         stats <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
+         [--json]   (deterministic search counters for one plan() call)\n  \
          memory <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
          [--cluster F] [--microbatches N] [--budget-gb G]\n  \
          fleet [--cluster F] [--tenants VLM-L,ALM-M] [--floor X] [--budget K]\n        \
@@ -497,7 +646,11 @@ fn print_help() {
          (mode word or model first, then flags; bare `diff` = `diff fleet`)\n  \
          auto <MLLM> [--groups N]\n  \
          attn-check [--artifact attn512] [--repeats N]\n  \
-         list-models"
+         list-models\n\n\
+         global flags (any command):\n  \
+         --trace <file>        export spans/counters as Chrome trace-event JSON\n  \
+         --quiet, -q           progress lines off (report output stays on stdout)\n  \
+         -v, --verbose         per-wave search + cache-IO detail",
     );
 }
 

@@ -182,6 +182,41 @@ pub fn simulate(tasks: &[TaskSpec]) -> SimResult {
     SimResult { makespan_ms: makespan, device_busy_ms: device_busy, trace }
 }
 
+/// Emit a simulated schedule into the telemetry trace sink as
+/// virtual-time slices: one Chrome-trace lane per simulated device, one
+/// `X` slice per executed fwd/bwd task (simulated ms mapped to trace
+/// µs). No-op while tracing is off; zero-duration tasks (skipped frozen
+/// backwards) are elided. `stage_names[t.stage]` labels the slice when
+/// available.
+pub fn emit_timeline(
+    result: &SimResult,
+    tasks: &[TaskSpec],
+    stage_names: &[String],
+) {
+    if !crate::telemetry::trace_enabled() {
+        return;
+    }
+    for (task, tr) in tasks.iter().zip(&result.trace) {
+        if task.dur_ms <= 0.0 {
+            continue;
+        }
+        let kind = match task.kind {
+            crate::pipeline::TaskKind::Fwd => "fwd",
+            crate::pipeline::TaskKind::Bwd => "bwd",
+        };
+        let stage = stage_names
+            .get(task.stage)
+            .map(String::as_str)
+            .unwrap_or("stage");
+        crate::telemetry::slice(
+            &format!("{kind} {stage} mb{}", task.microbatch),
+            task.device as u64,
+            (tr.start_ms * 1000.0) as u64,
+            ((tr.end_ms - tr.start_ms) * 1000.0) as u64,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

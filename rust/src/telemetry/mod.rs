@@ -1,0 +1,577 @@
+//! Zero-dependency observability for the planning stack: counters,
+//! RAII spans, Chrome-trace export, and leveled progress logging —
+//! hand-rolled in the repo's style (like [`crate::util::json`]), no
+//! external crates.
+//!
+//! Three primitives:
+//!
+//! * **Counters** — named monotonic `u64`s ([`count`] / [`incr`]).
+//!   The registry is process-wide in its namespace (any module may
+//!   bump any [`key`]), but storage is per planner thread so parallel
+//!   tests and concurrent tenants never bleed into each other; every
+//!   counter site in the stack runs on the thread that called
+//!   `plan()` / `tune()`. [`snapshot`] returns an ordered,
+//!   deterministic [`Snapshot`], and [`Snapshot::delta_since`] scopes
+//!   a region (one `plan()` call, one fleet carve) without resets, so
+//!   nested scopes compose. Counter values are part of the
+//!   determinism contract: identical inputs produce identical
+//!   snapshots, and goldens may pin them.
+//! * **Spans** — RAII wall-clock timers ([`span`]) that record Chrome
+//!   trace-event `X` slices (µs since process epoch, one lane per
+//!   thread) while tracing is on ([`enable_trace`]); otherwise they
+//!   are inert and cost one relaxed atomic load. [`instant`] marks
+//!   point events (best-so-far trajectory), [`slice`] records
+//!   *virtual-time* slices on a separate `pid` lane (the simulator's
+//!   per-stage fwd/bwd timeline). [`write_trace`] renders the sink as
+//!   a Chrome trace-event JSON array, loadable in Perfetto /
+//!   `chrome://tracing`. Timings are explicitly *not* deterministic
+//!   and never golden-held.
+//! * **Logging** — one door ([`log`]) for every progress print, with
+//!   [`Verbosity`] routing: [`Level::Report`] lines (rendered plans,
+//!   tables) always reach stdout, [`Level::Info`] unless `--quiet`,
+//!   [`Level::Debug`] only under `-v`, [`Level::Error`] to stderr.
+//!
+//! The contract throughout: telemetry is off-path. Enabling or
+//! disabling any of it never changes a planning result — winners stay
+//! byte-identical (held by `tests/telemetry_checks.rs`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// The well-known counter names. Call sites go through these consts so
+/// a typo is a compile error, and the stats renderer / goldens see one
+/// stable vocabulary.
+pub mod key {
+    /// Raw configurations produced by space enumeration, pre-pruning.
+    pub const CANDIDATES_ENUMERATED: &str = "candidates_enumerated";
+    /// Candidates cut by the cost-model lower bound or budget.
+    pub const PRUNED_LOWER_BOUND: &str = "pruned_lower_bound";
+    /// Candidates cut by the per-device memory model.
+    pub const PRUNED_MEMORY: &str = "pruned_memory";
+    /// Hetero assignments cut for oversubscribing a device group.
+    pub const PRUNED_GROUP_CAPACITY: &str = "pruned_group_capacity";
+    /// Candidates actually simulated.
+    pub const EVALUATED: &str = "evaluated";
+    /// Plan-cache lookups answered without a search.
+    pub const CACHE_HIT: &str = "cache_hit";
+    /// Plan-cache lookups that fell through to a search.
+    pub const CACHE_MISS: &str = "cache_miss";
+    /// Plan-cache entries persisted to disk.
+    pub const CACHE_WRITE: &str = "cache_write";
+    /// Fleet pool carves enumerated.
+    pub const CARVES_CONSIDERED: &str = "carves_considered";
+    /// Fleet carves dropped by the static (pre-search) prune.
+    pub const CARVES_PRUNED: &str = "carves_pruned";
+    /// Fleet carves where every tenant got a feasible, fair plan.
+    pub const CARVES_FEASIBLE: &str = "carves_feasible";
+    /// Per-tenant sub-pool searches launched (memo misses).
+    pub const PLANS_SEARCHED: &str = "plans_searched";
+}
+
+thread_local! {
+    static COUNTERS: RefCell<BTreeMap<&'static str, u64>> =
+        const { RefCell::new(BTreeMap::new()) };
+}
+
+/// Add `n` to the named counter on this planner thread.
+pub fn count(name: &'static str, n: u64) {
+    COUNTERS.with(|c| *c.borrow_mut().entry(name).or_insert(0) += n);
+}
+
+/// Increment the named counter by one.
+pub fn incr(name: &'static str) {
+    count(name, 1);
+}
+
+/// Zero every counter on this thread. Scoped accounting should prefer
+/// [`Snapshot::delta_since`], which composes under nesting; `reset` is
+/// for process entry points and tests.
+pub fn reset_counters() {
+    COUNTERS.with(|c| c.borrow_mut().clear());
+}
+
+/// An ordered, deterministic view of the counter registry: same
+/// inputs, same snapshot, byte for byte.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    counts: BTreeMap<String, u64>,
+}
+
+impl Snapshot {
+    /// The counter's value, zero if it never fired.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// True when no counter fired.
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Iterate `(name, value)` in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counts.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
+    /// The counters this snapshot gained over `earlier` — the scoped
+    /// accounting primitive. Zero deltas are dropped, so the result
+    /// does not depend on what fired before the baseline was taken.
+    pub fn delta_since(&self, earlier: &Snapshot) -> Snapshot {
+        let counts = self
+            .counts
+            .iter()
+            .filter_map(|(k, &v)| {
+                let d = v.saturating_sub(earlier.get(k));
+                (d > 0).then(|| (k.clone(), d))
+            })
+            .collect();
+        Snapshot { counts }
+    }
+
+    /// JSON object `{name: value, ...}` in name order.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.counts
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Int(v as i64)))
+                .collect(),
+        )
+    }
+
+    /// Rebuild a snapshot from [`Snapshot::to_json`] output.
+    pub fn from_json(j: &Json) -> Option<Snapshot> {
+        let Json::Obj(pairs) = j else { return None };
+        let mut counts = BTreeMap::new();
+        for (k, v) in pairs {
+            counts.insert(k.clone(), v.as_i64()? as u64);
+        }
+        Some(Snapshot { counts })
+    }
+
+    /// Aligned `name  value` lines (indented two spaces), name order.
+    pub fn render(&self) -> String {
+        let width =
+            self.counts.keys().map(|k| k.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for (k, v) in &self.counts {
+            let _ = writeln!(out, "  {k:<width$}  {v}");
+        }
+        out
+    }
+}
+
+/// Snapshot this thread's counters.
+pub fn snapshot() -> Snapshot {
+    COUNTERS.with(|c| Snapshot {
+        counts: c
+            .borrow()
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), v))
+            .collect(),
+    })
+}
+
+// ---------------------------------------------------------------- logging
+
+/// How much progress output reaches the terminal. Report output (the
+/// rendered plan / table a command exists to produce) is exempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verbosity {
+    /// `--quiet`: report output only.
+    Quiet,
+    /// Default: progress lines plus report output.
+    Normal,
+    /// `-v`: adds debug detail (per-wave search progress, cache IO).
+    Verbose,
+}
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(1);
+
+/// Set the process-wide verbosity (the CLI does this once, from
+/// `--quiet` / `-v`).
+pub fn set_verbosity(v: Verbosity) {
+    VERBOSITY.store(v as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide verbosity.
+pub fn verbosity() -> Verbosity {
+    match VERBOSITY.load(Ordering::Relaxed) {
+        0 => Verbosity::Quiet,
+        2 => Verbosity::Verbose,
+        _ => Verbosity::Normal,
+    }
+}
+
+/// The kind of line being emitted; [`log`] maps it onto a stream and a
+/// verbosity gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Failures. Always emitted, to stderr.
+    Error,
+    /// The command's actual output (plans, tables, diffs). Always
+    /// emitted, to stdout — `--quiet` never eats the report.
+    Report,
+    /// Progress narration. Stdout, suppressed by `--quiet`.
+    Info,
+    /// Detail for humans watching a search. Stdout, only under `-v`.
+    Debug,
+}
+
+/// The one door every print in the stack goes through.
+pub fn log(level: Level, msg: &str) {
+    match level {
+        Level::Error => eprintln!("{msg}"),
+        Level::Report => println!("{msg}"),
+        Level::Info => {
+            if verbosity() >= Verbosity::Normal {
+                println!("{msg}");
+            }
+        }
+        Level::Debug => {
+            if verbosity() >= Verbosity::Verbose {
+                println!("{msg}");
+            }
+        }
+    }
+}
+
+/// [`log`] at [`Level::Error`].
+pub fn error(msg: &str) {
+    log(Level::Error, msg);
+}
+
+/// [`log`] at [`Level::Report`].
+pub fn report(msg: &str) {
+    log(Level::Report, msg);
+}
+
+/// [`log`] at [`Level::Info`].
+pub fn info(msg: &str) {
+    log(Level::Info, msg);
+}
+
+/// [`log`] at [`Level::Debug`].
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg);
+}
+
+// ------------------------------------------------------- spans and traces
+
+/// Real wall-clock lanes (planner threads).
+const PID_PLANNER: i64 = 1;
+/// Virtual-time lanes (the simulator's device timeline).
+const PID_SIM: i64 = 2;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    name: String,
+    /// Chrome trace phase: `X` (complete slice) or `i` (instant).
+    ph: char,
+    ts_us: u64,
+    dur_us: u64,
+    pid: i64,
+    tid: u64,
+    args: Vec<(String, Json)>,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("ph", Json::Str(self.ph.to_string())),
+            ("ts", Json::Int(self.ts_us as i64)),
+            ("pid", Json::Int(self.pid)),
+            ("tid", Json::Int(self.tid as i64)),
+        ];
+        if self.ph == 'X' {
+            pairs.push(("dur", Json::Int(self.dur_us as i64)));
+        }
+        if self.ph == 'i' {
+            // Instant scope: thread-local tick mark.
+            pairs.push(("s", Json::Str("t".to_string())));
+        }
+        if !self.args.is_empty() {
+            pairs.push((
+                "args",
+                Json::Obj(self.args.clone()),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+fn sink() -> &'static Mutex<Vec<TraceEvent>> {
+    static SINK: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// A stable per-thread lane id (1, 2, ... in thread-creation order).
+fn lane() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static LANE: Cell<u64> = const { Cell::new(0) };
+    }
+    LANE.with(|l| {
+        if l.get() == 0 {
+            l.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        l.get()
+    })
+}
+
+fn push(ev: TraceEvent) {
+    sink().lock().unwrap().push(ev);
+}
+
+/// Start collecting spans / events into the trace sink.
+pub fn enable_trace() {
+    epoch(); // pin the epoch before the first span
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+/// Stop collecting (already-recorded events stay in the sink).
+pub fn disable_trace() {
+    TRACE_ON.store(false, Ordering::Relaxed);
+}
+
+/// Is the trace sink collecting?
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Drop every recorded event (tests).
+pub fn clear_trace() {
+    sink().lock().unwrap().clear();
+}
+
+/// Number of events recorded so far.
+pub fn trace_len() -> usize {
+    sink().lock().unwrap().len()
+}
+
+/// An RAII wall-clock span: records a Chrome `X` slice on this
+/// thread's lane when dropped, or nothing at all while tracing is off.
+pub struct Span {
+    name: String,
+    start_us: u64,
+    tid: u64,
+    live: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end = now_us();
+        push(TraceEvent {
+            name: std::mem::take(&mut self.name),
+            ph: 'X',
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            pid: PID_PLANNER,
+            tid: self.tid,
+            args: Vec::new(),
+        });
+    }
+}
+
+/// Open a span; hold the guard for the region's lifetime
+/// (`let _span = telemetry::span("tune");`).
+#[must_use]
+pub fn span(name: &str) -> Span {
+    if !trace_enabled() {
+        return Span {
+            name: String::new(),
+            start_us: 0,
+            tid: 0,
+            live: false,
+        };
+    }
+    Span {
+        name: name.to_string(),
+        start_us: now_us(),
+        tid: lane(),
+        live: true,
+    }
+}
+
+/// Record an instant event (a point on the timeline) with optional
+/// args — e.g. the search's best-so-far trajectory.
+pub fn instant(name: &str, args: Vec<(&str, Json)>) {
+    if !trace_enabled() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.to_string(),
+        ph: 'i',
+        ts_us: now_us(),
+        dur_us: 0,
+        pid: PID_PLANNER,
+        tid: lane(),
+        args: args
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    });
+}
+
+/// Record a *virtual-time* slice on the simulator's pid — `lane` is
+/// the simulated device, `ts_us`/`dur_us` are simulated microseconds.
+pub fn slice(name: &str, lane: u64, ts_us: u64, dur_us: u64) {
+    if !trace_enabled() {
+        return;
+    }
+    push(TraceEvent {
+        name: name.to_string(),
+        ph: 'X',
+        ts_us,
+        dur_us,
+        pid: PID_SIM,
+        tid: lane,
+        args: Vec::new(),
+    });
+}
+
+/// The whole sink as a Chrome trace-event JSON array.
+pub fn trace_json() -> Json {
+    Json::Arr(sink().lock().unwrap().iter().map(TraceEvent::to_json).collect())
+}
+
+/// Write the trace to `path` (Perfetto / `chrome://tracing` loadable).
+pub fn write_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, trace_json().render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_in_name_order() {
+        reset_counters();
+        count(key::EVALUATED, 3);
+        incr(key::CACHE_MISS);
+        incr(key::EVALUATED);
+        let s = snapshot();
+        assert_eq!(s.get(key::EVALUATED), 4);
+        assert_eq!(s.get(key::CACHE_MISS), 1);
+        assert_eq!(s.get(key::CACHE_HIT), 0);
+        let names: Vec<&str> = s.iter().map(|(k, _)| k).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "snapshot must be name-ordered");
+        reset_counters();
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn delta_scopes_a_region_without_resets() {
+        reset_counters();
+        count(key::EVALUATED, 10);
+        let before = snapshot();
+        count(key::EVALUATED, 5);
+        incr(key::CACHE_HIT);
+        let delta = snapshot().delta_since(&before);
+        assert_eq!(delta.get(key::EVALUATED), 5);
+        assert_eq!(delta.get(key::CACHE_HIT), 1);
+        // untouched counters do not appear in the delta
+        assert!(delta.iter().all(|(_, v)| v > 0));
+        reset_counters();
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        reset_counters();
+        count(key::CANDIDATES_ENUMERATED, 42);
+        incr(key::CACHE_WRITE);
+        let s = snapshot();
+        let j = Json::parse(&s.to_json().render()).unwrap();
+        assert_eq!(Snapshot::from_json(&j).unwrap(), s);
+        reset_counters();
+    }
+
+    #[test]
+    fn render_is_aligned_and_deterministic() {
+        reset_counters();
+        incr(key::CACHE_HIT);
+        count(key::CANDIDATES_ENUMERATED, 7);
+        let a = snapshot().render();
+        let b = snapshot().render();
+        assert_eq!(a, b);
+        assert!(a.contains("cache_hit"));
+        assert!(a.contains("candidates_enumerated"));
+        assert_eq!(a.lines().count(), 2);
+        reset_counters();
+    }
+
+    #[test]
+    fn spans_are_inert_until_tracing_is_enabled() {
+        // While tracing is off a span records nothing; once on, a
+        // uniquely-named span shows up as a Chrome X slice. (The sink
+        // is global, so assert only on our own names.)
+        disable_trace();
+        {
+            let _s = span("telemetry-test-off");
+        }
+        let j = trace_json();
+        let has = |name: &str| {
+            j.as_arr().unwrap().iter().any(|e| {
+                e.get("name").and_then(Json::as_str) == Some(name)
+            })
+        };
+        assert!(!has("telemetry-test-off"));
+        enable_trace();
+        {
+            let _s = span("telemetry-test-on");
+            instant("telemetry-test-mark", vec![("k", Json::Int(1))]);
+        }
+        slice("telemetry-test-slice", 3, 100, 50);
+        disable_trace();
+        let j = trace_json();
+        let find = |name: &str| {
+            j.as_arr()
+                .unwrap()
+                .iter()
+                .find(|e| {
+                    e.get("name").and_then(Json::as_str) == Some(name)
+                })
+                .cloned()
+        };
+        let on = find("telemetry-test-on").expect("span recorded");
+        assert_eq!(on.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(on.get("ts").and_then(Json::as_i64).is_some());
+        assert!(on.get("dur").and_then(Json::as_i64).is_some());
+        assert!(on.get("tid").and_then(Json::as_i64).unwrap() >= 1);
+        let mark = find("telemetry-test-mark").expect("instant");
+        assert_eq!(mark.get("ph").and_then(Json::as_str), Some("i"));
+        let sl = find("telemetry-test-slice").expect("slice");
+        assert_eq!(sl.get("pid").and_then(Json::as_i64), Some(2));
+        assert_eq!(sl.get("ts").and_then(Json::as_i64), Some(100));
+        assert_eq!(sl.get("dur").and_then(Json::as_i64), Some(50));
+    }
+
+    #[test]
+    fn verbosity_defaults_to_normal_and_orders() {
+        assert!(Verbosity::Quiet < Verbosity::Normal);
+        assert!(Verbosity::Normal < Verbosity::Verbose);
+        assert_eq!(verbosity(), Verbosity::Normal);
+    }
+}

@@ -261,6 +261,7 @@ impl PlanCache {
     /// Load from `path`; missing or unreadable files yield an empty cache
     /// bound to that path (it will be created on the first `save`).
     pub fn load(path: &Path) -> Self {
+        let _load_span = crate::telemetry::span("cache_load");
         let entries = std::fs::read_to_string(path)
             .ok()
             .and_then(|text| Json::parse(&text).ok())
@@ -328,6 +329,7 @@ impl PlanCache {
         let Some(path) = &self.path else {
             return Ok(());
         };
+        let _save_span = crate::telemetry::span("cache_save");
         let lock = save_lock(path);
         let _guard = lock.lock().unwrap();
         let mut merged = PlanCache::load(path).entries;
@@ -354,6 +356,12 @@ impl PlanCache {
             .with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("renaming into {}", path.display()))?;
+        crate::telemetry::incr(crate::telemetry::key::CACHE_WRITE);
+        crate::telemetry::debug(&format!(
+            "  cache: wrote {} entries to {}",
+            merged.len(),
+            path.display()
+        ));
         Ok(())
     }
 }

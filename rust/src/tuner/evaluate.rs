@@ -131,8 +131,12 @@ pub fn lower_bound_ms(plan: &Plan) -> f64 {
     busy.max(critical)
 }
 
-/// Simulate an already-built plan.
+/// Simulate an already-built plan. Runs on the search's worker threads:
+/// the span (when tracing) lands on the worker's own trace lane, and the
+/// name is only built when the sink is live — off-path otherwise.
 fn evaluation_of(cand: &Candidate, plan: &Plan) -> Evaluation {
+    let _sim_span = crate::telemetry::trace_enabled()
+        .then(|| crate::telemetry::span(&format!("sim {}", cand.label())));
     let m = plan.simulate();
     Evaluation {
         candidate: cand.clone(),

@@ -185,6 +185,11 @@ impl TuneOutcome {
 /// Tune: consult the cache, otherwise search, then persist the top-k
 /// frontier (best first). Typed-error core behind [`tune`].
 pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
+    let _tune_span = crate::telemetry::span(&format!(
+        "tune {} devices={}",
+        req.spec.name(),
+        req.space.devices
+    ));
     let mut cache = match &req.cache_path {
         Some(p) => PlanCache::load(std::path::Path::new(p)),
         None => PlanCache::in_memory(),
@@ -202,6 +207,7 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
             p.candidate.assignment_is_valid(req.cluster.groups.len())
         });
         if assignments_ok && entry.satisfies_top(top) {
+            crate::telemetry::incr(crate::telemetry::key::CACHE_HIT);
             return Ok(TuneOutcome {
                 entry: entry.clone(),
                 cache_hit: true,
@@ -214,6 +220,7 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
         // a malformed assignment): fall through to a fresh search and
         // overwrite the entry.
     }
+    crate::telemetry::incr(crate::telemetry::key::CACHE_MISS);
     let report = search_top(
         &req.spec,
         &req.space,

@@ -20,6 +20,8 @@
 
 use crate::api::ClusterSpec;
 use crate::model::MllmSpec;
+use crate::telemetry::{self, key as tkey};
+use crate::util::json::Json;
 
 use super::evaluate::{
     build_plan, lower_bound_ms, simulate_plans_parallel, Evaluation,
@@ -180,23 +182,29 @@ fn search_pairs(
     if pairs.is_empty() {
         return None;
     }
+    let _search_span = telemetry::span("search");
     let total = pairs.len();
     let budget = if budget == 0 { total } else { budget.min(total) };
     let threads = threads.max(1);
     let top_k = top_k.max(1);
 
     // Bound every candidate (cheap: a graph walk, no sim).
-    let mut bounded: Vec<(f64, Candidate, crate::modality::Plan)> = pairs
-        .into_iter()
-        .map(|(c, plan)| {
-            let samples =
-                (plan.num_microbatches * plan.microbatch_size) as f64;
-            let lb = lower_bound_ms(&plan);
-            (objective.optimistic_score(lb, &c, samples), c, plan)
-        })
-        .collect();
-    bounded.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut queue: std::collections::VecDeque<_> = bounded.into();
+    let mut queue: std::collections::VecDeque<_> = {
+        let _bound_span = telemetry::span("bound");
+        let mut bounded: Vec<(f64, Candidate, crate::modality::Plan)> =
+            pairs
+                .into_iter()
+                .map(|(c, plan)| {
+                    let samples = (plan.num_microbatches
+                        * plan.microbatch_size)
+                        as f64;
+                    let lb = lower_bound_ms(&plan);
+                    (objective.optimistic_score(lb, &c, samples), c, plan)
+                })
+                .collect();
+        bounded.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        bounded.into()
+    };
 
     // Ascending-score frontier, capped at top_k.
     let mut frontier: Vec<(f64, Evaluation)> = Vec::new();
@@ -205,6 +213,7 @@ fn search_pairs(
     while let Some((head_bound, _, _)) = queue.front() {
         if evaluated >= budget {
             pruned += queue.len();
+            telemetry::count(tkey::PRUNED_LOWER_BOUND, queue.len() as u64);
             break;
         }
         // Bound-ascending order: if this bound cannot beat the k-th
@@ -213,20 +222,47 @@ fn search_pairs(
             let worst_kept = frontier[frontier.len() - 1].0;
             if *head_bound >= worst_kept {
                 pruned += queue.len();
+                telemetry::count(
+                    tkey::PRUNED_LOWER_BOUND,
+                    queue.len() as u64,
+                );
                 break;
             }
         }
         let wave_n = queue.len().min(threads).min(budget - evaluated);
+        let _wave_span = telemetry::span(&format!("wave n={wave_n}"));
         let wave: Vec<(Candidate, crate::modality::Plan)> =
             queue.drain(..wave_n).map(|(_, c, p)| (c, p)).collect();
         let evs = simulate_plans_parallel(&wave, threads);
         evaluated += evs.len();
+        telemetry::count(tkey::EVALUATED, evs.len() as u64);
+        let prev_best = frontier.first().map(|(s, _)| *s);
         for ev in evs {
             let s = objective.score(&ev);
             let pos = frontier.partition_point(|(fs, _)| *fs <= s);
             if pos < top_k {
                 frontier.insert(pos, (s, ev));
                 frontier.truncate(top_k);
+            }
+        }
+        if let Some((s, ev)) = frontier.first() {
+            // Best-so-far trajectory: one point per improving wave.
+            if prev_best.is_none_or(|p| *s < p) {
+                telemetry::instant(
+                    "best_so_far",
+                    vec![
+                        ("score", Json::Num(*s)),
+                        ("iteration_ms", Json::Num(ev.iteration_ms)),
+                        ("label", Json::Str(ev.candidate.label())),
+                        ("evaluated", Json::Int(evaluated as i64)),
+                    ],
+                );
+                telemetry::debug(&format!(
+                    "  search: best so far {:.1} ms ({}) after {} sims",
+                    ev.iteration_ms,
+                    ev.candidate.label(),
+                    evaluated
+                ));
             }
         }
     }

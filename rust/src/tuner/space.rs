@@ -13,6 +13,7 @@
 
 use crate::api::ClusterSpec;
 use crate::modality::{ModalityModule, MultimodalModule, Strategy};
+use crate::telemetry::{self, key as tkey};
 
 /// Which modules train — the §4.2 dimension DistTrain-style placement
 /// search must be aware of, since it decides every stage's backward time.
@@ -319,6 +320,7 @@ fn raw_candidates(
             }
         }
     }
+    telemetry::count(tkey::CANDIDATES_ENUMERATED, raw.len() as u64);
     raw
 }
 
@@ -373,6 +375,8 @@ pub fn enumerate_with_plans(
                 .is_none_or(|budget| plan.peak_device_bytes() <= budget)
             {
                 out.push((c, plan));
+            } else {
+                telemetry::incr(tkey::PRUNED_MEMORY);
             }
             continue;
         }
@@ -385,6 +389,7 @@ pub fn enumerate_with_plans(
                 .zip(&cluster.groups)
                 .any(|(&used, g)| used > g.count)
             {
+                telemetry::incr(tkey::PRUNED_GROUP_CAPACITY);
                 continue;
             }
             let plan = crate::modality::planner::plan_assigned(
@@ -403,6 +408,8 @@ pub fn enumerate_with_plans(
                 space.memory_budget_bytes,
             ) {
                 out.push((cand, plan));
+            } else {
+                telemetry::incr(tkey::PRUNED_MEMORY);
             }
         }
     }

@@ -75,7 +75,7 @@ impl Table {
     }
 
     pub fn print(&self) {
-        print!("{}", self.render());
+        crate::telemetry::report(self.render().trim_end());
     }
 }
 

@@ -1,0 +1,228 @@
+//! Telemetry acceptance: the observability layer is off-path and
+//! deterministic.
+//!
+//! * golden counters: the registry delta one `plan()` call fires is
+//!   identical across a double run, and every search-side provenance
+//!   number cross-checks against it exactly;
+//! * off-path: the tuned winner (and the whole rendered report) is
+//!   byte-identical with tracing enabled vs disabled;
+//! * trace validity: a `cornstarch tune --trace t.json` run emits a
+//!   Chrome trace-event JSON array (`name`/`ph`/`ts`/`pid`/`tid`,
+//!   `dur` on `X` slices) whose spans nest, loadable in Perfetto.
+
+use cornstarch::api::{PlanRequest, PlanningService};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::telemetry::{self, key as tkey, Snapshot};
+use cornstarch::util::json::Json;
+
+/// A small fixed request every test plans: VLM-S on 8 × A40, two
+/// worker threads, no cache file (so each call searches).
+fn fixed_request() -> PlanRequest {
+    PlanRequest::default_for(MllmSpec::vlm(Size::M, Size::S))
+        .devices(8)
+        .threads(2)
+}
+
+fn plan_with_delta(
+    req: &PlanRequest,
+) -> (Snapshot, cornstarch::api::PlanReport) {
+    let before = telemetry::snapshot();
+    let report = PlanningService::new().plan(req).expect("plans");
+    (telemetry::snapshot().delta_since(&before), report)
+}
+
+/// Golden: the counter delta of a fixed `plan()` call is deterministic
+/// (double run, byte-identical render) and agrees with the provenance
+/// numbers the search itself reported.
+#[test]
+fn counter_snapshot_is_deterministic_and_matches_provenance() {
+    let req = fixed_request();
+    let (d1, r1) = plan_with_delta(&req);
+    let (d2, r2) = plan_with_delta(&req);
+    assert_eq!(d1, d2, "counter deltas must not drift between runs");
+    assert_eq!(d1.render(), d2.render());
+    assert_eq!(
+        r1.winner().candidate.label(),
+        r2.winner().candidate.label()
+    );
+
+    // cross-check: registry counters == the search's own accounting
+    let p = &r1.provenance;
+    assert!(!p.cache_hit);
+    assert_eq!(d1.get(tkey::EVALUATED), p.evaluated as u64);
+    assert_eq!(d1.get(tkey::PRUNED_LOWER_BOUND), p.pruned as u64);
+    // on the homogeneous A40 pool every raw candidate either survives
+    // enumeration or is cut by the memory model — no group-capacity
+    // dimension exists to expand or prune placements
+    assert_eq!(d1.get(tkey::PRUNED_GROUP_CAPACITY), 0);
+    assert_eq!(
+        d1.get(tkey::CANDIDATES_ENUMERATED)
+            - d1.get(tkey::PRUNED_MEMORY),
+        p.total_candidates as u64
+    );
+    assert_eq!(p.evaluated + p.pruned, p.total_candidates);
+    assert_eq!(d1.get(tkey::CACHE_MISS), 1);
+    assert_eq!(d1.get(tkey::CACHE_HIT), 0);
+    assert_eq!(d1.get(tkey::CACHE_WRITE), 0, "no cache file, no write");
+
+    // and the provenance's embedded stats block is that same delta
+    let stats = p.stats;
+    assert_eq!(
+        stats.candidates_enumerated,
+        d1.get(tkey::CANDIDATES_ENUMERATED)
+    );
+    assert_eq!(stats.evaluated, d1.get(tkey::EVALUATED));
+    assert_eq!(stats.pruned_memory, d1.get(tkey::PRUNED_MEMORY));
+    assert_eq!(
+        stats.pruned_total(),
+        d1.get(tkey::PRUNED_LOWER_BOUND) + d1.get(tkey::PRUNED_MEMORY)
+    );
+    assert_eq!(stats.cache_misses, 1);
+    // the render embeds the same numbers the JSON form carries
+    let j = stats.to_json();
+    assert_eq!(
+        j.get("evaluated").and_then(Json::as_i64),
+        Some(stats.evaluated as i64)
+    );
+    assert!(r2.provenance.stats == stats, "stats drifted across runs");
+}
+
+/// Off-path: enabling tracing changes nothing about the answer — the
+/// winner, the counters, and the whole rendered report stay
+/// byte-identical.
+#[test]
+fn winner_is_byte_identical_with_telemetry_on_and_off() {
+    let req = fixed_request();
+    let (d_off, r_off) = plan_with_delta(&req);
+    telemetry::enable_trace();
+    let (d_on, r_on) = plan_with_delta(&req);
+    telemetry::disable_trace();
+    assert_eq!(
+        r_off.render(),
+        r_on.render(),
+        "tracing must not perturb the report"
+    );
+    assert_eq!(d_off, d_on, "tracing must not perturb the counters");
+    assert_eq!(
+        r_off.winner().candidate.label(),
+        r_on.winner().candidate.label()
+    );
+    assert!(r_off.timeline.iteration_ms == r_on.timeline.iteration_ms);
+}
+
+/// End-to-end trace validity: run the real binary with `--trace`, then
+/// hold the output to the Chrome trace-event contract — a JSON array
+/// of events with `name`/`ph`/`ts`/`pid`/`tid` (+ `dur` on `X`
+/// slices), wall-clock spans properly nested per lane, and the
+/// winner's simulated timeline present on the virtual-time pid.
+#[test]
+fn trace_flag_emits_nested_chrome_trace_events() {
+    let mut path = std::env::temp_dir();
+    path.push(format!(
+        "cornstarch-telemetry-trace-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cornstarch"))
+        .args([
+            "tune",
+            "VLM-S",
+            "--devices",
+            "8",
+            "--budget",
+            "4",
+            "--threads",
+            "2",
+            "--quiet",
+            "--trace",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn the cornstarch binary");
+    assert!(
+        out.status.success(),
+        "tune --trace failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&path).expect("trace written");
+    let _ = std::fs::remove_file(&path);
+    let j = Json::parse(&text).expect("trace must be valid JSON");
+    let events = j.as_arr().expect("trace must be a JSON array");
+    assert!(!events.is_empty());
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).expect("ph");
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph:?}");
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert!(e.get("ts").and_then(Json::as_i64).is_some());
+        assert!(e.get("pid").and_then(Json::as_i64).is_some());
+        assert!(e.get("tid").and_then(Json::as_i64).is_some());
+        if ph == "X" {
+            assert!(e.get("dur").and_then(Json::as_i64).unwrap() >= 0);
+        }
+    }
+    // the named planning spans are all present
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for want in ["plan VLM-S", "tune VLM-S devices=8", "search"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(want)),
+            "missing span {want:?} in {names:?}"
+        );
+    }
+    // spans nest: on each wall-clock lane, any two X slices either
+    // nest or are disjoint (never partially overlap)
+    let slices = |pid: i64, tid: i64| -> Vec<(i64, i64)> {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("X")
+                    && e.get("pid").and_then(Json::as_i64) == Some(pid)
+                    && e.get("tid").and_then(Json::as_i64) == Some(tid)
+            })
+            .map(|e| {
+                let ts = e.get("ts").and_then(Json::as_i64).unwrap();
+                let dur = e.get("dur").and_then(Json::as_i64).unwrap();
+                (ts, ts + dur)
+            })
+            .collect()
+    };
+    let lanes: std::collections::BTreeSet<(i64, i64)> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .map(|e| {
+            (
+                e.get("pid").and_then(Json::as_i64).unwrap(),
+                e.get("tid").and_then(Json::as_i64).unwrap(),
+            )
+        })
+        .collect();
+    for (pid, tid) in &lanes {
+        // only wall-clock lanes (pid 1) carry the nesting claim; the
+        // sim's virtual-time lanes are one flat row per device
+        if *pid != 1 {
+            continue;
+        }
+        let ss = slices(*pid, *tid);
+        for (i, a) in ss.iter().enumerate() {
+            for b in ss.iter().skip(i + 1) {
+                let disjoint = a.1 <= b.0 || b.1 <= a.0;
+                let nested = (a.0 <= b.0 && b.1 <= a.1)
+                    || (b.0 <= a.0 && a.1 <= b.1);
+                assert!(
+                    disjoint || nested,
+                    "partially overlapping spans on lane {pid}/{tid}: \
+                     {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+    // the winner's simulated schedule landed on the virtual-time pid
+    assert!(
+        lanes.iter().any(|(pid, _)| *pid == 2),
+        "no simulator timeline lanes in the trace"
+    );
+    assert!(names.iter().any(|n| n.starts_with("fwd ")));
+    assert!(names.iter().any(|n| n.starts_with("bwd ")));
+}
