@@ -103,9 +103,22 @@ fn main() {
         prune_rate * 100.0,
         candidates_per_s
     ));
+    // The winner's simulated bubble fraction — deterministic (same tune
+    // answer every run), tracked so BENCH trajectories catch schedule
+    // regressions, not just wall-time noise.
+    let outcome = tune(&hetero).expect("hetero tune for winner");
+    let winner_sim =
+        outcome.instantiate(&hetero.spec, &hetero.cluster).simulate();
+    let winner_bubble = cornstarch::sim::bubble_fraction(&winner_sim.sim);
     let bench_json = Json::obj(vec![
+        // `schema`/`case_id` are the stable keys BENCH trajectory tooling
+        // joins runs on PR-over-PR; no timestamps — emission order and
+        // every non-timing field are deterministic.
+        ("schema", Json::Str("cornstarch-bench/v1".to_string())),
+        ("case_id", Json::Str("tuner.vlm_l.a40x4-a100x4.t4".to_string())),
         ("bench", Json::Str("tuner".to_string())),
         ("case", Json::Str("VLM-L @ a40x4-a100x4".to_string())),
+        ("winner_bubble_fraction", Json::Num(winner_bubble)),
         ("candidates_enumerated", Json::Int(enumerated as i64)),
         ("candidates_evaluated", Json::Int(evaluated as i64)),
         ("candidates_pruned", Json::Int(pruned as i64)),

@@ -60,6 +60,10 @@ pub struct PlanDiff {
     pub stages: Vec<StageDelta>,
     /// Timeline-summary changes.
     pub timeline: Vec<FieldDelta>,
+    /// Decomposition changes ([`crate::profile::PlanAnalysis`]): totals
+    /// of compute/comm/idle, per-phase idle, cp imbalance, and (same
+    /// cluster only) per-group utilization.
+    pub analysis: Vec<FieldDelta>,
 }
 
 fn push_delta(
@@ -246,7 +250,62 @@ impl PlanDiff {
             });
         }
 
-        PlanDiff { fields, stages, timeline }
+        // Decomposition deltas: device-summed compute/comm/idle, idle per
+        // 1F1B phase, cp imbalance, and per-group utilization. Continuous
+        // ms quantities share the timeline's render-granularity floor.
+        let aa = &before.analysis;
+        let ab = &after.analysis;
+        let mut analysis = Vec::new();
+        let ms_pair = |field: &'static str, x: f64, y: f64, out: &mut Vec<FieldDelta>| {
+            if (x - y).abs() >= ITERATION_EPS_MS {
+                out.push(FieldDelta {
+                    field,
+                    before: format!("{x:.1} ms"),
+                    after: format!("{:.1} ms{}", y, pct(x, y)),
+                });
+            }
+        };
+        ms_pair("compute", aa.total_compute_ms(), ab.total_compute_ms(), &mut analysis);
+        ms_pair("comm", aa.total_comm_ms(), ab.total_comm_ms(), &mut analysis);
+        ms_pair("idle", aa.total_idle_ms(), ab.total_idle_ms(), &mut analysis);
+        for (pa, pb) in aa.phases.iter().zip(&ab.phases) {
+            let field = match pa.phase {
+                "warm-up" => "warm-up idle",
+                "steady" => "steady idle",
+                _ => "cool-down idle",
+            };
+            ms_pair(field, pa.idle_ms, pb.idle_ms, &mut analysis);
+        }
+        let cp_label = |a: &crate::profile::PlanAnalysis| match a.stage_cp.first() {
+            Some(c) => format!("{} x{} ({:.3})", c.algorithm, c.cp, c.imbalance),
+            None => "none".to_string(),
+        };
+        push_delta(
+            &mut analysis,
+            "cp imbalance",
+            cp_label(aa),
+            cp_label(ab),
+        );
+        // Group indices are cluster-relative — only comparable when both
+        // reports plan the same pool (same reasoning as `groups` above).
+        if same_cluster {
+            for (ga, gb) in aa.groups.iter().zip(&ab.groups) {
+                const UTIL_EPS: f64 = 0.0005; // rendered at {:.1}%
+                if (ga.utilization - gb.utilization).abs() >= UTIL_EPS {
+                    analysis.push(FieldDelta {
+                        field: "utilization",
+                        before: format!(
+                            "{} {:.1}%",
+                            ga.device_class,
+                            ga.utilization * 100.0
+                        ),
+                        after: format!("{:.1}%", gb.utilization * 100.0),
+                    });
+                }
+            }
+        }
+
+        PlanDiff { fields, stages, timeline, analysis }
     }
 
     /// True when the two reports agree on every compared field — the
@@ -256,6 +315,7 @@ impl PlanDiff {
         self.fields.is_empty()
             && self.stages.is_empty()
             && self.timeline.is_empty()
+            && self.analysis.is_empty()
     }
 
     /// Deterministic human-readable rendering: configuration fields,
@@ -295,6 +355,13 @@ impl PlanDiff {
         if !self.timeline.is_empty() {
             s.push_str("  timeline:\n");
             for f in &self.timeline {
+                let _ =
+                    writeln!(s, "    {}: {} -> {}", f.field, f.before, f.after);
+            }
+        }
+        if !self.analysis.is_empty() {
+            s.push_str("  analysis:\n");
+            for f in &self.analysis {
                 let _ =
                     writeln!(s, "    {}: {} -> {}", f.field, f.before, f.after);
             }
@@ -383,13 +450,23 @@ mod tests {
                 before: "123.4 ms".to_string(),
                 after: "110.0 ms (-10.9%)".to_string(),
             }],
+            analysis: vec![FieldDelta {
+                field: "idle",
+                before: "40.0 ms".to_string(),
+                after: "20.0 ms (-50.0%)".to_string(),
+            }],
         };
         assert!(!d.is_empty());
         let text = d.render();
         let fields_at = text.find("tp: 1 -> 2").unwrap();
         let stages_at = text.find("stages:").unwrap();
         let timeline_at = text.find("timeline:").unwrap();
-        assert!(fields_at < stages_at && stages_at < timeline_at, "{text}");
+        let analysis_at = text.find("analysis:").unwrap();
+        assert!(
+            fields_at < stages_at && stages_at < timeline_at && timeline_at < analysis_at,
+            "{text}"
+        );
+        assert!(text.contains("idle: 40.0 ms -> 20.0 ms (-50.0%)"), "{text}");
         assert!(text.contains("~ llm[0]: A40 -> A100-80G"), "{text}");
         assert!(text.contains("~ llm[0]: peak 24.00 GB -> 30.00 GB"), "{text}");
         assert!(text.contains("- enc:vision[1] (A40)"), "{text}");

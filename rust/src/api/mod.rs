@@ -301,6 +301,34 @@ impl PlanningService {
             n_gpus: plan.n_gpus,
             peak_device_bytes: plan.peak_device_bytes(),
         };
+        // Decompose the winner's simulated schedule — where every
+        // millisecond went (see `crate::profile`). The winning
+        // candidate's cp degree names the token distribution whose
+        // imbalance is scored.
+        let analysis = crate::profile::analyze(
+            &plan,
+            &m.sim,
+            &req.cluster,
+            req.mllm.llm_tokens(),
+            frontier.first().map(|s| s.candidate.cp).unwrap_or(1),
+        );
+        telemetry::instant(
+            "plan analysis",
+            vec![
+                (
+                    "makespan_ms",
+                    crate::util::json::Json::Num(analysis.makespan_ms),
+                ),
+                (
+                    "idle_ms",
+                    crate::util::json::Json::Num(analysis.total_idle_ms()),
+                ),
+                (
+                    "comm_ms",
+                    crate::util::json::Json::Num(analysis.total_comm_ms()),
+                ),
+            ],
+        );
         // Re-source the deterministic counters this call fired from the
         // telemetry registry: the delta over the call is the report's
         // SearchStats block (all zeros except `cache_hits` on a hit).
@@ -323,6 +351,7 @@ impl PlanningService {
             stage_verdicts,
             timeline,
             provenance,
+            analysis,
         })
     }
 }

@@ -175,6 +175,11 @@ pub struct PlanReport {
     pub stage_verdicts: Vec<StageVerdict>,
     pub timeline: TimelineSummary,
     pub provenance: Provenance,
+    /// Where every simulated millisecond went: per-device
+    /// compute/comm/idle, 1F1B phase bubbles, cp imbalance, group
+    /// utilization (`cornstarch explain` renders it; see
+    /// [`crate::profile`]).
+    pub analysis: crate::profile::PlanAnalysis,
 }
 
 impl PlanReport {

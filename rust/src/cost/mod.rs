@@ -131,6 +131,61 @@ pub fn projector_fwd_ms(d_in: usize, d_out: usize, tokens: usize, device: Device
     2.0 * d_in as f64 * d_out as f64 * tokens as f64 / device.effective_flops() * 1e3
 }
 
+/// Measured per-stage times that override the flops-derived
+/// [`crate::pipeline::StageCost`]s of a stage graph — the seam through
+/// which a real execution profile ([`crate::profile::CalibrationProfile`])
+/// replaces the analytic model, stage by stage, keyed on the planner's
+/// stage names (`enc:vision[0]`, `llm[2]`, …).
+///
+/// Stages without a measured entry keep their modeled cost, so a partial
+/// profile (say, LLM stages only) still calibrates what it covers.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MeasuredTimes {
+    entries: Vec<(String, crate::pipeline::StageCost)>,
+}
+
+impl MeasuredTimes {
+    /// Record (or overwrite) the measured cost of `stage`.
+    pub fn insert(&mut self, stage: &str, cost: crate::pipeline::StageCost) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == stage) {
+            e.1 = cost;
+        } else {
+            self.entries.push((stage.to_string(), cost));
+        }
+    }
+
+    pub fn get(&self, stage: &str) -> Option<crate::pipeline::StageCost> {
+        self.entries.iter().find(|(n, _)| n == stage).map(|(_, c)| *c)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Rewrite the cost of every node of `g` whose stage name (from
+    /// `names`, parallel to the nodes — a plan's `stage_names`) has a
+    /// measured entry. Returns how many stages were overridden.
+    pub fn apply(
+        &self,
+        g: &mut crate::pipeline::StageGraph,
+        names: &[String],
+    ) -> usize {
+        let mut overridden = 0;
+        for (i, node) in g.nodes.iter_mut().enumerate() {
+            let name = names.get(i).map(String::as_str).unwrap_or(&node.name);
+            if let Some(c) = self.get(name) {
+                node.cost = c;
+                overridden += 1;
+            }
+        }
+        overridden
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,5 +260,17 @@ mod tests {
         let d = Device::a40();
         let p = projector_fwd_ms(1024, 4096, 2 * 577, d);
         assert!(p > 0.0 && p < 10.0, "{p}");
+    }
+
+    #[test]
+    fn measured_times_insert_overwrites_by_name() {
+        use crate::pipeline::StageCost;
+        let mut t = MeasuredTimes::default();
+        assert!(t.is_empty());
+        t.insert("llm[0]", StageCost { fwd_ms: 1.0, bwd_ms: 2.0 });
+        t.insert("llm[0]", StageCost { fwd_ms: 3.0, bwd_ms: 4.0 });
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get("llm[0]").unwrap().fwd_ms, 3.0);
+        assert!(t.get("llm[1]").is_none());
     }
 }

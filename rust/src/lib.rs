@@ -49,6 +49,11 @@
 //!   with deterministic snapshots, RAII wall-clock spans exported as
 //!   Chrome trace-event JSON (`--trace`), and the one leveled-logging
 //!   door (`--quiet` / `-v`) every progress print goes through.
+//! * [`profile`] — plan explainability + sim-to-real calibration: exact
+//!   per-device compute/comm/idle decomposition of every plan's
+//!   simulated trace ([`profile::PlanAnalysis`], `cornstarch explain`)
+//!   and measured-vs-modeled stage-time drift from real PJRT runs
+//!   ([`profile::CalibrationProfile`], `cornstarch calibrate`).
 
 pub mod api;
 pub mod util;
@@ -60,6 +65,7 @@ pub mod memory;
 pub mod modality;
 pub mod pipeline;
 pub mod sim;
+pub mod profile;
 pub mod tuner;
 pub mod runtime;
 pub mod train;

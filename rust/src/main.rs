@@ -6,6 +6,8 @@
 //! cornstarch plan <mllm> [opts]         print a parallelization plan
 //! cornstarch tune <mllm> [opts]         autotune the fastest plan
 //! cornstarch stats <mllm> [opts]        deterministic search counters
+//! cornstarch explain <mllm> [opts]      why the plan won (decomposition)
+//! cornstarch calibrate [opts]           measure PJRT stage times -> profile
 //! cornstarch memory <mllm> [opts]       per-stage memory model verdict
 //! cornstarch fleet [opts]               carve one pool across N tenants
 //! cornstarch diff [fleet|<mllm>] [opts] what a re-plan changed
@@ -45,7 +47,7 @@ use cornstarch::modality::{
 use cornstarch::model::{MllmSpec, Size};
 use cornstarch::runtime::Manifest;
 use cornstarch::telemetry::{self, Verbosity};
-use cornstarch::train::FrozenPolicy;
+use cornstarch::train::{FrozenPolicy, PipelineTrainer, SyntheticDataset};
 use cornstarch::tuner::{FrozenSetting, Objective};
 
 fn main() {
@@ -377,6 +379,147 @@ fn run(args: &[String]) -> Result<()> {
                 report.winner().candidate.label()
             ));
         }
+        "explain" => {
+            // Why the plan won: per-device compute/comm/idle decomposition
+            // (sums exactly to the makespan), 1F1B phase bubbles, cp token
+            // imbalance, per-group utilization. `--json` emits the
+            // analysis alone, machine-readable and byte-stable;
+            // `--vs-cluster`/`--vs-devices` diff two plans'
+            // decompositions; `--profile F` scores the flops model
+            // against a measured CalibrationProfile.
+            let name = match rest.first() {
+                Some(s) if !s.starts_with("--") => s.as_str(),
+                _ => "VLM-M",
+            };
+            let spec = parse_mllm(name, rest)?;
+            let base_cluster =
+                parse_cluster(rest)?.unwrap_or_else(ClusterSpec::a40_default);
+            let service = PlanningService::new();
+            let build = |cluster: ClusterSpec,
+                         devices: Option<usize>|
+             -> Result<PlanReport> {
+                let mut req =
+                    PlanRequest::default_for(spec.clone()).cluster(cluster);
+                if let Some(d) = devices {
+                    req = req.devices(d);
+                }
+                if let Some(b) = flag_num(rest, "--budget")? {
+                    req = req.budget(b);
+                }
+                if let Some(t) = flag_num(rest, "--threads")? {
+                    req = req.threads(t);
+                }
+                if let Some(c) = flag(rest, "--cache") {
+                    req = req.cache_file(&c);
+                }
+                if let Some(k) = flag_num(rest, "--top")? {
+                    req = req.top(k);
+                }
+                Ok(service.plan(&req)?)
+            };
+            let report =
+                build(base_cluster.clone(), flag_num(rest, "--devices")?)?;
+            let vs_cluster = flag(rest, "--vs-cluster");
+            let vs_devices = flag_num(rest, "--vs-devices")?;
+            if vs_cluster.is_some() || vs_devices.is_some() {
+                let cluster2 = match vs_cluster {
+                    Some(p) => ClusterSpec::load(std::path::Path::new(&p))
+                        .with_context(|| {
+                            format!("loading cluster spec {p}")
+                        })?,
+                    None => base_cluster,
+                };
+                let after = build(cluster2, vs_devices)?;
+                telemetry::report(&format!(
+                    "{} — before -> after",
+                    spec.name()
+                ));
+                telemetry::report(
+                    PlanDiff::between(&report, &after).render().trim_end(),
+                );
+                return Ok(());
+            }
+            if has_flag(rest, "--json") {
+                telemetry::report(&report.analysis.to_json().render());
+                return Ok(());
+            }
+            telemetry::report(&format!(
+                "{} — {} ({} GPUs, {:.1} ms/iter)",
+                spec.name(),
+                report.winner().candidate.label(),
+                report.timeline.n_gpus,
+                report.timeline.iteration_ms
+            ));
+            telemetry::report(report.analysis.render().trim_end());
+            if let Some(p) = flag(rest, "--profile") {
+                let prof = cornstarch::profile::CalibrationProfile::load(
+                    std::path::Path::new(&p),
+                )
+                .map_err(|e| anyhow!(e))?;
+                let d = cornstarch::profile::drift(&report.plan, &prof);
+                telemetry::report(d.render().trim_end());
+            }
+        }
+        "calibrate" => {
+            // Sim-to-real: run the real PJRT 1F1B executor for a few
+            // steps and write the measured per-stage fwd/bwd/update wall
+            // times as a CalibrationProfile JSON. `explain --profile F`
+            // (or profile::drift) then scores the flops model against
+            // it. Needs `make artifacts`.
+            let model = flag(rest, "--model").unwrap_or_else(|| {
+                rest.first()
+                    .filter(|s| !s.starts_with("--"))
+                    .cloned()
+                    .unwrap_or_else(|| "tiny".to_string())
+            });
+            let steps = flag_num(rest, "--steps")?.unwrap_or(3).max(1);
+            let microbatches =
+                flag_num(rest, "--microbatches")?.unwrap_or(4).max(1);
+            let device_class = flag(rest, "--device-class")
+                .unwrap_or_else(|| "cpu-pjrt".to_string());
+            let out = flag(rest, "--out")
+                .unwrap_or_else(|| format!("profile-{model}.json"));
+            let manifest = Manifest::load(Manifest::default_root())
+                .context("run `make artifacts` first (calibration drives \
+                          the real PJRT executor)")?;
+            let model_spec = manifest.model(&model)?.clone();
+            let mut pipe = PipelineTrainer::new(
+                &manifest,
+                &model,
+                parse_train(rest)?.policy,
+                1e-3,
+            )?;
+            let ds = SyntheticDataset::new(&model_spec, 7);
+            let batch: Vec<_> =
+                (0..microbatches as u64).map(|i| ds.sample(i)).collect();
+            for s in 0..steps {
+                let st = pipe.train_step(&batch)?;
+                telemetry::info(&format!(
+                    "  step {}/{steps}: loss {:.4} ({:.0} ms wall)",
+                    s + 1,
+                    st.loss,
+                    st.wall_ms
+                ));
+            }
+            let prof = cornstarch::profile::CalibrationProfile::from_pipeline(
+                &pipe,
+                &device_class,
+            );
+            prof.save(std::path::Path::new(&out))
+                .with_context(|| format!("writing {out}"))?;
+            telemetry::report(&format!(
+                "wrote {out}: {} stages on device class {device_class} \
+                 (last step, {} microbatches)",
+                prof.samples.len(),
+                pipe.last_microbatches
+            ));
+            for s in &prof.samples {
+                telemetry::report(&format!(
+                    "  {:<16} fwd {:>8.2} ms  bwd {:>8.2} ms  upd {:>8.2} ms",
+                    s.stage, s.fwd_ms, s.bwd_ms, s.upd_ms
+                ));
+            }
+        }
         "memory" => {
             let spec = parse_mllm(
                 rest.first().map(|s| s.as_str()).unwrap_or("VLM-L"),
@@ -637,6 +780,12 @@ fn print_help() {
          [--sweep-policies] [--top N]   (top-N frontier from one search)\n  \
          stats <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
          [--json]   (deterministic search counters for one plan() call)\n  \
+         explain <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
+         [--json] [--vs-cluster F2] [--vs-devices M] [--profile F]\n        \
+         (per-device compute/comm/idle, 1F1B phase bubbles, cp imbalance)\n  \
+         calibrate [<model>] [--steps N] [--microbatches M] [--out F]\n        \
+         [--device-class NAME] [--policy paper|all|frozen]\n        \
+         (measure PJRT stage times into a CalibrationProfile JSON)\n  \
          memory <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
          [--cluster F] [--microbatches N] [--budget-gb G]\n  \
          fleet [--cluster F] [--tenants VLM-L,ALM-M] [--floor X] [--budget K]\n        \

@@ -1,0 +1,545 @@
+//! Plan decomposition: where every simulated millisecond went.
+//!
+//! [`analyze`] replays a plan's 1F1B trace ([`crate::sim::TaskTrace`],
+//! enriched with device / stage / task kind) into an exact per-device
+//! accounting — compute + comm + idle sums to the makespan *by
+//! construction* (a property `tests/profile_checks.rs` holds to 1e-9) —
+//! then attributes every idle millisecond to a 1F1B phase (warm-up /
+//! steady / cool-down, frozen-aware), scores the winner's cp token
+//! distribution via [`crate::cp::metrics`], and reports per-group
+//! utilization on heterogeneous pools.
+
+use std::fmt::Write as _;
+
+use crate::api::ClusterSpec;
+use crate::cp::rank_loads;
+use crate::modality::Plan;
+use crate::pipeline::{onef1b_tasks, TaskKind};
+use crate::sim::SimResult;
+use crate::tuner::evaluate::{cp_block_workloads, pick_cp_over, CP_PICK_SEED};
+use crate::util::json::Json;
+
+/// The three 1F1B phases gaps are attributed to, in schedule order.
+pub const PHASES: [&str; 3] = ["warm-up", "steady", "cool-down"];
+
+/// One device's exact share of the makespan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceDecomposition {
+    pub device: usize,
+    /// Cluster group index this device's stages were assigned to.
+    pub group: usize,
+    /// Device-class name of that group (`A40`, …).
+    pub device_class: String,
+    /// Executing fwd/bwd tasks.
+    pub compute_ms: f64,
+    /// Waiting on an activation in flight: the dependency had finished
+    /// but its edge latency had not yet been paid.
+    pub comm_ms: f64,
+    /// Waiting with nothing in flight — pipeline bubble.
+    pub idle_ms: f64,
+    /// Every backward on this device is a skipped frozen backward
+    /// (0 ms) — its bubbles are the cheap kind §4.2 exploits.
+    pub frozen: bool,
+}
+
+impl DeviceDecomposition {
+    /// `compute + comm + idle` — equals the makespan exactly.
+    pub fn total_ms(&self) -> f64 {
+        self.compute_ms + self.comm_ms + self.idle_ms
+    }
+}
+
+/// Device-summed bubble time inside one 1F1B phase.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseBubble {
+    /// One of [`PHASES`].
+    pub phase: &'static str,
+    pub idle_ms: f64,
+    pub comm_ms: f64,
+    /// Total device-time inside this phase's windows (summed across
+    /// devices — each device gets its own phase boundaries).
+    pub span_ms: f64,
+}
+
+/// cp token-imbalance of one LLM stage's distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CpStageImbalance {
+    pub stage: String,
+    /// Winning algorithm name (`LPT`, `Zigzag`, `Naive Ring`).
+    pub algorithm: String,
+    pub cp: usize,
+    /// max rank load / mean rank load; 1.0 = perfectly balanced.
+    pub imbalance: f64,
+}
+
+/// Mean utilization of one cluster device group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupUtilization {
+    pub group: usize,
+    pub device_class: String,
+    /// Simulated pipeline devices the plan placed in this group.
+    pub devices: usize,
+    /// Mean over those devices of `busy / makespan` (0 when the plan
+    /// left the group unused).
+    pub utilization: f64,
+}
+
+/// The full decomposition of one plan's simulated iteration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanAnalysis {
+    pub makespan_ms: f64,
+    pub devices: Vec<DeviceDecomposition>,
+    pub phases: Vec<PhaseBubble>,
+    /// One entry per LLM pipeline stage when `cp > 1`, empty otherwise.
+    pub stage_cp: Vec<CpStageImbalance>,
+    pub groups: Vec<GroupUtilization>,
+}
+
+impl PlanAnalysis {
+    pub fn total_compute_ms(&self) -> f64 {
+        self.devices.iter().map(|d| d.compute_ms).sum()
+    }
+
+    pub fn total_comm_ms(&self) -> f64 {
+        self.devices.iter().map(|d| d.comm_ms).sum()
+    }
+
+    pub fn total_idle_ms(&self) -> f64 {
+        self.devices.iter().map(|d| d.idle_ms).sum()
+    }
+
+    /// Machine-readable form (the `explain --json` payload). Field
+    /// values are exactly the struct's — no rounding — so double runs
+    /// are byte-identical.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("makespan_ms", Json::Num(self.makespan_ms)),
+            (
+                "devices",
+                Json::Arr(
+                    self.devices
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("device", Json::Int(d.device as i64)),
+                                ("group", Json::Int(d.group as i64)),
+                                ("device_class", Json::Str(d.device_class.clone())),
+                                ("compute_ms", Json::Num(d.compute_ms)),
+                                ("comm_ms", Json::Num(d.comm_ms)),
+                                ("idle_ms", Json::Num(d.idle_ms)),
+                                ("frozen", Json::Bool(d.frozen)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("phase", Json::Str(p.phase.to_string())),
+                                ("idle_ms", Json::Num(p.idle_ms)),
+                                ("comm_ms", Json::Num(p.comm_ms)),
+                                ("span_ms", Json::Num(p.span_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "cp",
+                Json::Arr(
+                    self.stage_cp
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("stage", Json::Str(c.stage.clone())),
+                                ("algorithm", Json::Str(c.algorithm.clone())),
+                                ("cp", Json::Int(c.cp as i64)),
+                                ("imbalance", Json::Num(c.imbalance)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("group", Json::Int(g.group as i64)),
+                                ("device_class", Json::Str(g.device_class.clone())),
+                                ("devices", Json::Int(g.devices as i64)),
+                                ("utilization", Json::Num(g.utilization)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable table (the default `explain` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "  analysis (makespan {:.2} ms):", self.makespan_ms);
+        let _ = writeln!(
+            s,
+            "    per-device decomposition (compute + comm + idle = makespan):"
+        );
+        for d in &self.devices {
+            let _ = writeln!(
+                s,
+                "      dev {:>2} {:<10} compute {:>9.2}  comm {:>8.2}  idle {:>9.2}{}",
+                d.device,
+                d.device_class,
+                d.compute_ms,
+                d.comm_ms,
+                d.idle_ms,
+                if d.frozen { "  [frozen bwd]" } else { "" }
+            );
+        }
+        let _ = writeln!(s, "    1F1B bubbles by phase (idle / window, device-summed):");
+        for p in &self.phases {
+            let _ = writeln!(
+                s,
+                "      {:<10} {:>9.2} / {:>9.2} ms (comm {:>7.2})",
+                p.phase, p.idle_ms, p.span_ms, p.comm_ms
+            );
+        }
+        match self.stage_cp.first() {
+            Some(c) => {
+                let _ = writeln!(
+                    s,
+                    "    cp distribution: {} over {} ranks, imbalance {:.3} (max/mean) \
+                     on {} llm stage(s)",
+                    c.algorithm,
+                    c.cp,
+                    c.imbalance,
+                    self.stage_cp.len()
+                );
+            }
+            None => {
+                let _ = writeln!(s, "    cp distribution: none (cp = 1)");
+            }
+        }
+        let _ = writeln!(s, "    group utilization:");
+        for g in &self.groups {
+            let _ = writeln!(
+                s,
+                "      {:<10} x{:<2} {:>6.1}%",
+                g.device_class,
+                g.devices,
+                g.utilization * 100.0
+            );
+        }
+        s
+    }
+}
+
+/// Decompose `sim` (the trace of `plan`'s 1F1B schedule) into
+/// [`PlanAnalysis`]. `llm_tokens` and `cp` come from the workload and the
+/// winning candidate; they parameterize the cp-imbalance score, which
+/// reuses the tuner's deterministic pick
+/// ([`crate::tuner::evaluate::pick_cp_algorithm`] internals, same seed).
+///
+/// The task graph is rebuilt with [`onef1b_tasks`] — deterministic and
+/// index-aligned with `sim.trace`, because [`Plan::simulate`] uses the
+/// same constructor — to read each task's dependency edges back.
+pub fn analyze(
+    plan: &Plan,
+    sim: &SimResult,
+    cluster: &ClusterSpec,
+    llm_tokens: usize,
+    cp: usize,
+) -> PlanAnalysis {
+    let tasks = onef1b_tasks(&plan.graph, plan.num_microbatches);
+    debug_assert_eq!(tasks.len(), sim.trace.len());
+    let makespan = sim.makespan_ms;
+    let n_dev = sim.device_busy_ms.len();
+
+    // Device -> cluster group: stages sharing a device share a group.
+    let mut dev_group = vec![0usize; n_dev];
+    for (i, node) in plan.graph.nodes.iter().enumerate() {
+        if node.device < n_dev {
+            dev_group[node.device] = plan.stage_groups.get(i).copied().unwrap_or(0);
+        }
+    }
+    let class_of = |g: usize| -> String {
+        cluster
+            .groups
+            .get(g)
+            .map(|gr| gr.device.name.clone())
+            .unwrap_or_else(|| "?".to_string())
+    };
+
+    // Tasks per device in execution order (ties broken by task index —
+    // zero-duration frozen backwards can share a timestamp).
+    let mut per_dev: Vec<Vec<usize>> = vec![Vec::new(); n_dev];
+    for (i, tr) in sim.trace.iter().enumerate() {
+        if tr.device < n_dev {
+            per_dev[tr.device].push(i);
+        }
+    }
+    for order in &mut per_dev {
+        order.sort_by(|&a, &b| {
+            let (ta, tb) = (&sim.trace[a], &sim.trace[b]);
+            ta.start_ms
+                .total_cmp(&tb.start_ms)
+                .then(ta.end_ms.total_cmp(&tb.end_ms))
+                .then(a.cmp(&b))
+        });
+    }
+
+    let mut devices = Vec::with_capacity(n_dev);
+    let mut phases: Vec<PhaseBubble> = PHASES
+        .iter()
+        .map(|&phase| PhaseBubble { phase, idle_ms: 0.0, comm_ms: 0.0, span_ms: 0.0 })
+        .collect();
+
+    for d in 0..n_dev {
+        // This device's 1F1B phase boundaries: warm-up until its first
+        // backward starts, cool-down after its last forward ends. A
+        // frozen stage's 0 ms backwards still mark the boundary — the
+        // steady window exists, its bubbles are just cheap.
+        let mut first_bwd = makespan;
+        let mut last_fwd = 0.0f64;
+        let mut frozen = true;
+        for &i in &per_dev[d] {
+            let tr = &sim.trace[i];
+            match tr.kind {
+                TaskKind::Fwd => last_fwd = last_fwd.max(tr.end_ms),
+                TaskKind::Bwd => {
+                    first_bwd = first_bwd.min(tr.start_ms);
+                    if tasks[i].dur_ms > 0.0 {
+                        frozen = false;
+                    }
+                }
+            }
+        }
+        let warm_end = first_bwd.min(makespan);
+        let cool_start = last_fwd.max(warm_end).min(makespan);
+        let windows = [(0.0, warm_end), (warm_end, cool_start), (cool_start, makespan)];
+        for (p, &(a, b)) in windows.iter().enumerate() {
+            phases[p].span_ms += (b - a).max(0.0);
+        }
+
+        // A gap splits into comm vs idle by dependency latency, then
+        // across phase windows proportionally by interval overlap.
+        let mut split_gap = |a: f64, b: f64, comm_w: f64| {
+            let len = b - a;
+            if len <= 0.0 {
+                return;
+            }
+            let idle_w = len - comm_w;
+            for (p, &(p0, p1)) in windows.iter().enumerate() {
+                let ov = (b.min(p1) - a.max(p0)).max(0.0);
+                if ov <= 0.0 {
+                    continue;
+                }
+                let frac = ov / len;
+                phases[p].comm_ms += comm_w * frac;
+                phases[p].idle_ms += idle_w * frac;
+            }
+        };
+
+        let mut compute = 0.0f64;
+        let mut comm = 0.0f64;
+        let mut idle = 0.0f64;
+        let mut prev_end = 0.0f64;
+        for &i in &per_dev[d] {
+            let tr = &sim.trace[i];
+            let gap = tr.start_ms - prev_end;
+            if gap > 0.0 {
+                // How much of the gap was spent waiting on an in-flight
+                // activation? The device could not have started earlier
+                // than when all deps *with* their edge latency were in —
+                // the slice past max(prev task end, deps-without-latency)
+                // is comm-bound; the rest is bubble.
+                let mut ready_no_comm = 0.0f64;
+                let mut ready_with_comm = 0.0f64;
+                for &(dep, lat) in &tasks[i].deps {
+                    ready_no_comm = ready_no_comm.max(sim.trace[dep].end_ms);
+                    ready_with_comm = ready_with_comm.max(sim.trace[dep].end_ms + lat);
+                }
+                let comm_w =
+                    (ready_with_comm - prev_end.max(ready_no_comm)).clamp(0.0, gap);
+                comm += comm_w;
+                idle += gap - comm_w;
+                split_gap(prev_end, tr.start_ms, comm_w);
+            }
+            compute += tr.end_ms - tr.start_ms;
+            prev_end = prev_end.max(tr.end_ms);
+        }
+        if makespan > prev_end {
+            idle += makespan - prev_end;
+            split_gap(prev_end, makespan, 0.0);
+        }
+
+        let group = dev_group[d];
+        devices.push(DeviceDecomposition {
+            device: d,
+            group,
+            device_class: class_of(group),
+            compute_ms: compute,
+            comm_ms: comm,
+            idle_ms: idle,
+            frozen,
+        });
+    }
+
+    // cp imbalance: same mask, seed, and winner rule as the tuner's
+    // cp_algorithm pick, so `explain` names the distribution the cached
+    // plan actually reports.
+    let mut stage_cp = Vec::new();
+    if cp > 1 {
+        let w = cp_block_workloads(llm_tokens, CP_PICK_SEED);
+        let alg = pick_cp_over(&w, cp);
+        let loads = rank_loads(&w, &alg.assign(&w, cp), cp);
+        let max = loads.iter().copied().max().unwrap_or(0) as f64;
+        let mean = loads.iter().sum::<u64>() as f64 / cp as f64;
+        let imbalance = if mean > 0.0 { max / mean } else { 1.0 };
+        for name in &plan.stage_names {
+            if name.starts_with("llm") {
+                stage_cp.push(CpStageImbalance {
+                    stage: name.clone(),
+                    algorithm: alg.name().to_string(),
+                    cp,
+                    imbalance,
+                });
+            }
+        }
+    }
+
+    let groups = cluster
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(gi, gr)| {
+            let devs: Vec<usize> = (0..n_dev).filter(|&d| dev_group[d] == gi).collect();
+            let utilization = if devs.is_empty() || makespan <= 0.0 {
+                0.0
+            } else {
+                devs.iter().map(|&d| sim.device_busy_ms[d] / makespan).sum::<f64>()
+                    / devs.len() as f64
+            };
+            GroupUtilization {
+                group: gi,
+                device_class: gr.device.name.clone(),
+                devices: devs.len(),
+                utilization,
+            }
+        })
+        .collect();
+
+    PlanAnalysis { makespan_ms: makespan, devices, phases, stage_cp, groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::PlanRequest;
+    use crate::model::{MllmSpec, Size};
+    use crate::tuner::{build_plan, Candidate, FrozenSetting};
+
+    fn analyzed(cand: &Candidate) -> (Plan, PlanAnalysis) {
+        let spec = MllmSpec::vlm(Size::S, Size::S);
+        let cluster = PlanRequest::default_for(spec.clone()).cluster;
+        let plan = build_plan(&spec, cand, &cluster);
+        let m = plan.simulate();
+        let a = analyze(&plan, &m.sim, &cluster, spec.llm_tokens(), cand.cp);
+        (plan, a)
+    }
+
+    fn cand(cp: usize, frozen: FrozenSetting) -> Candidate {
+        Candidate {
+            strategy: crate::modality::Strategy::Cornstarch,
+            enc_pps: vec![1],
+            llm_pp: 2,
+            tp: 1,
+            cp,
+            num_microbatches: 4,
+            frozen,
+            chain_groups: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn decomposition_sums_to_makespan() {
+        let (_, a) = analyzed(&cand(1, FrozenSetting::Paper));
+        assert!(!a.devices.is_empty());
+        for d in &a.devices {
+            assert!(
+                (d.total_ms() - a.makespan_ms).abs() < 1e-9,
+                "dev {}: {} vs {}",
+                d.device,
+                d.total_ms(),
+                a.makespan_ms
+            );
+            assert!(d.compute_ms >= 0.0 && d.comm_ms >= 0.0 && d.idle_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn phase_windows_cover_all_devices() {
+        let (_, a) = analyzed(&cand(1, FrozenSetting::Paper));
+        let span: f64 = a.phases.iter().map(|p| p.span_ms).sum();
+        let expect = a.makespan_ms * a.devices.len() as f64;
+        assert!((span - expect).abs() < 1e-6, "{span} vs {expect}");
+        let phase_idle: f64 = a.phases.iter().map(|p| p.idle_ms).sum();
+        assert!((phase_idle - a.total_idle_ms()).abs() < 1e-6);
+        let phase_comm: f64 = a.phases.iter().map(|p| p.comm_ms).sum();
+        assert!((phase_comm - a.total_comm_ms()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cp_entries_only_when_distributing() {
+        let (_, off) = analyzed(&cand(1, FrozenSetting::Paper));
+        assert!(off.stage_cp.is_empty());
+        let (plan, on) = analyzed(&cand(2, FrozenSetting::Paper));
+        let n_llm = plan.stage_names.iter().filter(|n| n.starts_with("llm")).count();
+        assert_eq!(on.stage_cp.len(), n_llm);
+        for c in &on.stage_cp {
+            assert!(c.imbalance >= 1.0 - 1e-12, "{}", c.imbalance);
+            assert_eq!(c.cp, 2);
+        }
+    }
+
+    #[test]
+    fn frozen_encoder_devices_are_flagged() {
+        // Paper policy freezes the vision encoder: its device runs only
+        // 0 ms backwards. The trainable LLM devices must not be flagged.
+        let (plan, a) = analyzed(&cand(1, FrozenSetting::Paper));
+        let enc_dev = plan.graph.nodes[plan
+            .stage_names
+            .iter()
+            .position(|n| n.starts_with("enc:"))
+            .unwrap()]
+        .device;
+        let llm_dev = plan.graph.nodes[plan
+            .stage_names
+            .iter()
+            .position(|n| n.starts_with("llm"))
+            .unwrap()]
+        .device;
+        assert!(a.devices[enc_dev].frozen);
+        assert!(!a.devices[llm_dev].frozen);
+    }
+
+    #[test]
+    fn json_roundtrips_and_is_deterministic() {
+        let (_, a) = analyzed(&cand(2, FrozenSetting::Paper));
+        let (_, b) = analyzed(&cand(2, FrozenSetting::Paper));
+        assert_eq!(a, b);
+        let text = a.to_json().render();
+        assert_eq!(text, b.to_json().render());
+        let parsed = Json::parse(&text).expect("explain JSON parses");
+        assert!(parsed.get("devices").is_some());
+        assert!(!a.render().is_empty());
+    }
+}

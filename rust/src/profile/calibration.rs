@@ -1,0 +1,356 @@
+//! Sim-to-real calibration: measured PJRT stage times vs the flops model.
+//!
+//! A [`CalibrationProfile`] records per-stage forward / backward / update
+//! wall times from a real [`crate::train::PipelineTrainer`] run
+//! (`cornstarch calibrate`), serialized as JSON keyed by device class.
+//! [`drift`] joins a profile against a plan's modeled
+//! [`crate::pipeline::StageCost`]s and reports the per-stage relative
+//! error plus the makespan under each timing source; [`recost`] produces
+//! a plan whose stage times come from the profile instead of the model
+//! (through [`crate::cost::MeasuredTimes`]), so the simulator can replay
+//! the same schedule on measured reality.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::cost::MeasuredTimes;
+use crate::modality::Plan;
+use crate::pipeline::StageCost;
+use crate::train::PipelineTrainer;
+use crate::util::json::Json;
+
+/// Schema tag every profile JSON carries (validated on parse and in CI).
+pub const SCHEMA: &str = "cornstarch-calibration/v1";
+
+/// Max per-stage relative fwd+bwd error the golden drift test tolerates.
+pub const DRIFT_TOLERANCE: f64 = 0.05;
+
+/// Measured times of one pipeline stage, per microbatch (`upd_ms` is
+/// per step — the optimizer runs once however many microbatches flow).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSample {
+    /// Planner-style stage name (`enc:vision[0]`, `llm[1]`, …).
+    pub stage: String,
+    pub fwd_ms: f64,
+    pub bwd_ms: f64,
+    pub upd_ms: f64,
+}
+
+/// A set of measured stage times for one device class.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CalibrationProfile {
+    /// Device class the measurements were taken on (`A40`, `cpu-pjrt`, …).
+    pub device_class: String,
+    pub samples: Vec<StageSample>,
+}
+
+impl CalibrationProfile {
+    /// Snapshot the last completed step of a live pipeline: cumulative
+    /// fwd/bwd divided by the step's microbatch count, update as-is.
+    pub fn from_pipeline(pipe: &PipelineTrainer, device_class: &str) -> CalibrationProfile {
+        let m = pipe.last_microbatches.max(1) as f64;
+        let samples = pipe
+            .stage_names()
+            .into_iter()
+            .enumerate()
+            .map(|(i, stage)| StageSample {
+                stage,
+                fwd_ms: pipe.stage_fwd_ms.get(i).copied().unwrap_or(0.0) / m,
+                bwd_ms: pipe.stage_bwd_ms.get(i).copied().unwrap_or(0.0) / m,
+                upd_ms: pipe.stage_upd_ms.get(i).copied().unwrap_or(0.0),
+            })
+            .collect();
+        CalibrationProfile { device_class: device_class.to_string(), samples }
+    }
+
+    pub fn stage(&self, name: &str) -> Option<&StageSample> {
+        self.samples.iter().find(|s| s.stage == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("device_class", Json::Str(self.device_class.clone())),
+            (
+                "stages",
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("stage", Json::Str(s.stage.clone())),
+                                ("fwd_ms", Json::Num(s.fwd_ms)),
+                                ("bwd_ms", Json::Num(s.bwd_ms)),
+                                ("upd_ms", Json::Num(s.upd_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Validate + decode a parsed profile document; rejects wrong or
+    /// missing schema tags and negative / non-finite times.
+    pub fn from_json(j: &Json) -> Result<CalibrationProfile, String> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("profile missing `schema`")?;
+        if schema != SCHEMA {
+            return Err(format!("unsupported profile schema {schema:?} (want {SCHEMA})"));
+        }
+        let device_class = j
+            .get("device_class")
+            .and_then(Json::as_str)
+            .ok_or("profile missing `device_class`")?
+            .to_string();
+        let stages = j
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or("profile missing `stages` array")?;
+        let mut samples = Vec::with_capacity(stages.len());
+        for s in stages {
+            let stage = s
+                .get("stage")
+                .and_then(Json::as_str)
+                .ok_or("stage entry missing `stage`")?
+                .to_string();
+            let num = |k: &str| -> Result<f64, String> {
+                let v = s
+                    .get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("stage {stage:?} missing `{k}`"))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("stage {stage:?} `{k}` must be finite and >= 0"));
+                }
+                Ok(v)
+            };
+            let fwd_ms = num("fwd_ms")?;
+            let bwd_ms = num("bwd_ms")?;
+            let upd_ms = num("upd_ms")?;
+            samples.push(StageSample { stage, fwd_ms, bwd_ms, upd_ms });
+        }
+        Ok(CalibrationProfile { device_class, samples })
+    }
+
+    pub fn parse(text: &str) -> Result<CalibrationProfile, String> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &Path) -> Result<CalibrationProfile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().render())
+    }
+
+    /// The per-stage override table `cost` consumes ([`MeasuredTimes`]):
+    /// fwd/bwd only — update time is off the 1F1B critical path the
+    /// simulator models.
+    pub fn measured_times(&self) -> MeasuredTimes {
+        let mut t = MeasuredTimes::default();
+        for s in &self.samples {
+            t.insert(&s.stage, StageCost { fwd_ms: s.fwd_ms, bwd_ms: s.bwd_ms });
+        }
+        t
+    }
+}
+
+/// One stage's modeled-vs-measured comparison (fwd+bwd, per microbatch).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageDrift {
+    pub stage: String,
+    /// Flops-model fwd+bwd of the plan's stage.
+    pub sim_ms: f64,
+    /// Profiled fwd+bwd.
+    pub measured_ms: f64,
+    /// `|sim - measured| / measured` (1.0 when only one side is zero).
+    pub rel_err: f64,
+}
+
+/// Sim-vs-measured report for a whole plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftReport {
+    pub device_class: String,
+    pub stages: Vec<StageDrift>,
+    /// Worst per-stage relative error (0 when nothing matched).
+    pub max_rel_err: f64,
+    /// Simulated makespan under the flops model…
+    pub sim_makespan_ms: f64,
+    /// …and under the measured stage times ([`recost`]).
+    pub measured_makespan_ms: f64,
+    /// Plan stages with no sample in the profile (excluded from drift).
+    pub unmatched: Vec<String>,
+}
+
+impl DriftReport {
+    pub fn within(&self, tol: f64) -> bool {
+        self.max_rel_err <= tol
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "  drift vs profile ({}): max stage error {:.1}%, makespan {:.2} ms \
+             (model) vs {:.2} ms (measured)",
+            self.device_class,
+            self.max_rel_err * 100.0,
+            self.sim_makespan_ms,
+            self.measured_makespan_ms
+        );
+        for d in &self.stages {
+            let _ = writeln!(
+                s,
+                "      {:<16} model {:>9.2} ms  measured {:>9.2} ms  err {:>6.1}%",
+                d.stage,
+                d.sim_ms,
+                d.measured_ms,
+                d.rel_err * 100.0
+            );
+        }
+        if !self.unmatched.is_empty() {
+            let _ = writeln!(s, "      unmatched stages: {}", self.unmatched.join(", "));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device_class", Json::Str(self.device_class.clone())),
+            ("max_rel_err", Json::Num(self.max_rel_err)),
+            ("sim_makespan_ms", Json::Num(self.sim_makespan_ms)),
+            ("measured_makespan_ms", Json::Num(self.measured_makespan_ms)),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("stage", Json::Str(d.stage.clone())),
+                                ("sim_ms", Json::Num(d.sim_ms)),
+                                ("measured_ms", Json::Num(d.measured_ms)),
+                                ("rel_err", Json::Num(d.rel_err)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "unmatched",
+                Json::Arr(self.unmatched.iter().map(|u| Json::Str(u.clone())).collect()),
+            ),
+        ])
+    }
+}
+
+/// Compare `plan`'s modeled stage times against `profile`, stage name by
+/// stage name, and simulate the plan under both timing sources.
+pub fn drift(plan: &Plan, profile: &CalibrationProfile) -> DriftReport {
+    let mut stages = Vec::new();
+    let mut unmatched = Vec::new();
+    let mut max_rel = 0.0f64;
+    for (name, node) in plan.stage_names.iter().zip(&plan.graph.nodes) {
+        match profile.stage(name) {
+            Some(s) => {
+                let sim_ms = node.cost.total();
+                let measured_ms = s.fwd_ms + s.bwd_ms;
+                let rel_err = if measured_ms > 0.0 {
+                    (sim_ms - measured_ms).abs() / measured_ms
+                } else if sim_ms > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                };
+                max_rel = max_rel.max(rel_err);
+                stages.push(StageDrift { stage: name.clone(), sim_ms, measured_ms, rel_err });
+            }
+            None => unmatched.push(name.clone()),
+        }
+    }
+    DriftReport {
+        device_class: profile.device_class.clone(),
+        stages,
+        max_rel_err: max_rel,
+        sim_makespan_ms: plan.simulate().iteration_ms,
+        measured_makespan_ms: recost(plan, profile).simulate().iteration_ms,
+        unmatched,
+    }
+}
+
+/// A copy of `plan` whose matched stage costs come from `profile` instead
+/// of the flops model. Unmatched stages keep their modeled cost.
+pub fn recost(plan: &Plan, profile: &CalibrationProfile) -> Plan {
+    let mut out = plan.clone();
+    profile.measured_times().apply(&mut out.graph, &plan.stage_names);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> CalibrationProfile {
+        CalibrationProfile {
+            device_class: "A40".to_string(),
+            samples: vec![
+                StageSample {
+                    stage: "llm[0]".to_string(),
+                    fwd_ms: 10.0,
+                    bwd_ms: 20.0,
+                    upd_ms: 3.0,
+                },
+                StageSample {
+                    stage: "enc:vision[0]".to_string(),
+                    fwd_ms: 5.0,
+                    bwd_ms: 0.0,
+                    upd_ms: 0.5,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_profile() {
+        let p = profile();
+        let text = p.to_json().render();
+        let back = CalibrationProfile::parse(&text).expect("parses");
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn wrong_schema_is_rejected() {
+        let mut j = profile().to_json();
+        if let Json::Obj(pairs) = &mut j {
+            for (k, v) in pairs.iter_mut() {
+                if k == "schema" {
+                    *v = Json::Str("cornstarch-calibration/v0".to_string());
+                }
+            }
+        }
+        let err = CalibrationProfile::from_json(&j).unwrap_err();
+        assert!(err.contains("unsupported"), "{err}");
+    }
+
+    #[test]
+    fn negative_times_are_rejected() {
+        let text = r#"{"schema": "cornstarch-calibration/v1",
+            "device_class": "A40",
+            "stages": [{"stage": "llm[0]", "fwd_ms": -1, "bwd_ms": 0, "upd_ms": 0}]}"#;
+        assert!(CalibrationProfile::parse(text).is_err());
+    }
+
+    #[test]
+    fn measured_times_keep_fwd_bwd_only() {
+        let t = profile().measured_times();
+        assert_eq!(t.len(), 2);
+        let c = t.get("llm[0]").unwrap();
+        assert_eq!(c.fwd_ms, 10.0);
+        assert_eq!(c.bwd_ms, 20.0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Plan explainability + sim-to-real calibration.
+//!
+//! Two halves, one seam:
+//!
+//! * [`analysis`] — *why did this plan win?* Decomposes a plan's
+//!   simulated 1F1B trace into per-device compute / comm / idle (summing
+//!   exactly to the makespan), frozen-aware bubble attribution per 1F1B
+//!   phase (warm-up / steady / cool-down), the winner's cp
+//!   token-imbalance ([`crate::cp`]), and per-group utilization on
+//!   heterogeneous pools. Every [`crate::api::PlanReport`] carries a
+//!   [`PlanAnalysis`]; `cornstarch explain` renders it (or emits it as
+//!   JSON), and `explain --vs-*` diffs two decompositions through
+//!   [`crate::api::PlanDiff`].
+//! * [`calibration`] — *is the simulator honest?* `cornstarch calibrate`
+//!   records measured per-stage fwd/bwd/update wall times from the real
+//!   PJRT 1F1B executor ([`crate::train::PipelineTrainer`]) into a
+//!   [`CalibrationProfile`] (JSON, per device class; needs `make
+//!   artifacts`). [`drift`] scores the flops model against a profile per
+//!   stage, and [`recost`] re-prices a plan with measured times via
+//!   [`crate::cost::MeasuredTimes`] — the profile format is the seam
+//!   future backends feed timings through.
+
+pub mod analysis;
+pub mod calibration;
+
+pub use analysis::{
+    analyze, CpStageImbalance, DeviceDecomposition, GroupUtilization, PhaseBubble,
+    PlanAnalysis, PHASES,
+};
+pub use calibration::{
+    drift, recost, CalibrationProfile, DriftReport, StageDrift, StageSample,
+    DRIFT_TOLERANCE, SCHEMA,
+};

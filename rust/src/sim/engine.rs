@@ -10,13 +10,23 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::pipeline::TaskSpec;
+use crate::pipeline::{TaskKind, TaskSpec};
 
-/// Per-task execution record.
+/// Per-task execution record. Carries enough of the originating
+/// [`TaskSpec`] (device, stage, microbatch, kind) that a trace can be
+/// decomposed — per device, per 1F1B phase, per stage — without holding
+/// on to the task list it was simulated from (see [`crate::profile`]).
 #[derive(Clone, Copy, Debug)]
 pub struct TaskTrace {
     pub start_ms: f64,
     pub end_ms: f64,
+    /// Device the task executed on (index into `device_busy_ms`).
+    pub device: usize,
+    /// Stage index in the originating [`crate::pipeline::StageGraph`].
+    pub stage: usize,
+    pub microbatch: usize,
+    /// Forward or backward (§4.2 frozen backwards appear with 0 ms).
+    pub kind: TaskKind,
 }
 
 /// Simulation output.
@@ -65,7 +75,17 @@ pub fn simulate(tasks: &[TaskSpec]) -> SimResult {
 
     let mut device_free = vec![0.0f64; n_dev];
     let mut device_busy = vec![0.0f64; n_dev];
-    let mut trace = vec![TaskTrace { start_ms: 0.0, end_ms: 0.0 }; n];
+    let mut trace: Vec<TaskTrace> = tasks
+        .iter()
+        .map(|t| TaskTrace {
+            start_ms: 0.0,
+            end_ms: 0.0,
+            device: t.device,
+            stage: t.stage,
+            microbatch: t.microbatch,
+            kind: t.kind,
+        })
+        .collect();
     let mut done = vec![false; n];
     let mut n_done = 0usize;
 
@@ -105,7 +125,8 @@ pub fn simulate(tasks: &[TaskSpec]) -> SimResult {
         if let Some(i) = chosen {
             let start = now.max(ready_at[i]);
             let end = start + tasks[i].dur_ms;
-            trace[i] = TaskTrace { start_ms: start, end_ms: end };
+            trace[i].start_ms = start;
+            trace[i].end_ms = end;
             device_free[dev] = end;
             device_busy[dev] += tasks[i].dur_ms;
             events.push(Reverse((F(end), i)));

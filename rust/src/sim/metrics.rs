@@ -2,16 +2,22 @@
 
 use super::engine::SimResult;
 
-/// Fraction of device-time spent idle (pipeline bubbles) across the
-/// devices that had any work.
+/// Fraction of device-time spent idle (pipeline bubbles) across **all**
+/// devices in the result.
+///
+/// Semantics note: this used to drop zero-busy devices from the
+/// denominator, which silently hid stranded hardware — a plan that left
+/// a device fully idle looked *better* than one that gave it a little
+/// work. A fully idle device now counts as 100% bubble, matching the
+/// `bubble_ratio` reported by `Plan::simulate` (busy over
+/// `makespan × n_devices`).
 pub fn bubble_fraction(r: &SimResult) -> f64 {
-    let active: Vec<&f64> =
-        r.device_busy_ms.iter().filter(|&&b| b > 0.0).collect();
-    if active.is_empty() || r.makespan_ms == 0.0 {
+    let n = r.device_busy_ms.len();
+    if n == 0 || r.makespan_ms == 0.0 {
         return 0.0;
     }
-    let busy: f64 = active.iter().copied().sum();
-    let capacity = r.makespan_ms * active.len() as f64;
+    let busy: f64 = r.device_busy_ms.iter().sum();
+    let capacity = r.makespan_ms * n as f64;
     (capacity - busy) / capacity
 }
 
@@ -25,10 +31,22 @@ pub fn throughput_per_gpu(r: &SimResult, samples: usize, n_gpus: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::TaskKind;
     use crate::sim::engine::TaskTrace;
 
     fn res(makespan: f64, busy: Vec<f64>) -> SimResult {
-        SimResult { makespan_ms: makespan, device_busy_ms: busy, trace: vec![TaskTrace { start_ms: 0.0, end_ms: 0.0 }] }
+        SimResult {
+            makespan_ms: makespan,
+            device_busy_ms: busy,
+            trace: vec![TaskTrace {
+                start_ms: 0.0,
+                end_ms: 0.0,
+                device: 0,
+                stage: 0,
+                microbatch: 0,
+                kind: TaskKind::Fwd,
+            }],
+        }
     }
 
     #[test]
@@ -40,8 +58,14 @@ mod tests {
     #[test]
     fn half_idle() {
         let r = res(10.0, vec![10.0, 0.0, 5.0]);
-        // devices with work: 10 and 5 busy of 2*10 capacity
-        assert!((bubble_fraction(&r) - 0.25).abs() < 1e-12);
+        // 15 busy of 3*10 capacity: the idle device counts
+        assert!((bubble_fraction(&r) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fully_idle_device_is_all_bubble() {
+        let r = res(10.0, vec![0.0]);
+        assert!((bubble_fraction(&r) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -50,9 +50,25 @@ enum Msg {
 
 /// Stage -> coordinator report.
 enum Report {
-    Loss { mb: usize, loss: f32 },
-    StageDone { stage: usize, peak_stash: usize, exec_ms: f64 },
-    Error { stage: usize, message: String },
+    Loss {
+        mb: usize,
+        loss: f32,
+    },
+    /// Per-role wall times are the raw material for a
+    /// [`crate::profile::CalibrationProfile`]: fwd/bwd are cumulative
+    /// over the step's microbatches, upd is the one optimizer pass.
+    StageDone {
+        stage: usize,
+        peak_stash: usize,
+        exec_ms: f64,
+        fwd_ms: f64,
+        bwd_ms: f64,
+        upd_ms: f64,
+    },
+    Error {
+        stage: usize,
+        message: String,
+    },
 }
 
 /// What one stage runs.
@@ -97,6 +113,15 @@ pub struct PipelineTrainer {
     pub peak_stash: Vec<usize>,
     /// Cumulative PJRT execute ms per stage, last step.
     pub stage_exec_ms: Vec<f64>,
+    /// Cumulative forward PJRT ms per stage, last step (all microbatches).
+    pub stage_fwd_ms: Vec<f64>,
+    /// Cumulative backward PJRT ms per stage, last step (`Bwd` + `BwdIn`).
+    pub stage_bwd_ms: Vec<f64>,
+    /// Optimizer (AdamW) PJRT ms per stage, last step.
+    pub stage_upd_ms: Vec<f64>,
+    /// Microbatch count of the last completed step (normalizes the
+    /// cumulative fwd/bwd times to per-microbatch samples).
+    pub last_microbatches: usize,
 }
 
 impl PipelineTrainer {
@@ -189,11 +214,28 @@ impl PipelineTrainer {
             inflight_limit: n_stages + 1,
             peak_stash: vec![0; n_stages],
             stage_exec_ms: vec![0.0; n_stages],
+            stage_fwd_ms: vec![0.0; n_stages],
+            stage_bwd_ms: vec![0.0; n_stages],
+            stage_upd_ms: vec![0.0; n_stages],
+            last_microbatches: 0,
         })
     }
 
     pub fn n_stages(&self) -> usize {
         self.n_stages
+    }
+
+    /// Stage names in stage-id order, matching the planner's naming
+    /// (`enc:vision[0]`, `llm[0]`, …) so a calibration profile recorded
+    /// here joins a plan's `stage_names` by exact string
+    /// ([`crate::profile::CalibrationProfile`]).
+    pub fn stage_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.feeders.iter().map(|(comp, _)| format!("{comp}[0]")).collect();
+        for i in 0..self.n_stages - self.feeders.len() {
+            names.push(format!("llm[{i}]"));
+        }
+        names
     }
 
     pub fn model_name(&self) -> &str {
@@ -284,9 +326,19 @@ impl PipelineTrainer {
         let mut done = 0usize;
         while done < self.n_stages {
             match self.report_rx.recv() {
-                Ok(Report::StageDone { stage, peak_stash, exec_ms }) => {
+                Ok(Report::StageDone {
+                    stage,
+                    peak_stash,
+                    exec_ms,
+                    fwd_ms,
+                    bwd_ms,
+                    upd_ms,
+                }) => {
                     self.peak_stash[stage] = peak_stash;
                     self.stage_exec_ms[stage] = exec_ms;
+                    self.stage_fwd_ms[stage] = fwd_ms;
+                    self.stage_bwd_ms[stage] = bwd_ms;
+                    self.stage_upd_ms[stage] = upd_ms;
                     done += 1;
                 }
                 Ok(Report::Error { stage, message }) => {
@@ -298,6 +350,7 @@ impl PipelineTrainer {
         }
 
         self.step += 1;
+        self.last_microbatches = m;
         let loss = losses.iter().sum::<f32>() / m as f32;
         anyhow::ensure!(loss.is_finite(), "non-finite step loss");
         Ok(StepStats {
@@ -446,12 +499,19 @@ fn stage_loop(ctx: &mut StageCtx, rx: Receiver<Msg>) -> Result<()> {
                     }
                 }
                 let exec_ms: f64 = ctx.rt.exec_ms.values().sum();
+                let role_ms = |r: Role| ctx.rt.exec_ms.get(&r).copied().unwrap_or(0.0);
+                let fwd_ms = role_ms(Role::Fwd);
+                let bwd_ms = role_ms(Role::Bwd) + role_ms(Role::BwdIn);
+                let upd_ms = role_ms(Role::Upd);
                 ctx.rt.exec_ms.clear();
                 ctx.report
                     .send(Report::StageDone {
                         stage: ctx.stage_id,
                         peak_stash,
                         exec_ms,
+                        fwd_ms,
+                        bwd_ms,
+                        upd_ms,
                     })
                     .ok();
                 stash.clear();
@@ -769,6 +829,7 @@ fn run_stage_bwd_from_stash(
 #[cfg(all(test, feature = "artifacts"))]
 mod tests {
     use super::*;
+    use crate::profile::CalibrationProfile;
     use crate::train::{SyntheticDataset, Trainer};
 
     fn manifest() -> Manifest {
@@ -817,6 +878,42 @@ mod tests {
             last = pipe.train_step(&batch).unwrap();
         }
         assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+    }
+
+    /// The per-role wall times carried back by `StageDone` must account
+    /// for the whole cumulative exec time and normalize into a
+    /// [`crate::profile::CalibrationProfile`] keyed by planner-style
+    /// stage names.
+    #[test]
+    fn calibration_profile_records_per_role_times() {
+        let mf = manifest();
+        let mut pipe =
+            PipelineTrainer::new(&mf, "tiny", FrozenPolicy::paper(), 1e-3)
+                .unwrap();
+        let model = mf.model("tiny").unwrap().clone();
+        let ds = SyntheticDataset::new(&model, 9);
+        let batch: Vec<_> = (0..2).map(|i| ds.sample(i)).collect();
+        pipe.train_step(&batch).unwrap();
+        assert_eq!(pipe.last_microbatches, 2);
+        let prof = CalibrationProfile::from_pipeline(&pipe, "cpu-pjrt");
+        assert_eq!(prof.samples.len(), pipe.n_stages());
+        assert!(prof.samples.iter().any(|s| s.stage.starts_with("llm[")));
+        for (i, s) in prof.samples.iter().enumerate() {
+            let whole = pipe.stage_exec_ms[i];
+            let parts = pipe.stage_fwd_ms[i]
+                + pipe.stage_bwd_ms[i]
+                + pipe.stage_upd_ms[i];
+            assert!(
+                (whole - parts).abs() < 1e-6,
+                "stage {}: exec {whole} ms vs role sum {parts} ms",
+                s.stage
+            );
+            assert!(s.fwd_ms > 0.0, "stage {} measured no fwd time", s.stage);
+        }
+        // round-trips through the JSON schema
+        let back =
+            CalibrationProfile::parse(&prof.to_json().render()).unwrap();
+        assert_eq!(prof, back);
     }
 
     #[test]

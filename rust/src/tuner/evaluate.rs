@@ -226,6 +226,36 @@ pub fn evaluate_parallel(
         .collect()
 }
 
+/// Seed every cp-algorithm pick derives its sample mask from — pinned so
+/// the tuner, the plan cache, and [`crate::profile`] all score the same
+/// workload.
+pub const CP_PICK_SEED: u64 = 0x7EAC_0DE5;
+
+/// The blocked EE-style token workload cp algorithms are scored on:
+/// deterministic in `(tokens, seed)`.
+pub fn cp_block_workloads(tokens: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    // Round up to a mask the generators accept comfortably.
+    let t = tokens.max(256);
+    let mask = bam::generators::random_ee(&mut rng, t, 3);
+    bam::block_workloads(&mask.workloads(), 128)
+}
+
+/// Best of LPT / Zigzag / Ring on `w` by simulated max-rank workload
+/// (first wins ties, so the pick is deterministic).
+pub fn pick_cp_over(w: &[u64], cp: usize) -> Algorithm {
+    let mut best = Algorithm::Lpt;
+    let mut best_mk = u64::MAX;
+    for alg in [Algorithm::Lpt, Algorithm::Zigzag, Algorithm::Ring] {
+        let mk = makespan(w, &alg.assign(w, cp), cp);
+        if mk < best_mk {
+            best_mk = mk;
+            best = alg;
+        }
+    }
+    best
+}
+
 /// Pick the CP token-distribution algorithm for the tuned plan: sample an
 /// EE-style multimodal mask at the workload's LLM sequence length and keep
 /// the algorithm with the smallest simulated max-rank workload (§4.3.2).
@@ -234,19 +264,7 @@ pub fn pick_cp_algorithm(tokens: usize, cp: usize, seed: u64) -> &'static str {
     if cp <= 1 {
         return "none";
     }
-    let mut rng = Rng::new(seed);
-    // Round up to a mask the generators accept comfortably.
-    let t = tokens.max(256);
-    let mask = bam::generators::random_ee(&mut rng, t, 3);
-    let w = bam::block_workloads(&mask.workloads(), 128);
-    let mut best = ("LPT", u64::MAX);
-    for alg in [Algorithm::Lpt, Algorithm::Zigzag, Algorithm::Ring] {
-        let mk = makespan(&w, &alg.assign(&w, cp), cp);
-        if mk < best.1 {
-            best = (alg.name(), mk);
-        }
-    }
-    best.0
+    pick_cp_over(&cp_block_workloads(tokens, seed), cp).name()
 }
 
 #[cfg(test)]

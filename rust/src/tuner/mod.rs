@@ -246,7 +246,7 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
             cp_algorithm: evaluate::pick_cp_algorithm(
                 req.spec.llm_tokens(),
                 ev.candidate.cp,
-                0x7EAC_0DE5,
+                evaluate::CP_PICK_SEED,
             )
             .to_string(),
         })

@@ -1,0 +1,287 @@
+//! The profile layer's contract:
+//!
+//! * the decomposition invariant — per device, compute + comm + idle
+//!   equals the makespan to 1e-9, over random candidates on both pool
+//!   kinds (homogeneous A40, mixed A40+A100);
+//! * `explain --json` is byte-stable across runs of the real binary;
+//! * sim-to-real drift is pinned by a golden tolerance: a profile a few
+//!   percent off the flops model stays within `DRIFT_TOLERANCE`, and a
+//!   recosted plan has ~zero residual drift;
+//! * the checked-in sample `CalibrationProfile` parses under its schema
+//!   (CI also validates it with an independent Python check).
+
+use cornstarch::api::{ClusterSpec, PlanRequest, PlanningService};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::modality::Strategy;
+use cornstarch::profile::{
+    analyze, drift, recost, CalibrationProfile, StageSample, DRIFT_TOLERANCE,
+};
+use cornstarch::tuner::{build_plan, Candidate, FrozenSetting};
+use cornstarch::util::check::{check, Gen};
+use cornstarch::util::json::Json;
+
+fn random_spec(g: &mut Gen) -> MllmSpec {
+    match g.usize(0, 3) {
+        0 => MllmSpec::vlm(Size::M, Size::M),
+        1 => MllmSpec::alm(Size::M, Size::S),
+        _ => MllmSpec::valm(Size::S, Size::M, Size::M),
+    }
+}
+
+fn random_candidate(g: &mut Gen, spec: &MllmSpec, n_groups: usize) -> Candidate {
+    let n_enc = spec.vision.is_some() as usize + spec.audio.is_some() as usize;
+    let strategy = match g.usize(0, 3) {
+        0 => Strategy::Cornstarch,
+        1 => Strategy::Colocated,
+        _ => Strategy::Replicated,
+    };
+    let enc_pps: Vec<usize> = match strategy {
+        Strategy::Replicated => Vec::new(),
+        Strategy::Colocated => vec![g.usize(1, 4); n_enc],
+        Strategy::Cornstarch => (0..n_enc).map(|_| g.usize(1, 4)).collect(),
+    };
+    let chain_groups = if n_groups <= 1 {
+        Vec::new()
+    } else {
+        match strategy {
+            Strategy::Replicated => vec![g.usize(0, n_groups)],
+            Strategy::Colocated => {
+                let ge = g.usize(0, n_groups);
+                let mut v = vec![ge; n_enc];
+                v.push(g.usize(0, n_groups));
+                v
+            }
+            Strategy::Cornstarch => {
+                (0..=n_enc).map(|_| g.usize(0, n_groups)).collect()
+            }
+        }
+    };
+    Candidate {
+        strategy,
+        enc_pps,
+        llm_pp: g.usize(1, 5),
+        tp: 1 << g.usize(0, 2),
+        cp: 1 << g.usize(0, 2),
+        num_microbatches: g.usize(1, 17),
+        frozen: FrozenSetting::ALL[g.usize(0, 3)],
+        chain_groups,
+    }
+}
+
+/// The tentpole invariant: the decomposition is exact. Every simulated
+/// millisecond of every device lands in exactly one of compute / comm /
+/// idle, on homogeneous and heterogeneous pools alike.
+#[test]
+fn decomposition_sums_to_makespan_on_random_candidates() {
+    let clusters = [ClusterSpec::a40_default(), ClusterSpec::a40_a100_demo()];
+    check("profile: compute+comm+idle == makespan", 60, |g| {
+        let spec = random_spec(g);
+        let cluster = &clusters[g.usize(0, clusters.len())];
+        let cand = random_candidate(g, &spec, cluster.groups.len());
+        let plan = build_plan(&spec, &cand, cluster);
+        let m = plan.simulate();
+        let a = analyze(&plan, &m.sim, cluster, spec.llm_tokens(), cand.cp);
+        assert_eq!(a.makespan_ms, m.iteration_ms);
+        for d in &a.devices {
+            let sum = d.compute_ms + d.comm_ms + d.idle_ms;
+            assert!(
+                (sum - a.makespan_ms).abs() < 1e-9,
+                "device {}: {sum} vs makespan {} under {cand:?}",
+                d.device,
+                a.makespan_ms
+            );
+            assert!(d.compute_ms >= 0.0 && d.comm_ms >= 0.0 && d.idle_ms >= 0.0);
+        }
+        // phases tile the same device-time: spans cover makespan per
+        // device, and phase-attributed idle/comm re-sum to the totals
+        let span: f64 = a.phases.iter().map(|p| p.span_ms).sum();
+        assert!(
+            (span - a.makespan_ms * a.devices.len() as f64).abs() < 1e-6,
+            "phase spans {span} vs {} x {}",
+            a.makespan_ms,
+            a.devices.len()
+        );
+        assert!((a.phases.iter().map(|p| p.idle_ms).sum::<f64>()
+            - a.total_idle_ms())
+        .abs()
+            < 1e-6);
+        // every simulated device is owned by exactly one cluster group
+        let grouped: usize = a.groups.iter().map(|gr| gr.devices).sum();
+        assert_eq!(grouped, a.devices.len());
+    });
+}
+
+/// The report's analysis agrees with the timeline it ships next to: the
+/// same makespan, and a bubble fraction identical to the simulator's
+/// `bubble_ratio` (all-device denominator — the satellite fix).
+#[test]
+fn report_analysis_is_consistent_with_timeline() {
+    let req = PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S))
+        .devices(8)
+        .budget(8)
+        .threads(2);
+    let report = PlanningService::new().plan(&req).unwrap();
+    let a = &report.analysis;
+    assert_eq!(a.makespan_ms, report.timeline.iteration_ms);
+    let n = a.devices.len() as f64;
+    let bubble = (a.total_comm_ms() + a.total_idle_ms()) / (a.makespan_ms * n);
+    assert!(
+        (bubble - report.timeline.bubble_ratio).abs() < 1e-6,
+        "decomposed bubble {bubble} vs simulated {}",
+        report.timeline.bubble_ratio
+    );
+}
+
+fn run_explain_json() -> Vec<u8> {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_cornstarch"))
+        .args([
+            "explain", "VLM-S", "--devices", "8", "--budget", "4",
+            "--threads", "2", "--json", "--quiet",
+        ])
+        .output()
+        .expect("spawn cornstarch");
+    assert!(
+        out.status.success(),
+        "explain failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out.stdout
+}
+
+#[test]
+fn explain_json_double_runs_byte_identically() {
+    let first = run_explain_json();
+    let second = run_explain_json();
+    assert!(!first.is_empty());
+    assert_eq!(first, second, "explain --json must be byte-stable");
+    let text = String::from_utf8(first).unwrap();
+    let j = Json::parse(text.trim()).expect("explain emits valid JSON");
+    let devices = j.get("devices").and_then(Json::as_arr).unwrap();
+    assert!(!devices.is_empty());
+    for d in devices {
+        for k in ["compute_ms", "comm_ms", "idle_ms"] {
+            assert!(d.get(k).and_then(Json::as_f64).is_some(), "missing {k}");
+        }
+    }
+    let phases = j.get("phases").and_then(Json::as_arr).unwrap();
+    assert_eq!(phases.len(), 3);
+}
+
+/// Golden sim-to-real tolerance: a measured profile that disagrees with
+/// the flops model by a fixed few percent must stay within
+/// `DRIFT_TOLERANCE`, and re-pricing the plan from the profile
+/// ([`recost`]) must leave ~zero residual drift.
+#[test]
+fn drift_is_pinned_by_the_golden_tolerance() {
+    assert_eq!(DRIFT_TOLERANCE, 0.05, "golden tolerance moved");
+    let spec = MllmSpec::vlm(Size::M, Size::S);
+    let cluster = ClusterSpec::a40_default();
+    let cand = Candidate {
+        strategy: Strategy::Cornstarch,
+        enc_pps: vec![1],
+        llm_pp: 3,
+        tp: 1,
+        cp: 1,
+        num_microbatches: 8,
+        frozen: FrozenSetting::Paper,
+        chain_groups: Vec::new(),
+    };
+    let plan = build_plan(&spec, &cand, &cluster);
+    // A synthetic "measured" profile: the model's own stage times
+    // perturbed by a fixed +3% / -2% — the shape of real measurement
+    // disagreement, with none of the hardware nondeterminism.
+    let profile = CalibrationProfile {
+        device_class: "A40".to_string(),
+        samples: plan
+            .stage_names
+            .iter()
+            .zip(&plan.graph.nodes)
+            .enumerate()
+            .map(|(i, (name, node))| {
+                let f = if i % 2 == 0 { 1.03 } else { 0.98 };
+                StageSample {
+                    stage: name.clone(),
+                    fwd_ms: node.cost.fwd_ms * f,
+                    bwd_ms: node.cost.bwd_ms * f,
+                    upd_ms: 1.0,
+                }
+            })
+            .collect(),
+    };
+    let rep = drift(&plan, &profile);
+    assert!(rep.unmatched.is_empty(), "unmatched: {:?}", rep.unmatched);
+    assert_eq!(rep.stages.len(), plan.stage_names.len());
+    assert!(rep.max_rel_err > 0.0);
+    assert!(
+        rep.within(DRIFT_TOLERANCE),
+        "max drift {:.4} above tolerance {DRIFT_TOLERANCE}",
+        rep.max_rel_err
+    );
+    // the measured makespan is a genuine re-simulation, not a copy
+    assert!(rep.sim_makespan_ms > 0.0);
+    assert!((rep.measured_makespan_ms - rep.sim_makespan_ms).abs() > 1e-9);
+    // re-pricing the plan from the profile zeroes the drift
+    let residual = drift(&recost(&plan, &profile), &profile);
+    assert!(
+        residual.max_rel_err < 1e-9,
+        "residual drift {}",
+        residual.max_rel_err
+    );
+    assert!((residual.sim_makespan_ms - rep.measured_makespan_ms).abs() < 1e-9);
+    assert!(rep.render().contains("drift vs profile"));
+    Json::parse(&rep.to_json().render()).expect("drift JSON parses");
+}
+
+/// A partial profile (LLM stages only) calibrates what it covers and
+/// reports the rest as unmatched instead of failing.
+#[test]
+fn partial_profile_reports_unmatched_stages() {
+    let spec = MllmSpec::vlm(Size::M, Size::S);
+    let cluster = ClusterSpec::a40_default();
+    let cand = Candidate {
+        strategy: Strategy::Cornstarch,
+        enc_pps: vec![1],
+        llm_pp: 2,
+        tp: 1,
+        cp: 1,
+        num_microbatches: 4,
+        frozen: FrozenSetting::Paper,
+        chain_groups: Vec::new(),
+    };
+    let plan = build_plan(&spec, &cand, &cluster);
+    let profile = CalibrationProfile {
+        device_class: "A40".to_string(),
+        samples: plan
+            .stage_names
+            .iter()
+            .zip(&plan.graph.nodes)
+            .filter(|(name, _)| name.starts_with("llm"))
+            .map(|(name, node)| StageSample {
+                stage: name.clone(),
+                fwd_ms: node.cost.fwd_ms,
+                bwd_ms: node.cost.bwd_ms,
+                upd_ms: 0.0,
+            })
+            .collect(),
+    };
+    let rep = drift(&plan, &profile);
+    assert!(!rep.unmatched.is_empty());
+    assert!(rep.unmatched.iter().all(|s| s.starts_with("enc:")));
+    assert!(rep.stages.iter().all(|s| s.stage.starts_with("llm")));
+    // matched stages are exact copies of the model here: zero drift
+    assert!(rep.max_rel_err < 1e-12);
+}
+
+#[test]
+fn checked_in_sample_profile_matches_schema() {
+    let text = include_str!("../../examples/profiles/a40-sample.json");
+    let p = CalibrationProfile::parse(text).expect("sample profile parses");
+    assert_eq!(p.device_class, "A40");
+    assert!(!p.samples.is_empty());
+    assert!(p.samples.iter().any(|s| s.stage.starts_with("llm[")));
+    // stage names are unique, so every sample feeds MeasuredTimes
+    assert_eq!(p.measured_times().len(), p.samples.len());
+    // and the file re-renders from its parsed form (no stray fields)
+    let reparsed = CalibrationProfile::parse(&p.to_json().render()).unwrap();
+    assert_eq!(p, reparsed);
+}
