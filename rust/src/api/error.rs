@@ -23,6 +23,10 @@ pub enum PlanError {
     InfeasibleFleet(String),
     /// The persistent plan cache could not be written.
     Cache(String),
+    /// The static verifier ([`crate::verify`]) found Error-severity
+    /// lints in a plan or carve the service was about to return. Carries
+    /// the joined diagnostic lines.
+    FailedVerification(String),
 }
 
 impl fmt::Display for PlanError {
@@ -44,6 +48,9 @@ impl fmt::Display for PlanError {
                 write!(f, "infeasible fleet: {m}")
             }
             PlanError::Cache(m) => write!(f, "plan cache error: {m}"),
+            PlanError::FailedVerification(m) => {
+                write!(f, "plan failed verification: {m}")
+            }
         }
     }
 }

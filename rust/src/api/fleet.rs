@@ -397,6 +397,10 @@ pub struct FleetProvenance {
     pub plans_searched: usize,
     /// Carves where every tenant was feasible and above the floor.
     pub partitions_feasible: usize,
+    /// True when the returned carve passed the static verifier's fleet
+    /// lints (no device double-assigned across tenants, slice widths
+    /// matching the pool) — see [`crate::verify::verify_partition`].
+    pub verifier_clean: bool,
     /// The aggregate search counters the whole fleet call fired
     /// (summed over every per-tenant sub-pool search), sourced from
     /// the [`crate::telemetry`] registry. Deterministic.
@@ -496,11 +500,12 @@ impl FleetReport {
         let _ = writeln!(
             s,
             "  provenance: {} carves considered, {} pruned, {} sub-pool \
-             plans, {} feasible",
+             plans, {} feasible | verifier {}",
             self.provenance.partitions_considered,
             self.provenance.partitions_pruned,
             self.provenance.plans_searched,
-            self.provenance.partitions_feasible
+            self.provenance.partitions_feasible,
+            if self.provenance.verifier_clean { "clean" } else { "FAILED" }
         );
         let _ = writeln!(
             s,
@@ -659,6 +664,17 @@ impl PlanningService {
                 fired.get(tkey::CARVES_PRUNED),
             )));
         };
+        // Verification gate: the winning carve must pass the fleet
+        // lints (no double-assignment, slice widths matching the pool)
+        // before a report leaves the facade. Idle headroom is a Warn
+        // and rides along; Errors refuse the report.
+        let carve_verdict =
+            crate::verify::verify_partition(&partition, &req.cluster);
+        if !carve_verdict.is_clean() {
+            return Err(PlanError::FailedVerification(
+                carve_verdict.error_summary(),
+            ));
+        }
         Ok(self.assemble(
             req,
             partition,
@@ -673,6 +689,7 @@ impl PlanningService {
                 plans_searched: fired.get(tkey::PLANS_SEARCHED) as usize,
                 partitions_feasible: fired.get(tkey::CARVES_FEASIBLE)
                     as usize,
+                verifier_clean: true,
                 stats: SearchStats::from_delta(&fired),
             },
         ))
@@ -697,6 +714,21 @@ impl PlanningService {
                 req.tenants.len(),
                 req.cluster.name
             )));
+        }
+        // The handed-in carve goes through the same static verifier the
+        // search path gates on. `respects()` above already refused the
+        // Error cases with a typed InvalidRequest; this keeps the gate
+        // mandatory even if the two checks ever drift, and surfaces
+        // idle-headroom warnings under `-v`.
+        let carve_verdict =
+            crate::verify::verify_partition(partition, &req.cluster);
+        if !carve_verdict.is_clean() {
+            return Err(PlanError::FailedVerification(
+                carve_verdict.error_summary(),
+            ));
+        }
+        for d in &carve_verdict.diagnostics {
+            telemetry::debug(&format!("fleet carve: {}", d.render_line()));
         }
         let _carve_span = telemetry::span(&format!(
             "plan_fleet_partition {}",
@@ -742,6 +774,7 @@ impl PlanningService {
             partitions_pruned: 0,
             plans_searched: fired.get(tkey::PLANS_SEARCHED) as usize,
             partitions_feasible: 1,
+            verifier_clean: true,
             stats: SearchStats::from_delta(&fired),
         };
         Ok(self.assemble(req, partition.clone(), reports, &solo, provenance))

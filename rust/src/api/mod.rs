@@ -329,6 +329,21 @@ impl PlanningService {
                 ),
             ],
         );
+        // Verification gate: no report leaves the facade unless the
+        // winner statically verifies clean (schedule lints over its
+        // 1F1B task graph, assignment/memory/cp/frozen lints over its
+        // config). Warn-severity findings ride along in the provenance.
+        let verification = crate::verify::verify_plan(
+            &plan,
+            &req.cluster,
+            frontier.first().map(|s| &s.candidate),
+            req.mllm.llm_tokens(),
+        );
+        if !verification.is_clean() {
+            return Err(PlanError::FailedVerification(
+                verification.error_summary(),
+            ));
+        }
         // Re-source the deterministic counters this call fired from the
         // telemetry registry: the delta over the call is the report's
         // SearchStats block (all zeros except `cache_hits` on a hit).
@@ -343,6 +358,8 @@ impl PlanningService {
             total_candidates: outcome.total_candidates,
             evaluated: outcome.evaluated,
             pruned: outcome.pruned,
+            verifier_clean: true,
+            verifier_warnings: verification.warnings(),
             stats,
         };
         Ok(PlanReport {

@@ -156,6 +156,14 @@ pub struct Provenance {
     pub total_candidates: usize,
     pub evaluated: usize,
     pub pruned: usize,
+    /// True when the static verifier ([`crate::verify`]) found no
+    /// Error-severity lints in the returned plan. Always true on a
+    /// report the service actually returned — the gate refuses
+    /// otherwise — but recorded so downstream consumers of a serialized
+    /// report can tell a verified plan from a hand-assembled one.
+    pub verifier_clean: bool,
+    /// Warn-severity lints the verifier attached to the returned plan.
+    pub verifier_warnings: usize,
     /// The telemetry counters this call fired (deterministic; the
     /// search-side numbers above are cross-checked against it).
     pub stats: SearchStats,
@@ -212,6 +220,16 @@ impl PlanReport {
             s,
             "  search stats: {}",
             self.provenance.stats.render_line()
+        );
+        let _ = writeln!(
+            s,
+            "  verifier: {}{}",
+            if self.provenance.verifier_clean { "clean" } else { "FAILED" },
+            if self.provenance.verifier_warnings > 0 {
+                format!(" ({} warning(s))", self.provenance.verifier_warnings)
+            } else {
+                String::new()
+            },
         );
         let _ = writeln!(s, "  cluster: {}", self.provenance.cluster);
         let _ = writeln!(

@@ -49,6 +49,11 @@
 //!   with deterministic snapshots, RAII wall-clock spans exported as
 //!   Chrome trace-event JSON (`--trace`), and the one leveled-logging
 //!   door (`--quiet` / `-v`) every progress print goes through.
+//! * [`verify`] — static plan/schedule verification: typed lints with
+//!   stable codes (`V001`–`V008`) over a plan, its 1F1B task graph, and
+//!   its candidate config, gating cache admission, the service boundary
+//!   (`plan` / `plan_fleet`), and trainer setup; surfaced as
+//!   `cornstarch verify`.
 //! * [`profile`] — plan explainability + sim-to-real calibration: exact
 //!   per-device compute/comm/idle decomposition of every plan's
 //!   simulated trace ([`profile::PlanAnalysis`], `cornstarch explain`)
@@ -65,6 +70,7 @@ pub mod memory;
 pub mod modality;
 pub mod pipeline;
 pub mod sim;
+pub mod verify;
 pub mod profile;
 pub mod tuner;
 pub mod runtime;

@@ -6,6 +6,7 @@
 //! cornstarch plan <mllm> [opts]         print a parallelization plan
 //! cornstarch tune <mllm> [opts]         autotune the fastest plan
 //! cornstarch stats <mllm> [opts]        deterministic search counters
+//! cornstarch verify <mllm> [opts]       static lints over the tuned plan
 //! cornstarch explain <mllm> [opts]      why the plan won (decomposition)
 //! cornstarch calibrate [opts]           measure PJRT stage times -> profile
 //! cornstarch memory <mllm> [opts]       per-stage memory model verdict
@@ -378,6 +379,68 @@ fn run(args: &[String]) -> Result<()> {
                 "  best: {}",
                 report.winner().candidate.label()
             ));
+        }
+        "verify" => {
+            // Static plan/schedule analyzer: plan (cache-aware), then
+            // run the typed lints over the winner and render the
+            // verdict. The facade's own gate already refuses plans with
+            // Error-severity lints, so a report that reaches here
+            // re-verifies clean; the command exists to *show* the
+            // verdict and its warnings — machine-readably (and
+            // byte-stably) under `--json`.
+            let name = match rest.first() {
+                Some(s) if !s.starts_with("--") => s.as_str(),
+                _ => "VLM-M",
+            };
+            let spec = parse_mllm(name, rest)?;
+            let cluster =
+                parse_cluster(rest)?.unwrap_or_else(ClusterSpec::a40_default);
+            let mut req =
+                PlanRequest::default_for(spec.clone()).cluster(cluster);
+            if let Some(d) = flag_num(rest, "--devices")? {
+                req = req.devices(d);
+            }
+            if let Some(b) = flag_num(rest, "--budget")? {
+                req = req.budget(b);
+            }
+            if let Some(t) = flag_num(rest, "--threads")? {
+                req = req.threads(t);
+            }
+            if let Some(c) = flag(rest, "--cache") {
+                req = req.cache_file(&c);
+            }
+            let report = PlanningService::new().plan(&req)?;
+            let verdict = cornstarch::verify::verify_plan(
+                &report.plan,
+                &req.cluster,
+                Some(&report.winner().candidate),
+                spec.llm_tokens(),
+            );
+            if has_flag(rest, "--json") {
+                use cornstarch::util::json::Json;
+                telemetry::report(
+                    &Json::obj(vec![
+                        ("mllm", Json::Str(spec.name())),
+                        ("cluster", Json::Str(req.cluster.fingerprint())),
+                        (
+                            "plan",
+                            Json::Str(report.winner().candidate.label()),
+                        ),
+                        ("verify", verdict.to_json()),
+                    ])
+                    .render(),
+                );
+            } else {
+                telemetry::report(&format!(
+                    "{} on {} ({} GPUs) — {}",
+                    spec.name(),
+                    req.cluster.name,
+                    req.cluster.devices(),
+                    report.winner().candidate.label()
+                ));
+                telemetry::report(verdict.render().trim_end());
+            }
+            anyhow::ensure!(verdict.is_clean(), "plan failed verification");
         }
         "explain" => {
             // Why the plan won: per-device compute/comm/idle decomposition
@@ -780,6 +843,8 @@ fn print_help() {
          [--sweep-policies] [--top N]   (top-N frontier from one search)\n  \
          stats <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
          [--json]   (deterministic search counters for one plan() call)\n  \
+         verify <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
+         [--json]   (static V001-V008 lints over the tuned plan; nonzero exit on Error)\n  \
          explain <MLLM> [--cluster F] [--devices N] [--budget K] [--cache P] [--threads N]\n        \
          [--json] [--vs-cluster F2] [--vs-devices M] [--profile F]\n        \
          (per-device compute/comm/idle, 1F1B phase bubbles, cp imbalance)\n  \

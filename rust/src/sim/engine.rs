@@ -203,6 +203,21 @@ pub fn simulate(tasks: &[TaskSpec]) -> SimResult {
     SimResult { makespan_ms: makespan, device_busy_ms: device_busy, trace }
 }
 
+/// The dependency edges of a task list, flattened as `(from, to)` pairs
+/// (`to` waits for `from`). This is the adjacency a static analyzer
+/// ([`crate::verify`]) walks without re-deriving the simulator's
+/// internal structures; out-of-range indices are kept as-is so callers
+/// can lint them instead of panicking.
+pub fn dependency_edges(tasks: &[TaskSpec]) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    for (i, t) in tasks.iter().enumerate() {
+        for &(d, _) in &t.deps {
+            edges.push((d, i));
+        }
+    }
+    edges
+}
+
 /// Emit a simulated schedule into the telemetry trace sink as
 /// virtual-time slices: one Chrome-trace lane per simulated device, one
 /// `X` slice per executed fwd/bwd task (simulated ms mapped to trace
@@ -311,6 +326,16 @@ mod tests {
         ];
         let r = simulate(&tasks);
         assert!((r.makespan_ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dependency_edges_flatten_in_task_order() {
+        let tasks = vec![
+            t(0, 1.0, vec![], (0, 0)),
+            t(0, 1.0, vec![(0, 0.0)], (0, 1)),
+            t(1, 1.0, vec![(0, 0.5), (1, 0.0)], (0, 0)),
+        ];
+        assert_eq!(dependency_edges(&tasks), vec![(0, 1), (0, 2), (1, 2)]);
     }
 
     #[test]

@@ -9,5 +9,5 @@
 pub mod engine;
 pub mod metrics;
 
-pub use engine::{emit_timeline, simulate, SimResult, TaskTrace};
+pub use engine::{dependency_edges, emit_timeline, simulate, SimResult, TaskTrace};
 pub use metrics::{bubble_fraction, throughput_per_gpu};

@@ -72,6 +72,10 @@ pub mod key {
     pub const CARVES_FEASIBLE: &str = "carves_feasible";
     /// Per-tenant sub-pool searches launched (memo misses).
     pub const PLANS_SEARCHED: &str = "plans_searched";
+    /// Verifier runs that came back clean (no Error lints).
+    pub const VERIFY_PASS: &str = "verify_pass";
+    /// Verifier runs that found at least one Error lint.
+    pub const VERIFY_FAIL: &str = "verify_fail";
 }
 
 thread_local! {

@@ -138,6 +138,39 @@ impl PipelineTrainer {
         let n_llm = mm.n_llm_stages();
         let n_stages = enc_names.len() + n_llm;
 
+        // Static verification before any stage thread spawns: build a
+        // unit-cost stage graph mirroring exactly the channel topology
+        // wired below (encoders fan into llm[0], llm chain linear) and
+        // run the schedule lints over its 1F1B task graph. A cycle or a
+        // 1F1B-window violation here would deadlock real threads
+        // holding real PJRT clients — the verifier refuses first.
+        {
+            let mut g = crate::pipeline::StageGraph::default();
+            let unit = crate::pipeline::StageCost { fwd_ms: 1.0, bwd_ms: 1.0 };
+            let enc_ids: Vec<usize> = enc_names
+                .iter()
+                .enumerate()
+                .map(|(e, name)| {
+                    g.add_chain(&format!("enc:{name}"), &[unit], e, &[])[0]
+                })
+                .collect();
+            g.add_chain(
+                "llm",
+                &vec![unit; n_llm],
+                enc_names.len(),
+                &enc_ids,
+            );
+            let m = n_stages + 1; // the feeder's in-flight cap
+            let tasks = crate::pipeline::onef1b_tasks(&g, m);
+            let verdict = crate::verify::verify_schedule(&tasks, &g, m);
+            if !verdict.is_clean() {
+                bail!(
+                    "stage topology for {model} failed verification: {}",
+                    verdict.error_summary()
+                );
+            }
+        }
+
         // Channels: one inbox per stage + one report channel.
         let mut txs = Vec::new();
         let mut rxs = Vec::new();

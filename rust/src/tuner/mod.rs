@@ -198,13 +198,21 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
     let fingerprint = req.cluster.fingerprint();
     let top = req.top.max(1);
     if let Some(entry) = cache.lookup(&sig, &fingerprint) {
-        // A stored plan's chain→group assignment must be well-formed
-        // for this cluster (arity, range, Colocated uniformity) — a
+        // Cache admission gate: every stored candidate must verify
+        // clean against this cluster (the V005 assignment lints) — a
         // corrupted entry that passed the schema check must degrade to
         // a re-search, never a downstream panic when the plan is
-        // instantiated.
+        // instantiated. Rejections are visible under `-v`.
         let assignments_ok = entry.frontier.iter().all(|p| {
-            p.candidate.assignment_is_valid(req.cluster.groups.len())
+            let vr =
+                crate::verify::verify_candidate(&p.candidate, &req.cluster);
+            if !vr.is_clean() {
+                crate::telemetry::debug(&format!(
+                    "cache: rejecting stored plan for {sig}: {}",
+                    vr.error_summary()
+                ));
+            }
+            vr.is_clean()
         });
         if assignments_ok && entry.satisfies_top(top) {
             crate::telemetry::incr(crate::telemetry::key::CACHE_HIT);

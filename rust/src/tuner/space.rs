@@ -132,35 +132,6 @@ impl Candidate {
         )
     }
 
-    /// Is this candidate's [`Candidate::chain_groups`] assignment
-    /// well-formed for a pool of `n_groups` device groups? Empty is
-    /// always valid (everything on group 0); otherwise the arity must
-    /// match the strategy's chain count, every index must be in range,
-    /// and Colocated's encoders must share one group. Used by the cache
-    /// to reject corrupted entries before they can panic the planner.
-    pub fn assignment_is_valid(&self, n_groups: usize) -> bool {
-        if self.chain_groups.is_empty() {
-            return n_groups >= 1;
-        }
-        let n_chains = match self.strategy {
-            Strategy::Replicated => 1,
-            _ => self.enc_pps.len() + 1,
-        };
-        if self.chain_groups.len() != n_chains {
-            return false;
-        }
-        if self.chain_groups.iter().any(|&g| g >= n_groups) {
-            return false;
-        }
-        if self.strategy == Strategy::Colocated {
-            let enc = &self.chain_groups[..self.enc_pps.len()];
-            if enc.windows(2).any(|w| w[0] != w[1]) {
-                return false;
-            }
-        }
-        true
-    }
-
     /// GPUs this candidate occupies in each of `n_groups` cluster
     /// groups, under its [`Candidate::chain_groups`] assignment (an
     /// empty assignment charges everything to group 0). Colocated fuses
@@ -719,37 +690,9 @@ mod tests {
         );
     }
 
-    #[test]
-    fn assignment_validity_checks_arity_range_and_colocation() {
-        let mut c = Candidate {
-            strategy: Strategy::Cornstarch,
-            enc_pps: vec![1, 2],
-            llm_pp: 2,
-            tp: 1,
-            cp: 1,
-            num_microbatches: 8,
-            frozen: FrozenSetting::Paper,
-            chain_groups: Vec::new(),
-        };
-        assert!(c.assignment_is_valid(1));
-        assert!(c.assignment_is_valid(2));
-        c.chain_groups = vec![0, 1, 1];
-        assert!(c.assignment_is_valid(2));
-        assert!(!c.assignment_is_valid(1), "index out of range");
-        c.chain_groups = vec![0, 1];
-        assert!(!c.assignment_is_valid(2), "wrong arity");
-        c.strategy = Strategy::Colocated;
-        c.chain_groups = vec![0, 1, 1];
-        assert!(!c.assignment_is_valid(2), "colocated encoders split");
-        c.chain_groups = vec![1, 1, 0];
-        assert!(c.assignment_is_valid(2));
-        c.strategy = Strategy::Replicated;
-        c.enc_pps = Vec::new();
-        c.chain_groups = vec![1];
-        assert!(c.assignment_is_valid(2));
-        c.chain_groups = vec![0, 0];
-        assert!(!c.assignment_is_valid(2), "replicated has one chain");
-    }
+    // Assignment well-formedness (arity, index range, Colocated
+    // uniformity) moved to the verifier's V005 lints — held by
+    // `tests/verify_checks.rs::v005_assignment_rules_migrated_from_space`.
 
     #[test]
     fn hetero_filter_respects_a_tighter_scalar_cap() {

@@ -1,0 +1,388 @@
+//! Static plan/schedule verification: typed lints over a [`Plan`], its
+//! 1F1B task graph, and the candidate configuration that produced it.
+//!
+//! The planning stack *constructs* plans it believes are valid; this
+//! module is the independent check that they actually are, run at the
+//! three trust boundaries where a bad plan would otherwise reach
+//! expensive machinery:
+//!
+//! * **cache admission** ([`crate::tuner::tune_with`]) — a cached entry
+//!   is re-verified against the live cluster before it answers a query,
+//!   so a corrupted or hand-edited cache file degrades to a re-search
+//!   instead of a downstream panic;
+//! * **the service boundary** ([`crate::api::PlanningService::plan`] and
+//!   [`crate::api::plan_fleet`]) — no report leaves the facade unless
+//!   its winner (and, for fleets, the carve itself) verifies clean;
+//!   the result is recorded as a provenance field;
+//! * **trainer setup** ([`crate::train::PipelineTrainer`]) — the
+//!   executor's stage topology is checked for schedulability before any
+//!   stage thread spawns.
+//!
+//! Every finding is a [`Diagnostic`] with a stable [`Code`] (`V001` …
+//! `V008`), a severity, and a deterministic rendering: diagnostics are
+//! sorted, the JSON form uses the ordered [`crate::util::json`] printer,
+//! and two runs over the same inputs are byte-identical. Verifier
+//! outcomes feed the [`crate::telemetry::key::VERIFY_PASS`] /
+//! [`crate::telemetry::key::VERIFY_FAIL`] counters.
+//!
+//! Submodules split by what they look at: [`schedule`] walks the task
+//! graph and the simulated trace (V001–V004); [`resources`] checks
+//! group assignments, memory budgets, CP token distribution, and frozen
+//! consistency (V005–V008).
+
+#![warn(clippy::pedantic)]
+#![allow(
+    clippy::must_use_candidate,
+    clippy::missing_panics_doc,
+    clippy::module_name_repetitions,
+    clippy::cast_precision_loss,
+    clippy::cast_possible_truncation,
+    clippy::cast_possible_wrap,
+    clippy::cast_sign_loss,
+    clippy::doc_markdown,
+    clippy::similar_names
+)]
+
+pub mod resources;
+pub mod schedule;
+
+use crate::api::cluster::ClusterSpec;
+use crate::api::fleet::FleetPartition;
+use crate::modality::Plan;
+use crate::pipeline::{onef1b_tasks, StageGraph, TaskSpec};
+use crate::tuner::Candidate;
+use crate::util::json::Json;
+
+/// How bad a finding is. `Error` means the plan must not be executed or
+/// returned; `Warn` flags a smell the caller may accept.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn key(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// The stable lint vocabulary. Codes never change meaning; new lints get
+/// new codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Code {
+    /// Cycle in the task dependency DAG (would deadlock the simulator
+    /// and the executor alike).
+    V001,
+    /// A backward task scheduled before its matching forward completed.
+    V002,
+    /// In-flight microbatches at some stage exceed the 1F1B window
+    /// (`min(m, depth-to-sink)`), the bound the memory model budgets.
+    V003,
+    /// A device double-booked: two tasks overlap in virtual time.
+    V004,
+    /// A stage/chain assigned to an out-of-range or over-capacity
+    /// device group.
+    V005,
+    /// A stage's peak bytes exceed the budget of its device group.
+    V006,
+    /// The CP token distribution drops or duplicates token blocks.
+    V007,
+    /// An all-frozen configuration whose stages still carry backward
+    /// cost.
+    V008,
+}
+
+impl Code {
+    pub const ALL: [Code; 8] = [
+        Code::V001,
+        Code::V002,
+        Code::V003,
+        Code::V004,
+        Code::V005,
+        Code::V006,
+        Code::V007,
+        Code::V008,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::V001 => "V001",
+            Code::V002 => "V002",
+            Code::V003 => "V003",
+            Code::V004 => "V004",
+            Code::V005 => "V005",
+            Code::V006 => "V006",
+            Code::V007 => "V007",
+            Code::V008 => "V008",
+        }
+    }
+
+    /// One-line human title, used by renderings and the docs table.
+    pub fn title(self) -> &'static str {
+        match self {
+            Code::V001 => "cycle in stage DAG",
+            Code::V002 => "bwd scheduled before matching fwd",
+            Code::V003 => "in-flight microbatches exceed 1F1B window",
+            Code::V004 => "device double-booked at overlapping virtual times",
+            Code::V005 => "stage assigned to out-of-range/over-capacity group",
+            Code::V006 => "peak bytes exceed group budget",
+            Code::V007 => "cp token distribution drops/duplicates tokens",
+            Code::V008 => "frozen stage carries nonzero bwd cost",
+        }
+    }
+
+    /// The severity this lint always carries: V008 flags a cost-model
+    /// smell (a plan that is merely pessimistic, not wrong), everything
+    /// else would corrupt or deadlock execution.
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::V008 => Severity::Warn,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One verification finding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    /// What the finding anchors to — a stage name, device index, or
+    /// tenant; empty for whole-plan findings.
+    pub subject: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(code: Code, subject: impl Into<String>, message: impl Into<String>) -> Self {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            subject: subject.into(),
+            message: message.into(),
+        }
+    }
+
+    /// `error V006 [llm[0]] peak bytes exceed group budget: …` — one
+    /// line, stable field order.
+    pub fn render_line(&self) -> String {
+        let subject = if self.subject.is_empty() {
+            String::from("plan")
+        } else {
+            self.subject.clone()
+        };
+        format!(
+            "{} {} [{}] {}: {}",
+            self.severity.key(),
+            self.code.as_str(),
+            subject,
+            self.code.title(),
+            self.message
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.as_str().into())),
+            ("severity", Json::Str(self.severity.key().into())),
+            ("subject", Json::Str(self.subject.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// The verifier's answer: every diagnostic, deterministically ordered
+/// by (code, subject, message).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl VerifyReport {
+    /// Wrap raw findings in canonical order (the order every rendering
+    /// and the JSON form use).
+    pub fn from_diagnostics(mut diagnostics: Vec<Diagnostic>) -> Self {
+        diagnostics.sort_by(|a, b| {
+            (a.code, &a.subject, &a.message).cmp(&(b.code, &b.subject, &b.message))
+        });
+        VerifyReport { diagnostics }
+    }
+
+    /// Clean means *no errors* — warnings don't block a plan.
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Warn)
+            .count()
+    }
+
+    /// Every error line joined — what gate failures carry in their
+    /// [`crate::api::PlanError`].
+    pub fn error_summary(&self) -> String {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(Diagnostic::render_line)
+            .collect::<Vec<_>>()
+            .join("; ")
+    }
+
+    /// Human rendering: a verdict line, then one line per finding.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "verify: {} ({} error(s), {} warning(s))\n",
+            if self.is_clean() { "clean" } else { "FAILED" },
+            self.errors(),
+            self.warnings()
+        );
+        for d in &self.diagnostics {
+            out.push_str("  ");
+            out.push_str(&d.render_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Byte-stable machine form (ordered keys, ordered diagnostics).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            ("errors", Json::Int(self.errors() as i64)),
+            ("warnings", Json::Int(self.warnings() as i64)),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Bump the pass/fail telemetry counter for a finished verification.
+fn count_outcome(report: &VerifyReport) {
+    if report.is_clean() {
+        crate::telemetry::incr(crate::telemetry::key::VERIFY_PASS);
+    } else {
+        crate::telemetry::incr(crate::telemetry::key::VERIFY_FAIL);
+    }
+}
+
+/// The full static analysis of a constructed plan: schedule lints over
+/// its 1F1B task graph (V001–V004), resource lints over its group
+/// assignment and memory footprint (V005, V006), and — when the
+/// producing [`Candidate`] is known — CP distribution and frozen
+/// consistency (V005 assignment rules, V007, V008).
+pub fn verify_plan(
+    plan: &Plan,
+    cluster: &ClusterSpec,
+    candidate: Option<&Candidate>,
+    llm_tokens: usize,
+) -> VerifyReport {
+    let tasks = onef1b_tasks(&plan.graph, plan.num_microbatches);
+    let mut diags = schedule_diagnostics(&tasks, &plan.graph, plan.num_microbatches);
+    diags.extend(resources::check_plan(plan, cluster));
+    if let Some(c) = candidate {
+        diags.extend(resources::check_candidate(c, cluster));
+        diags.extend(resources::check_cp(llm_tokens, c.cp));
+        diags.extend(resources::check_frozen(plan, c.frozen));
+    }
+    let report = VerifyReport::from_diagnostics(diags);
+    count_outcome(&report);
+    report
+}
+
+/// Schedule-only verification of an explicit task list (the trainer's
+/// gate, and what mutation tests drive directly): V001 statically, then
+/// — only when the graph is acyclic, since a cycle would deadlock the
+/// simulator — V002/V003/V004 over the simulated trace.
+pub fn verify_schedule(tasks: &[TaskSpec], graph: &StageGraph, m: usize) -> VerifyReport {
+    let report = VerifyReport::from_diagnostics(schedule_diagnostics(tasks, graph, m));
+    count_outcome(&report);
+    report
+}
+
+fn schedule_diagnostics(tasks: &[TaskSpec], graph: &StageGraph, m: usize) -> Vec<Diagnostic> {
+    let mut diags = schedule::check_tasks(tasks);
+    if diags.is_empty() {
+        let sim = crate::sim::simulate(tasks);
+        diags.extend(schedule::check_trace(&sim.trace, graph, m));
+    }
+    diags
+}
+
+/// Candidate-only verification (the cache-admission gate): the V005
+/// assignment lints, with no plan construction or simulation.
+pub fn verify_candidate(candidate: &Candidate, cluster: &ClusterSpec) -> VerifyReport {
+    let report = VerifyReport::from_diagnostics(resources::check_candidate(candidate, cluster));
+    count_outcome(&report);
+    report
+}
+
+/// Fleet-carve verification: every tenant slice shaped to the pool, no
+/// device group oversubscribed across tenants (Error), and full pool
+/// coverage (idle devices are a Warn, not an Error — a carve may
+/// legitimately leave headroom).
+pub fn verify_partition(partition: &FleetPartition, cluster: &ClusterSpec) -> VerifyReport {
+    let report =
+        VerifyReport::from_diagnostics(resources::check_partition(partition, cluster));
+    count_outcome(&report);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_render_stable_and_ordered() {
+        let strs: Vec<&str> = Code::ALL.iter().map(|c| c.as_str()).collect();
+        assert_eq!(
+            strs,
+            ["V001", "V002", "V003", "V004", "V005", "V006", "V007", "V008"]
+        );
+        let mut sorted = Code::ALL.to_vec();
+        sorted.sort();
+        assert_eq!(sorted, Code::ALL.to_vec());
+    }
+
+    #[test]
+    fn report_sorts_diagnostics_and_counts_severities() {
+        let r = VerifyReport::from_diagnostics(vec![
+            Diagnostic::new(Code::V006, "llm[1]", "b"),
+            Diagnostic::new(Code::V001, "", "a"),
+            Diagnostic::new(Code::V008, "enc:vision[0]", "c"),
+        ]);
+        assert_eq!(r.diagnostics[0].code, Code::V001);
+        assert_eq!(r.diagnostics[2].code, Code::V008);
+        assert_eq!(r.errors(), 2);
+        assert_eq!(r.warnings(), 1);
+        assert!(!r.is_clean());
+        assert!(r.render().contains("FAILED"));
+        assert!(r.error_summary().contains("V001"));
+        assert!(!r.error_summary().contains("V008"));
+    }
+
+    #[test]
+    fn clean_report_renders_clean_and_json_roundtrips() {
+        let r = VerifyReport::default();
+        assert!(r.is_clean());
+        assert!(r.render().starts_with("verify: clean"));
+        let j = r.to_json().render();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(true));
+    }
+}

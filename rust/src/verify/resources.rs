@@ -1,0 +1,246 @@
+//! Resource lints (V005–V008): device-group assignments, per-stage
+//! memory budgets, CP token-distribution coverage, and frozen-policy
+//! consistency. Everything here is pure arithmetic over the plan and
+//! the cluster — no simulation, so these checks are safe to run on
+//! *untrusted* inputs (a cache entry, a hand-edited plan) where the
+//! stack's constructive invariants may not hold.
+
+use super::{Code, Diagnostic};
+use crate::api::cluster::ClusterSpec;
+use crate::api::fleet::FleetPartition;
+use crate::modality::{Plan, Strategy};
+use crate::tuner::evaluate::{cp_block_workloads, pick_cp_over, CP_PICK_SEED};
+use crate::tuner::{Candidate, FrozenSetting};
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+fn gib(bytes: u64) -> f64 {
+    bytes as f64 / GIB
+}
+
+/// V005 over a candidate's chain→group assignment: arity matching the
+/// strategy's chain count, every index in range, Colocated encoders
+/// sharing one group, and no device group oversubscribed. This subsumes
+/// what `Candidate::assignment_is_valid` used to answer with a bare
+/// `bool` — the cache-admission gate runs exactly this.
+pub fn check_candidate(c: &Candidate, cluster: &ClusterSpec) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n_groups = cluster.groups.len();
+    if n_groups == 0 {
+        diags.push(Diagnostic::new(
+            Code::V005,
+            c.label(),
+            "cluster has no device groups",
+        ));
+        return diags;
+    }
+    if !c.chain_groups.is_empty() {
+        let n_chains = match c.strategy {
+            Strategy::Replicated => 1,
+            _ => c.enc_pps.len() + 1,
+        };
+        if c.chain_groups.len() != n_chains {
+            diags.push(Diagnostic::new(
+                Code::V005,
+                c.label(),
+                format!(
+                    "{} chain-group entries for {} chain(s)",
+                    c.chain_groups.len(),
+                    n_chains
+                ),
+            ));
+        }
+        for (chain, &g) in c.chain_groups.iter().enumerate() {
+            if g >= n_groups {
+                diags.push(Diagnostic::new(
+                    Code::V005,
+                    format!("chain {chain}"),
+                    format!("assigned to group {g}, cluster has {n_groups} group(s)"),
+                ));
+            }
+        }
+        if c.strategy == Strategy::Colocated && c.chain_groups.len() == n_chains {
+            let enc = &c.chain_groups[..c.enc_pps.len().min(c.chain_groups.len())];
+            if enc.windows(2).any(|w| w[0] != w[1]) {
+                diags.push(Diagnostic::new(
+                    Code::V005,
+                    c.label(),
+                    format!("colocated encoders split across groups {enc:?}"),
+                ));
+            }
+        }
+    }
+    // Capacity is only meaningful once the indices themselves are sane.
+    if diags.is_empty() {
+        let used = c.gpus_per_group(n_groups);
+        for (g, (&u, grp)) in used.iter().zip(&cluster.groups).enumerate() {
+            if u > grp.count {
+                diags.push(Diagnostic::new(
+                    Code::V005,
+                    format!("group {g}"),
+                    format!("{u} GPUs assigned, group has {}", grp.count),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// V005 + V006 over a constructed plan: every stage's recorded device
+/// group must exist, and the stage's peak bytes must fit that group's
+/// per-device memory. Out-of-range groups are reported (not budgeted on
+/// a fallback) — this runs on untrusted plans, so it must never index.
+pub fn check_plan(plan: &Plan, cluster: &ClusterSpec) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n_groups = cluster.groups.len();
+    for (i, sm) in plan.stage_mem.iter().enumerate() {
+        let g = plan.stage_groups.get(i).copied().unwrap_or(0);
+        let name = stage_name(plan, i);
+        match cluster.groups.get(g) {
+            None => diags.push(Diagnostic::new(
+                Code::V005,
+                name,
+                format!("assigned to group {g}, cluster has {n_groups} group(s)"),
+            )),
+            Some(grp) => {
+                let peak = sm.peak_bytes();
+                if peak > grp.device.mem_bytes {
+                    diags.push(Diagnostic::new(
+                        Code::V006,
+                        name,
+                        format!(
+                            "peak {:.2} GiB exceeds the {:.2} GiB budget of group {g} ({})",
+                            gib(peak),
+                            gib(grp.device.mem_bytes),
+                            grp.device.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    diags
+}
+
+/// V007 entry point for a plan: rebuild the exact workload the tuner
+/// scored (same seed, same blocking) and check the picked algorithm's
+/// assignment for coverage.
+pub fn check_cp(llm_tokens: usize, cp: usize) -> Vec<Diagnostic> {
+    if cp <= 1 {
+        return Vec::new();
+    }
+    let w = cp_block_workloads(llm_tokens, CP_PICK_SEED);
+    let assignment = pick_cp_over(&w, cp).assign(&w, cp);
+    check_cp_assignment(w.len(), cp, &assignment)
+}
+
+/// The raw coverage check behind V007, callable with an arbitrary
+/// (possibly doctored) assignment: every token block assigned exactly
+/// once, and only to ranks that exist. A length mismatch means blocks
+/// were dropped or duplicated; an out-of-range rank silently loses its
+/// blocks at execution time.
+pub fn check_cp_assignment(n_blocks: usize, cp: usize, assignment: &[usize]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if assignment.len() != n_blocks {
+        diags.push(Diagnostic::new(
+            Code::V007,
+            "cp",
+            format!(
+                "{} block assignments for {n_blocks} token blocks",
+                assignment.len()
+            ),
+        ));
+    }
+    for (b, &r) in assignment.iter().enumerate() {
+        if r >= cp {
+            diags.push(Diagnostic::new(
+                Code::V007,
+                "cp",
+                format!("block {b} assigned to rank {r}, cp degree is {cp}"),
+            ));
+            break;
+        }
+    }
+    diags
+}
+
+/// V008: an all-frozen configuration promises ~zero backward work, so a
+/// stage still carrying backward cost means the cost model and the
+/// frozen policy disagree. Warn-severity — the plan is pessimistic, not
+/// executable-wrong.
+pub fn check_frozen(plan: &Plan, frozen: FrozenSetting) -> Vec<Diagnostic> {
+    if frozen != FrozenSetting::AllFrozen {
+        return Vec::new();
+    }
+    let mut diags = Vec::new();
+    for (i, node) in plan.graph.nodes.iter().enumerate() {
+        if node.cost.bwd_ms > 1e-6 {
+            diags.push(Diagnostic::new(
+                Code::V008,
+                stage_name(plan, i),
+                format!(
+                    "all-frozen config, stage carries {:.3} ms of bwd cost",
+                    node.cost.bwd_ms
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+/// Fleet-carve lints, all in the V005 family: slice widths must match
+/// the pool's group list, no group may be oversubscribed across tenants
+/// (both Errors), and devices left idle by every tenant are a Warn
+/// (a carve may legitimately keep headroom, but it should be visible).
+pub fn check_partition(partition: &FleetPartition, cluster: &ClusterSpec) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let n_groups = cluster.groups.len();
+    for (t, slice) in partition.slices.iter().enumerate() {
+        if slice.len() != n_groups {
+            diags.push(Diagnostic::new(
+                Code::V005,
+                format!("tenant {t}"),
+                format!(
+                    "slice spans {} group(s), pool has {n_groups}",
+                    slice.len()
+                ),
+            ));
+        }
+    }
+    if !diags.is_empty() {
+        return diags;
+    }
+    for (g, grp) in cluster.groups.iter().enumerate() {
+        let assigned: usize = partition.slices.iter().map(|s| s[g]).sum();
+        if assigned > grp.count {
+            diags.push(Diagnostic::new(
+                Code::V005,
+                format!("group {g}"),
+                format!(
+                    "{assigned} devices assigned across tenants, group has {}",
+                    grp.count
+                ),
+            ));
+        } else if assigned < grp.count {
+            let mut d = Diagnostic::new(
+                Code::V005,
+                format!("group {g}"),
+                format!(
+                    "{} of {} devices unassigned (idle headroom)",
+                    grp.count - assigned,
+                    grp.count
+                ),
+            );
+            d.severity = super::Severity::Warn;
+            diags.push(d);
+        }
+    }
+    diags
+}
+
+fn stage_name(plan: &Plan, i: usize) -> String {
+    plan.stage_names
+        .get(i)
+        .cloned()
+        .unwrap_or_else(|| format!("stage {i}"))
+}

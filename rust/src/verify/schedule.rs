@@ -1,0 +1,194 @@
+//! Schedule lints (V001–V004): the task-graph cycle check that runs
+//! *before* anything simulates (a cycle would deadlock the simulator's
+//! ready-queue loop and the real executor's channel topology alike),
+//! and the trace checks that hold a simulated schedule to the 1F1B
+//! contract — bwd after its fwd, the in-flight window respected, no
+//! device in two places at once.
+
+use std::collections::BTreeMap;
+
+use super::{Code, Diagnostic};
+use crate::pipeline::{StageGraph, TaskKind, TaskSpec};
+use crate::sim::TaskTrace;
+
+/// Comparison slop for virtual-time boundaries: a bwd may start exactly
+/// when its fwd ends, a fwd exactly when the window-opening bwd ends.
+const EPS_MS: f64 = 1e-9;
+
+fn task_label(tasks: &[TaskSpec], i: usize) -> String {
+    let t = &tasks[i];
+    let kind = match t.kind {
+        TaskKind::Fwd => "fwd",
+        TaskKind::Bwd => "bwd",
+    };
+    format!("{kind} s{} mb{}", t.stage, t.microbatch)
+}
+
+/// V001: static cycle detection over the dependency edges, iterative
+/// three-color DFS in deterministic node order. Returns at most one
+/// diagnostic — the first cycle found — since a single cycle usually
+/// implicates many tasks and one precise report beats a flood.
+/// Out-of-range dependency indices are reported through the same code
+/// (the scheduler could never satisfy them, the same deadlock).
+pub fn check_tasks(tasks: &[TaskSpec]) -> Vec<Diagnostic> {
+    let n = tasks.len();
+    for (d, i) in crate::sim::dependency_edges(tasks) {
+        if d >= n {
+            return vec![Diagnostic::new(
+                Code::V001,
+                task_label(tasks, i),
+                format!("dependency index {d} out of range ({n} tasks)"),
+            )];
+        }
+    }
+    // 0 = unvisited, 1 = on the current DFS path, 2 = done.
+    let mut state = vec![0u8; n];
+    for root in 0..n {
+        if state[root] != 0 {
+            continue;
+        }
+        let mut path: Vec<usize> = vec![root];
+        let mut next_dep: Vec<usize> = vec![0];
+        state[root] = 1;
+        while let Some(&node) = path.last() {
+            let i = *next_dep.last().unwrap();
+            if let Some(&(d, _)) = tasks[node].deps.get(i) {
+                *next_dep.last_mut().unwrap() += 1;
+                match state[d] {
+                    0 => {
+                        state[d] = 1;
+                        path.push(d);
+                        next_dep.push(0);
+                    }
+                    1 => {
+                        let start =
+                            path.iter().position(|&p| p == d).unwrap_or(0);
+                        return vec![Diagnostic::new(
+                            Code::V001,
+                            task_label(tasks, d),
+                            format!(
+                                "dependency cycle of {} task(s): {} waits for {}",
+                                path.len() - start,
+                                task_label(tasks, d),
+                                task_label(tasks, node),
+                            ),
+                        )];
+                    }
+                    _ => {}
+                }
+            } else {
+                state[node] = 2;
+                path.pop();
+                next_dep.pop();
+            }
+        }
+    }
+    Vec::new()
+}
+
+/// V002/V003/V004 over an executed (simulated) schedule. The trace may
+/// come from [`crate::sim::simulate`] or be hand-doctored — nothing
+/// here assumes the simulator's own invariants.
+pub fn check_trace(trace: &[TaskTrace], graph: &StageGraph, m: usize) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut fwd: BTreeMap<(usize, usize), &TaskTrace> = BTreeMap::new();
+    let mut bwd: BTreeMap<(usize, usize), &TaskTrace> = BTreeMap::new();
+    for t in trace {
+        match t.kind {
+            TaskKind::Fwd => fwd.insert((t.stage, t.microbatch), t),
+            TaskKind::Bwd => bwd.insert((t.stage, t.microbatch), t),
+        };
+    }
+    let stage_name = |s: usize| -> String {
+        graph
+            .nodes
+            .get(s)
+            .map_or_else(|| format!("stage {s}"), |n| n.name.clone())
+    };
+
+    // V002: every bwd starts no earlier than its matching fwd ends.
+    for ((s, mb), b) in &bwd {
+        if let Some(f) = fwd.get(&(*s, *mb)) {
+            if b.start_ms < f.end_ms - EPS_MS {
+                diags.push(Diagnostic::new(
+                    Code::V002,
+                    stage_name(*s),
+                    format!(
+                        "bwd mb{mb} starts at {:.3} ms, before its fwd completes at {:.3} ms",
+                        b.start_ms, f.end_ms
+                    ),
+                ));
+            }
+        }
+    }
+
+    // V003: per stage, sweep the [fwd start, bwd end) activation-liveness
+    // intervals; the peak overlap is the in-flight microbatch count the
+    // memory model budgets as min(m, depth-to-sink).
+    let depth = graph.depth_to_sink();
+    for s in 0..graph.nodes.len() {
+        let limit = depth.get(s).copied().unwrap_or(m).min(m);
+        let mut events: Vec<(f64, i64)> = Vec::new();
+        for mb in 0..m {
+            let (Some(f), Some(b)) = (fwd.get(&(s, mb)), bwd.get(&(s, mb))) else {
+                continue;
+            };
+            if b.end_ms > f.start_ms + EPS_MS {
+                events.push((f.start_ms, 1));
+                events.push((b.end_ms, -1));
+            }
+        }
+        // At equal times the release (-1) lands first: a fwd may start
+        // exactly when the bwd that opened its window ends.
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut live = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in events {
+            live += d;
+            peak = peak.max(live);
+        }
+        if peak > limit as i64 {
+            diags.push(Diagnostic::new(
+                Code::V003,
+                stage_name(s),
+                format!("{peak} microbatches in flight, 1F1B window allows {limit}"),
+            ));
+        }
+    }
+
+    // V004: per device, no two nonzero-duration tasks overlap.
+    let mut by_dev: BTreeMap<usize, Vec<&TaskTrace>> = BTreeMap::new();
+    for t in trace {
+        if t.end_ms > t.start_ms + EPS_MS {
+            by_dev.entry(t.device).or_default().push(t);
+        }
+    }
+    for (dev, mut iv) in by_dev {
+        iv.sort_by(|a, b| {
+            a.start_ms
+                .total_cmp(&b.start_ms)
+                .then(a.end_ms.total_cmp(&b.end_ms))
+        });
+        for w in iv.windows(2) {
+            if w[1].start_ms < w[0].end_ms - EPS_MS {
+                diags.push(Diagnostic::new(
+                    Code::V004,
+                    format!("device {dev}"),
+                    format!(
+                        "s{} mb{} [{:.3}, {:.3}) overlaps s{} mb{} [{:.3}, {:.3})",
+                        w[1].stage,
+                        w[1].microbatch,
+                        w[1].start_ms,
+                        w[1].end_ms,
+                        w[0].stage,
+                        w[0].microbatch,
+                        w[0].start_ms,
+                        w[0].end_ms
+                    ),
+                ));
+                break; // one report per device keeps the output readable
+            }
+        }
+    }
+    diags
+}

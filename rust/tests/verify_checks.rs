@@ -1,0 +1,355 @@
+//! Integration tests for the static verifier ([`cornstarch::verify`]):
+//! unmutated plans over both pool kinds verify clean, and a mutation per
+//! lint class is caught by exactly its code — cycle injection (V001),
+//! swapped fwd/bwd (V002), stripped 1F1B memory tokens (V003), a
+//! doctored double-booked trace (V004), bad group assignments (V005),
+//! inflated peak bytes (V006), dropped/duplicated cp token blocks
+//! (V007), and frozen stages carrying backward cost (V008). Also holds
+//! the golden human rendering and the byte-determinism contract of the
+//! JSON form.
+
+use cornstarch::api::{
+    ClusterSpec, FleetPartition, PlanRequest, PlanningService,
+};
+use cornstarch::modality::Strategy;
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::pipeline::{onef1b_tasks, StageCost, StageGraph};
+use cornstarch::sim::simulate;
+use cornstarch::tuner::{Candidate, FrozenSetting};
+use cornstarch::util::json::Json;
+use cornstarch::verify::{
+    self, resources, schedule, Code, Diagnostic, Severity, VerifyReport,
+};
+
+const REPORT_GOLDEN: &str = include_str!("golden/verify_report.txt");
+
+fn spec() -> MllmSpec {
+    MllmSpec::vlm(Size::S, Size::S)
+}
+
+fn small_request(cluster: ClusterSpec) -> PlanRequest {
+    PlanRequest::default_for(spec()).cluster(cluster).threads(2)
+}
+
+fn chain_graph(stages: usize, fwd: f64, bwd: f64) -> StageGraph {
+    let mut g = StageGraph::default();
+    let costs = vec![StageCost { fwd_ms: fwd, bwd_ms: bwd }; stages];
+    g.add_chain("llm", &costs, 0, &[]);
+    g
+}
+
+fn error_codes(r: &VerifyReport) -> Vec<Code> {
+    r.diagnostics
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(|d| d.code)
+        .collect()
+}
+
+#[test]
+fn unmutated_plans_verify_clean_on_both_pool_kinds() {
+    let pools =
+        [ClusterSpec::a40_default().with_devices(8), ClusterSpec::a40_a100_demo()];
+    for cluster in pools {
+        let report = PlanningService::new()
+            .plan(&small_request(cluster.clone()))
+            .expect("planning a valid request succeeds");
+        assert!(report.provenance.verifier_clean);
+        let vr = verify::verify_plan(
+            &report.plan,
+            &cluster,
+            Some(&report.winner().candidate),
+            spec().llm_tokens(),
+        );
+        assert!(vr.is_clean(), "shipped plan failed lints:\n{}", vr.render());
+    }
+}
+
+#[test]
+fn v001_cycle_injection_is_caught() {
+    let g = chain_graph(3, 1.0, 2.0);
+    let m = 4;
+    let mut tasks = onef1b_tasks(&g, m);
+    // The last bwd transitively waits on the first fwd; closing the loop
+    // the other way injects a cycle without touching task arity.
+    let last = tasks.len() - 1;
+    tasks[0].deps.push((last, 0.0));
+    let r = verify::verify_schedule(&tasks, &g, m);
+    assert_eq!(error_codes(&r), vec![Code::V001], "{}", r.render());
+    assert!(r.diagnostics[0].message.contains("cycle"));
+}
+
+#[test]
+fn v001_out_of_range_dependency_is_caught() {
+    let g = chain_graph(2, 1.0, 1.0);
+    let mut tasks = onef1b_tasks(&g, 2);
+    let n = tasks.len();
+    tasks[1].deps.push((n + 7, 0.0));
+    let r = verify::verify_schedule(&tasks, &g, 2);
+    assert_eq!(error_codes(&r), vec![Code::V001], "{}", r.render());
+    assert!(r.diagnostics[0].message.contains("out of range"));
+}
+
+#[test]
+fn v002_bwd_released_before_its_fwd_is_caught() {
+    let g = chain_graph(2, 1.0, 1.0);
+    let m = 4;
+    let n = g.nodes.len();
+    let mut tasks = onef1b_tasks(&g, m);
+    // bwd(stage 1, mb 0): stripping its deps frees it to run at t=0,
+    // before its matching forward has produced activations.
+    let bad = m * n + 1;
+    assert_eq!(tasks[bad].stage, 1);
+    assert_eq!(tasks[bad].microbatch, 0);
+    tasks[bad].deps.clear();
+    let r = verify::verify_schedule(&tasks, &g, m);
+    let codes = error_codes(&r);
+    assert!(codes.contains(&Code::V002), "{}", r.render());
+    assert!(codes.iter().all(|&c| c == Code::V002), "{}", r.render());
+}
+
+#[test]
+fn v003_stripped_memory_tokens_are_caught() {
+    let g = chain_graph(2, 1.0, 1.0);
+    let m = 6;
+    let n = g.nodes.len();
+    let mut tasks = onef1b_tasks(&g, m);
+    // Forward tasks occupy ids [0, m*n); any dep at or past that split is
+    // a 1F1B memory token. Removing them lets every microbatch pile up.
+    let split = m * n;
+    for t in tasks.iter_mut().take(split) {
+        t.deps.retain(|&(d, _)| d < split);
+    }
+    let r = verify::verify_schedule(&tasks, &g, m);
+    let codes = error_codes(&r);
+    assert!(codes.contains(&Code::V003), "{}", r.render());
+    assert!(codes.iter().all(|&c| c == Code::V003), "{}", r.render());
+}
+
+#[test]
+fn v004_doctored_trace_double_books_a_device() {
+    let g = chain_graph(2, 1.0, 1.0);
+    let m = 4;
+    let n = g.nodes.len();
+    let tasks = onef1b_tasks(&g, m);
+    let mut trace = simulate(&tasks).trace;
+    // fwd(stage 0, mb 1) sits at task id n; drag its start back into the
+    // interval fwd(stage 0, mb 0) occupies on the same device.
+    let victim = n;
+    assert_eq!(trace[victim].stage, 0);
+    assert_eq!(trace[victim].microbatch, 1);
+    trace[victim].start_ms = trace[0].start_ms + 0.25;
+    let diags = schedule::check_trace(&trace, &g, m);
+    assert!(!diags.is_empty());
+    assert!(diags.iter().all(|d| d.code == Code::V004));
+    assert!(diags[0].subject.starts_with("device"));
+}
+
+#[test]
+fn v005_assignment_rules_migrated_from_space() {
+    // `Candidate::assignment_is_valid` used to answer these with a bare
+    // bool; the verifier's V005 lints now hold the same contract.
+    let homo = ClusterSpec::a40_default();
+    let demo = ClusterSpec::a40_a100_demo();
+    let base = Candidate {
+        strategy: Strategy::Cornstarch,
+        enc_pps: vec![1, 2],
+        llm_pp: 2,
+        tp: 1,
+        cp: 1,
+        num_microbatches: 8,
+        frozen: FrozenSetting::Paper,
+        chain_groups: Vec::new(),
+    };
+    let with = |groups: Vec<usize>| Candidate {
+        chain_groups: groups,
+        ..base.clone()
+    };
+
+    // Empty assignment means "the single group of a homogeneous pool".
+    assert!(verify::verify_candidate(&base, &homo).is_clean());
+
+    // In range on the two-group pool, out of range on the one-group pool.
+    assert!(verify::verify_candidate(&with(vec![0, 1, 1]), &demo).is_clean());
+    let r = verify::verify_candidate(&with(vec![0, 1, 1]), &homo);
+    assert!(!r.is_clean());
+    assert!(error_codes(&r).iter().all(|&c| c == Code::V005));
+
+    // Arity: three chains (two encoders + LLM) need three entries.
+    let r = verify::verify_candidate(&with(vec![0, 1]), &demo);
+    assert_eq!(error_codes(&r), vec![Code::V005]);
+
+    // Colocated encoders must share one group.
+    let colo = |groups: Vec<usize>| Candidate {
+        strategy: Strategy::Colocated,
+        chain_groups: groups,
+        ..base.clone()
+    };
+    let r = verify::verify_candidate(&colo(vec![0, 1, 1]), &demo);
+    assert_eq!(error_codes(&r), vec![Code::V005]);
+    assert!(r.diagnostics[0].message.contains("split across groups"));
+    assert!(verify::verify_candidate(&colo(vec![1, 1, 0]), &demo).is_clean());
+
+    // Replicated has exactly one chain.
+    let repl = |groups: Vec<usize>| Candidate {
+        strategy: Strategy::Replicated,
+        enc_pps: Vec::new(),
+        chain_groups: groups,
+        ..base.clone()
+    };
+    assert!(verify::verify_candidate(&repl(vec![1]), &demo).is_clean());
+    let r = verify::verify_candidate(&repl(vec![0, 0]), &demo);
+    assert_eq!(error_codes(&r), vec![Code::V005]);
+
+    // Over-capacity: 2 LLM stages of tp×cp = 4 GPUs each don't fit a
+    // 4-device group even with sane indices.
+    let fat = Candidate {
+        enc_pps: vec![1],
+        tp: 2,
+        cp: 2,
+        chain_groups: vec![0, 1],
+        ..base.clone()
+    };
+    let r = verify::verify_candidate(&fat, &demo);
+    assert_eq!(error_codes(&r), vec![Code::V005]);
+    assert!(r.diagnostics[0].message.contains("GPUs assigned"));
+}
+
+#[test]
+fn v005_v006_plan_mutations_are_caught() {
+    let cluster = ClusterSpec::a40_default().with_devices(8);
+    let report = PlanningService::new()
+        .plan(&small_request(cluster.clone()))
+        .expect("planning a valid request succeeds");
+
+    // Bad group index: reported, never indexed into the cluster.
+    let mut bad_group = report.plan.clone();
+    bad_group.stage_groups[0] = 9;
+    let r = verify::verify_plan(&bad_group, &cluster, None, spec().llm_tokens());
+    assert_eq!(error_codes(&r), vec![Code::V005], "{}", r.render());
+
+    // Inflated peak bytes: 10 TiB of params blows any A40 budget.
+    let mut oom = report.plan.clone();
+    oom.stage_mem[0].param_bytes += 10u64 << 40;
+    let r = verify::verify_plan(&oom, &cluster, None, spec().llm_tokens());
+    assert_eq!(error_codes(&r), vec![Code::V006], "{}", r.render());
+}
+
+#[test]
+fn v007_dropped_and_duplicated_cp_blocks_are_caught() {
+    // The real cp=2 distribution over the tuner's workload is covering.
+    assert!(resources::check_cp(spec().llm_tokens(), 2).is_empty());
+    // cp <= 1 trivially distributes nothing.
+    assert!(resources::check_cp(spec().llm_tokens(), 1).is_empty());
+
+    // Dropped block: fewer assignments than token blocks.
+    let short = vec![0usize; 9];
+    let r = VerifyReport::from_diagnostics(resources::check_cp_assignment(
+        10, 2, &short,
+    ));
+    assert_eq!(error_codes(&r), vec![Code::V007]);
+
+    // Out-of-range rank: those blocks are silently lost at execution.
+    let bad_rank = vec![0, 1, 0, 1, 5, 0, 1, 0, 1, 0];
+    let r = VerifyReport::from_diagnostics(resources::check_cp_assignment(
+        10, 2, &bad_rank,
+    ));
+    assert_eq!(error_codes(&r), vec![Code::V007]);
+    assert!(r.diagnostics[0].message.contains("rank 5"));
+}
+
+#[test]
+fn v008_frozen_stage_with_bwd_cost_warns_but_stays_clean() {
+    let cluster = ClusterSpec::a40_default().with_devices(8);
+    let report = PlanningService::new()
+        .plan(&small_request(cluster.clone()))
+        .expect("planning a valid request succeeds");
+    // Claim the plan is all-frozen while its stages were costed with
+    // live backward passes: the cost model and the policy now disagree.
+    let mut frosty = report.winner().candidate.clone();
+    frosty.frozen = FrozenSetting::AllFrozen;
+    let r = verify::verify_plan(
+        &report.plan,
+        &cluster,
+        Some(&frosty),
+        spec().llm_tokens(),
+    );
+    assert!(r.is_clean(), "V008 is Warn severity: {}", r.render());
+    assert!(r.warnings() > 0, "{}", r.render());
+    assert!(r
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity == Severity::Warn)
+        .all(|d| d.code == Code::V008));
+}
+
+#[test]
+fn fleet_partition_lints_split_errors_from_idle_warnings() {
+    let demo = ClusterSpec::a40_a100_demo();
+
+    // Full coverage: clean, not even a warning.
+    let full = FleetPartition { slices: vec![vec![4, 0], vec![0, 4]] };
+    let r = verify::verify_partition(&full, &demo);
+    assert!(r.is_clean() && r.warnings() == 0, "{}", r.render());
+
+    // A group oversubscribed across tenants is an Error.
+    let over = FleetPartition { slices: vec![vec![4, 2], vec![1, 2]] };
+    let r = verify::verify_partition(&over, &demo);
+    assert_eq!(error_codes(&r), vec![Code::V005], "{}", r.render());
+
+    // Idle headroom is visible but does not block the carve.
+    let idle = FleetPartition { slices: vec![vec![2, 4]] };
+    let r = verify::verify_partition(&idle, &demo);
+    assert!(r.is_clean());
+    assert_eq!(r.warnings(), 1);
+    assert!(r.diagnostics[0].message.contains("idle headroom"));
+
+    // A slice not shaped to the pool's group list is an Error.
+    let misshapen = FleetPartition { slices: vec![vec![4]] };
+    assert!(!verify::verify_partition(&misshapen, &demo).is_clean());
+}
+
+#[test]
+fn report_rendering_matches_golden() {
+    let report = VerifyReport::from_diagnostics(vec![
+        Diagnostic::new(
+            Code::V008,
+            "enc:vision[0]",
+            "all-frozen config, stage carries 12.000 ms of bwd cost",
+        ),
+        Diagnostic::new(
+            Code::V006,
+            "llm[0]",
+            "peak 91.00 GiB exceeds the 44.00 GiB budget of group 0 (A40)",
+        ),
+        Diagnostic::new(
+            Code::V001,
+            "",
+            "dependency cycle of 3 task(s): fwd s0 mb0 waits for bwd s2 mb1",
+        ),
+    ]);
+    assert_eq!(report.render(), REPORT_GOLDEN);
+}
+
+#[test]
+fn verify_json_is_byte_identical_across_runs() {
+    let run = || {
+        let cluster = ClusterSpec::a40_default().with_devices(8);
+        let report = PlanningService::new()
+            .plan(&small_request(cluster.clone()))
+            .expect("planning a valid request succeeds");
+        verify::verify_plan(
+            &report.plan,
+            &cluster,
+            Some(&report.winner().candidate),
+            spec().llm_tokens(),
+        )
+        .to_json()
+        .render()
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second);
+    let parsed = Json::parse(&first).expect("verify JSON parses");
+    assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(true));
+}

@@ -1,0 +1,49 @@
+#!/usr/bin/env python3
+"""Source lint: raw `println!` / `eprintln!` are reserved for the
+telemetry sink (`rust/src/telemetry/mod.rs`) — everything else must
+route user-facing output through `telemetry::report` / `log` so the
+`--quiet` / `-v` contract and trace capture keep working. Examples and
+tests are designated report-output sites and are not scanned.
+
+Exit status: 0 clean, 1 when a raw print site is found.
+"""
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC = ROOT / "rust" / "src"
+ALLOWED = {SRC / "telemetry" / "mod.rs"}
+
+
+def main() -> int:
+    scanned = 0
+    bad = []
+    for path in sorted(SRC.rglob("*.rs")):
+        if path in ALLOWED:
+            continue
+        scanned += 1
+        for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1
+        ):
+            stripped = line.lstrip()
+            # Comment lines (incl. `///` doc examples) may show prints.
+            if stripped.startswith("//"):
+                continue
+            if "println!" in stripped or "eprintln!" in stripped:
+                rel = path.relative_to(ROOT)
+                bad.append(f"{rel}:{lineno}: {stripped}")
+    if bad:
+        print(
+            "raw print sites found — route output through "
+            "telemetry::report / telemetry::log:"
+        )
+        for entry in bad:
+            print(f"  {entry}")
+        return 1
+    print(f"println lint: clean ({scanned} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
