@@ -1,0 +1,208 @@
+//! Bench: `cornstarch serve` under concurrent clients — mixed
+//! warm-hit / cold-miss request streams over a real TCP socket, with
+//! the cold one-shot tune as the baseline the warm path must beat.
+//!
+//! The headline numbers (written to `BENCH_serve.json`): per-request
+//! latency p50/p99 for the mixed stream, the warm-hit-only p50 (served
+//! from the plan store's in-process tier, no disk, no search), and the
+//! aggregate requests/s across 8 client threads. The service claim is
+//! `speedup_warm_vs_cold` ≥ 10: a warm repeat must be at least an
+//! order of magnitude cheaper than re-running the search.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+
+use cornstarch::api::{PlanRequest, PlanningService};
+use cornstarch::bench::{median, Bencher};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::serve::{ServeOpts, Server};
+use cornstarch::telemetry;
+use cornstarch::util::json::Json;
+
+const CLIENTS: usize = 8;
+/// Per-client mixed stream: hits to the warm set + unique-signature
+/// misses (distinct budgets force distinct cache signatures).
+const HITS_PER_CLIENT: usize = 15;
+const MISSES_PER_CLIENT: usize = 5;
+
+/// The warm set every client re-requests (small spaces keep the cold
+/// fills fast; the warm path cost is independent of model size anyway).
+const WARM: &[&str] = &[
+    r#"{"mllm":"VLM-S","llm":"S","budget":8,"threads":2}"#,
+    r#"{"mllm":"ALM-S","llm":"S","budget":8,"threads":2}"#,
+    r#"{"mllm":"VLM-M","llm":"S","budget":8,"threads":2}"#,
+];
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// One request/response round-trip; returns (latency_ms, cache_hit).
+fn roundtrip(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    line: &str,
+) -> (f64, bool) {
+    let t0 = std::time::Instant::now();
+    stream.write_all(line.as_bytes()).expect("send");
+    stream.write_all(b"\n").expect("send");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("recv");
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let j = Json::parse(resp.trim()).expect("response is JSON");
+    assert_eq!(
+        j.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "request failed: {resp}"
+    );
+    (ms, j.get("cache_hit").and_then(Json::as_bool) == Some(true))
+}
+
+fn main() {
+    // ---- baseline: the cold one-shot tune the warm path must beat ----
+    let cold_req = PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S))
+        .budget(8)
+        .threads(2);
+    let mut cold_walls = Vec::new();
+    for _ in 0..9 {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(
+            PlanningService::new().plan(&cold_req).expect("cold tune"),
+        );
+        cold_walls.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let cold_tune_ms = median(&cold_walls);
+
+    // ---- the server under test (in-memory store: the service mode) ----
+    let server = Server::bind(
+        "127.0.0.1:0",
+        ServeOpts { threads: 2, ..ServeOpts::default() },
+    )
+    .expect("bind");
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run().expect("serve"));
+
+    let connect = || {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        (stream, reader)
+    };
+
+    // Warm the store once so the hit set is hot before anyone times it.
+    {
+        let (mut s, mut r) = connect();
+        for line in WARM {
+            let (_, hit) = roundtrip(&mut s, &mut r, line);
+            assert!(!hit, "warm fill should be the miss");
+        }
+    }
+
+    // ---- warm-hit-only latency: one client, store answers from memory
+    let warm_hit_samples: Vec<f64> = {
+        let (mut s, mut r) = connect();
+        let mut out = Vec::new();
+        for i in 0..60 {
+            let (ms, hit) = roundtrip(&mut s, &mut r, WARM[i % WARM.len()]);
+            assert!(hit, "warm set must hit");
+            out.push(ms);
+        }
+        out
+    };
+
+    // ---- mixed stream: 8 clients, hits + unique-signature misses ----
+    let t0 = std::time::Instant::now();
+    let per_client: Vec<Vec<(f64, bool)>> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let (mut s, mut r) = connect();
+                    let mut out = Vec::new();
+                    for i in 0..HITS_PER_CLIENT {
+                        out.push(roundtrip(
+                            &mut s,
+                            &mut r,
+                            WARM[(c + i) % WARM.len()],
+                        ));
+                    }
+                    for i in 0..MISSES_PER_CLIENT {
+                        // budget is part of the cache signature: a
+                        // never-seen budget is a guaranteed cold miss.
+                        let line = format!(
+                            r#"{{"mllm":"VLM-S","llm":"S","budget":{},"threads":2}}"#,
+                            100 + c * MISSES_PER_CLIENT + i
+                        );
+                        out.push(roundtrip(&mut s, &mut r, &line));
+                    }
+                    out
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().expect("client")).collect()
+    });
+    let mixed_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let all: Vec<(f64, bool)> =
+        per_client.into_iter().flatten().collect();
+    let hits = all.iter().filter(|(_, h)| *h).count();
+    let misses = all.len() - hits;
+    let mut mixed: Vec<f64> = all.iter().map(|(ms, _)| *ms).collect();
+    mixed.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut warm_sorted = warm_hit_samples.clone();
+    warm_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    handle.shutdown();
+    let served = runner.join().expect("server thread");
+
+    let p50 = percentile(&mixed, 0.50);
+    let p99 = percentile(&mixed, 0.99);
+    let warm_p50 = percentile(&warm_sorted, 0.50);
+    let warm_p99 = percentile(&warm_sorted, 0.99);
+    let requests_per_s = all.len() as f64 / (mixed_wall_ms / 1e3);
+    let speedup = cold_tune_ms / warm_p50.max(1e-6);
+
+    let mut b = Bencher::new("cornstarch serve");
+    b.record("cold one-shot tune", cold_walls);
+    b.record("warm hit (1 client)", warm_hit_samples);
+    b.record("mixed stream (8 clients)", mixed);
+    b.report();
+    telemetry::report(&format!(
+        "{served} served | {hits} hit / {misses} miss | p50 {p50:.3} ms, \
+         p99 {p99:.3} ms | {requests_per_s:.0} req/s | warm hit p50 \
+         {warm_p50:.3} ms vs cold tune {cold_tune_ms:.2} ms = {speedup:.1}x"
+    ));
+    if speedup < 10.0 {
+        telemetry::error(&format!(
+            "error: warm-hit speedup {speedup:.1}x is under the 10x \
+             service claim"
+        ));
+    }
+
+    let bench_json = Json::obj(vec![
+        // `schema`/`case_id` are the stable keys BENCH trajectory tooling
+        // joins runs on PR-over-PR; no timestamps — emission order and
+        // every non-timing field are deterministic.
+        ("schema", Json::Str("cornstarch-bench/v1".to_string())),
+        ("case_id", Json::Str("serve.mixed.8clients".to_string())),
+        ("bench", Json::Str("serve".to_string())),
+        ("case", Json::Str("mixed hit/miss stream over TCP".to_string())),
+        ("clients", Json::Int(CLIENTS as i64)),
+        ("requests_total", Json::Int(all.len() as i64)),
+        ("hit_requests", Json::Int(hits as i64)),
+        ("miss_requests", Json::Int(misses as i64)),
+        ("p50_ms", Json::Num(p50)),
+        ("p99_ms", Json::Num(p99)),
+        ("requests_per_s", Json::Num(requests_per_s)),
+        ("warm_hit_p50_ms", Json::Num(warm_p50)),
+        ("warm_hit_p99_ms", Json::Num(warm_p99)),
+        ("cold_tune_ms", Json::Num(cold_tune_ms)),
+        ("speedup_warm_vs_cold", Json::Num(speedup)),
+    ]);
+    let out = std::env::var("CORNSTARCH_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_serve.json".to_string());
+    match std::fs::write(&out, bench_json.render()) {
+        Ok(()) => telemetry::info(&format!("wrote {out}")),
+        Err(e) => telemetry::error(&format!("error: writing {out}: {e}")),
+    }
+}

@@ -55,7 +55,9 @@ fn main() {
         });
     }
 
-    // ---- cache hit path: must be file-read-bound, not search-bound ----
+    // ---- cache hit path: answered by the in-process tier of the
+    // two-tier store (first query warms it from the file) — must be
+    // map-read-bound, not search- or even file-read-bound ----
     let mut path = std::env::temp_dir();
     path.push(format!("cornstarch-tuner-bench-{}.json", std::process::id()));
     let _ = std::fs::remove_file(&path);

@@ -57,8 +57,16 @@ pub enum CachePolicy {
     /// Search fresh every time (an in-memory cache that dies with the
     /// request).
     Fresh,
-    /// Consult and fill the JSON plan cache at this path.
+    /// Consult and fill the JSON plan cache at this path — backed by
+    /// the process-wide two-tier store
+    /// ([`crate::tuner::PlanStore::for_path`]): repeat queries are
+    /// answered from memory, writes batch to the file.
     File(String),
+    /// Share answers process-wide in memory, no disk — the long-lived
+    /// service mode ([`crate::tuner::PlanStore::process_memory`]):
+    /// repeat queries across threads hit, identical concurrent queries
+    /// coalesce onto one search, nothing survives the process.
+    Memory,
 }
 
 /// A planning query: what to train, on what hardware, optimizing what.
@@ -170,6 +178,13 @@ impl PlanRequest {
         self
     }
 
+    /// Share answers process-wide in memory (no disk) — see
+    /// [`CachePolicy::Memory`].
+    pub fn cache_memory(mut self) -> Self {
+        self.cache = CachePolicy::Memory;
+        self
+    }
+
     /// Override the whole search space (see [`PlanRequest::space`]).
     pub fn space(mut self, space: SearchSpace) -> Self {
         self.space = Some(space);
@@ -193,9 +208,10 @@ impl PlanRequest {
             threads: self.threads.max(1),
             top: self.top.max(1),
             cache_path: match &self.cache {
-                CachePolicy::Fresh => None,
+                CachePolicy::Fresh | CachePolicy::Memory => None,
                 CachePolicy::File(p) => Some(p.clone()),
             },
+            shared_memory: self.cache == CachePolicy::Memory,
         }
     }
 }
@@ -236,7 +252,13 @@ impl PlanningService {
     pub fn plan(&self, req: &PlanRequest) -> Result<PlanReport, PlanError> {
         let _root_span =
             telemetry::span(&format!("plan {}", req.mllm.name()));
-        let counters_before = telemetry::snapshot();
+        // Per-request accounting that stays correct across threads: a
+        // scope travels with this request (into evaluation workers,
+        // and NOT into a search some other request's thread leads on
+        // our behalf), where a thread-local baseline delta would
+        // mis-attribute counts the moment requests share threads.
+        let scope = telemetry::Scope::new();
+        let _scope_guard = scope.attach();
         if let Some(why) = &req.invalid {
             return Err(PlanError::InvalidRequest(why.clone()));
         }
@@ -344,12 +366,11 @@ impl PlanningService {
                 verification.error_summary(),
             ));
         }
-        // Re-source the deterministic counters this call fired from the
-        // telemetry registry: the delta over the call is the report's
-        // SearchStats block (all zeros except `cache_hits` on a hit).
-        let stats = SearchStats::from_delta(
-            &telemetry::snapshot().delta_since(&counters_before),
-        );
+        // Re-source the deterministic counters this request fired from
+        // its scope: a scope starts empty, so its snapshot IS the
+        // per-request delta — the report's SearchStats block (all
+        // zeros except the hit counters on a hit).
+        let stats = SearchStats::from_delta(&scope.snapshot());
         let provenance = Provenance {
             planner: "tuner",
             cache_hit: outcome.cache_hit,

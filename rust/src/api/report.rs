@@ -69,10 +69,15 @@ pub struct SearchStats {
     pub evaluated: u64,
     /// Plan-cache lookups answered without a search.
     pub cache_hits: u64,
+    /// Of those, answered from the in-process tier (no disk touched).
+    pub cache_mem_hits: u64,
     /// Plan-cache lookups that fell through to a search.
     pub cache_misses: u64,
     /// Plan-cache persists to disk.
     pub cache_writes: u64,
+    /// Requests that joined an identical in-flight search instead of
+    /// launching their own (counted as hits above).
+    pub inflight_joins: u64,
 }
 
 impl SearchStats {
@@ -86,8 +91,10 @@ impl SearchStats {
             pruned_group_capacity: d.get(tkey::PRUNED_GROUP_CAPACITY),
             evaluated: d.get(tkey::EVALUATED),
             cache_hits: d.get(tkey::CACHE_HIT),
+            cache_mem_hits: d.get(tkey::CACHE_MEM_HIT),
             cache_misses: d.get(tkey::CACHE_MISS),
             cache_writes: d.get(tkey::CACHE_WRITE),
+            inflight_joins: d.get(tkey::INFLIGHT_JOIN),
         }
     }
 
@@ -102,8 +109,8 @@ impl SearchStats {
     pub fn render_line(&self) -> String {
         format!(
             "{} enumerated | {} pruned ({} bound, {} memory, {} \
-             capacity) | {} simulated | cache {} hit / {} miss / {} \
-             write",
+             capacity) | {} simulated | cache {} hit ({} mem) / {} \
+             miss / {} write | {} joined in-flight",
             self.candidates_enumerated,
             self.pruned_total(),
             self.pruned_lower_bound,
@@ -111,8 +118,10 @@ impl SearchStats {
             self.pruned_group_capacity,
             self.evaluated,
             self.cache_hits,
+            self.cache_mem_hits,
             self.cache_misses,
             self.cache_writes,
+            self.inflight_joins,
         )
     }
 
@@ -134,8 +143,10 @@ impl SearchStats {
             ),
             ("evaluated", Json::Int(self.evaluated as i64)),
             ("cache_hits", Json::Int(self.cache_hits as i64)),
+            ("cache_mem_hits", Json::Int(self.cache_mem_hits as i64)),
             ("cache_misses", Json::Int(self.cache_misses as i64)),
             ("cache_writes", Json::Int(self.cache_writes as i64)),
+            ("inflight_joins", Json::Int(self.inflight_joins as i64)),
         ])
     }
 }

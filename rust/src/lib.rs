@@ -59,6 +59,11 @@
 //!   simulated trace ([`profile::PlanAnalysis`], `cornstarch explain`)
 //!   and measured-vs-modeled stage-time drift from real PJRT runs
 //!   ([`profile::CalibrationProfile`], `cornstarch calibrate`).
+//! * [`serve`] — planning as a long-lived service: a zero-dependency
+//!   newline-delimited-JSON TCP server over the facade (`cornstarch
+//!   serve`). One process, many requests: warm repeats answer from the
+//!   in-process tier of the two-tier plan store and identical
+//!   concurrent requests coalesce onto a single search.
 
 pub mod api;
 pub mod util;
@@ -74,6 +79,7 @@ pub mod verify;
 pub mod profile;
 pub mod tuner;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod coordinator;
 pub mod bench;

@@ -11,6 +11,7 @@
 //! cornstarch calibrate [opts]           measure PJRT stage times -> profile
 //! cornstarch memory <mllm> [opts]       per-stage memory model verdict
 //! cornstarch fleet [opts]               carve one pool across N tenants
+//! cornstarch serve [opts]               long-lived planning server (JSON lines)
 //! cornstarch diff [fleet|<mllm>] [opts] what a re-plan changed
 //! cornstarch auto <mllm> [--groups N]   Algorithm 1 frontier
 //! cornstarch attn-check [--artifact A]  PJRT cross-check of the CP model
@@ -754,6 +755,26 @@ fn run(args: &[String]) -> Result<()> {
                 coordinator::attn_crosscheck(&artifact, repeats)?.trim_end(),
             );
         }
+        "serve" => {
+            // Planning as a long-lived service: newline-delimited JSON
+            // over TCP (see `cornstarch::serve` for the protocol).
+            // Requests share one process, so repeat queries answer from
+            // the in-process plan-store tier and identical concurrent
+            // queries coalesce onto one search.
+            let addr =
+                flag(rest, "--addr").unwrap_or_else(|| "127.0.0.1:7070".into());
+            let opts = cornstarch::serve::ServeOpts {
+                cache: flag(rest, "--cache"),
+                cluster: parse_cluster(rest)?
+                    .unwrap_or_else(ClusterSpec::a40_default),
+                threads: flag_num(rest, "--threads")?.unwrap_or(0),
+                max_requests: flag_num(rest, "--max-requests")?
+                    .map(|n| n as u64),
+            };
+            let server = cornstarch::serve::Server::bind(&addr, opts)
+                .with_context(|| format!("binding {addr}"))?;
+            server.run().context("serving")?;
+        }
         "list-models" => {
             let m = Manifest::load(Manifest::default_root())
                 .context("run `make artifacts` first")?;
@@ -855,6 +876,8 @@ fn print_help() {
          [--cluster F] [--microbatches N] [--budget-gb G]\n  \
          fleet [--cluster F] [--tenants VLM-L,ALM-M] [--floor X] [--budget K]\n        \
          [--cache P] [--threads N] [--vs-naive]   (multi-tenant pool carve)\n  \
+         serve [--addr H:P] [--cluster F] [--cache P] [--threads N] [--max-requests N]\n        \
+         (long-lived planning server: one JSON request/response per line)\n  \
          diff fleet [--cluster F] [--tenants ...] [--floor X]   (carve vs naive split)\n  \
          diff <MLLM> [--cluster F] [--vs-cluster F2] [--devices N] [--vs-devices M]\n        \
          (mode word or model first, then flags; bare `diff` = `diff fleet`)\n  \
@@ -993,19 +1016,5 @@ fn parse_mllm(name: &str, args: &[String]) -> Result<MllmSpec> {
         Some(s) => Size::parse(&s).ok_or_else(|| anyhow!("bad --llm {s:?}"))?,
         None => Size::M,
     };
-    let (kind, sizes) = name
-        .split_once('-')
-        .ok_or_else(|| anyhow!("bad MLLM name {name:?} (e.g. VLM-M, VALM-SL)"))?;
-    let parse1 = |s: &str| {
-        Size::parse(s).ok_or_else(|| anyhow!("bad size {s:?} in {name:?}"))
-    };
-    Ok(match kind {
-        "VLM" => MllmSpec::vlm(llm, parse1(sizes)?),
-        "ALM" => MllmSpec::alm(llm, parse1(sizes)?),
-        "VALM" => {
-            anyhow::ensure!(sizes.len() == 2, "VALM wants two sizes (e.g. VALM-ML)");
-            MllmSpec::valm(llm, parse1(&sizes[0..1])?, parse1(&sizes[1..2])?)
-        }
-        _ => bail!("unknown MLLM kind {kind:?}"),
-    })
+    MllmSpec::parse_name(name, llm).map_err(|e| anyhow!(e))
 }

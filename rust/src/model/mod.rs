@@ -154,6 +154,37 @@ impl MllmSpec {
         }
     }
 
+    /// Parse a composition name (`VLM-M`, `ALM-S`, `VALM-ML`; the
+    /// inverse of [`MllmSpec::name`]) with an explicit LLM size. The
+    /// single parser behind the CLI's `<mllm>` argument and the serve
+    /// protocol's `mllm` field; the error is a ready-to-print message.
+    pub fn parse_name(name: &str, llm: Size) -> Result<MllmSpec, String> {
+        let (kind, sizes) = name.split_once('-').ok_or_else(|| {
+            format!("bad MLLM name {name:?} (e.g. VLM-M, VALM-SL)")
+        })?;
+        let parse1 = |s: &str| {
+            Size::parse(s)
+                .ok_or_else(|| format!("bad size {s:?} in {name:?}"))
+        };
+        Ok(match kind {
+            "VLM" => MllmSpec::vlm(llm, parse1(sizes)?),
+            "ALM" => MllmSpec::alm(llm, parse1(sizes)?),
+            "VALM" => {
+                if sizes.len() != 2 {
+                    return Err(
+                        "VALM wants two sizes (e.g. VALM-ML)".to_string()
+                    );
+                }
+                MllmSpec::valm(
+                    llm,
+                    parse1(&sizes[0..1])?,
+                    parse1(&sizes[1..2])?,
+                )
+            }
+            _ => return Err(format!("unknown MLLM kind {kind:?}")),
+        })
+    }
+
     pub fn name(&self) -> String {
         match (&self.vision, &self.audio) {
             (Some(v), Some(a)) => format!(

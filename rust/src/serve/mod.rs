@@ -1,0 +1,451 @@
+//! `cornstarch serve` — planning as a long-lived service.
+//!
+//! A zero-dependency line-protocol TCP server over the planning facade
+//! ([`crate::api::PlanningService`]): one JSON object per request line,
+//! one JSON object per response line. Because every request runs inside
+//! the same process, the two-tier plan store ([`crate::tuner::PlanStore`])
+//! answers warm repeats from its in-process map without touching disk,
+//! and identical concurrent requests coalesce onto a single search via
+//! the in-flight dedupe table — the service gets strictly cheaper the
+//! longer it lives, which is the point of running it as one.
+//!
+//! ## Protocol
+//!
+//! Requests are newline-delimited JSON objects:
+//!
+//! ```json
+//! {"mllm": "VLM-M", "llm": "M", "devices": 16, "budget": 32,
+//!  "top": 1, "threads": 4, "objective": "makespan",
+//!  "cluster_file": "examples/clusters/a40.json"}
+//! ```
+//!
+//! Only `mllm` is required; every other field falls back to the same
+//! defaults the `cornstarch tune` CLI uses (and `cluster_file` to the
+//! cluster the server was started with). The response is a single line:
+//!
+//! ```json
+//! {"ok": true, "mllm": "VLM-M", "plan": "<winner label>",
+//!  "cache_hit": false, "iteration_ms": 123.4, "signature": "…",
+//!  "report": "<rendered PlanReport text>", "stats": {…}}
+//! ```
+//!
+//! or `{"ok": false, "error": "…"}` on any parse or planning failure —
+//! a bad request never kills the connection, only that line. Blank
+//! lines are ignored, so `printf '…\n' | nc` style clients work as-is.
+//!
+//! Each connection gets its own handler thread; a connection may
+//! pipeline any number of request lines. The server stops when
+//! [`ServerHandle::shutdown`] is called or after `max_requests` total
+//! request lines (the CI smoke test's exit condition).
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::api::{ClusterSpec, PlanRequest, PlanningService};
+use crate::model::{MllmSpec, Size};
+use crate::telemetry::{self, key as tkey};
+use crate::tuner::Objective;
+use crate::util::json::Json;
+
+/// Server-level defaults applied to every request that doesn't override
+/// them.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Persistent cache file shared by every request (`--cache`). When
+    /// absent the server still shares one in-process plan store across
+    /// requests ([`crate::api::CachePolicy::Memory`]) — warm hits and
+    /// in-flight dedupe work either way; only durability differs.
+    pub cache: Option<String>,
+    /// Cluster requests plan against unless they name a `cluster_file`.
+    pub cluster: ClusterSpec,
+    /// Search-thread default for requests that don't set `threads`
+    /// (0 = leave the facade's own default).
+    pub threads: usize,
+    /// Stop after this many request lines (`--max-requests`; CI smoke).
+    pub max_requests: Option<u64>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            cache: None,
+            cluster: ClusterSpec::a40_default(),
+            threads: 0,
+            max_requests: None,
+        }
+    }
+}
+
+/// Remote control for a running [`Server`] — owns no socket, safe to
+/// clone into handler threads and tests.
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    /// Ask the accept loop to exit. Idempotent; wakes a blocked
+    /// `accept()` by self-connecting.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // The accept loop re-checks the flag after every connection;
+        // this throwaway connect is only there to unblock it.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A bound-but-not-yet-running planning server.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    opts: Arc<ServeOpts>,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`; port 0 picks a free one).
+    pub fn bind(addr: &str, opts: ServeOpts) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            addr,
+            opts: Arc::new(opts),
+            stop: Arc::new(AtomicBool::new(false)),
+            served: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A clonable handle that can stop this server from another thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { stop: Arc::clone(&self.stop), addr: self.addr }
+    }
+
+    /// Serve until [`ServerHandle::shutdown`] or the `max_requests`
+    /// budget is exhausted. Blocks the calling thread; one handler
+    /// thread per connection. Returns the number of request lines
+    /// answered.
+    pub fn run(self) -> std::io::Result<u64> {
+        telemetry::info(&format!(
+            "serving on {} (cache: {}, cluster: {})",
+            self.addr,
+            self.opts.cache.as_deref().unwrap_or("in-memory"),
+            self.opts.cluster.name,
+        ));
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let (stream, peer) = match self.listener.accept() {
+                Ok(conn) => conn,
+                Err(e) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    return Err(e);
+                }
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                // The connection that woke us was shutdown()'s nudge
+                // (or arrived with it); the budget is spent either way.
+                break;
+            }
+            telemetry::debug(&format!("serve: connection from {peer}"));
+            let opts = Arc::clone(&self.opts);
+            let served = Arc::clone(&self.served);
+            let handle = self.handle();
+            workers.retain(|w| !w.is_finished());
+            workers.push(std::thread::spawn(move || {
+                handle_connection(stream, &opts, &served, &handle);
+            }));
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        let n = self.served.load(Ordering::SeqCst);
+        telemetry::info(&format!("serve: done after {n} request(s)"));
+        Ok(n)
+    }
+}
+
+/// Read newline-delimited requests off one connection until EOF, the
+/// stop flag, or the request budget; answer each with one JSON line.
+fn handle_connection(
+    stream: TcpStream,
+    opts: &ServeOpts,
+    served: &AtomicU64,
+    handle: &ServerHandle,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            telemetry::debug(&format!("serve: clone failed: {e}"));
+            return;
+        }
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if handle.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Claim a budget ticket before planning so concurrent
+        // connections can't run past --max-requests together.
+        let ticket = served.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(max) = opts.max_requests {
+            if ticket > max {
+                served.fetch_sub(1, Ordering::SeqCst);
+                break;
+            }
+        }
+        telemetry::incr(tkey::SERVE_REQUESTS);
+        let response = respond_line(&line, opts);
+        let ok = writer
+            .write_all(response.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .and_then(|()| writer.flush())
+            .is_ok();
+        if opts.max_requests.is_some_and(|max| ticket >= max) {
+            handle.shutdown();
+            break;
+        }
+        if !ok {
+            break;
+        }
+    }
+}
+
+/// Answer one request line — the whole protocol minus the sockets
+/// (tests drive this directly). Always returns a single-line JSON
+/// object; errors come back as `{"ok":false,"error":…}`.
+pub fn respond_line(line: &str, opts: &ServeOpts) -> String {
+    let answer = match build_request(line, opts) {
+        Ok(req) => PlanningService::new()
+            .plan(&req)
+            .map(|report| render_response(&req, &report))
+            .map_err(|e| format!("{e}")),
+        Err(e) => Err(e),
+    };
+    match answer {
+        Ok(json) => json,
+        Err(msg) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(msg)),
+        ])
+        .render(),
+    }
+}
+
+/// Parse one request line into the same [`PlanRequest`] the CLI builds.
+pub fn build_request(
+    line: &str,
+    opts: &ServeOpts,
+) -> Result<PlanRequest, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad request: {e}"))?;
+    let name = j
+        .get("mllm")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing required field \"mllm\"".to_string())?;
+    let llm = match j.get("llm").and_then(Json::as_str) {
+        Some(s) => Size::parse(s)
+            .ok_or_else(|| format!("bad \"llm\" {s:?} (S|M|L)"))?,
+        None => Size::M,
+    };
+    let spec = MllmSpec::parse_name(name, llm)?;
+    let cluster = match j.get("cluster_file").and_then(Json::as_str) {
+        Some(p) => ClusterSpec::load(std::path::Path::new(p))
+            .map_err(|e| format!("loading cluster {p:?}: {e}"))?,
+        None => opts.cluster.clone(),
+    };
+    let mut req = PlanRequest::default_for(spec).cluster(cluster);
+    req = match &opts.cache {
+        Some(path) => req.cache_file(path),
+        None => req.cache_memory(),
+    };
+    if opts.threads > 0 {
+        req = req.threads(opts.threads);
+    }
+    if let Some(d) = field_usize(&j, "devices")? {
+        req = req.devices(d);
+    }
+    if let Some(b) = field_usize(&j, "budget")? {
+        req = req.budget(b);
+    }
+    if let Some(t) = field_usize(&j, "threads")? {
+        req = req.threads(t);
+    }
+    if let Some(t) = field_usize(&j, "top")? {
+        req = req.top(t.max(1));
+    }
+    if let Some(o) = j.get("objective").and_then(Json::as_str) {
+        req = req.objective(Objective::parse(o).ok_or_else(|| {
+            format!("bad \"objective\" {o:?} (makespan|tput-per-gpu)")
+        })?);
+    }
+    Ok(req)
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let n = v
+                .as_i64()
+                .filter(|n| *n >= 0)
+                .ok_or_else(|| {
+                    format!("\"{key}\" wants a non-negative integer")
+                })?;
+            Ok(Some(n as usize))
+        }
+    }
+}
+
+/// The success response: identity + the one-line numbers a client
+/// dashboards on + the full rendered report (byte-identical to what a
+/// one-shot `cornstarch tune` prints for the same request).
+fn render_response(
+    req: &PlanRequest,
+    report: &crate::api::PlanReport,
+) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("mllm", Json::Str(req.mllm.name())),
+        (
+            "plan",
+            Json::Str(report.winner().candidate.label()),
+        ),
+        ("cache_hit", Json::Bool(report.provenance.cache_hit)),
+        (
+            "iteration_ms",
+            Json::Num(report.timeline.iteration_ms),
+        ),
+        (
+            "signature",
+            Json::Str(report.provenance.signature.clone()),
+        ),
+        ("report", Json::Str(report.render())),
+        ("stats", report.provenance.stats.to_json()),
+    ])
+    .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ServeOpts {
+        ServeOpts {
+            cluster: ClusterSpec::a40_default().with_devices(8),
+            ..ServeOpts::default()
+        }
+    }
+
+    #[test]
+    fn build_request_applies_fields_and_defaults() {
+        let req = build_request(
+            r#"{"mllm":"VLM-S","llm":"S","budget":4,"threads":2,
+                "top":3,"objective":"makespan"}"#,
+            &opts(),
+        )
+        .unwrap();
+        assert_eq!(req.mllm.name(), "VLM-S");
+        assert_eq!(req.budget, 4);
+        assert_eq!(req.threads, 2);
+        assert_eq!(req.top, 3);
+        assert_eq!(req.cluster.devices(), 8);
+
+        let bare = build_request(r#"{"mllm":"ALM-M"}"#, &opts()).unwrap();
+        assert_eq!(bare.mllm.name(), "ALM-M");
+        assert_eq!(bare.cluster.devices(), 8);
+    }
+
+    #[test]
+    fn bad_requests_become_error_lines_not_panics() {
+        for line in [
+            "not json",
+            r#"{"llm":"M"}"#,
+            r#"{"mllm":"XLM-M"}"#,
+            r#"{"mllm":"VLM-M","llm":"Q"}"#,
+            r#"{"mllm":"VLM-M","budget":-1}"#,
+            r#"{"mllm":"VLM-M","objective":"fastest"}"#,
+        ] {
+            let resp = respond_line(line, &opts());
+            let j = Json::parse(&resp).expect("error responses are JSON");
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+            assert!(
+                j.get("error").and_then(Json::as_str).is_some(),
+                "{line} -> {resp}"
+            );
+        }
+    }
+
+    #[test]
+    fn respond_line_plans_and_reports() {
+        let o = opts();
+        let line = r#"{"mllm":"VLM-S","llm":"S","budget":4,"threads":1}"#;
+        let resp = respond_line(line, &o);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("mllm").and_then(Json::as_str), Some("VLM-S"));
+        assert!(j.get("plan").and_then(Json::as_str).is_some());
+        assert!(j.get("report").and_then(Json::as_str).is_some());
+        assert!(j.get("stats").is_some());
+        assert!(j.get("signature").and_then(Json::as_str).is_some());
+    }
+
+    #[test]
+    fn server_answers_over_a_real_socket_and_honors_max_requests() {
+        use std::io::{BufRead, BufReader, Write};
+        let server = Server::bind(
+            "127.0.0.1:0",
+            ServeOpts {
+                cluster: ClusterSpec::a40_default().with_devices(8),
+                max_requests: Some(2),
+                ..ServeOpts::default()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let runner = std::thread::spawn(move || server.run().unwrap());
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let line = "{\"mllm\":\"VLM-S\",\"llm\":\"S\",\"budget\":4,\
+                    \"threads\":1}\n";
+        for _ in 0..2 {
+            stream.write_all(line.as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            let j = Json::parse(resp.trim()).unwrap();
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        }
+        // Budget of 2 is spent: the accept loop exits on its own.
+        assert_eq!(runner.join().unwrap(), 2);
+    }
+
+    #[test]
+    fn shutdown_handle_stops_an_idle_server() {
+        let server =
+            Server::bind("127.0.0.1:0", ServeOpts::default()).unwrap();
+        let handle = server.handle();
+        let runner = std::thread::spawn(move || server.run().unwrap());
+        handle.shutdown();
+        assert_eq!(runner.join().unwrap(), 0);
+    }
+}

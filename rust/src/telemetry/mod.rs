@@ -16,6 +16,18 @@
 //!   nested scopes compose. Counter values are part of the
 //!   determinism contract: identical inputs produce identical
 //!   snapshots, and goldens may pin them.
+//!
+//!   When one logical request spans *several* threads — the planning
+//!   service's evaluation workers, `cornstarch serve` connections, a
+//!   search another request's thread is leading on our behalf — the
+//!   thread-local registry alone would silently mis-attribute
+//!   provenance. [`Scope`] fixes that: a cheap shared accumulator a
+//!   request [`Scope::attach`]es on every thread that works for it
+//!   (RAII guard; attach nests, so a fleet's scope and its inner
+//!   tenant-plan scopes compose). Every `count` feeds the thread-local
+//!   registry *and* each scope attached to the current thread;
+//!   [`current_scopes`] hands a worker-pool spawner the scopes to
+//!   re-attach inside its workers.
 //! * **Spans** — RAII wall-clock timers ([`span`]) that record Chrome
 //!   trace-event `X` slices (µs since process epoch, one lane per
 //!   thread) while tracing is on ([`enable_trace`]); otherwise they
@@ -76,16 +88,30 @@ pub mod key {
     pub const VERIFY_PASS: &str = "verify_pass";
     /// Verifier runs that found at least one Error lint.
     pub const VERIFY_FAIL: &str = "verify_fail";
+    /// Plan-store lookups answered from the in-process tier (no disk).
+    pub const CACHE_MEM_HIT: &str = "cache_mem_hit";
+    /// Requests that joined an identical in-flight search instead of
+    /// launching their own.
+    pub const INFLIGHT_JOIN: &str = "inflight_join";
+    /// Requests handled by `cornstarch serve`.
+    pub const SERVE_REQUESTS: &str = "serve_requests";
 }
 
 thread_local! {
     static COUNTERS: RefCell<BTreeMap<&'static str, u64>> =
         const { RefCell::new(BTreeMap::new()) };
+    static SCOPES: RefCell<Vec<Scope>> = const { RefCell::new(Vec::new()) };
 }
 
-/// Add `n` to the named counter on this planner thread.
+/// Add `n` to the named counter on this planner thread, and to every
+/// [`Scope`] currently attached to it.
 pub fn count(name: &'static str, n: u64) {
     COUNTERS.with(|c| *c.borrow_mut().entry(name).or_insert(0) += n);
+    SCOPES.with(|s| {
+        for scope in s.borrow().iter() {
+            scope.add(name, n);
+        }
+    });
 }
 
 /// Increment the named counter by one.
@@ -179,6 +205,87 @@ pub fn snapshot() -> Snapshot {
             .map(|(&k, &v)| (k.to_string(), v))
             .collect(),
     })
+}
+
+// ---------------------------------------------------------------- scopes
+
+/// A per-request counter accumulator that follows the request across
+/// threads. The thread-local registry attributes counts to whichever
+/// thread fired them — correct for a CLI process, silently wrong for a
+/// request whose search runs on evaluation workers or on another
+/// request's thread (in-flight dedupe). A `Scope` is attached
+/// ([`Scope::attach`]) on every thread doing work for the request;
+/// while attached, every [`count`] on that thread also lands in the
+/// scope. Cloning shares the accumulator (`Arc` inside), so the same
+/// scope can be live on many threads at once.
+#[derive(Clone, Default)]
+pub struct Scope {
+    inner: std::sync::Arc<Mutex<BTreeMap<&'static str, u64>>>,
+}
+
+impl Scope {
+    /// A fresh, empty scope.
+    pub fn new() -> Scope {
+        Scope::default()
+    }
+
+    fn add(&self, name: &'static str, n: u64) {
+        *self.inner.lock().unwrap().entry(name).or_insert(0) += n;
+    }
+
+    /// Attach this scope to the current thread; counts fired here flow
+    /// into it until the returned guard drops. Attaching nests: a
+    /// thread may carry several scopes (a fleet's plus a tenant's) and
+    /// every one of them sees every count.
+    #[must_use]
+    pub fn attach(&self) -> ScopeGuard {
+        SCOPES.with(|s| s.borrow_mut().push(self.clone()));
+        ScopeGuard { scope: self.clone() }
+    }
+
+    /// The counts accumulated so far, as an ordered [`Snapshot`] —
+    /// already a delta (scopes start empty), no baseline arithmetic.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counts: self
+                .inner
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(&k, &v)| (k.to_string(), v))
+                .collect(),
+        }
+    }
+}
+
+/// RAII guard from [`Scope::attach`]; detaches the scope from the
+/// current thread on drop.
+pub struct ScopeGuard {
+    scope: Scope,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        SCOPES.with(|s| {
+            let mut stack = s.borrow_mut();
+            // Remove the most recent attachment of *this* accumulator
+            // (identity, not value — the same scope may be attached
+            // more than once on a thread).
+            if let Some(i) = stack.iter().rposition(|sc| {
+                std::sync::Arc::ptr_eq(&sc.inner, &self.scope.inner)
+            }) {
+                stack.remove(i);
+            }
+        });
+    }
+}
+
+/// The scopes attached to the current thread, outermost first. A
+/// worker-pool spawner captures these before `thread::scope` and
+/// re-attaches each inside its workers, so per-request accounting
+/// survives the hop onto pool threads.
+pub fn current_scopes() -> Vec<Scope> {
+    SCOPES.with(|s| s.borrow().clone())
 }
 
 // ---------------------------------------------------------------- logging
@@ -570,6 +677,73 @@ mod tests {
         assert_eq!(sl.get("pid").and_then(Json::as_i64), Some(2));
         assert_eq!(sl.get("ts").and_then(Json::as_i64), Some(100));
         assert_eq!(sl.get("dur").and_then(Json::as_i64), Some(50));
+    }
+
+    #[test]
+    fn scope_captures_counts_fired_on_other_threads() {
+        let scope = Scope::new();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let sc = scope.clone();
+                std::thread::spawn(move || {
+                    let _g = sc.attach();
+                    count(key::EVALUATED, 2);
+                    incr(key::CACHE_MEM_HIT);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = scope.snapshot();
+        assert_eq!(s.get(key::EVALUATED), 8);
+        assert_eq!(s.get(key::CACHE_MEM_HIT), 4);
+        // the spawning thread never attached, so nothing leaked here
+        // beyond whatever other tests put in the thread-local registry
+    }
+
+    #[test]
+    fn scopes_nest_and_detach_in_any_order() {
+        let outer = Scope::new();
+        let inner = Scope::new();
+        let og = outer.attach();
+        incr(key::INFLIGHT_JOIN);
+        {
+            let _ig = inner.attach();
+            count(key::EVALUATED, 3);
+        }
+        incr(key::SERVE_REQUESTS);
+        drop(og);
+        incr(key::CACHE_MISS); // after detach: reaches neither scope
+        assert_eq!(outer.snapshot().get(key::INFLIGHT_JOIN), 1);
+        assert_eq!(outer.snapshot().get(key::EVALUATED), 3);
+        assert_eq!(outer.snapshot().get(key::SERVE_REQUESTS), 1);
+        assert_eq!(outer.snapshot().get(key::CACHE_MISS), 0);
+        let i = inner.snapshot();
+        assert_eq!(i.get(key::EVALUATED), 3);
+        assert_eq!(i.get(key::INFLIGHT_JOIN), 0);
+        assert_eq!(i.get(key::SERVE_REQUESTS), 0);
+    }
+
+    #[test]
+    fn current_scopes_rehydrate_on_worker_threads() {
+        // The evaluate worker-pool pattern: capture the attached
+        // scopes, spawn, re-attach inside each worker.
+        let scope = Scope::new();
+        let _g = scope.attach();
+        let carried = current_scopes();
+        assert_eq!(carried.len(), 1);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let carried = carried.clone();
+                s.spawn(move || {
+                    let _gs: Vec<_> =
+                        carried.iter().map(Scope::attach).collect();
+                    incr(key::EVALUATED);
+                });
+            }
+        });
+        assert_eq!(scope.snapshot().get(key::EVALUATED), 3);
     }
 
     #[test]

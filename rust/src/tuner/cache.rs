@@ -76,7 +76,21 @@ impl PlanSummary {
             ("iteration_ms", Json::Num(self.iteration_ms)),
             ("throughput_per_gpu", Json::Num(self.throughput_per_gpu)),
             ("n_gpus", Json::Int(self.n_gpus as i64)),
-            ("peak_mem_bytes", Json::Int(self.peak_mem_bytes as i64)),
+            (
+                // Checked, saturating: our JSON layer carries ints as
+                // i64, and a modeled peak above i64::MAX (9.2 EB —
+                // only a pathological model emits one) must not wrap
+                // negative, which `as i64` did and which made
+                // `from_json`'s u64 conversion silently drop the whole
+                // entry on reload. Policy: saturate to i64::MAX and
+                // keep the entry; the value is already nonsense, but a
+                // nonsense *peak* still prices worse than any real
+                // plan, while a dropped entry re-searches forever.
+                "peak_mem_bytes",
+                Json::Int(
+                    i64::try_from(self.peak_mem_bytes).unwrap_or(i64::MAX),
+                ),
+            ),
             ("cp_algorithm", Json::Str(self.cp_algorithm.clone())),
         ])
     }
@@ -232,11 +246,17 @@ const CACHE_VERSION: i64 = 4;
 fn save_lock(path: &Path) -> Arc<Mutex<()>> {
     static LOCKS: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<()>>>>> =
         OnceLock::new();
-    // Canonicalize the parent directory (which exists even before the
-    // first save creates the file) and rejoin the file name, so every
-    // spelling of one target — relative, absolute, through symlinks —
-    // keys the same mutex on every save.
-    let key = match (path.parent(), path.file_name()) {
+    let map = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
+    map.lock().unwrap().entry(lock_key(path)).or_default().clone()
+}
+
+/// The canonical registry key for a cache path: canonicalize the parent
+/// directory (which exists even before the first save creates the file)
+/// and rejoin the file name, so every spelling of one target —
+/// relative, absolute, through symlinks — keys the same lock (and the
+/// same [`super::store::PlanStore`]) on every use.
+pub(crate) fn lock_key(path: &Path) -> PathBuf {
+    match (path.parent(), path.file_name()) {
         (Some(dir), Some(file)) => {
             let dir = if dir.as_os_str().is_empty() {
                 Path::new(".")
@@ -248,9 +268,39 @@ fn save_lock(path: &Path) -> Arc<Mutex<()>> {
                 .unwrap_or_else(|_| path.to_path_buf())
         }
         _ => path.to_path_buf(),
+    }
+}
+
+/// Delete `<stem>.tmp.<pid>.<seq>` staging siblings of `path` older
+/// than `max_age` — the debris of writers that crashed between writing
+/// their temp and renaming it into place. Called under the per-path
+/// save lock; best-effort (a sweep failure never fails the save).
+fn sweep_stale_temps(path: &Path, max_age: std::time::Duration) {
+    let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+        return;
     };
-    let map = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
-    map.lock().unwrap().entry(key).or_default().clone()
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    let prefix = format!("{stem}.tmp.");
+    let Ok(listing) = std::fs::read_dir(dir) else { return };
+    for ent in listing.flatten() {
+        let name = ent.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with(&prefix) {
+            continue;
+        }
+        let stale = ent
+            .metadata()
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|m| m.elapsed().ok())
+            .is_some_and(|age| age >= max_age);
+        if stale {
+            let _ = std::fs::remove_file(ent.path());
+        }
+    }
 }
 
 impl PlanCache {
@@ -286,6 +336,12 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
+    /// Surrender the entries (the warm-from-disk path of
+    /// [`super::store::PlanStore`]).
+    pub(crate) fn into_entries(self) -> Vec<CacheEntry> {
+        self.entries
+    }
+
     /// Find the entry for `signature` that was searched for `cluster`
     /// (a [`crate::api::ClusterSpec::fingerprint`]). Both must match: a
     /// plan tuned for one hardware pool never answers for another.
@@ -299,17 +355,20 @@ impl PlanCache {
             .find(|e| e.signature == signature && e.cluster == cluster)
     }
 
-    /// Insert or replace the entry for its signature.
+    /// Insert or replace the entry for its `(signature, cluster)` pair
+    /// — the same key [`PlanCache::lookup`] requires. Keying on the
+    /// signature alone (as this once did) let an entry tuned for one
+    /// hardware pool silently evict the same workload's entry for
+    /// another pool whenever the signature did not happen to embed the
+    /// cluster fingerprint.
     pub fn insert(&mut self, entry: CacheEntry) {
         assert!(
             !entry.frontier.is_empty(),
             "a cache entry must carry at least its winner"
         );
-        match self
-            .entries
-            .iter_mut()
-            .find(|e| e.signature == entry.signature)
-        {
+        match self.entries.iter_mut().find(|e| {
+            e.signature == entry.signature && e.cluster == entry.cluster
+        }) {
             Some(slot) => *slot = entry,
             None => self.entries.push(entry),
         }
@@ -318,7 +377,8 @@ impl PlanCache {
     /// Persist to the bound path (no-op for in-memory caches). Atomic:
     /// write a sibling temp file, then rename over the target. Entries
     /// another writer persisted since our load are re-read and kept
-    /// (ours win per signature), so concurrent tuners sharing one file
+    /// (ours win per `(signature, cluster)`), so concurrent tuners
+    /// sharing one file
     /// don't drop each other's results. The whole read-merge-rename
     /// sequence holds a process-wide per-path lock — without it, two
     /// in-process writers could both load the same base, and whichever
@@ -332,9 +392,18 @@ impl PlanCache {
         let _save_span = crate::telemetry::span("cache_save");
         let lock = save_lock(path);
         let _guard = lock.lock().unwrap();
+        // Under the lock: sweep staging files a crashed writer left
+        // behind. The age threshold keeps a *live* cross-process
+        // writer's temp safe (in-process writers are excluded by the
+        // lock itself).
+        sweep_stale_temps(path, std::time::Duration::from_secs(60));
         let mut merged = PlanCache::load(path).entries;
         for e in &self.entries {
-            match merged.iter_mut().find(|m| m.signature == e.signature) {
+            // Merge on the full (signature, cluster) key — mirroring
+            // `insert` — so one pool's answer never erases another's.
+            match merged.iter_mut().find(|m| {
+                m.signature == e.signature && m.cluster == e.cluster
+            }) {
                 Some(slot) => *slot = e.clone(),
                 None => merged.push(e.clone()),
             }
@@ -354,8 +423,15 @@ impl PlanCache {
         ));
         std::fs::write(&tmp, doc.render())
             .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming into {}", path.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            // Don't leak the staging file on the error path — an
+            // orphaned temp per failed save accumulates forever (the
+            // sweep above only mops up after *crashed* writers).
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| {
+                format!("renaming into {}", path.display())
+            });
+        }
         crate::telemetry::incr(crate::telemetry::key::CACHE_WRITE);
         crate::telemetry::debug(&format!(
             "  cache: wrote {} entries to {}",
@@ -626,5 +702,148 @@ mod tests {
         c.insert(entry("x", 1));
         c.save().unwrap();
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn same_signature_different_clusters_coexist() {
+        // Regression: insert/save once merged by signature alone while
+        // lookup required (signature, cluster) — so two pools sharing
+        // a workload signature silently evicted each other's answers.
+        let other_fp = "n=32|mem=80000000000";
+        let mut on_other = entry("shared-sig", 7);
+        on_other.cluster = other_fp.to_string();
+
+        let mut c = PlanCache::in_memory();
+        c.insert(entry("shared-sig", 3));
+        c.insert(on_other.clone());
+        assert_eq!(c.len(), 2, "second cluster's entry evicted the first");
+        assert_eq!(
+            c.lookup("shared-sig", FP).unwrap().best().candidate.llm_pp,
+            3
+        );
+        assert_eq!(
+            c.lookup("shared-sig", other_fp)
+                .unwrap()
+                .best()
+                .candidate
+                .llm_pp,
+            7
+        );
+        // replacing still works, scoped to its own (sig, cluster)
+        c.insert(entry("shared-sig", 5));
+        assert_eq!(c.len(), 2);
+        assert_eq!(
+            c.lookup("shared-sig", FP).unwrap().best().candidate.llm_pp,
+            5
+        );
+
+        // and the disk merge path keys the same way
+        let path = tmp_path("two-clusters");
+        let _ = std::fs::remove_file(&path);
+        let mut a = PlanCache::load(&path);
+        a.insert(entry("shared-sig", 3));
+        a.save().unwrap();
+        let mut b = PlanCache::load(&path);
+        b.insert(on_other);
+        b.save().unwrap();
+        let merged = PlanCache::load(&path);
+        assert_eq!(merged.len(), 2, "save() merged by signature alone");
+        assert!(merged.lookup("shared-sig", FP).is_some());
+        assert!(merged.lookup("shared-sig", other_fp).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_rename_cleans_up_its_temp() {
+        // Force the final rename to fail by making the target path a
+        // directory; the staging file must not be left behind.
+        let path = tmp_path("rename-fail");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        let mut c = PlanCache::in_memory();
+        c.insert(entry("s", 2));
+        let mut bound = PlanCache { path: Some(path.clone()), entries: c.entries };
+        assert!(bound.save().is_err(), "rename onto a directory must fail");
+        bound.insert(entry("t", 3)); // a second failing save, same story
+        assert!(bound.save().is_err());
+        let stem = path.file_stem().unwrap().to_str().unwrap().to_string();
+        let leaked: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .flatten()
+            .filter(|e| {
+                e.file_name()
+                    .to_str()
+                    .is_some_and(|n| n.starts_with(&format!("{stem}.tmp.")))
+            })
+            .collect();
+        assert!(
+            leaked.is_empty(),
+            "failed saves leaked staging files: {leaked:?}"
+        );
+        let _ = std::fs::remove_dir(&path);
+    }
+
+    #[test]
+    fn stale_temps_are_swept() {
+        // Orphans from crashed writers (simulated by hand-creating the
+        // staging names) are removed by the sweep; the target file and
+        // unrelated siblings are untouched.
+        let path = tmp_path("sweep");
+        std::fs::write(&path, "target").unwrap();
+        let stem = path.file_stem().unwrap().to_str().unwrap().to_string();
+        let dir = path.parent().unwrap();
+        let orphan_a = dir.join(format!("{stem}.tmp.99999.0"));
+        let orphan_b = dir.join(format!("{stem}.tmp.99999.7"));
+        let unrelated = dir.join(format!("{stem}-other.file"));
+        std::fs::write(&orphan_a, "x").unwrap();
+        std::fs::write(&orphan_b, "x").unwrap();
+        std::fs::write(&unrelated, "x").unwrap();
+        // age zero: everything matching the staging pattern is stale
+        sweep_stale_temps(&path, std::time::Duration::ZERO);
+        assert!(!orphan_a.exists(), "orphaned temp survived the sweep");
+        assert!(!orphan_b.exists(), "orphaned temp survived the sweep");
+        assert!(path.exists(), "sweep must never touch the target");
+        assert!(unrelated.exists(), "sweep must not touch other siblings");
+        // a generous age keeps fresh temps (live cross-process writers)
+        std::fs::write(&orphan_a, "x").unwrap();
+        sweep_stale_temps(&path, std::time::Duration::from_secs(3600));
+        assert!(orphan_a.exists(), "fresh temp swept despite age gate");
+        let _ = std::fs::remove_file(&orphan_a);
+        let _ = std::fs::remove_file(&unrelated);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn peak_mem_saturates_at_i64_boundary_and_survives_reload() {
+        // Regression: `as i64` wrapped a peak above i64::MAX negative,
+        // and reload's u64 conversion then silently dropped the whole
+        // entry. Policy now: saturate to i64::MAX, keep the entry.
+        let path = tmp_path("peakmem");
+        let boundary: &[u64] = &[
+            0,
+            31_400_000_000,
+            i64::MAX as u64 - 1, // exact round-trip
+            i64::MAX as u64,     // exact round-trip (last such value)
+            i64::MAX as u64 + 1, // saturates
+            u64::MAX,            // saturates
+        ];
+        for (i, &stored) in boundary.iter().enumerate() {
+            let expect = stored.min(i64::MAX as u64);
+            let _ = std::fs::remove_file(&path);
+            let mut e = entry("peak", 2);
+            for p in &mut e.frontier {
+                p.peak_mem_bytes = stored;
+            }
+            let mut c = PlanCache::load(&path);
+            c.insert(e);
+            c.save().unwrap();
+            let back = PlanCache::load(&path);
+            let got = back.lookup("peak", FP).unwrap_or_else(|| {
+                panic!("case {i}: entry with peak {stored} dropped on reload")
+            });
+            assert_eq!(got.best().peak_mem_bytes, expect, "case {i}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -171,15 +171,24 @@ pub fn simulate_plans_parallel(
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Evaluation>>> =
         (0..items.len()).map(|_| Mutex::new(None)).collect();
+    // Carry the calling request's telemetry scopes onto the workers,
+    // so anything a worker counts is attributed to the right request.
+    let scopes = crate::telemetry::current_scopes();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
+            scope.spawn(|| {
+                let _guards: Vec<_> = scopes
+                    .iter()
+                    .map(crate::telemetry::Scope::attach)
+                    .collect();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let (c, p) = &items[i];
+                    *slots[i].lock().unwrap() = Some(evaluation_of(c, p));
                 }
-                let (c, p) = &items[i];
-                *slots[i].lock().unwrap() = Some(evaluation_of(c, p));
             });
         }
     });
@@ -208,15 +217,24 @@ pub fn evaluate_parallel(
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Evaluation>>> =
         (0..candidates.len()).map(|_| Mutex::new(None)).collect();
+    // Same scope hand-off as `simulate_plans_parallel`: per-request
+    // accounting survives the hop onto the worker pool.
+    let scopes = crate::telemetry::current_scopes();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= candidates.len() {
-                    break;
+            scope.spawn(|| {
+                let _guards: Vec<_> = scopes
+                    .iter()
+                    .map(crate::telemetry::Scope::attach)
+                    .collect();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= candidates.len() {
+                        break;
+                    }
+                    let ev = evaluate_one(spec, &candidates[i], cluster);
+                    *slots[i].lock().unwrap() = Some(ev);
                 }
-                let ev = evaluate_one(spec, &candidates[i], cluster);
-                *slots[i].lock().unwrap() = Some(ev);
             });
         }
     });

@@ -22,7 +22,10 @@
 //! * [`cache`] — the JSON-persisted plan cache keyed by a
 //!   workload/cluster signature, storing the whole frontier so later
 //!   queries can trade throughput against GPU count and memory headroom
-//!   without re-searching.
+//!   without re-searching — fronted by [`store`], the process-wide
+//!   two-tier store: a sharded in-memory map (hits never touch disk)
+//!   over the JSON tier, plus in-flight dedupe so concurrent identical
+//!   queries coalesce onto one search.
 //!
 //! Entry point: [`tune`].
 
@@ -30,8 +33,10 @@ pub mod cache;
 pub mod evaluate;
 pub mod search;
 pub mod space;
+pub mod store;
 
 pub use cache::{CacheEntry, PlanCache, PlanSummary};
+pub use store::PlanStore;
 pub use evaluate::{bounds_ms, build_plan, evaluate_parallel, Evaluation};
 pub use search::{search, search_top, Objective, SearchReport};
 pub use space::{enumerate, Candidate, FrozenSetting, SearchSpace};
@@ -75,8 +80,16 @@ pub struct TuneRequest {
     /// depth ([`CacheEntry::satisfies_top`]); a deeper request re-searches
     /// and overwrites the entry.
     pub top: usize,
-    /// JSON cache path; `None` searches fresh every time.
+    /// JSON cache path; `None` searches fresh every time (unless
+    /// `shared_memory` opts into the process-wide in-memory tier).
     pub cache_path: Option<String>,
+    /// With `cache_path: None`, share answers through the process-wide
+    /// in-memory store ([`PlanStore::process_memory`]) instead of
+    /// searching fresh every call — the long-lived-service mode
+    /// (`cornstarch serve` without `--cache`,
+    /// [`crate::api::CachePolicy::Memory`]). Ignored when `cache_path`
+    /// is set (the file's store is process-shared already).
+    pub shared_memory: bool,
 }
 
 impl TuneRequest {
@@ -100,6 +113,7 @@ impl TuneRequest {
             threads: default_threads(),
             top: DEFAULT_TOP_K,
             cache_path: None,
+            shared_memory: false,
         }
     }
 
@@ -182,53 +196,93 @@ impl TuneOutcome {
     }
 }
 
-/// Tune: consult the cache, otherwise search, then persist the top-k
-/// frontier (best first). Typed-error core behind [`tune`].
+/// The store a request's answers live in: the process-wide store of
+/// its cache file, the process-wide in-memory store when it opted into
+/// sharing without a file, or a private throwaway (the
+/// `cache_path: None` "search every time" contract — a private store
+/// can never hold a prior answer, and its flight table can never have
+/// another request to coalesce with).
+fn store_for(req: &TuneRequest) -> PlanStore {
+    match (&req.cache_path, req.shared_memory) {
+        (Some(p), _) => PlanStore::for_path(p),
+        (None, true) => PlanStore::process_memory(),
+        (None, false) => PlanStore::private(),
+    }
+}
+
+/// Tune: consult the two-tier plan store, otherwise search (coalescing
+/// with any identical in-flight search), then publish the top-k
+/// frontier (best first) to both tiers. Typed-error core behind
+/// [`tune`].
 pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
     let _tune_span = crate::telemetry::span(&format!(
         "tune {} devices={}",
         req.spec.name(),
         req.space.devices
     ));
-    let mut cache = match &req.cache_path {
-        Some(p) => PlanCache::load(std::path::Path::new(p)),
-        None => PlanCache::in_memory(),
-    };
+    let store = store_for(req);
     let sig = req.signature();
     let fingerprint = req.cluster.fingerprint();
     let top = req.top.max(1);
-    if let Some(entry) = cache.lookup(&sig, &fingerprint) {
-        // Cache admission gate: every stored candidate must verify
-        // clean against this cluster (the V005 assignment lints) — a
-        // corrupted entry that passed the schema check must degrade to
-        // a re-search, never a downstream panic when the plan is
-        // instantiated. Rejections are visible under `-v`.
-        let assignments_ok = entry.frontier.iter().all(|p| {
-            let vr =
-                crate::verify::verify_candidate(&p.candidate, &req.cluster);
-            if !vr.is_clean() {
-                crate::telemetry::debug(&format!(
-                    "cache: rejecting stored plan for {sig}: {}",
-                    vr.error_summary()
-                ));
-            }
-            vr.is_clean()
+    // Fast path: a verified stored answer deep enough for this query.
+    if let Some(entry) = store.lookup(&sig, &fingerprint, &req.cluster, top)
+    {
+        crate::telemetry::incr(crate::telemetry::key::CACHE_HIT);
+        return Ok(TuneOutcome {
+            entry,
+            cache_hit: true,
+            total_candidates: 0,
+            evaluated: 0,
+            pruned: 0,
         });
-        if assignments_ok && entry.satisfies_top(top) {
-            crate::telemetry::incr(crate::telemetry::key::CACHE_HIT);
-            return Ok(TuneOutcome {
-                entry: entry.clone(),
-                cache_hit: true,
-                total_candidates: 0,
-                evaluated: 0,
-                pruned: 0,
-            });
-        }
-        // Stored frontier is shallower than this query wants (or holds
-        // a malformed assignment): fall through to a fresh search and
-        // overwrite the entry.
     }
-    crate::telemetry::incr(crate::telemetry::key::CACHE_MISS);
+    // Miss: lead a search, or join the identical one already running.
+    match store.lead_or_join(&sig, top) {
+        store::FlightRole::Follower(flight) => {
+            crate::telemetry::incr(crate::telemetry::key::INFLIGHT_JOIN);
+            let mut out = flight.wait_outcome()?;
+            // To this request the answer is a hit: it searched nothing.
+            out.cache_hit = true;
+            out.total_candidates = 0;
+            out.evaluated = 0;
+            out.pruned = 0;
+            crate::telemetry::incr(crate::telemetry::key::CACHE_HIT);
+            Ok(out)
+        }
+        store::FlightRole::Leader(lease) => {
+            // Re-check under the lead: a prior leader may have
+            // published between our miss and our flight insertion.
+            if let Some(entry) =
+                store.lookup(&sig, &fingerprint, &req.cluster, top)
+            {
+                crate::telemetry::incr(crate::telemetry::key::CACHE_HIT);
+                let out = TuneOutcome {
+                    entry,
+                    cache_hit: true,
+                    total_candidates: 0,
+                    evaluated: 0,
+                    pruned: 0,
+                };
+                lease.complete(Ok(out.clone()));
+                return Ok(out);
+            }
+            crate::telemetry::incr(crate::telemetry::key::CACHE_MISS);
+            let result = search_and_publish(req, &store, sig, fingerprint, top);
+            lease.complete(result.clone());
+            result
+        }
+    }
+}
+
+/// The leader's slow path: search, summarize the frontier, publish to
+/// both store tiers.
+fn search_and_publish(
+    req: &TuneRequest,
+    store: &PlanStore,
+    sig: String,
+    fingerprint: String,
+    top: usize,
+) -> Result<TuneOutcome, TuneError> {
     let report = search_top(
         &req.spec,
         &req.space,
@@ -266,10 +320,7 @@ pub fn tune_with(req: &TuneRequest) -> Result<TuneOutcome, TuneError> {
         top_k: top,
         evaluated: report.evaluated,
     };
-    cache.insert(entry.clone());
-    cache
-        .save()
-        .map_err(|e| TuneError::CacheIo(format!("{e:#}")))?;
+    store.publish(entry.clone())?;
     Ok(TuneOutcome {
         entry,
         cache_hit: false,
@@ -446,6 +497,10 @@ mod tests {
         let bad = text.replace("\"groups\":[]", "\"groups\":[7]");
         assert_ne!(text, bad, "fixture must actually corrupt the file");
         std::fs::write(&path, bad).unwrap();
+        // we just played "external writer": tell the process-wide
+        // store its in-memory image of this path is stale, so the next
+        // lookup re-reads the (corrupted) file
+        PlanStore::invalidate_path(r.cache_path.as_deref().unwrap());
         let second = tune(&r).unwrap();
         assert!(
             !second.cache_hit,

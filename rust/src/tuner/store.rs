@@ -1,0 +1,593 @@
+//! The two-tier plan store: an in-process concurrent map over the
+//! persistent JSON cache, plus in-flight search dedupe.
+//!
+//! [`super::cache::PlanCache`] stays the durable tier — one JSON file,
+//! atomic rename, per-path save lock — but every `tune` used to re-read
+//! and re-parse that whole file, and two identical queries racing each
+//! other both paid a full search. A [`PlanStore`] fixes both:
+//!
+//! * **Tier 1** — a sharded `RwLock` map keyed by the full
+//!   `(signature, cluster)` pair (the same key
+//!   [`PlanCache::lookup`] requires), warmed from disk once per
+//!   process and per external invalidation
+//!   ([`PlanStore::invalidate_path`]); hits never touch disk, and the
+//!   per-entry verification gate (the V005 assignment lints) is
+//!   memoized so a hot entry is linted once, not per request.
+//! * **Tier 2** — writes batch through [`PlanCache::save`]'s existing
+//!   per-path lock: publishers enqueue, one flusher drains the queue
+//!   into a single load-merge-rename; a failed flush re-enqueues so a
+//!   later publish retries.
+//! * **Flights** — concurrent requests for the same `(signature, top)`
+//!   coalesce: the first becomes the *leader* and searches; followers
+//!   block on the flight and clone the leader's outcome (counted as
+//!   [`crate::telemetry::key::INFLIGHT_JOIN`] + a cache hit — K
+//!   identical requests cost exactly one search). A leader that
+//!   unwinds without completing (panic) fails its followers instead of
+//!   deadlocking them.
+//!
+//! Stores are process-wide: [`PlanStore::for_path`] returns the one
+//! store for a given file (keyed by the same canonicalized path as the
+//! save lock), [`PlanStore::process_memory`] the one disk-less store
+//! shared by everything that opted into in-memory sharing, and
+//! [`PlanStore::private`] a fresh throwaway (the `cache_path: None`
+//! "search every time" contract).
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+
+use crate::api::ClusterSpec;
+use crate::telemetry;
+
+use super::cache::{lock_key, CacheEntry, PlanCache};
+use super::{TuneError, TuneOutcome};
+
+/// Shard count for the tier-1 map; a power of two comfortably above
+/// the thread counts we serve so hot signatures rarely contend.
+const SHARDS: usize = 16;
+
+/// A tier-1 entry with its verification verdict memoized: the V005
+/// assignment lints run once per entry per process (the first lookup
+/// pays), not once per request. Sound because the map key includes the
+/// cluster fingerprint — every lookup that can reach this entry
+/// presents a cluster the lints price identically.
+struct VerifiedEntry {
+    entry: CacheEntry,
+    verified: OnceLock<bool>,
+}
+
+/// One in-flight search other identical requests can join. Followers
+/// hold one via [`FlightHandle`] and block in [`Flight::wait_outcome`].
+#[derive(Default)]
+pub struct Flight {
+    done: Mutex<Option<Result<TuneOutcome, TuneError>>>,
+    cvar: Condvar,
+}
+
+impl Flight {
+    fn wait(&self) -> Result<TuneOutcome, TuneError> {
+        let mut slot = self.done.lock().unwrap();
+        while slot.is_none() {
+            slot = self.cvar.wait(slot).unwrap();
+        }
+        slot.clone().expect("flight completed")
+    }
+
+    fn complete(&self, result: Result<TuneOutcome, TuneError>) {
+        *self.done.lock().unwrap() = Some(result);
+        self.cvar.notify_all();
+    }
+}
+
+/// One tier-1 shard: `(signature, cluster-fingerprint)` → entry.
+type Shard = RwLock<HashMap<(String, String), Arc<VerifiedEntry>>>;
+
+struct StoreInner {
+    path: Option<PathBuf>,
+    shards: Vec<Shard>,
+    /// Tier-1 reflects the disk tier (fast-flag + warm lock so exactly
+    /// one thread pays the load).
+    warmed: AtomicBool,
+    warm_lock: Mutex<()>,
+    /// Entries published but not yet flushed to disk.
+    pending: Mutex<Vec<CacheEntry>>,
+    /// Serializes flushers so concurrent publishers batch: whoever
+    /// holds it drains everything pending into one load-merge-rename.
+    io: Mutex<()>,
+    /// In-flight searches by `(signature, top)`.
+    flights: Mutex<HashMap<(String, usize), Arc<Flight>>>,
+}
+
+impl StoreInner {
+    fn new(path: Option<PathBuf>) -> StoreInner {
+        StoreInner {
+            path,
+            shards: (0..SHARDS)
+                .map(|_| RwLock::new(HashMap::new()))
+                .collect(),
+            warmed: AtomicBool::new(false),
+            warm_lock: Mutex::new(()),
+            pending: Mutex::new(Vec::new()),
+            io: Mutex::new(()),
+            flights: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+/// Handle to a two-tier plan store; clones share the store.
+#[derive(Clone)]
+pub struct PlanStore {
+    inner: Arc<StoreInner>,
+}
+
+fn registry() -> &'static Mutex<HashMap<PathBuf, PlanStore>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<PathBuf, PlanStore>>> =
+        OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl PlanStore {
+    fn new(path: Option<PathBuf>) -> PlanStore {
+        PlanStore { inner: Arc::new(StoreInner::new(path)) }
+    }
+
+    /// The process-wide store for a cache file. Every spelling of one
+    /// path — relative, absolute, through symlinks — resolves to the
+    /// same store (same canonicalization as the save lock).
+    pub fn for_path(path: &str) -> PlanStore {
+        let key = lock_key(Path::new(path));
+        registry()
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| {
+                PlanStore::new(Some(PathBuf::from(path)))
+            })
+            .clone()
+    }
+
+    /// The process-wide disk-less store (`cornstarch serve` without
+    /// `--cache`, and [`crate::api::CachePolicy::Memory`]).
+    pub fn process_memory() -> PlanStore {
+        static MEMORY: OnceLock<PlanStore> = OnceLock::new();
+        MEMORY.get_or_init(|| PlanStore::new(None)).clone()
+    }
+
+    /// A fresh store nothing else shares: no disk, no registry entry.
+    /// This is the `cache_path: None` contract — every call searches —
+    /// kept because a private store can never hold a prior answer.
+    pub fn private() -> PlanStore {
+        PlanStore::new(None)
+    }
+
+    /// Forget everything tier-1 holds for `path`: the next lookup
+    /// re-reads the file. The hook for *external* writers — another
+    /// process rewrote (or corrupted, or deleted) the file and this
+    /// process must not keep serving its stale in-memory image. A
+    /// path never seen by this process is a no-op. Unflushed pending
+    /// writes survive (they re-merge on the next flush).
+    pub fn invalidate_path(path: &str) {
+        let key = lock_key(Path::new(path));
+        let store = registry().lock().unwrap().get(&key).cloned();
+        let Some(store) = store else { return };
+        // Drop the warmed flag first: a racing lookup that sees the
+        // old map either re-warms (flag already down) or reads entries
+        // we are about to clear — never a post-clear empty map with
+        // the flag still up.
+        store.inner.warmed.store(false, Ordering::Release);
+        for shard in &store.inner.shards {
+            shard.write().unwrap().clear();
+        }
+    }
+
+    fn shard_of(&self, signature: &str) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        signature.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+
+    /// Populate tier-1 from the disk tier, once. Returns whether this
+    /// call performed the load (i.e. the answer touched disk).
+    fn warm(&self) -> bool {
+        let Some(path) = &self.inner.path else { return false };
+        if self.inner.warmed.load(Ordering::Acquire) {
+            return false;
+        }
+        let _g = self.inner.warm_lock.lock().unwrap();
+        if self.inner.warmed.load(Ordering::Acquire) {
+            return false;
+        }
+        for e in PlanCache::load(path).into_entries() {
+            let key = (e.signature.clone(), e.cluster.clone());
+            let ve = Arc::new(VerifiedEntry {
+                entry: e,
+                verified: OnceLock::new(),
+            });
+            // Never displace an entry already in tier-1: anything this
+            // process published is at least as fresh as the file.
+            self.inner.shards[self.shard_of(&key.0)]
+                .write()
+                .unwrap()
+                .entry(key)
+                .or_insert(ve);
+        }
+        self.inner.warmed.store(true, Ordering::Release);
+        true
+    }
+
+    /// Find a verified entry for the `(signature, cluster-fingerprint)`
+    /// pair that satisfies depth `top`. First call per process (and
+    /// per invalidation) warms tier-1 from disk; after that, hits are
+    /// lock-shared map reads and count
+    /// [`crate::telemetry::key::CACHE_MEM_HIT`].
+    pub fn lookup(
+        &self,
+        signature: &str,
+        fingerprint: &str,
+        cluster: &ClusterSpec,
+        top: usize,
+    ) -> Option<CacheEntry> {
+        let warmed_now = self.warm();
+        let key = (signature.to_string(), fingerprint.to_string());
+        let shard = self.inner.shards[self.shard_of(signature)]
+            .read()
+            .unwrap();
+        let ve = shard.get(&key)?;
+        // Cache admission gate, memoized: every stored candidate must
+        // verify clean against the cluster (the V005 assignment lints)
+        // — a corrupted entry that passed the schema check degrades to
+        // a re-search, never a downstream panic at instantiation.
+        let clean = *ve.verified.get_or_init(|| {
+            ve.entry.frontier.iter().all(|p| {
+                let vr = crate::verify::verify_candidate(
+                    &p.candidate,
+                    cluster,
+                );
+                if !vr.is_clean() {
+                    telemetry::debug(&format!(
+                        "cache: rejecting stored plan for {signature}: {}",
+                        vr.error_summary()
+                    ));
+                }
+                vr.is_clean()
+            })
+        });
+        if !clean || !ve.entry.satisfies_top(top) {
+            return None;
+        }
+        if !warmed_now {
+            telemetry::incr(telemetry::key::CACHE_MEM_HIT);
+        }
+        Some(ve.entry.clone())
+    }
+
+    /// Make a fresh search result visible: tier-1 immediately (marked
+    /// verified — the search only emits lint-clean candidates), then
+    /// the disk tier through the batching flush.
+    pub fn publish(&self, entry: CacheEntry) -> Result<(), TuneError> {
+        let key = (entry.signature.clone(), entry.cluster.clone());
+        let verified = OnceLock::new();
+        let _ = verified.set(true);
+        let ve = Arc::new(VerifiedEntry { entry: entry.clone(), verified });
+        self.inner.shards[self.shard_of(&key.0)]
+            .write()
+            .unwrap()
+            .insert(key, ve);
+        if self.inner.path.is_some() {
+            self.inner.pending.lock().unwrap().push(entry);
+        }
+        self.flush()
+    }
+
+    /// Drain pending entries into one load-merge-save under the flush
+    /// lock. An empty queue (someone else's flush covered us) is a
+    /// successful no-op; a failed save re-enqueues the batch so the
+    /// next publish retries.
+    fn flush(&self) -> Result<(), TuneError> {
+        let Some(path) = &self.inner.path else { return Ok(()) };
+        let _io = self.inner.io.lock().unwrap();
+        let batch: Vec<CacheEntry> = {
+            let mut pending = self.inner.pending.lock().unwrap();
+            pending.drain(..).collect()
+        };
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let mut disk = PlanCache::load(path);
+        for e in &batch {
+            disk.insert(e.clone());
+        }
+        if let Err(e) = disk.save() {
+            self.inner.pending.lock().unwrap().extend(batch);
+            return Err(TuneError::CacheIo(format!("{e:#}")));
+        }
+        Ok(())
+    }
+
+    /// Join the in-flight search for `(signature, top)`, or become its
+    /// leader. A leader MUST resolve its [`FlightLease`] (normally via
+    /// [`FlightLease::complete`]; dropping it unresolved fails the
+    /// flight so followers never hang).
+    pub fn lead_or_join(&self, signature: &str, top: usize) -> FlightRole {
+        let key = (signature.to_string(), top);
+        let mut flights = self.inner.flights.lock().unwrap();
+        if let Some(f) = flights.get(&key) {
+            return FlightRole::Follower(f.clone());
+        }
+        let f = Arc::new(Flight::default());
+        flights.insert(key.clone(), f.clone());
+        FlightRole::Leader(FlightLease {
+            store: self.clone(),
+            key,
+            flight: f,
+            resolved: false,
+        })
+    }
+}
+
+/// What [`PlanStore::lead_or_join`] made of this request.
+pub enum FlightRole {
+    /// This request searches; complete the lease with the outcome.
+    Leader(FlightLease),
+    /// An identical search is already running;
+    /// [`Flight::wait_outcome`] blocks until the leader completes and
+    /// clones its outcome.
+    Follower(FlightHandle),
+}
+
+/// A follower's handle on someone else's in-flight search.
+pub type FlightHandle = Arc<Flight>;
+
+impl Flight {
+    /// Block until the leader completes, then clone its outcome.
+    pub fn wait_outcome(
+        self: &Arc<Flight>,
+    ) -> Result<TuneOutcome, TuneError> {
+        self.wait()
+    }
+}
+
+/// The leader's obligation: exactly one [`FlightLease::complete`]
+/// call. Dropping the lease unresolved (leader panicked / unwound)
+/// completes the flight with an error so followers fail fast instead
+/// of blocking forever, and removes it from the flight table so the
+/// next request starts fresh.
+pub struct FlightLease {
+    store: PlanStore,
+    key: (String, usize),
+    flight: Arc<Flight>,
+    resolved: bool,
+}
+
+impl FlightLease {
+    /// Publish the leader's outcome to every follower and retire the
+    /// flight. Call *after* [`PlanStore::publish`] so a request that
+    /// misses the retired flight finds the entry in tier-1.
+    pub fn complete(
+        mut self,
+        result: Result<TuneOutcome, TuneError>,
+    ) {
+        self.resolve(result);
+    }
+
+    fn resolve(&mut self, result: Result<TuneOutcome, TuneError>) {
+        if self.resolved {
+            return;
+        }
+        self.resolved = true;
+        // Retire from the table before waking followers: a request
+        // arriving now leads its own (fresh) flight — and finds the
+        // published entry in tier-1 first anyway.
+        self.store
+            .inner
+            .flights
+            .lock()
+            .unwrap()
+            .remove(&self.key);
+        self.flight.complete(result);
+    }
+}
+
+impl Drop for FlightLease {
+    fn drop(&mut self) {
+        self.resolve(Err(TuneError::CacheIo(
+            "in-flight search leader abandoned its flight".to_string(),
+        )));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modality::Strategy;
+    use crate::tuner::space::{Candidate, FrozenSetting};
+    use crate::tuner::PlanSummary;
+
+    fn fp() -> String {
+        ClusterSpec::a40_default().with_devices(16).fingerprint()
+    }
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::a40_default().with_devices(16)
+    }
+
+    fn entry(sig: &str, llm_pp: usize) -> CacheEntry {
+        CacheEntry {
+            signature: sig.to_string(),
+            cluster: fp(),
+            frontier: vec![PlanSummary {
+                candidate: Candidate {
+                    strategy: Strategy::Cornstarch,
+                    enc_pps: vec![1, 2],
+                    llm_pp,
+                    tp: 1,
+                    cp: 1,
+                    num_microbatches: 24,
+                    frozen: FrozenSetting::Paper,
+                    chain_groups: vec![0, 0, 0],
+                },
+                iteration_ms: 10.0 + llm_pp as f64,
+                throughput_per_gpu: 0.1,
+                n_gpus: 8,
+                peak_mem_bytes: 1_000_000,
+                cp_algorithm: "none".to_string(),
+            }],
+            top_k: 1,
+            evaluated: 9,
+        }
+    }
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "cornstarch-store-test-{name}-{}.json",
+            std::process::id()
+        ));
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn private_stores_share_nothing() {
+        let a = PlanStore::private();
+        a.publish(entry("s", 2)).unwrap();
+        assert!(a.lookup("s", &fp(), &cluster(), 1).is_some());
+        let b = PlanStore::private();
+        assert!(b.lookup("s", &fp(), &cluster(), 1).is_none());
+    }
+
+    #[test]
+    fn for_path_returns_the_same_store_for_every_spelling() {
+        let path = tmp("alias");
+        let a = PlanStore::for_path(&path);
+        let b = PlanStore::for_path(&path);
+        assert!(Arc::ptr_eq(&a.inner, &b.inner));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn publish_then_lookup_round_trips_and_hits_memory() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let store = PlanStore::for_path(&path);
+        store.publish(entry("sig-mem", 3)).unwrap();
+        let hit = store
+            .lookup("sig-mem", &fp(), &cluster(), 1)
+            .expect("published entry must be visible");
+        assert_eq!(hit.best().candidate.llm_pp, 3);
+        // and it reached the disk tier too
+        let disk = PlanCache::load(std::path::Path::new(&path));
+        assert!(disk.lookup("sig-mem", &fp()).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn keys_on_the_full_signature_cluster_pair() {
+        let store = PlanStore::private();
+        let mut other = entry("shared", 7);
+        other.cluster = "some-other-pool".to_string();
+        store.publish(entry("shared", 3)).unwrap();
+        store.publish(other).unwrap();
+        let hit = store.lookup("shared", &fp(), &cluster(), 1).unwrap();
+        assert_eq!(hit.best().candidate.llm_pp, 3, "wrong pool's entry");
+        assert!(store
+            .lookup("shared", "a-third-pool", &cluster(), 1)
+            .is_none());
+    }
+
+    #[test]
+    fn invalidate_path_forces_a_re_read() {
+        let path = tmp("invalidate");
+        let _ = std::fs::remove_file(&path);
+        let store = PlanStore::for_path(&path);
+        store.publish(entry("inv", 2)).unwrap();
+        assert!(store.lookup("inv", &fp(), &cluster(), 1).is_some());
+        // an "external writer" empties the file behind our back; the
+        // store keeps serving its image until told otherwise
+        std::fs::write(&path, "{}").unwrap();
+        assert!(store.lookup("inv", &fp(), &cluster(), 1).is_some());
+        PlanStore::invalidate_path(&path);
+        assert!(
+            store.lookup("inv", &fp(), &cluster(), 1).is_none(),
+            "invalidation must drop the in-memory image"
+        );
+        // unknown paths are a no-op
+        PlanStore::invalidate_path("/definitely/not/registered.json");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn followers_receive_the_leaders_outcome() {
+        let store = PlanStore::private();
+        let FlightRole::Leader(lease) = store.lead_or_join("f", 1) else {
+            panic!("first request must lead");
+        };
+        let followers: Vec<_> = (0..3)
+            .map(|_| {
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    match store.lead_or_join("f", 1) {
+                        FlightRole::Follower(f) => f.wait_outcome(),
+                        FlightRole::Leader(_) => {
+                            panic!("flight already led")
+                        }
+                    }
+                })
+            })
+            .collect();
+        // let the followers join before completing
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let outcome = TuneOutcome {
+            entry: entry("f", 4),
+            cache_hit: false,
+            total_candidates: 5,
+            evaluated: 5,
+            pruned: 0,
+        };
+        lease.complete(Ok(outcome));
+        for f in followers {
+            let got = f.join().unwrap().unwrap();
+            assert_eq!(got.entry.best().candidate.llm_pp, 4);
+        }
+        // flight retired: the next identical request leads anew
+        assert!(matches!(
+            store.lead_or_join("f", 1),
+            FlightRole::Leader(_)
+        ));
+    }
+
+    #[test]
+    fn different_top_depths_do_not_coalesce() {
+        let store = PlanStore::private();
+        let FlightRole::Leader(a) = store.lead_or_join("t", 1) else {
+            panic!("must lead");
+        };
+        assert!(
+            matches!(store.lead_or_join("t", 3), FlightRole::Leader(_)),
+            "a deeper request wants a deeper frontier — its own search"
+        );
+        a.complete(Err(TuneError::CacheIo("test teardown".into())));
+    }
+
+    #[test]
+    fn abandoned_leader_fails_followers_instead_of_hanging_them() {
+        let store = PlanStore::private();
+        let lease = match store.lead_or_join("panic", 1) {
+            FlightRole::Leader(l) => l,
+            FlightRole::Follower(_) => panic!("must lead"),
+        };
+        let follower = {
+            let store = store.clone();
+            std::thread::spawn(move || match store.lead_or_join("panic", 1)
+            {
+                FlightRole::Follower(f) => f.wait_outcome(),
+                FlightRole::Leader(_) => panic!("flight already led"),
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(lease); // leader unwound without completing
+        let got = follower.join().unwrap();
+        assert!(matches!(got, Err(TuneError::CacheIo(_))));
+    }
+}

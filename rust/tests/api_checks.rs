@@ -422,10 +422,13 @@ fn facade_resurveys_after_v3_downgrade() {
     assert!(!first.provenance.cache_hit);
     assert!(service.plan(&req).unwrap().provenance.cache_hit);
 
-    // downgrade the file to v3: the next query must re-search, not err
+    // downgrade the file to v3: the next query must re-search, not err.
+    // The rewrite plays "external writer", so the process-wide store
+    // must be told its in-memory image of this path is stale.
     let text = std::fs::read_to_string(&path).unwrap();
     std::fs::write(&path, text.replace("\"version\":4", "\"version\":3"))
         .unwrap();
+    cornstarch::tuner::PlanStore::invalidate_path(&cache);
     let after = service.plan(&req).unwrap();
     assert!(
         !after.provenance.cache_hit,

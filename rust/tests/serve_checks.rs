@@ -1,0 +1,191 @@
+//! Planning-as-a-service checks: the two-tier plan store, the in-flight
+//! dedupe table, and the `cornstarch serve` protocol under concurrency.
+//!
+//! Three properties the long-lived service depends on:
+//!   1. N threads hammering one cache file with mixed hits and misses
+//!      lose no entries — every workload's plan survives to disk.
+//!   2. K identical concurrent requests coalesce onto exactly one
+//!      search (pinned via telemetry: `evaluated` counted once,
+//!      `cache_miss` == 1, `cache_hit` == K-1).
+//!   3. A served report is byte-identical to what a one-shot `plan()`
+//!      renders for the same request — the wire adds nothing.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::TcpStream;
+
+use cornstarch::api::{PlanRequest, PlanningService};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::serve::{ServeOpts, Server};
+use cornstarch::telemetry::{key as tkey, Scope};
+use cornstarch::tuner::PlanCache;
+use cornstarch::util::json::Json;
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "cornstarch-serve-checks-{tag}-{}.json",
+        std::process::id()
+    ))
+}
+
+/// A small request whose `budget` doubles as the workload's identity:
+/// distinct budgets yield distinct cache signatures.
+fn small_request(budget: usize) -> PlanRequest {
+    PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S))
+        .devices(8)
+        .budget(budget)
+        .threads(1)
+}
+
+#[test]
+fn concurrent_mixed_hit_miss_loses_no_entries() {
+    let path = temp_path("mixed");
+    let _ = std::fs::remove_file(&path);
+    let cache = path.to_string_lossy().into_owned();
+    const THREADS: usize = 8;
+    const SHARED_BUDGET: usize = 49;
+
+    // Warm the shared workload so every thread's first request mixes a
+    // hit in with its own unique miss.
+    PlanningService::new()
+        .plan(&small_request(SHARED_BUDGET).cache_file(&cache))
+        .expect("warm shared workload");
+
+    std::thread::scope(|scope| {
+        for i in 0..THREADS {
+            let cache = &cache;
+            scope.spawn(move || {
+                let service = PlanningService::new();
+                let hit = service
+                    .plan(&small_request(SHARED_BUDGET).cache_file(cache))
+                    .expect("shared workload");
+                assert!(hit.provenance.cache_hit, "shared must stay warm");
+                let miss = service
+                    .plan(&small_request(50 + i).cache_file(cache))
+                    .expect("unique workload");
+                assert!(!miss.provenance.cache_hit, "budget {} is unique", 50 + i);
+            });
+        }
+    });
+
+    // Every workload is answerable warm...
+    let service = PlanningService::new();
+    for budget in
+        std::iter::once(SHARED_BUDGET).chain((0..THREADS).map(|i| 50 + i))
+    {
+        let again = service
+            .plan(&small_request(budget).cache_file(&cache))
+            .expect("replan");
+        assert!(again.provenance.cache_hit, "lost budget={budget}");
+    }
+    // ...and every entry made it to disk despite the concurrent,
+    // batched writers (1 shared + THREADS unique).
+    let on_disk = PlanCache::load(&path);
+    assert_eq!(on_disk.len(), THREADS + 1, "entries lost on disk");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn identical_concurrent_requests_coalesce_onto_one_search() {
+    const K: usize = 8;
+    // A budget nothing else in this binary uses: the process-wide
+    // memory store must see this signature for the first time here.
+    let req = small_request(7777).cache_memory();
+
+    let scope_counters = Scope::new();
+    let reports: Vec<_> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..K)
+            .map(|_| {
+                let req = req.clone();
+                let counters = scope_counters.clone();
+                scope.spawn(move || {
+                    let _guard = counters.attach();
+                    PlanningService::new().plan(&req).expect("plan")
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().expect("worker")).collect()
+    });
+
+    let misses: Vec<_> =
+        reports.iter().filter(|r| !r.provenance.cache_hit).collect();
+    assert_eq!(misses.len(), 1, "exactly one request may search");
+    let leader = misses[0];
+    assert!(leader.provenance.stats.evaluated > 0);
+
+    // Everyone agrees on the answer.
+    let winner = leader.winner().candidate.label();
+    for r in &reports {
+        assert_eq!(r.winner().candidate.label(), winner);
+        if r.provenance.cache_hit {
+            assert_eq!(
+                r.provenance.stats.evaluated, 0,
+                "a hit/join must not have searched"
+            );
+        }
+    }
+
+    // The shared scope saw the whole fan-in: one search's worth of
+    // simulation, one miss, K-1 hits (joins or warm map reads).
+    let totals = scope_counters.snapshot();
+    assert_eq!(
+        totals.get(tkey::EVALUATED),
+        leader.provenance.stats.evaluated,
+        "candidates were simulated more than once"
+    );
+    assert_eq!(totals.get(tkey::CACHE_MISS), 1);
+    assert_eq!(totals.get(tkey::CACHE_HIT), (K - 1) as u64);
+    assert_eq!(
+        totals.get(tkey::CACHE_MEM_HIT) + totals.get(tkey::INFLIGHT_JOIN),
+        (K - 1) as u64,
+        "every hit is either a map read or an in-flight join"
+    );
+}
+
+#[test]
+fn served_report_is_byte_identical_to_one_shot_plan() {
+    // Unique signature for this test; both sides go through the same
+    // process-wide memory store, so compare warm hit against warm hit
+    // (a miss and a hit legitimately render different search stats).
+    let req = small_request(4321).threads(2).cache_memory();
+    let service = PlanningService::new();
+    service.plan(&req).expect("cold fill");
+    let warm = service.plan(&req).expect("warm one-shot");
+    assert!(warm.provenance.cache_hit);
+
+    let server =
+        Server::bind("127.0.0.1:0", ServeOpts::default()).expect("bind");
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let runner = std::thread::spawn(move || server.run().expect("serve"));
+
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let mut reader =
+        BufReader::new(stream.try_clone().expect("clone stream"));
+    stream
+        .write_all(
+            b"{\"mllm\":\"VLM-S\",\"llm\":\"S\",\"devices\":8,\
+              \"budget\":4321,\"threads\":2}\n",
+        )
+        .expect("send");
+    let mut resp = String::new();
+    reader.read_line(&mut resp).expect("recv");
+    handle.shutdown();
+    runner.join().expect("server thread");
+
+    let j = Json::parse(resp.trim()).expect("response is JSON");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("cache_hit").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        j.get("signature").and_then(Json::as_str),
+        Some(warm.provenance.signature.as_str())
+    );
+    let served = j
+        .get("report")
+        .and_then(Json::as_str)
+        .expect("report field");
+    assert_eq!(
+        served,
+        warm.render(),
+        "the wire must add nothing to (or lose nothing from) the report"
+    );
+}
