@@ -318,6 +318,16 @@ impl PlanDiff {
             && self.analysis.is_empty()
     }
 
+    /// Total compared entries that changed, across every section — the
+    /// scalar the elastic fleet path minimizes (and the CLI reports)
+    /// when holding a re-plan close to its incumbent.
+    pub fn delta_count(&self) -> usize {
+        self.fields.len()
+            + self.stages.len()
+            + self.timeline.len()
+            + self.analysis.len()
+    }
+
     /// Deterministic human-readable rendering: configuration fields,
     /// then stage changes, then timeline changes.
     pub fn render(&self) -> String {

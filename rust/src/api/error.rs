@@ -21,6 +21,11 @@ pub enum PlanError {
     /// [`super::FleetRequest`] within its fairness floor (see
     /// [`super::fleet`]).
     InfeasibleFleet(String),
+    /// An [`super::ElasticEvent`] queued on a [`super::FleetRequest`]
+    /// cannot be applied (unknown group, losing a whole group, a
+    /// duplicate tenant join, an unknown tenant leaving, or a
+    /// warm-start carve that no longer fits the fleet).
+    InvalidElasticEvent(String),
     /// The persistent plan cache could not be written.
     Cache(String),
     /// The static verifier ([`crate::verify`]) found Error-severity
@@ -46,6 +51,9 @@ impl fmt::Display for PlanError {
             ),
             PlanError::InfeasibleFleet(m) => {
                 write!(f, "infeasible fleet: {m}")
+            }
+            PlanError::InvalidElasticEvent(m) => {
+                write!(f, "invalid elastic event: {m}")
             }
             PlanError::Cache(m) => write!(f, "plan cache error: {m}"),
             PlanError::FailedVerification(m) => {
@@ -75,5 +83,8 @@ mod tests {
         assert!(PlanError::InfeasibleFleet("no carve".into())
             .to_string()
             .contains("fleet"));
+        assert!(PlanError::InvalidElasticEvent("gone".into())
+            .to_string()
+            .contains("elastic"));
     }
 }

@@ -1,0 +1,221 @@
+//! Elastic fleet events: incremental re-planning inputs.
+//!
+//! A running fleet does not get to re-solve from scratch every time the
+//! pool wobbles — DistTrain's disaggregated-resource story (PAPERS.md)
+//! is exactly that devices fail and tenants come and go *while the
+//! fleet runs*. This module folds a queue of [`ElasticEvent`]s into a
+//! [`FleetRequest`] before the carve search sees it: the cluster
+//! shrinks, the tenant list updates, and — when the request carries a
+//! [`FleetRequest::warm_start`] incumbent — the incumbent carve is
+//! *repaired in place* (lost devices taken from whichever tenant holds
+//! the most of that group) so the warm-started search begins one step
+//! from the old answer, not at zero. The stability-first local search
+//! then keeps every repaired-but-feasible slice exactly where it was,
+//! which is what makes a 1-GPU loss relocate one tenant's stages
+//! instead of the fleet's.
+
+use crate::api::PlanRequest;
+use crate::telemetry::{self, key as tkey};
+
+use super::super::error::PlanError;
+use super::{FleetPartition, FleetRequest};
+
+/// One change to a running fleet, applied in queue order by
+/// [`apply_events`].
+#[derive(Clone, Debug)]
+pub enum ElasticEvent {
+    /// `n` devices of cluster group `group` failed or were reclaimed.
+    DeviceLost { group: usize, n: usize },
+    /// A new named tenant wants in (the fleet-wide cache policy is
+    /// applied to its request, same as [`FleetRequest::tenant`]).
+    TenantJoined { name: String, request: Box<PlanRequest> },
+    /// A tenant finished or was evicted.
+    TenantLeft { name: String },
+}
+
+/// Fold `req.events` into a resolved request: shrink the cluster, edit
+/// the tenant list, repair the warm-start incumbent, and return the
+/// event-free request the carve search actually plans. Invalid events
+/// (unknown group, losing a whole group, duplicate join, unknown
+/// leaver) surface as [`PlanError::InvalidElasticEvent`].
+pub(super) fn apply_events(
+    req: &FleetRequest,
+) -> Result<FleetRequest, PlanError> {
+    let mut out = req.clone();
+    let events = std::mem::take(&mut out.events);
+    for ev in &events {
+        telemetry::incr(tkey::ELASTIC_EVENTS);
+        match ev {
+            ElasticEvent::DeviceLost { group, n } => {
+                let g = *group;
+                let Some(grp) = out.cluster.groups.get_mut(g) else {
+                    return Err(PlanError::InvalidElasticEvent(format!(
+                        "device_lost group {g} does not exist in {}",
+                        out.cluster.name
+                    )));
+                };
+                if *n >= grp.count {
+                    return Err(PlanError::InvalidElasticEvent(format!(
+                        "device_lost({g}, {n}) would empty group {:?} \
+                         ({} devices)",
+                        grp.device.name, grp.count
+                    )));
+                }
+                grp.count -= n;
+                if let Some(warm) = &mut out.warm {
+                    repair_loss(warm, g, *n);
+                }
+            }
+            ElasticEvent::TenantJoined { name, request } => {
+                if out.tenants.iter().any(|t| &t.name == name) {
+                    return Err(PlanError::InvalidElasticEvent(format!(
+                        "tenant {name:?} joined twice"
+                    )));
+                }
+                let groups = out.cluster.groups.len();
+                out = out.tenant(name, (**request).clone());
+                if let Some(warm) = &mut out.warm {
+                    // the newcomer starts device-less; the warm search's
+                    // feasibility-restoring moves grant it a slice
+                    warm.slices.push(vec![0; groups]);
+                }
+            }
+            ElasticEvent::TenantLeft { name } => {
+                let Some(idx) =
+                    out.tenants.iter().position(|t| &t.name == name)
+                else {
+                    return Err(PlanError::InvalidElasticEvent(format!(
+                        "tenant {name:?} left but was never in the fleet"
+                    )));
+                };
+                out.tenants.remove(idx);
+                if let Some(warm) = &mut out.warm {
+                    if idx < warm.slices.len() {
+                        warm.slices.remove(idx);
+                    }
+                }
+            }
+        }
+    }
+    if let Some(warm) = &out.warm {
+        if warm.slices.len() != out.tenants.len()
+            || !warm.respects(&out.cluster)
+        {
+            return Err(PlanError::InvalidElasticEvent(format!(
+                "warm-start carve {} does not fit {} tenants on {}",
+                warm.label(),
+                out.tenants.len(),
+                out.cluster.name
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// Take `n` group-`g` devices back from the incumbent carve, one at a
+/// time from whichever tenant holds the most of that group (ties to the
+/// lowest tenant index) — the deterministic minimal repair that touches
+/// as few tenants as possible. A carve that held fewer than `n` (legal:
+/// `respects` allows under-assignment) just ends up holding zero.
+fn repair_loss(warm: &mut FleetPartition, g: usize, n: usize) {
+    for _ in 0..n {
+        let richest = (0..warm.slices.len())
+            .filter(|&t| g < warm.slices[t].len())
+            .max_by_key(|&t| (warm.slices[t][g], std::cmp::Reverse(t)));
+        match richest {
+            Some(t) if warm.slices[t][g] > 0 => warm.slices[t][g] -= 1,
+            _ => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::cluster::ClusterSpec;
+    use super::*;
+    use crate::model::{MllmSpec, Size};
+
+    fn req2() -> FleetRequest {
+        FleetRequest::new(ClusterSpec::a40_a100_demo())
+            .tenant(
+                "a",
+                PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S)),
+            )
+            .tenant(
+                "b",
+                PlanRequest::default_for(MllmSpec::alm(Size::S, Size::S)),
+            )
+    }
+
+    #[test]
+    fn device_loss_shrinks_the_pool_and_repairs_the_warm_carve() {
+        let warm = FleetPartition {
+            slices: vec![vec![3, 1], vec![1, 3]],
+        };
+        let req = req2().warm_start(&warm).device_lost(0, 1);
+        let resolved = apply_events(&req).unwrap();
+        assert_eq!(resolved.cluster.groups[0].count, 3);
+        assert!(resolved.events.is_empty());
+        // tenant 0 held the most of group 0 — it pays
+        let w = resolved.warm.unwrap();
+        assert_eq!(w.slices, vec![vec![2, 1], vec![1, 3]]);
+    }
+
+    #[test]
+    fn losing_a_whole_group_is_a_typed_error() {
+        let req = req2().device_lost(0, 4);
+        assert!(matches!(
+            apply_events(&req),
+            Err(PlanError::InvalidElasticEvent(_))
+        ));
+        let bad_group = req2().device_lost(9, 1);
+        assert!(matches!(
+            apply_events(&bad_group),
+            Err(PlanError::InvalidElasticEvent(_))
+        ));
+    }
+
+    #[test]
+    fn joins_and_leaves_edit_tenants_and_warm_rows_together() {
+        let warm = FleetPartition {
+            slices: vec![vec![2, 2], vec![2, 2]],
+        };
+        let req = req2()
+            .warm_start(&warm)
+            .tenant_joined(
+                "c",
+                PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S)),
+            )
+            .tenant_left("a");
+        let resolved = apply_events(&req).unwrap();
+        let names: Vec<&str> =
+            resolved.tenants.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["b", "c"]);
+        let w = resolved.warm.unwrap();
+        assert_eq!(w.slices, vec![vec![2, 2], vec![0, 0]]);
+
+        let dup = req2().tenant_joined(
+            "a",
+            PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S)),
+        );
+        assert!(matches!(
+            apply_events(&dup),
+            Err(PlanError::InvalidElasticEvent(_))
+        ));
+        let ghost = req2().tenant_left("nobody");
+        assert!(matches!(
+            apply_events(&ghost),
+            Err(PlanError::InvalidElasticEvent(_))
+        ));
+    }
+
+    #[test]
+    fn stale_warm_shapes_are_refused() {
+        let warm = FleetPartition { slices: vec![vec![4, 4]] };
+        let req = req2().warm_start(&warm); // 2 tenants, 1 warm row
+        assert!(matches!(
+            apply_events(&req),
+            Err(PlanError::InvalidElasticEvent(_))
+        ));
+    }
+}

@@ -11,10 +11,10 @@
 //!
 //! ```text
 //! FleetRequest ──► PlanningService::plan_fleet() ──► FleetReport
-//!   tenants: name → PlanRequest     enumerate pool carves      per-tenant PlanReports,
-//!   shared ClusterSpec              (per-group compositions),  the chosen FleetPartition,
-//!   fairness floor                  prune by device/memory,    aggregate throughput,
-//!                                   plan each sub-pool,        provenance
+//!   tenants: name → PlanRequest     search the carve space       per-tenant PlanReports,
+//!   shared ClusterSpec              (exact / branch-and-bound /  the chosen FleetPartition,
+//!   fairness floor                  LPT-seeded local search),    aggregate throughput,
+//!   warm start + elastic events     plan each sub-pool,          provenance incl. search_mode
 //!                                   maximize Σ throughput
 //! ```
 //!
@@ -30,6 +30,18 @@
 //! fingerprint the carve**, and re-carving a pool re-uses every sub-pool
 //! plan it has seen before.
 //!
+//! Three search engines share that evaluation path (see [`search`]):
+//! pools within [`MAX_PARTITIONS`] carves are solved **exactly** by
+//! enumeration; bigger pools degrade — by plan, not by error — to
+//! **branch-and-bound** (admissible static bounds, equal to the exact
+//! optimum when it completes) and past [`MAX_BNB_CARVES`] to
+//! **LPT-seeded local search**. [`FleetProvenance::search_mode`] records
+//! which engine answered. Re-planning is incremental: a
+//! [`FleetRequest::warm_start`] incumbent plus [`ElasticEvent`]s
+//! (device loss, tenant join/leave) runs a stability-first local search
+//! from the repaired incumbent carve, so a 1-GPU loss relocates one
+//! tenant's stages, not the fleet's (see [`elastic`]).
+//!
 //! The winner maximizes aggregate simulated throughput (Σ samples/s)
 //! subject to a per-tenant *fairness floor*: each tenant must keep at
 //! least `floor ×` the throughput it would get running **alone** on the
@@ -38,23 +50,31 @@
 //! static halving), and [`PlanDiff`](super::PlanDiff) renders what a
 //! re-carve changed.
 
-use std::collections::HashMap;
+pub mod elastic;
+pub mod search;
+
+pub use elastic::ElasticEvent;
+pub use search::{
+    SearchMode, ELASTIC_MOVE_BUDGET, MAX_BNB_CARVES, MAX_SEARCH_EVALS,
+};
+
 use std::fmt::Write as _;
 
 use crate::memory;
 use crate::model::MllmSpec;
 use crate::telemetry::{self, key as tkey};
+use crate::util::json::Json;
 
 use super::cluster::{ClusterSpec, DeviceGroup};
 use super::diff::PlanDiff;
 use super::error::PlanError;
 use super::report::{PlanReport, SearchStats};
-use super::{PlanRequest, PlanningService};
+use super::{CachePolicy, PlanRequest, PlanningService};
 
-/// Carve-enumeration guard: a pool whose exhaustive carve count exceeds
-/// this is rejected as an [`PlanError::InvalidRequest`] instead of
-/// spinning (compositions grow combinatorially with group sizes and
-/// tenant count).
+/// Exhaustive-enumeration cap: a pool whose carve count exceeds this is
+/// never enumerated. Auto mode degrades to the heuristic engines past
+/// it; only an explicitly forced [`SearchMode::Exact`] still refuses
+/// with [`PlanError::InvalidRequest`].
 pub const MAX_PARTITIONS: usize = 20_000;
 
 /// One named tenant of a [`FleetRequest`]: a workload plus its planning
@@ -75,12 +95,29 @@ pub struct FleetRequest {
     pub tenants: Vec<Tenant>,
     /// Fairness floor in `[0, 1]`: each tenant's carved throughput must
     /// be at least this fraction of its *solo* throughput (the whole
-    /// pool to itself). `0.0` disables the floor.
+    /// pool to itself). `0.0` disables the floor — and with it the
+    /// solo baseline planning runs.
     pub fairness_floor: f64,
-    /// Fleet-wide plan-cache path, applied to every tenant — those
+    /// Fleet-wide plan-cache policy, applied to every tenant — those
     /// already added *and* those added later, so the builder order does
     /// not matter (see [`FleetRequest::cache_file`]).
-    pub cache: Option<String>,
+    pub cache: Option<CachePolicy>,
+    /// Force a search engine; `None` picks by carve count (exact within
+    /// [`MAX_PARTITIONS`], branch-and-bound within [`MAX_BNB_CARVES`],
+    /// local search beyond — and local search whenever a
+    /// [`FleetRequest::warm_start`] incumbent is present).
+    pub search_mode: Option<SearchMode>,
+    /// Cap on carves the heuristic engines may fully evaluate (plan
+    /// every tenant sub-pool). `None` → [`MAX_SEARCH_EVALS`].
+    pub search_evals: Option<usize>,
+    /// Incumbent carve from a previous answer — the warm start the
+    /// elastic path repairs and re-plans from.
+    pub warm: Option<FleetPartition>,
+    /// Elastic events folded in (in order) before the search runs.
+    pub events: Vec<ElasticEvent>,
+    /// Move budget for warm-started local search — how far the repair
+    /// may drift from the incumbent. `None` → [`ELASTIC_MOVE_BUDGET`].
+    pub elastic_moves: Option<usize>,
 }
 
 impl FleetRequest {
@@ -90,15 +127,20 @@ impl FleetRequest {
             tenants: Vec::new(),
             fairness_floor: 0.0,
             cache: None,
+            search_mode: None,
+            search_evals: None,
+            warm: None,
+            events: Vec::new(),
+            elastic_moves: None,
         }
     }
 
     /// Add a named tenant (names must be unique within the request). A
-    /// fleet-wide [`FleetRequest::cache_file`] set earlier is applied to
-    /// the new tenant's request.
+    /// fleet-wide cache policy set earlier is applied to the new
+    /// tenant's request.
     pub fn tenant(mut self, name: &str, mut request: PlanRequest) -> Self {
-        if let Some(path) = &self.cache {
-            request = request.cache_file(path);
+        if let Some(policy) = &self.cache {
+            request.cache = policy.clone();
         }
         self.tenants.push(Tenant { name: name.to_string(), request });
         self
@@ -110,16 +152,84 @@ impl FleetRequest {
         self
     }
 
-    /// Point every tenant's plan cache at `path` — tenants already
-    /// added are rewritten and tenants added later inherit it, so this
+    /// Apply one cache policy to every tenant — tenants already added
+    /// are rewritten and tenants added later inherit it, so this
     /// composes with [`FleetRequest::tenant`] in either order. Entries
     /// are keyed by each sub-pool carve's fingerprint, so tenants
-    /// sharing one file never alias each other's answers.
-    pub fn cache_file(mut self, path: &str) -> Self {
-        self.cache = Some(path.to_string());
+    /// sharing one store never alias each other's answers.
+    pub fn cache_policy(mut self, policy: CachePolicy) -> Self {
         for t in &mut self.tenants {
-            t.request = t.request.clone().cache_file(path);
+            t.request.cache = policy.clone();
         }
+        self.cache = Some(policy);
+        self
+    }
+
+    /// Point every tenant's plan cache at the JSON file `path` (see
+    /// [`FleetRequest::cache_policy`]).
+    pub fn cache_file(self, path: &str) -> Self {
+        self.cache_policy(CachePolicy::File(path.to_string()))
+    }
+
+    /// Route every tenant through the process-wide in-memory plan store
+    /// (see [`FleetRequest::cache_policy`]).
+    pub fn cache_memory(self) -> Self {
+        self.cache_policy(CachePolicy::Memory)
+    }
+
+    /// Force a search engine instead of the carve-count auto pick.
+    pub fn search_mode(mut self, mode: SearchMode) -> Self {
+        self.search_mode = Some(mode);
+        self
+    }
+
+    /// Cap heuristic-engine carve evaluations (see
+    /// [`FleetRequest::search_evals`]).
+    pub fn search_evals(mut self, cap: usize) -> Self {
+        self.search_evals = Some(cap);
+        self
+    }
+
+    /// Warm-start from an incumbent carve — typically
+    /// `prev_report.partition` from the last [`FleetReport`]. Switches
+    /// the auto engine pick to stability-first local search so the new
+    /// answer stays as close to the incumbent as feasibility allows.
+    pub fn warm_start(mut self, prev: &FleetPartition) -> Self {
+        self.warm = Some(prev.clone());
+        self
+    }
+
+    /// Queue an elastic event: `n` devices of cluster group `group` are
+    /// gone. Folded in (and the warm carve repaired) before the search.
+    pub fn device_lost(mut self, group: usize, n: usize) -> Self {
+        self.events.push(ElasticEvent::DeviceLost { group, n });
+        self
+    }
+
+    /// Queue an elastic event: a new named tenant joins the fleet.
+    pub fn tenant_joined(
+        mut self,
+        name: &str,
+        request: PlanRequest,
+    ) -> Self {
+        self.events.push(ElasticEvent::TenantJoined {
+            name: name.to_string(),
+            request: Box::new(request),
+        });
+        self
+    }
+
+    /// Queue an elastic event: the named tenant leaves the fleet.
+    pub fn tenant_left(mut self, name: &str) -> Self {
+        self.events
+            .push(ElasticEvent::TenantLeft { name: name.to_string() });
+        self
+    }
+
+    /// Bound warm-started re-planning's drift from the incumbent (see
+    /// [`FleetRequest::elastic_moves`]).
+    pub fn elastic_moves(mut self, moves: usize) -> Self {
+        self.elastic_moves = Some(moves);
         self
     }
 
@@ -323,6 +433,17 @@ pub fn enumerate_partitions(
         .collect()
 }
 
+/// How many carves [`enumerate_partitions`] would produce for this pool
+/// and tenant count, computed without materializing them (saturating —
+/// the comparison against the caps is all callers need).
+pub fn carve_count(cluster: &ClusterSpec, tenants: usize) -> u128 {
+    cluster
+        .groups
+        .iter()
+        .map(|g| compositions_count(g.count, tenants))
+        .fold(1u128, |acc, c| acc.saturating_mul(c))
+}
+
 /// A lower bound on the pool memory a tenant's workload needs anywhere:
 /// its model weights (bf16), which must all be resident at least once
 /// regardless of sharding or frozen policy. Slices whose total memory
@@ -360,7 +481,8 @@ pub struct TenantReport {
     /// chosen [`FleetPartition`]).
     pub slice: Vec<usize>,
     /// Throughput (samples/s) the tenant would get with the whole pool
-    /// to itself — the fairness baseline.
+    /// to itself — the fairness baseline. Zero when the floor is
+    /// disabled (the baselines are then never planned).
     pub solo_throughput: f64,
     pub report: PlanReport,
 }
@@ -388,7 +510,13 @@ pub struct FleetProvenance {
     /// Fingerprint of the shared pool.
     pub cluster: String,
     pub fairness_floor: f64,
-    /// Carves enumerated.
+    /// Which engine answered: exact enumeration, branch-and-bound, or
+    /// LPT-seeded local search.
+    pub search_mode: SearchMode,
+    /// True when the answer was warm-started from an incumbent carve
+    /// (the elastic re-planning path).
+    pub warm_start: bool,
+    /// Carves examined (evaluated or statically pruned).
     pub partitions_considered: usize,
     /// Carves discarded by the static device/memory filter.
     pub partitions_pruned: usize,
@@ -499,8 +627,10 @@ impl FleetReport {
         );
         let _ = writeln!(
             s,
-            "  provenance: {} carves considered, {} pruned, {} sub-pool \
-             plans, {} feasible | verifier {}",
+            "  provenance: {} search{} — {} carves considered, {} pruned, \
+             {} sub-pool plans, {} feasible | verifier {}",
+            self.provenance.search_mode.name(),
+            if self.provenance.warm_start { " (warm start)" } else { "" },
             self.provenance.partitions_considered,
             self.provenance.partitions_pruned,
             self.provenance.plans_searched,
@@ -514,22 +644,123 @@ impl FleetReport {
         );
         s
     }
+
+    /// Machine-readable form for `cornstarch fleet --json` and the serve
+    /// line protocol: the carve, per-tenant plans, the aggregate, and
+    /// the search provenance — including `search_mode`, which the CI
+    /// fleet-smoke asserts heuristic degradation on.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cluster", Json::Str(self.cluster_name.clone())),
+            ("carve", Json::Str(self.partition.label())),
+            (
+                "aggregate_throughput",
+                Json::Num(self.aggregate_throughput),
+            ),
+            (
+                "search_mode",
+                Json::Str(self.provenance.search_mode.name().to_string()),
+            ),
+            ("warm_start", Json::Bool(self.provenance.warm_start)),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::Str(t.name.clone())),
+                                (
+                                    "slice",
+                                    Json::Arr(
+                                        t.slice
+                                            .iter()
+                                            .map(|&c| Json::Int(c as i64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "plan",
+                                    Json::Str(
+                                        t.report
+                                            .winner()
+                                            .candidate
+                                            .label(),
+                                    ),
+                                ),
+                                (
+                                    "iteration_ms",
+                                    Json::Num(
+                                        t.report.timeline.iteration_ms,
+                                    ),
+                                ),
+                                ("throughput", Json::Num(t.throughput())),
+                                (
+                                    "solo_throughput",
+                                    Json::Num(t.solo_throughput),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "provenance",
+                Json::obj(vec![
+                    (
+                        "carves_considered",
+                        Json::Int(
+                            self.provenance.partitions_considered as i64,
+                        ),
+                    ),
+                    (
+                        "carves_pruned",
+                        Json::Int(
+                            self.provenance.partitions_pruned as i64,
+                        ),
+                    ),
+                    (
+                        "plans_searched",
+                        Json::Int(self.provenance.plans_searched as i64),
+                    ),
+                    (
+                        "carves_feasible",
+                        Json::Int(
+                            self.provenance.partitions_feasible as i64,
+                        ),
+                    ),
+                    (
+                        "verifier_clean",
+                        Json::Bool(self.provenance.verifier_clean),
+                    ),
+                ]),
+            ),
+            ("stats", self.provenance.stats.to_json()),
+        ])
+    }
 }
 
 impl PlanningService {
-    /// Each tenant alone on the whole shared pool — the fairness
-    /// baselines. A tenant that cannot run even there makes the fleet
-    /// infeasible outright.
-    fn solo_reports(
+    /// Each tenant's throughput alone on the whole shared pool — the
+    /// fairness baselines. Skipped (all zeros) when the floor is
+    /// disabled: nothing constrains on them, and on pools large enough
+    /// to need the heuristic engines the baseline plans would dwarf the
+    /// carve search itself. A tenant that cannot run even solo makes
+    /// the fleet infeasible outright.
+    fn solo_throughputs(
         &self,
         req: &FleetRequest,
-    ) -> Result<Vec<PlanReport>, PlanError> {
+    ) -> Result<Vec<f64>, PlanError> {
+        if req.fairness_floor <= 0.0 {
+            return Ok(vec![0.0; req.tenants.len()]);
+        }
         req.tenants
             .iter()
             .map(|t| {
                 self.plan(
                     &t.request.clone().cluster(req.cluster.clone()),
                 )
+                .map(|r| r.timeline.throughput)
                 .map_err(|e| match e {
                     PlanError::NoFeasiblePlan { .. } => {
                         PlanError::InfeasibleFleet(format!(
@@ -544,14 +775,20 @@ impl PlanningService {
             .collect()
     }
 
-    /// Search the carve space: enumerate exact partitions, prune slices
-    /// that cannot host their tenant, plan every surviving sub-pool
-    /// (memoized by carve fingerprint), and keep the feasible carve with
-    /// the highest aggregate throughput that honors the fairness floor.
+    /// Search the carve space and keep the feasible carve with the
+    /// highest aggregate throughput that honors the fairness floor.
+    /// The engine is picked by carve count (or forced via
+    /// [`FleetRequest::search_mode`]): exact enumeration within
+    /// [`MAX_PARTITIONS`], branch-and-bound within [`MAX_BNB_CARVES`],
+    /// LPT-seeded local search beyond — and stability-first local
+    /// search whenever a [`FleetRequest::warm_start`] incumbent is
+    /// present. Queued [`ElasticEvent`]s are folded in first.
     pub fn plan_fleet(
         &self,
         req: &FleetRequest,
     ) -> Result<FleetReport, PlanError> {
+        let resolved = elastic::apply_events(req)?;
+        let req = &resolved;
         req.validate()?;
         let n_tenants = req.tenants.len();
         let _fleet_span = telemetry::span(&format!(
@@ -559,107 +796,67 @@ impl PlanningService {
             req.cluster.name
         ));
         // Provenance is re-sourced from the telemetry registry: the
-        // loop below bumps the named counters at exactly the sites the
-        // bespoke locals used to live, and the delta over this call
-        // becomes the report's FleetProvenance — same numbers, one
-        // accounting door.
+        // search engines bump the named counters at the sites bespoke
+        // locals used to live, and the delta over this call becomes the
+        // report's FleetProvenance — same numbers, one accounting door.
         let counters_before = telemetry::snapshot();
-        // Saturating fold: the guard itself must not overflow on a pool
-        // whose carve count exceeds u128 (saturation lands far above the
-        // cap, which is all the comparison needs).
-        let carve_count: u128 = req
-            .cluster
-            .groups
-            .iter()
-            .map(|g| compositions_count(g.count, n_tenants))
-            .fold(1u128, |acc, c| acc.saturating_mul(c));
-        if carve_count > MAX_PARTITIONS as u128 {
+        let carves = carve_count(&req.cluster, n_tenants);
+        let mode = match req.search_mode {
+            Some(m) => m,
+            None if req.warm.is_some() => SearchMode::LocalSearch,
+            None if carves <= MAX_PARTITIONS as u128 => SearchMode::Exact,
+            None if carves <= MAX_BNB_CARVES => SearchMode::BranchAndBound,
+            None => SearchMode::LocalSearch,
+        };
+        if mode == SearchMode::Exact && carves > MAX_PARTITIONS as u128 {
+            // Only a *forced* exact search can still trip this: auto
+            // mode degrades to the heuristic engines instead.
             return Err(PlanError::InvalidRequest(format!(
-                "{carve_count} carves of {} across {n_tenants} tenants \
-                 exceed the exhaustive-search cap of {MAX_PARTITIONS}; \
-                 reduce the tenant count or split the pool",
+                "{carves} carves of {} across {n_tenants} tenants exceed \
+                 the exhaustive-search cap of {MAX_PARTITIONS}; drop the \
+                 forced exact search mode to plan heuristically",
                 req.cluster.name
             )));
         }
-        let solo = self.solo_reports(req)?;
+        let solo = self.solo_throughputs(req)?;
         let min_bytes: Vec<u64> = req
             .tenants
             .iter()
             .map(|t| min_weight_bytes(&t.request.mllm))
             .collect();
-
-        let mut memo: HashMap<(usize, String), Option<PlanReport>> =
-            HashMap::new();
-        let mut best: Option<(f64, FleetPartition, Vec<PlanReport>)> = None;
-        let partitions = enumerate_partitions(&req.cluster, n_tenants);
-        telemetry::count(tkey::CARVES_CONSIDERED, partitions.len() as u64);
-        'carves: for part in partitions {
-            // Static pruning, the carve-level analogue of the tuner's
-            // per-group capacity/memory filters: an empty slice, or one
-            // whose total memory cannot hold the tenant's weights, dies
-            // before any search.
-            for t in 0..n_tenants {
-                if part.tenant_devices(t) == 0
-                    || slice_mem_bytes(&part, &req.cluster, t) < min_bytes[t]
-                {
-                    telemetry::incr(tkey::CARVES_PRUNED);
-                    continue 'carves;
-                }
+        let eval_cap = req.search_evals.unwrap_or(MAX_SEARCH_EVALS);
+        let mut cs = search::CarveSearch::new(
+            self, req, &solo, &min_bytes, eval_cap,
+        );
+        let best = match mode {
+            SearchMode::Exact => search::exact(&mut cs)?,
+            SearchMode::BranchAndBound => {
+                let seed = req.warm.clone().unwrap_or_else(|| {
+                    search::lpt_seed(req, &min_bytes)
+                });
+                search::branch_and_bound(&mut cs, &seed)?
             }
-            let mut reports: Vec<PlanReport> =
-                Vec::with_capacity(n_tenants);
-            let mut ok = true;
-            for (t, tenant) in req.tenants.iter().enumerate() {
-                let sub = part
-                    .subpool(&req.cluster, t, &tenant.name)
-                    .expect("pruning kept only non-empty slices");
-                let key = (t, sub.fingerprint());
-                let cached = match memo.get(&key) {
-                    Some(r) => r.clone(),
-                    None => {
-                        let r = match self
-                            .plan(&tenant.request.clone().cluster(sub))
-                        {
-                            Ok(rep) => Some(rep),
-                            Err(PlanError::NoFeasiblePlan { .. }) => None,
-                            Err(e) => return Err(e),
-                        };
-                        telemetry::incr(tkey::PLANS_SEARCHED);
-                        memo.insert(key, r.clone());
-                        r
-                    }
-                };
-                match cached {
-                    Some(rep) => reports.push(rep),
-                    None => {
-                        ok = false;
-                        break;
-                    }
-                }
+            SearchMode::LocalSearch => {
+                let stability = req.warm.is_some();
+                let seed = req.warm.clone().unwrap_or_else(|| {
+                    search::lpt_seed(req, &min_bytes)
+                });
+                let moves = req.elastic_moves.unwrap_or(if stability {
+                    ELASTIC_MOVE_BUDGET
+                } else {
+                    eval_cap
+                });
+                search::local_search(&mut cs, seed, moves, stability)?
             }
-            if !ok {
-                continue;
-            }
-            if reports.iter().zip(&solo).any(|(r, s)| {
-                r.timeline.throughput
-                    < req.fairness_floor * s.timeline.throughput
-            }) {
-                continue;
-            }
-            telemetry::incr(tkey::CARVES_FEASIBLE);
-            let agg: f64 =
-                reports.iter().map(|r| r.timeline.throughput).sum();
-            if best.as_ref().is_none_or(|(b, _, _)| agg > *b + 1e-12) {
-                best = Some((agg, part, reports));
-            }
-        }
+        };
         let fired = telemetry::snapshot().delta_since(&counters_before);
-        let Some((_, partition, reports)) = best else {
+        let Some(best) = best else {
             return Err(PlanError::InfeasibleFleet(format!(
                 "no carve of {} hosts all {n_tenants} tenants within the \
-                 {:.2} fairness floor ({} considered, {} pruned)",
+                 {:.2} fairness floor ({} search: {} considered, {} pruned)",
                 req.cluster.name,
                 req.fairness_floor,
+                mode.name(),
                 fired.get(tkey::CARVES_CONSIDERED),
                 fired.get(tkey::CARVES_PRUNED),
             )));
@@ -668,8 +865,10 @@ impl PlanningService {
         // lints (no double-assignment, slice widths matching the pool)
         // before a report leaves the facade. Idle headroom is a Warn
         // and rides along; Errors refuse the report.
-        let carve_verdict =
-            crate::verify::verify_partition(&partition, &req.cluster);
+        let carve_verdict = crate::verify::verify_partition(
+            &best.partition,
+            &req.cluster,
+        );
         if !carve_verdict.is_clean() {
             return Err(PlanError::FailedVerification(
                 carve_verdict.error_summary(),
@@ -677,12 +876,14 @@ impl PlanningService {
         }
         Ok(self.assemble(
             req,
-            partition,
-            reports,
+            best.partition,
+            best.reports,
             &solo,
             FleetProvenance {
                 cluster: req.cluster.fingerprint(),
                 fairness_floor: req.fairness_floor,
+                search_mode: mode,
+                warm_start: req.warm.is_some(),
                 partitions_considered: fired.get(tkey::CARVES_CONSIDERED)
                     as usize,
                 partitions_pruned: fired.get(tkey::CARVES_PRUNED) as usize,
@@ -735,7 +936,7 @@ impl PlanningService {
             partition.label()
         ));
         let counters_before = telemetry::snapshot();
-        let solo = self.solo_reports(req)?;
+        let solo = self.solo_throughputs(req)?;
         let mut reports = Vec::with_capacity(req.tenants.len());
         for (t, tenant) in req.tenants.iter().enumerate() {
             let Some(sub) =
@@ -770,6 +971,8 @@ impl PlanningService {
             // request's floor here would render a below-floor baseline
             // as a violated constraint rather than one never applied
             fairness_floor: 0.0,
+            search_mode: SearchMode::Exact,
+            warm_start: false,
             partitions_considered: 1,
             partitions_pruned: 0,
             plans_searched: fired.get(tkey::PLANS_SEARCHED) as usize,
@@ -785,7 +988,7 @@ impl PlanningService {
         req: &FleetRequest,
         partition: FleetPartition,
         reports: Vec<PlanReport>,
-        solo: &[PlanReport],
+        solo: &[f64],
         provenance: FleetProvenance,
     ) -> FleetReport {
         let aggregate_throughput =
@@ -796,10 +999,10 @@ impl PlanningService {
             .zip(reports)
             .zip(solo)
             .enumerate()
-            .map(|(t, ((tenant, report), s))| TenantReport {
+            .map(|(t, ((tenant, report), &s))| TenantReport {
                 name: tenant.name.clone(),
                 slice: partition.slices[t].clone(),
-                solo_throughput: s.timeline.throughput,
+                solo_throughput: s,
                 report,
             })
             .collect();
@@ -850,6 +1053,15 @@ mod tests {
         assert_eq!(compositions_count(3, 1), 1);
         assert_eq!(compositions(2, 3).len(), 6); // C(4, 2)
         assert_eq!(compositions_count(2, 3), 6);
+    }
+
+    #[test]
+    fn carve_count_matches_the_enumeration() {
+        let cluster = ClusterSpec::a40_a100_demo();
+        assert_eq!(
+            carve_count(&cluster, 2),
+            enumerate_partitions(&cluster, 2).len() as u128
+        );
     }
 
     #[test]
@@ -953,9 +1165,12 @@ mod tests {
         assert!((agg - report.aggregate_throughput).abs() < 1e-9);
         assert!(report.provenance.partitions_feasible >= 1);
         assert_eq!(report.provenance.partitions_considered, 5);
+        assert_eq!(report.provenance.search_mode, SearchMode::Exact);
+        assert!(!report.provenance.warm_start);
         let text = report.render();
         assert!(text.contains("carve:"), "{text}");
         assert!(text.contains("aggregate:"), "{text}");
+        assert!(text.contains("exact search"), "{text}");
     }
 
     #[test]
@@ -1020,14 +1235,17 @@ mod tests {
     }
 
     #[test]
-    fn carve_explosion_is_a_typed_error() {
+    fn forced_exact_past_the_cap_is_a_typed_error() {
         // 3 groups of 40 devices and 6 tenants: astronomically many
-        // carves — must be rejected, not enumerated.
+        // carves. Auto mode degrades to the heuristic engines (pinned
+        // by tests/fleet_search_checks.rs); *forcing* exact must stay a
+        // typed refusal, not an enumeration attempt.
         let mut cluster = ClusterSpec::a40_a100_demo();
         cluster.groups[0].count = 40;
         cluster.groups[1].count = 40;
         cluster.groups.push(cluster.groups[0].clone());
-        let mut req = FleetRequest::new(cluster);
+        let mut req =
+            FleetRequest::new(cluster).search_mode(SearchMode::Exact);
         for i in 0..6 {
             req = req.tenant(
                 &format!("t{i}"),
@@ -1044,7 +1262,6 @@ mod tests {
 
     #[test]
     fn cache_file_applies_regardless_of_builder_order() {
-        use crate::api::CachePolicy;
         let cluster = ClusterSpec::a40_default().with_devices(4);
         let before = FleetRequest::new(cluster.clone())
             .cache_file("/tmp/fleet.json")
@@ -1057,6 +1274,18 @@ mod tests {
                 req.tenants[0].request.cache,
                 CachePolicy::File("/tmp/fleet.json".to_string())
             );
+        }
+    }
+
+    #[test]
+    fn cache_memory_routes_every_tenant_through_the_store() {
+        let cluster = ClusterSpec::a40_default().with_devices(4);
+        let req = FleetRequest::new(cluster)
+            .tenant("a", small_request(MllmSpec::vlm(Size::S, Size::S)))
+            .cache_memory()
+            .tenant("b", small_request(MllmSpec::alm(Size::S, Size::S)));
+        for t in &req.tenants {
+            assert_eq!(t.request.cache, CachePolicy::Memory);
         }
     }
 

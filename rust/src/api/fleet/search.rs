@@ -1,0 +1,621 @@
+//! The carve search engines behind [`PlanningService::plan_fleet`].
+//!
+//! Three modes, one evaluator:
+//!
+//! * **Exact** — enumerate every carve ([`super::enumerate_partitions`])
+//!   and keep the best. Only available while the carve count stays under
+//!   [`super::MAX_PARTITIONS`].
+//! * **Branch-and-bound** — depth-first over per-group compositions,
+//!   pruning subtrees with the *same* static device/memory tests the
+//!   exact path applies per carve, lifted to partial carves: a subtree
+//!   dies only when some tenant cannot reach a non-empty slice (or its
+//!   model-weight bytes) in *any* completion, so the bound is admissible
+//!   and a completed run returns the exhaustive optimum. An LPT-seeded
+//!   incumbent means even a budget-truncated run returns a real carve.
+//! * **Local search** — an LPT-seeded hill-climb over single-device
+//!   moves and cross-group swaps between tenants, for carve spaces no
+//!   tree search should walk. Never returns an infeasible carve; when
+//!   nothing feasible is ever seen the caller surfaces
+//!   [`PlanError::InfeasibleFleet`](crate::api::PlanError::InfeasibleFleet).
+//!
+//! All three share [`CarveSearch`]: per-tenant plans are memoized on the
+//! sub-pool fingerprint, static pruning and the fairness floor are
+//! applied identically, and the telemetry counters
+//! (`carves_considered/pruned/feasible`, `bnb_nodes/bnb_pruned`,
+//! `local_moves`) are the provenance every mode reports through.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::telemetry::{self, key as tkey};
+
+use super::super::error::PlanError;
+use super::super::report::PlanReport;
+use super::super::PlanningService;
+use super::{
+    enumerate_partitions, slice_mem_bytes, FleetPartition, FleetRequest,
+    MAX_PARTITIONS,
+};
+
+/// Auto-mode threshold: carve spaces up to this size run branch-and-bound
+/// (bounded by [`MAX_SEARCH_EVALS`]); anything larger goes straight to
+/// LPT-seeded local search.
+pub const MAX_BNB_CARVES: u128 = 1_000_000;
+
+/// Default cap on carves the heuristic modes may *evaluate* (plan every
+/// tenant's sub-pool). Statically pruned carves are cheap and don't
+/// count. Override per request with [`FleetRequest::search_evals`].
+pub const MAX_SEARCH_EVALS: usize = MAX_PARTITIONS;
+
+/// Default move budget for warm-started (elastic) re-planning: how many
+/// single-device moves the repair may drift from the incumbent carve.
+/// Override per request with [`FleetRequest::elastic_moves`].
+pub const ELASTIC_MOVE_BUDGET: usize = 8;
+
+/// Accept a local-search move only when it beats the incumbent by more
+/// than this (absolute samples/s) — blocks float-noise cycling.
+const IMPROVE_EPS: f64 = 1e-9;
+
+/// Which engine produced a fleet answer — recorded in
+/// [`FleetProvenance::search_mode`](super::FleetProvenance::search_mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Exhaustive enumeration (carve count within [`MAX_PARTITIONS`]).
+    Exact,
+    /// Depth-first branch-and-bound with admissible static bounds.
+    BranchAndBound,
+    /// LPT-seeded hill-climb over single-device moves and swaps.
+    LocalSearch,
+}
+
+impl SearchMode {
+    /// Stable wire/provenance name (`exact | branch_and_bound |
+    /// local_search`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchMode::Exact => "exact",
+            SearchMode::BranchAndBound => "branch_and_bound",
+            SearchMode::LocalSearch => "local_search",
+        }
+    }
+
+    /// Parse a mode name (accepts the provenance names plus the short
+    /// CLI spellings `bnb` and `local`). `auto` is not a mode — callers
+    /// map it to `None`.
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        match s {
+            "exact" => Some(SearchMode::Exact),
+            "bnb" | "branch_and_bound" | "branch-and-bound" => {
+                Some(SearchMode::BranchAndBound)
+            }
+            "local" | "local_search" | "local-search" => {
+                Some(SearchMode::LocalSearch)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A carve the search decided to keep: aggregate throughput plus the
+/// per-tenant reports that justify it.
+pub(super) struct BestCarve {
+    pub aggregate: f64,
+    pub partition: FleetPartition,
+    pub reports: Vec<PlanReport>,
+}
+
+/// Shared evaluation state for every search mode: the static prune, the
+/// per-(tenant, sub-pool) plan memo, the fairness floor, and the
+/// evaluation budget.
+pub(super) struct CarveSearch<'a> {
+    pub service: &'a PlanningService,
+    pub req: &'a FleetRequest,
+    /// Solo (whole-pool) throughput per tenant — the fairness baseline;
+    /// all zeros when the floor is disabled.
+    pub solo_tput: &'a [f64],
+    /// Minimum slice memory per tenant (bf16 model weights).
+    pub min_bytes: &'a [u64],
+    memo: HashMap<(usize, String), Option<PlanReport>>,
+    /// Carves fully evaluated (planned) so far, vs the cap.
+    evals: usize,
+    eval_cap: usize,
+}
+
+impl<'a> CarveSearch<'a> {
+    pub fn new(
+        service: &'a PlanningService,
+        req: &'a FleetRequest,
+        solo_tput: &'a [f64],
+        min_bytes: &'a [u64],
+        eval_cap: usize,
+    ) -> Self {
+        CarveSearch {
+            service,
+            req,
+            solo_tput,
+            min_bytes,
+            memo: HashMap::new(),
+            evals: 0,
+            eval_cap: eval_cap.max(1),
+        }
+    }
+
+    /// May another carve be planned, or is the evaluation budget spent?
+    pub fn budget_left(&self) -> bool {
+        self.evals < self.eval_cap
+    }
+
+    /// The static carve prune: every tenant needs a non-empty slice with
+    /// at least its model-weight bytes of pool memory.
+    pub fn statically_feasible(&self, part: &FleetPartition) -> bool {
+        (0..self.req.tenants.len()).all(|t| {
+            part.tenant_devices(t) > 0
+                && slice_mem_bytes(part, &self.req.cluster, t)
+                    >= self.min_bytes[t]
+        })
+    }
+
+    /// How far `part` is from static feasibility, in bytes of missing
+    /// tenant memory (device-less tenants count their full weight
+    /// bytes). Zero iff [`CarveSearch::statically_feasible`]. Local
+    /// search walks downhill on this when nothing plans yet.
+    fn static_deficit(&self, part: &FleetPartition) -> u64 {
+        (0..self.req.tenants.len())
+            .map(|t| {
+                if part.tenant_devices(t) == 0 {
+                    return self.min_bytes[t].max(1);
+                }
+                self.min_bytes[t].saturating_sub(slice_mem_bytes(
+                    part,
+                    &self.req.cluster,
+                    t,
+                ))
+            })
+            .sum()
+    }
+
+    /// Evaluate one carve end to end: static prune, per-tenant planning
+    /// (memoized on the sub-pool fingerprint), fairness floor. `None`
+    /// means the carve is infeasible somewhere along that chain; errors
+    /// other than per-tenant infeasibility propagate.
+    pub fn evaluate(
+        &mut self,
+        part: &FleetPartition,
+    ) -> Result<Option<(f64, Vec<PlanReport>)>, PlanError> {
+        telemetry::incr(tkey::CARVES_CONSIDERED);
+        if !self.statically_feasible(part) {
+            telemetry::incr(tkey::CARVES_PRUNED);
+            return Ok(None);
+        }
+        self.evals += 1;
+        let n = self.req.tenants.len();
+        let mut reports = Vec::with_capacity(n);
+        for (t, tenant) in self.req.tenants.iter().enumerate() {
+            let sub = part
+                .subpool(&self.req.cluster, t, &tenant.name)
+                .expect("statically feasible slices are non-empty");
+            let key = (t, sub.fingerprint());
+            let cached = match self.memo.get(&key) {
+                Some(r) => r.clone(),
+                None => {
+                    let r = match self
+                        .service
+                        .plan(&tenant.request.clone().cluster(sub))
+                    {
+                        Ok(rep) => Some(rep),
+                        Err(PlanError::NoFeasiblePlan { .. }) => None,
+                        Err(e) => return Err(e),
+                    };
+                    telemetry::incr(tkey::PLANS_SEARCHED);
+                    self.memo.insert(key, r.clone());
+                    r
+                }
+            };
+            match cached {
+                Some(rep) => reports.push(rep),
+                None => return Ok(None),
+            }
+        }
+        if reports.iter().zip(self.solo_tput).any(|(r, &s)| {
+            r.timeline.throughput < self.req.fairness_floor * s
+        }) {
+            return Ok(None);
+        }
+        telemetry::incr(tkey::CARVES_FEASIBLE);
+        let agg = reports.iter().map(|r| r.timeline.throughput).sum();
+        Ok(Some((agg, reports)))
+    }
+
+    /// Evaluate `part` and fold it into `best` under the search's
+    /// first-wins tie-break (`agg` must beat the incumbent by more than
+    /// `1e-12` to replace it).
+    fn consider(
+        &mut self,
+        part: &FleetPartition,
+        best: &mut Option<BestCarve>,
+    ) -> Result<bool, PlanError> {
+        let Some((aggregate, reports)) = self.evaluate(part)? else {
+            return Ok(false);
+        };
+        if best
+            .as_ref()
+            .is_none_or(|b| aggregate > b.aggregate + 1e-12)
+        {
+            *best = Some(BestCarve {
+                aggregate,
+                partition: part.clone(),
+                reports,
+            });
+        }
+        Ok(true)
+    }
+}
+
+/// Exhaustive search: evaluate every enumerated carve. The caller
+/// guarantees the carve count is within [`MAX_PARTITIONS`].
+pub(super) fn exact(
+    cs: &mut CarveSearch,
+) -> Result<Option<BestCarve>, PlanError> {
+    let mut best = None;
+    for part in
+        enumerate_partitions(&cs.req.cluster, cs.req.tenants.len())
+    {
+        cs.consider(&part, &mut best)?;
+    }
+    Ok(best)
+}
+
+/// Branch-and-bound: depth-first over groups, one composition of the
+/// current group's devices per branch, in the same lexicographic order
+/// the exact enumeration uses. A node is pruned when some tenant cannot
+/// reach feasibility in any completion (its devices-so-far plus every
+/// remaining group's devices stay zero, or its memory-so-far plus every
+/// remaining group's bytes stay under its weight bytes) — the carve
+/// analogue of the tuner's capacity/memory filters, and admissible by
+/// construction: a pruned subtree contains no feasible leaf. With the
+/// budget unexhausted the result therefore equals the exhaustive
+/// optimum; a truncated run still returns the best carve seen (the
+/// `seed` incumbent guarantees there is one whenever the seed is
+/// feasible).
+pub(super) fn branch_and_bound(
+    cs: &mut CarveSearch,
+    seed: &FleetPartition,
+) -> Result<Option<BestCarve>, PlanError> {
+    let groups = &cs.req.cluster.groups;
+    let n_tenants = cs.req.tenants.len();
+    let n_groups = groups.len();
+    // Suffix sums: devices / bytes still assignable at depth g and below.
+    let mut suffix_devices = vec![0usize; n_groups + 1];
+    let mut suffix_bytes = vec![0u64; n_groups + 1];
+    for g in (0..n_groups).rev() {
+        suffix_devices[g] = suffix_devices[g + 1] + groups[g].count;
+        suffix_bytes[g] = suffix_bytes[g + 1]
+            + groups[g].device.mem_bytes * groups[g].count as u64;
+    }
+
+    let mut best = None;
+    cs.consider(seed, &mut best)?;
+
+    // Iterative DFS: each frame is (depth, per-tenant composition of
+    // group `depth-1`). Children are pushed in reverse so they pop in
+    // the exact enumeration's lexicographic order.
+    struct Node {
+        depth: usize,
+        slices: Vec<Vec<usize>>,
+        devs: Vec<usize>,
+        bytes: Vec<u64>,
+    }
+    let root = Node {
+        depth: 0,
+        slices: vec![Vec::new(); n_tenants],
+        devs: vec![0; n_tenants],
+        bytes: vec![0; n_tenants],
+    };
+    let mut stack = vec![root];
+    while let Some(node) = stack.pop() {
+        telemetry::incr(tkey::BNB_NODES);
+        // Admissible bound: the best any completion can do for tenant t
+        // is everything still unassigned; if even that is too little,
+        // no leaf below is feasible.
+        let doomed = (0..n_tenants).any(|t| {
+            node.devs[t] + suffix_devices[node.depth] == 0
+                || node.bytes[t] + suffix_bytes[node.depth]
+                    < cs.min_bytes[t]
+        });
+        if doomed {
+            telemetry::incr(tkey::BNB_PRUNED);
+            continue;
+        }
+        if node.depth == n_groups {
+            let part = FleetPartition { slices: node.slices };
+            cs.consider(&part, &mut best)?;
+            if !cs.budget_left() {
+                break;
+            }
+            continue;
+        }
+        if !cs.budget_left() {
+            break;
+        }
+        let g = node.depth;
+        let opts = super::compositions(groups[g].count, n_tenants);
+        for opt in opts.iter().rev() {
+            let mut slices = node.slices.clone();
+            let mut devs = node.devs.clone();
+            let mut bytes = node.bytes.clone();
+            for t in 0..n_tenants {
+                slices[t].push(opt[t]);
+                devs[t] += opt[t];
+                bytes[t] += groups[g].device.mem_bytes * opt[t] as u64;
+            }
+            stack.push(Node { depth: g + 1, slices, devs, bytes });
+        }
+    }
+    Ok(best)
+}
+
+/// The LPT-style initial carve: hand out one device at a time, always
+/// from the group with the most devices left, to the tenant with the
+/// lowest *normalized* load (slice bytes over weight bytes) — the
+/// longest-processing-time rule with tenants as machines and their
+/// weight bytes as the job sizes. Deterministic (ties break on the
+/// lowest index); every device is assigned, and with at least as many
+/// devices as tenants every tenant gets one.
+pub(super) fn lpt_seed(
+    req: &FleetRequest,
+    min_bytes: &[u64],
+) -> FleetPartition {
+    let groups = &req.cluster.groups;
+    let n_tenants = req.tenants.len();
+    let mut remaining: Vec<usize> =
+        groups.iter().map(|g| g.count).collect();
+    let mut slices = vec![vec![0usize; groups.len()]; n_tenants];
+    let mut bytes = vec![0u64; n_tenants];
+    let total: usize = remaining.iter().sum();
+    for _ in 0..total {
+        let g = (0..groups.len())
+            .max_by_key(|&g| (remaining[g], std::cmp::Reverse(g)))
+            .expect("clusters have at least one group");
+        let t = (0..n_tenants)
+            .min_by(|&a, &b| {
+                let la = bytes[a] as f64 / min_bytes[a].max(1) as f64;
+                let lb = bytes[b] as f64 / min_bytes[b].max(1) as f64;
+                la.partial_cmp(&lb)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            })
+            .expect("fleets have at least one tenant");
+        slices[t][g] += 1;
+        bytes[t] += groups[g].device.mem_bytes;
+        remaining[g] -= 1;
+    }
+    FleetPartition { slices }
+}
+
+/// Every carve one single-device move or cross-group swap away from
+/// `cur`, in a fixed deterministic order: moves (group-major, then
+/// giving tenant, then receiving tenant), then swaps (ordered group
+/// pairs, then the two tenants).
+fn neighbors(
+    cur: &FleetPartition,
+    n_groups: usize,
+) -> Vec<FleetPartition> {
+    let n_tenants = cur.slices.len();
+    let mut out = Vec::new();
+    // Single-device moves: one device of group g from tenant a to b.
+    for g in 0..n_groups {
+        for a in 0..n_tenants {
+            if cur.slices[a][g] == 0 {
+                continue;
+            }
+            for b in 0..n_tenants {
+                if a == b {
+                    continue;
+                }
+                let mut nb = cur.clone();
+                nb.slices[a][g] -= 1;
+                nb.slices[b][g] += 1;
+                out.push(nb);
+            }
+        }
+    }
+    // Cross-group swaps: tenant a trades a group-g device for tenant
+    // b's group-h device (net device counts unchanged, memory mix not).
+    for g in 0..n_groups {
+        for h in 0..n_groups {
+            if g == h {
+                continue;
+            }
+            for a in 0..n_tenants {
+                if cur.slices[a][g] == 0 {
+                    continue;
+                }
+                for b in 0..n_tenants {
+                    if a == b || cur.slices[b][h] == 0 {
+                        continue;
+                    }
+                    let mut nb = cur.clone();
+                    nb.slices[a][g] -= 1;
+                    nb.slices[b][g] += 1;
+                    nb.slices[b][h] -= 1;
+                    nb.slices[a][h] += 1;
+                    out.push(nb);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Hill-climb from `seed` over [`neighbors`], first-improvement, up to
+/// `move_budget` accepted moves. While the current carve is infeasible
+/// the climb accepts the first feasible neighbor outright, then walks
+/// unvisited statically-feasible neighbors (and, failing that, strictly
+/// deficit-reducing ones) to escape dead seeds. With `stability` set —
+/// the warm-started / elastic mode — a feasible incumbent is returned
+/// untouched: moves are spent only to *restore* feasibility, which is
+/// what keeps a 1-GPU loss from reshuffling unaffected tenants.
+pub(super) fn local_search(
+    cs: &mut CarveSearch,
+    seed: FleetPartition,
+    move_budget: usize,
+    stability: bool,
+) -> Result<Option<BestCarve>, PlanError> {
+    let n_groups = cs.req.cluster.groups.len();
+    let mut best = None;
+    let mut cur = seed;
+    let mut cur_agg: Option<f64> = None;
+    if cs.consider(&cur, &mut best)? {
+        cur_agg = best.as_ref().map(|b| b.aggregate);
+    }
+    let mut visited: HashSet<String> = HashSet::new();
+    visited.insert(cur.label());
+    let mut moves = 0;
+    while moves < move_budget && cs.budget_left() {
+        if stability && cur_agg.is_some() {
+            break;
+        }
+        let cur_deficit = cs.static_deficit(&cur);
+        let mut accepted: Option<(FleetPartition, Option<f64>)> = None;
+        let mut walk: Option<FleetPartition> = None;
+        let mut downhill: Option<(u64, FleetPartition)> = None;
+        for nb in neighbors(&cur, n_groups) {
+            if !cs.statically_feasible(&nb) {
+                let d = cs.static_deficit(&nb);
+                if d < cur_deficit
+                    && downhill.as_ref().is_none_or(|(bd, _)| d < *bd)
+                    && !visited.contains(&nb.label())
+                {
+                    downhill = Some((d, nb));
+                }
+                continue;
+            }
+            if !cs.budget_left() {
+                break;
+            }
+            match cs.evaluate(&nb)? {
+                Some((agg, reports)) => {
+                    if best
+                        .as_ref()
+                        .is_none_or(|b| agg > b.aggregate + 1e-12)
+                    {
+                        best = Some(BestCarve {
+                            aggregate: agg,
+                            partition: nb.clone(),
+                            reports,
+                        });
+                    }
+                    let better = match cur_agg {
+                        Some(ca) => agg > ca + IMPROVE_EPS,
+                        None => true,
+                    };
+                    if better {
+                        accepted = Some((nb, Some(agg)));
+                        break;
+                    }
+                }
+                None => {
+                    if cur_agg.is_none()
+                        && walk.is_none()
+                        && !visited.contains(&nb.label())
+                    {
+                        walk = Some(nb);
+                    }
+                }
+            }
+        }
+        let step = accepted.or_else(|| {
+            if cur_agg.is_some() {
+                return None; // feasible and locally optimal: done
+            }
+            walk.or(downhill.map(|(_, nb)| nb)).map(|nb| (nb, None))
+        });
+        let Some((nb, agg)) = step else { break };
+        visited.insert(nb.label());
+        cur = nb;
+        cur_agg = agg;
+        moves += 1;
+        telemetry::incr(tkey::LOCAL_MOVES);
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::cluster::ClusterSpec;
+    use super::*;
+
+    fn two_tenant_req(cluster: ClusterSpec) -> FleetRequest {
+        use crate::api::PlanRequest;
+        use crate::model::{MllmSpec, Size};
+        FleetRequest::new(cluster)
+            .tenant(
+                "a",
+                PlanRequest::default_for(MllmSpec::vlm(Size::S, Size::S)),
+            )
+            .tenant(
+                "b",
+                PlanRequest::default_for(MllmSpec::alm(Size::S, Size::S)),
+            )
+    }
+
+    #[test]
+    fn search_mode_names_round_trip() {
+        for m in [
+            SearchMode::Exact,
+            SearchMode::BranchAndBound,
+            SearchMode::LocalSearch,
+        ] {
+            assert_eq!(SearchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(
+            SearchMode::parse("bnb"),
+            Some(SearchMode::BranchAndBound)
+        );
+        assert_eq!(
+            SearchMode::parse("local"),
+            Some(SearchMode::LocalSearch)
+        );
+        assert_eq!(SearchMode::parse("auto"), None);
+        assert_eq!(SearchMode::parse("??"), None);
+    }
+
+    #[test]
+    fn lpt_seed_assigns_every_device_and_favors_the_heavy_tenant() {
+        let req = two_tenant_req(ClusterSpec::a40_a100_demo());
+        // Tenant 0 wants 3x the memory of tenant 1.
+        let min_bytes = [30_000_000_000u64, 10_000_000_000];
+        let part = lpt_seed(&req, &min_bytes);
+        assert!(part.respects(&req.cluster));
+        let total: usize =
+            (0..2).map(|t| part.tenant_devices(t)).sum();
+        assert_eq!(total, 8, "{}", part.label());
+        let heavy_mem = slice_mem_bytes(&part, &req.cluster, 0);
+        let light_mem = slice_mem_bytes(&part, &req.cluster, 1);
+        assert!(
+            heavy_mem > light_mem,
+            "heavy tenant got {heavy_mem} vs light {light_mem} ({})",
+            part.label()
+        );
+        // deterministic
+        assert_eq!(part, lpt_seed(&req, &min_bytes));
+    }
+
+    #[test]
+    fn neighbors_preserve_the_device_total() {
+        let cur = FleetPartition {
+            slices: vec![vec![2, 1], vec![2, 3]],
+        };
+        let nbs = neighbors(&cur, 2);
+        assert!(!nbs.is_empty());
+        let total = |p: &FleetPartition| -> usize {
+            p.slices.iter().flatten().sum()
+        };
+        for nb in &nbs {
+            assert_eq!(total(nb), total(&cur), "{}", nb.label());
+            assert_ne!(nb, &cur);
+        }
+        // deterministic order
+        let again = neighbors(&cur, 2);
+        assert_eq!(nbs, again);
+    }
+}

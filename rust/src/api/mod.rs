@@ -38,8 +38,9 @@ pub use cluster::{ClusterSpec, DeviceClass, DeviceGroup};
 pub use diff::{FieldDelta, PlanDiff, StageDelta};
 pub use error::PlanError;
 pub use fleet::{
-    enumerate_partitions, FleetPartition, FleetProvenance, FleetReport,
-    FleetRequest, Tenant, TenantReport,
+    carve_count, enumerate_partitions, ElasticEvent, FleetPartition,
+    FleetProvenance, FleetReport, FleetRequest, SearchMode, Tenant,
+    TenantReport,
 };
 pub use report::{
     PlanReport, Provenance, SearchStats, StageVerdict, TimelineSummary,

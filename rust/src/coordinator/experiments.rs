@@ -20,6 +20,7 @@
 //! | `memory`    | Appendix D (LLM-L OOM verdicts) | [`memory_feasibility`]|
 //! | `hetero`    | heterogeneous device pools      | [`hetero_pools`]      |
 //! | `fleet`     | multi-tenant pool carving       | [`fleet_planning`]    |
+//! | `fleet`     | large-fleet heuristic carving   | [`fleet_scale`]       |
 //! | `attn`      | PJRT cross-check of the model   | [`attn_crosscheck`]   |
 
 use crate::bam::{self, Bam};
@@ -944,6 +945,131 @@ pub fn fleet_planning() -> (Table, FleetRow) {
             .map(|ten| ten.slice.clone())
             .collect(),
         diff,
+    };
+    (t, row)
+}
+
+/// One row of the large-fleet scaling demo (`reproduce fleet`).
+#[derive(Clone, Debug)]
+pub struct FleetScaleRow {
+    /// Size of the exhaustive carve space — why exact enumeration is
+    /// off the table for this pool.
+    pub carves: u128,
+    /// The engine the auto mode degraded to.
+    pub search_mode: crate::api::SearchMode,
+    /// Carves the heuristic actually examined.
+    pub considered: usize,
+    /// Aggregate samples/s of the returned carve.
+    pub aggregate: f64,
+}
+
+/// Large-fleet carving: four tenants share a 36-GPU pool of three
+/// 12-device groups (A40 / A100-80G / A40). The carve space is
+/// `C(15,3)^3` ≈ 94 M compositions — far past both the exact
+/// enumeration cap and the branch-and-bound budget — so auto mode
+/// degrades to LPT-seeded local search and the request *plans* instead
+/// of refusing (pre-heuristic behaviour was an `InvalidRequest`).
+/// Mirrored by `examples/clusters/pool-3x12.json` and the CI fleet
+/// smoke step.
+pub fn fleet_scale() -> (Table, FleetScaleRow) {
+    use crate::api::{
+        carve_count, ClusterSpec, DeviceClass, DeviceGroup,
+        FleetRequest, PlanRequest, PlanningService, SearchMode,
+    };
+
+    let cluster = ClusterSpec {
+        name: "pool-3x12".to_string(),
+        groups: vec![
+            DeviceGroup {
+                device: DeviceClass::a40(),
+                count: 12,
+                link_gbps: 32.0,
+            },
+            DeviceGroup {
+                device: DeviceClass::a100_80g(),
+                count: 12,
+                link_gbps: 300.0,
+            },
+            DeviceGroup {
+                device: DeviceClass::a40(),
+                count: 12,
+                link_gbps: 32.0,
+            },
+        ],
+    };
+    let tenant =
+        |spec: MllmSpec| PlanRequest::default_for(spec).budget(8);
+    let mut freq = FleetRequest::new(cluster)
+        .fairness_floor(0.0)
+        .cache_memory()
+        .search_evals(48);
+    for (i, spec) in [
+        MllmSpec::vlm(Size::S, Size::S),
+        MllmSpec::alm(Size::S, Size::S),
+        MllmSpec::vlm(Size::S, Size::S),
+        MllmSpec::alm(Size::S, Size::S),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        freq = freq.tenant(&format!("{}#{i}", spec.name()), tenant(spec));
+    }
+    let carves = carve_count(&freq.cluster, freq.tenants.len());
+    let report = PlanningService::new()
+        .plan_fleet(&freq)
+        .expect("the 36-GPU pool hosts all four small tenants");
+    assert_ne!(
+        report.provenance.search_mode,
+        SearchMode::Exact,
+        "a 94M-carve pool must degrade to a heuristic engine"
+    );
+
+    let mut t = Table::new(
+        "Fleet at scale — four tenants carve 3 x 12 mixed GPUs \
+         heuristically",
+        &["tenant", "slice", "plan", "input/s"],
+    );
+    for rep in &report.tenants {
+        t.row(&[
+            rep.name.clone(),
+            rep.slice
+                .iter()
+                .zip(&report.group_names)
+                .map(|(c, g)| format!("{c}x{g}"))
+                .collect::<Vec<_>>()
+                .join(" + "),
+            rep.report.winner().candidate.label(),
+            format!("{:.2}", rep.throughput()),
+        ]);
+    }
+    t.row(&[
+        "carve space".to_string(),
+        format!("{carves} compositions"),
+        String::new(),
+        String::new(),
+    ]);
+    t.row(&[
+        "engine".to_string(),
+        format!(
+            "{} ({} carves considered, {} feasible)",
+            report.provenance.search_mode.name(),
+            report.provenance.partitions_considered,
+            report.provenance.partitions_feasible,
+        ),
+        String::new(),
+        String::new(),
+    ]);
+    t.row(&[
+        "aggregate".to_string(),
+        report.partition.label(),
+        String::new(),
+        format!("{:.2}", report.aggregate_throughput),
+    ]);
+    let row = FleetScaleRow {
+        carves,
+        search_mode: report.provenance.search_mode,
+        considered: report.provenance.partitions_considered,
+        aggregate: report.aggregate_throughput,
     };
     (t, row)
 }

@@ -15,7 +15,9 @@ use crate::train::{
 };
 use crate::util::json::Json;
 
-pub use experiments::{E2eRow, FleetRow, FrozenRow, MaskType};
+pub use experiments::{
+    E2eRow, FleetRow, FleetScaleRow, FrozenRow, MaskType,
+};
 
 /// The tuner hook — a thin wrapper over the planning facade
 /// ([`crate::api::PlanningService`]): resolve the fastest known plan for
@@ -152,6 +154,7 @@ pub fn reproduce(which: &str) -> Result<String> {
     if all || which == "fleet" {
         known = true;
         push(experiments::fleet_planning().0);
+        push(experiments::fleet_scale().0);
     }
     if !known {
         bail!(

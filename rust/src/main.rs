@@ -39,7 +39,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use cornstarch::api::{
     ClusterSpec, FleetRequest, PlanDiff, PlanReport, PlanRequest,
-    PlanningService,
+    PlanningService, SearchMode,
 };
 use cornstarch::coordinator::{self, TrainOpts};
 use cornstarch::memory;
@@ -634,6 +634,44 @@ fn run(args: &[String]) -> Result<()> {
             let freq = parse_fleet(rest, cluster)?;
             let service = PlanningService::new();
             let report = service.plan_fleet(&freq)?;
+            if has_flag(rest, "--elastic") {
+                // Incremental re-plan: warm-start from the carve just
+                // found, fold in the elastic device loss, and show what
+                // actually moved — the stability-first search keeps
+                // every unaffected tenant's slice (and plan) in place.
+                let (group, n) = parse_lose(rest)?;
+                let replan = service.plan_fleet(
+                    &freq
+                        .clone()
+                        .warm_start(&report.partition)
+                        .device_lost(group, n),
+                )?;
+                if has_flag(rest, "--json") {
+                    telemetry::report(&replan.to_json().render());
+                    return Ok(());
+                }
+                telemetry::report(&format!(
+                    "elastic re-plan after losing {n} device(s) of group \
+                     {group}: carve {} -> {}",
+                    report.partition.label(),
+                    replan.partition.label()
+                ));
+                telemetry::report(replan.render().trim_end());
+                for (name, d) in replan.diff_from(&report) {
+                    telemetry::report(&format!(
+                        "tenant {name}: {} change(s)",
+                        d.delta_count()
+                    ));
+                    if !d.is_empty() {
+                        telemetry::report(d.render().trim_end());
+                    }
+                }
+                return Ok(());
+            }
+            if has_flag(rest, "--json") {
+                telemetry::report(&report.to_json().render());
+                return Ok(());
+            }
             telemetry::report(report.render().trim_end());
             if has_flag(rest, "--vs-naive") {
                 let naive = service
@@ -875,7 +913,12 @@ fn print_help() {
          memory <MLLM> [--strategy S] [--llm-pp N] [--enc-pp N] [--tp N] [--cp N]\n        \
          [--cluster F] [--microbatches N] [--budget-gb G]\n  \
          fleet [--cluster F] [--tenants VLM-L,ALM-M] [--floor X] [--budget K]\n        \
-         [--cache P] [--threads N] [--vs-naive]   (multi-tenant pool carve)\n  \
+         [--cache P] [--threads N] [--vs-naive] [--json]\n        \
+         [--search-mode exact|bnb|local|auto] [--search-evals N]\n        \
+         [--elastic [--lose G:N]]   (multi-tenant pool carve; past the\n        \
+         exhaustive cap the search degrades to bnb/local instead of\n        \
+         erroring; --elastic warm-starts a re-plan after losing N\n        \
+         devices of group G and diffs it against the incumbent)\n  \
          serve [--addr H:P] [--cluster F] [--cache P] [--threads N] [--max-requests N]\n        \
          (long-lived planning server: one JSON request/response per line)\n  \
          diff fleet [--cluster F] [--tenants ...] [--floor X]   (carve vs naive split)\n  \
@@ -975,7 +1018,28 @@ fn parse_fleet(rest: &[String], cluster: ClusterSpec) -> Result<FleetRequest> {
         }
         freq = freq.tenant(&name, preq);
     }
+    if let Some(m) = flag(rest, "--search-mode") {
+        if m != "auto" {
+            let mode = SearchMode::parse(&m).ok_or_else(|| {
+                anyhow!("bad --search-mode {m:?} (exact|bnb|local|auto)")
+            })?;
+            freq = freq.search_mode(mode);
+        }
+    }
+    if let Some(cap) = flag_num(rest, "--search-evals")? {
+        freq = freq.search_evals(cap);
+    }
     Ok(freq)
+}
+
+/// `--lose G:N` for `fleet --elastic`: N devices of cluster group G are
+/// gone (default `0:1` — one device of the first group).
+fn parse_lose(args: &[String]) -> Result<(usize, usize)> {
+    let raw = flag(args, "--lose").unwrap_or_else(|| "0:1".to_string());
+    let parsed = raw.split_once(':').and_then(|(g, n)| {
+        Some((g.trim().parse().ok()?, n.trim().parse().ok()?))
+    });
+    parsed.ok_or_else(|| anyhow!("--lose wants GROUP:N, got {raw:?}"))
 }
 
 fn has_flag(args: &[String], name: &str) -> bool {

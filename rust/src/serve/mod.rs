@@ -33,6 +33,22 @@
 //! a bad request never kills the connection, only that line. Blank
 //! lines are ignored, so `printf '…\n' | nc` style clients work as-is.
 //!
+//! A request line carrying a `tenants` array is a **fleet** request and
+//! runs through [`PlanningService::plan_fleet`] — the very same carve
+//! search, caches, and in-flight dedupe the one-shot `cornstarch fleet`
+//! uses, so a served fleet report is byte-identical to the CLI's:
+//!
+//! ```json
+//! {"tenants": ["VLM-S", "ALM-S"], "llm": "S", "floor": 0.25,
+//!  "budget": 4, "threads": 2, "search_mode": "auto"}
+//! ```
+//!
+//! Tenant entries are either workload names (deduplicated with a `#i`
+//! suffix, LLM size from the top-level `llm`) or objects
+//! `{"name": …, "mllm": …, "llm": …}`. The response line is
+//! `{"ok": true, "fleet": true, "carve": …, "aggregate_throughput": …,
+//! "search_mode": …, "report": …, "stats": …}`.
+//!
 //! Each connection gets its own handler thread; a connection may
 //! pipeline any number of request lines. The server stops when
 //! [`ServerHandle::shutdown`] is called or after `max_requests` total
@@ -43,7 +59,10 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::api::{ClusterSpec, PlanRequest, PlanningService};
+use crate::api::{
+    ClusterSpec, FleetReport, FleetRequest, PlanRequest, PlanningService,
+    SearchMode,
+};
 use crate::model::{MllmSpec, Size};
 use crate::telemetry::{self, key as tkey};
 use crate::tuner::Objective;
@@ -235,12 +254,26 @@ fn handle_connection(
 /// (tests drive this directly). Always returns a single-line JSON
 /// object; errors come back as `{"ok":false,"error":…}`.
 pub fn respond_line(line: &str, opts: &ServeOpts) -> String {
-    let answer = match build_request(line, opts) {
-        Ok(req) => PlanningService::new()
-            .plan(&req)
-            .map(|report| render_response(&req, &report))
-            .map_err(|e| format!("{e}")),
-        Err(e) => Err(e),
+    // A `tenants` array marks a fleet request; everything else is the
+    // single-model plan protocol.
+    let is_fleet = Json::parse(line)
+        .ok()
+        .is_some_and(|j| j.get("tenants").is_some());
+    let answer = if is_fleet {
+        build_fleet_request(line, opts).and_then(|freq| {
+            PlanningService::new()
+                .plan_fleet(&freq)
+                .map(|report| render_fleet_response(&report))
+                .map_err(|e| format!("{e}"))
+        })
+    } else {
+        match build_request(line, opts) {
+            Ok(req) => PlanningService::new()
+                .plan(&req)
+                .map(|report| render_response(&req, &report))
+                .map_err(|e| format!("{e}")),
+            Err(e) => Err(e),
+        }
     };
     match answer {
         Ok(json) => json,
@@ -301,6 +334,113 @@ pub fn build_request(
     Ok(req)
 }
 
+/// Parse one fleet request line into the same [`FleetRequest`] the
+/// `cornstarch fleet` CLI builds — the served carve is the carve the
+/// one-shot command would have printed.
+pub fn build_fleet_request(
+    line: &str,
+    opts: &ServeOpts,
+) -> Result<FleetRequest, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad request: {e}"))?;
+    let entries = j
+        .get("tenants")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "\"tenants\" wants an array".to_string())?;
+    if entries.is_empty() {
+        return Err("\"tenants\" wants at least one entry".to_string());
+    }
+    let cluster = match j.get("cluster_file").and_then(Json::as_str) {
+        Some(p) => ClusterSpec::load(std::path::Path::new(p))
+            .map_err(|e| format!("loading cluster {p:?}: {e}"))?,
+        None => opts.cluster.clone(),
+    };
+    let default_llm = match j.get("llm").and_then(Json::as_str) {
+        Some(s) => Size::parse(s)
+            .ok_or_else(|| format!("bad \"llm\" {s:?} (S|M|L)"))?,
+        None => Size::M,
+    };
+    let floor = match j.get("floor") {
+        None | Some(Json::Null) => 0.25,
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| "\"floor\" wants a number".to_string())?,
+    };
+    let budget = field_usize(&j, "budget")?;
+    let threads = field_usize(&j, "threads")?;
+    let mut freq = FleetRequest::new(cluster).fairness_floor(floor);
+    freq = match &opts.cache {
+        Some(path) => freq.cache_file(path),
+        None => freq.cache_memory(),
+    };
+    let mut names: Vec<String> = Vec::new();
+    for (i, entry) in entries.iter().enumerate() {
+        let (label, mllm_name, llm) = match entry {
+            Json::Str(s) => (None, s.clone(), default_llm),
+            Json::Obj(_) => {
+                let m = entry
+                    .get("mllm")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        format!("tenant #{i} is missing \"mllm\"")
+                    })?
+                    .to_string();
+                let llm = match entry.get("llm").and_then(Json::as_str) {
+                    Some(s) => Size::parse(s).ok_or_else(|| {
+                        format!("tenant #{i}: bad \"llm\" {s:?} (S|M|L)")
+                    })?,
+                    None => default_llm,
+                };
+                let label = entry
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .map(str::to_string);
+                (label, m, llm)
+            }
+            other => {
+                return Err(format!(
+                    "tenant #{i} wants a workload name or an object, \
+                     got {}",
+                    other.render()
+                ))
+            }
+        };
+        let spec = MllmSpec::parse_name(&mllm_name, llm)?;
+        let base = label.unwrap_or_else(|| mllm_name.clone());
+        let name = if names.iter().any(|n| *n == base) {
+            format!("{base}#{i}")
+        } else {
+            base
+        };
+        names.push(name.clone());
+        let mut preq = PlanRequest::default_for(spec);
+        if let Some(b) = budget {
+            preq = preq.budget(b);
+        }
+        match threads {
+            Some(t) => preq = preq.threads(t),
+            None if opts.threads > 0 => {
+                preq = preq.threads(opts.threads);
+            }
+            None => {}
+        }
+        freq = freq.tenant(&name, preq);
+    }
+    if let Some(m) = j.get("search_mode").and_then(Json::as_str) {
+        if m != "auto" {
+            freq =
+                freq.search_mode(SearchMode::parse(m).ok_or_else(|| {
+                    format!(
+                        "bad \"search_mode\" {m:?} (exact|bnb|local|auto)"
+                    )
+                })?);
+        }
+    }
+    if let Some(cap) = field_usize(&j, "search_evals")? {
+        freq = freq.search_evals(cap);
+    }
+    Ok(freq)
+}
+
 fn field_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
     match j.get(key) {
         None | Some(Json::Null) => Ok(None),
@@ -338,6 +478,28 @@ fn render_response(
         (
             "signature",
             Json::Str(report.provenance.signature.clone()),
+        ),
+        ("report", Json::Str(report.render())),
+        ("stats", report.provenance.stats.to_json()),
+    ])
+    .render()
+}
+
+/// The fleet success response: the carve and aggregate a dashboard
+/// wants, plus the full rendered report (byte-identical to a one-shot
+/// [`PlanningService::plan_fleet`] on the same request).
+fn render_fleet_response(report: &FleetReport) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("fleet", Json::Bool(true)),
+        ("carve", Json::Str(report.partition.label())),
+        (
+            "aggregate_throughput",
+            Json::Num(report.aggregate_throughput),
+        ),
+        (
+            "search_mode",
+            Json::Str(report.provenance.search_mode.name().to_string()),
         ),
         ("report", Json::Str(report.render())),
         ("stats", report.provenance.stats.to_json()),
@@ -393,6 +555,74 @@ mod tests {
                 "{line} -> {resp}"
             );
         }
+    }
+
+    #[test]
+    fn build_fleet_request_parses_tenants_and_knobs() {
+        let freq = build_fleet_request(
+            r#"{"tenants":["VLM-S",{"mllm":"ALM-S","name":"audio"},
+                "VLM-S"],"llm":"S","floor":0.5,"budget":4,"threads":2,
+                "search_mode":"bnb","search_evals":64}"#,
+            &opts(),
+        )
+        .unwrap();
+        let names: Vec<&str> =
+            freq.tenants.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, ["VLM-S", "audio", "VLM-S#2"]);
+        assert_eq!(freq.fairness_floor, 0.5);
+        assert_eq!(freq.search_mode, Some(SearchMode::BranchAndBound));
+        assert_eq!(freq.search_evals, Some(64));
+        for t in &freq.tenants {
+            assert_eq!(t.request.budget, 4);
+            assert_eq!(t.request.threads, 2);
+        }
+
+        // Defaults: floor 0.25, auto mode, server cluster.
+        let bare =
+            build_fleet_request(r#"{"tenants":["ALM-S"]}"#, &opts())
+                .unwrap();
+        assert_eq!(bare.fairness_floor, 0.25);
+        assert_eq!(bare.search_mode, None);
+        assert_eq!(bare.cluster.devices(), 8);
+    }
+
+    #[test]
+    fn bad_fleet_requests_become_error_lines() {
+        for line in [
+            r#"{"tenants":"VLM-S"}"#,
+            r#"{"tenants":[]}"#,
+            r#"{"tenants":[7]}"#,
+            r#"{"tenants":[{"name":"x"}]}"#,
+            r#"{"tenants":["VLM-S"],"floor":"high"}"#,
+            r#"{"tenants":["VLM-S"],"search_mode":"psychic"}"#,
+        ] {
+            let resp = respond_line(line, &opts());
+            let j = Json::parse(&resp).unwrap();
+            assert_eq!(
+                j.get("ok").and_then(Json::as_bool),
+                Some(false),
+                "{line} -> {resp}"
+            );
+            assert!(j.get("error").and_then(Json::as_str).is_some());
+        }
+    }
+
+    #[test]
+    fn respond_line_carves_fleets_too() {
+        let line = r#"{"tenants":["VLM-S","ALM-S"],"llm":"S",
+            "floor":0.0,"budget":4,"threads":1}"#;
+        let resp = respond_line(line, &opts());
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("fleet").and_then(Json::as_bool), Some(true));
+        assert!(j.get("carve").and_then(Json::as_str).is_some());
+        assert_eq!(
+            j.get("search_mode").and_then(Json::as_str),
+            Some("exact")
+        );
+        let text = j.get("report").and_then(Json::as_str).unwrap();
+        assert!(text.contains("VLM-S") && text.contains("ALM-S"));
+        assert!(j.get("stats").is_some());
     }
 
     #[test]

@@ -95,6 +95,15 @@ pub mod key {
     pub const INFLIGHT_JOIN: &str = "inflight_join";
     /// Requests handled by `cornstarch serve`.
     pub const SERVE_REQUESTS: &str = "serve_requests";
+    /// Branch-and-bound carve-search tree nodes expanded.
+    pub const BNB_NODES: &str = "bnb_nodes";
+    /// Branch-and-bound subtrees cut by the static admissible bound.
+    pub const BNB_PRUNED: &str = "bnb_subtrees_pruned";
+    /// Local-search carve moves accepted (hill-climb steps taken).
+    pub const LOCAL_MOVES: &str = "local_moves";
+    /// Elastic fleet events folded into a re-plan (device loss,
+    /// tenant join/leave).
+    pub const ELASTIC_EVENTS: &str = "elastic_events";
 }
 
 thread_local! {

@@ -1,0 +1,310 @@
+//! Property and regression harness for the scalable fleet-carve search
+//! and elastic re-planning (ISSUE 10):
+//!
+//! * **branch-and-bound is exact** — on randomized small pools (seeded
+//!   RNG, homogeneous and heterogeneous) the B&B engine returns the same
+//!   aggregate as exhaustive enumeration, and agrees with it on
+//!   feasibility;
+//! * **local search is safe** — it never returns an infeasible carve
+//!   when one exists, never beats the exhaustive optimum, and stays
+//!   within a pinned tolerance of it;
+//! * **every returned carve is verifier-clean** — the V005-family
+//!   partition lints pass for whatever engine answered;
+//! * **elastic warm re-planning is surgical** — losing one GPU re-plans
+//!   only the tenant that held it (every other tenant's `PlanDiff` is
+//!   empty) and is byte-deterministic across runs;
+//! * **past-cap pools plan instead of refusing** — a carve space beyond
+//!   the exact cap degrades to a heuristic engine recorded in
+//!   `FleetProvenance::search_mode` (the pre-heuristic behaviour was an
+//!   `InvalidRequest`).
+
+use cornstarch::api::fleet::{MAX_BNB_CARVES, MAX_PARTITIONS};
+use cornstarch::api::{
+    carve_count, CachePolicy, ClusterSpec, DeviceClass, DeviceGroup,
+    FleetRequest, PlanError, PlanRequest, PlanningService, SearchMode,
+};
+use cornstarch::model::{MllmSpec, Size};
+use cornstarch::util::rng::Rng;
+use cornstarch::verify::verify_partition;
+
+/// Pinned lower bound on local search quality: the hill-climb must land
+/// within this fraction of the exhaustive optimum on the small pools the
+/// harness can enumerate.
+const LOCAL_TOLERANCE: f64 = 0.75;
+
+/// A random small pool: either one homogeneous A40 group or an
+/// A40 + A100-80G mix, sized so exhaustive enumeration stays trivial.
+fn random_pool(rng: &mut Rng, trial: usize) -> ClusterSpec {
+    if rng.below(2) == 1 {
+        ClusterSpec {
+            name: format!("rand-hetero-{trial}"),
+            groups: vec![
+                DeviceGroup {
+                    device: DeviceClass::a40(),
+                    count: rng.range(2, 5),
+                    link_gbps: 32.0,
+                },
+                DeviceGroup {
+                    device: DeviceClass::a100_80g(),
+                    count: rng.range(2, 5),
+                    link_gbps: 300.0,
+                },
+            ],
+        }
+    } else {
+        ClusterSpec::homogeneous(
+            &format!("rand-homog-{trial}"),
+            DeviceClass::a40(),
+            rng.range(3, 7),
+            32.0,
+        )
+    }
+}
+
+/// `n_tenants` small tenants (alternating VLM-S / ALM-S) with a cheap
+/// search budget, floor disabled, shared in-process plan store.
+fn fleet_of(cluster: ClusterSpec, n_tenants: usize) -> FleetRequest {
+    let specs = [
+        MllmSpec::vlm(Size::S, Size::S),
+        MllmSpec::alm(Size::S, Size::S),
+        MllmSpec::vlm(Size::S, Size::S),
+    ];
+    let mut freq = FleetRequest::new(cluster)
+        .fairness_floor(0.0)
+        .cache_memory();
+    for (i, spec) in specs.into_iter().take(n_tenants).enumerate() {
+        freq = freq.tenant(
+            &format!("t{i}"),
+            PlanRequest::default_for(spec).budget(6).threads(1),
+        );
+    }
+    freq
+}
+
+#[test]
+fn branch_and_bound_matches_the_exhaustive_optimum() {
+    let mut rng = Rng::new(0xF1EE7_CA4E);
+    let service = PlanningService::new();
+    for trial in 0..6 {
+        let cluster = random_pool(&mut rng, trial);
+        let n_tenants = 2 + trial % 2;
+        let exact = service.plan_fleet(
+            &fleet_of(cluster.clone(), n_tenants)
+                .search_mode(SearchMode::Exact),
+        );
+        let bnb = service.plan_fleet(
+            &fleet_of(cluster.clone(), n_tenants)
+                .search_mode(SearchMode::BranchAndBound),
+        );
+        match (exact, bnb) {
+            (Ok(e), Ok(b)) => {
+                let (ea, ba) =
+                    (e.aggregate_throughput, b.aggregate_throughput);
+                assert!(
+                    (ea - ba).abs() <= 1e-9 * ea.max(1.0),
+                    "trial {trial} on {}: exact {ea} vs bnb {ba} \
+                     (exact carve {}, bnb carve {})",
+                    cluster.name,
+                    e.partition.label(),
+                    b.partition.label(),
+                );
+                assert_eq!(
+                    b.provenance.search_mode,
+                    SearchMode::BranchAndBound
+                );
+                assert!(b.partition.respects(&cluster));
+                assert!(
+                    verify_partition(&b.partition, &cluster).is_clean(),
+                    "trial {trial}: {}",
+                    b.partition.label()
+                );
+            }
+            (
+                Err(PlanError::InfeasibleFleet(_)),
+                Err(PlanError::InfeasibleFleet(_)),
+            ) => {}
+            (e, b) => panic!(
+                "trial {trial} on {}: engines disagree on feasibility: \
+                 exact={e:?} bnb={b:?}",
+                cluster.name
+            ),
+        }
+    }
+}
+
+#[test]
+fn local_search_is_feasible_and_within_tolerance_of_exact() {
+    let mut rng = Rng::new(0x10CA1_5EA4);
+    let service = PlanningService::new();
+    for trial in 0..6 {
+        let cluster = random_pool(&mut rng, trial);
+        let n_tenants = 2 + trial % 2;
+        let exact = service.plan_fleet(
+            &fleet_of(cluster.clone(), n_tenants)
+                .search_mode(SearchMode::Exact),
+        );
+        let local = service.plan_fleet(
+            &fleet_of(cluster.clone(), n_tenants)
+                .search_mode(SearchMode::LocalSearch),
+        );
+        let Ok(e) = exact else {
+            // Nothing feasible at all — the hill-climb must agree.
+            assert!(
+                local.is_err(),
+                "trial {trial}: local found a carve exact says cannot \
+                 exist"
+            );
+            continue;
+        };
+        let l = local.unwrap_or_else(|err| {
+            panic!(
+                "trial {trial} on {}: exact is feasible but local \
+                 search failed: {err}",
+                cluster.name
+            )
+        });
+        assert_eq!(l.provenance.search_mode, SearchMode::LocalSearch);
+        assert!(
+            l.aggregate_throughput
+                >= LOCAL_TOLERANCE * e.aggregate_throughput - 1e-9,
+            "trial {trial} on {}: local {} fell below {LOCAL_TOLERANCE} \
+             of exact {} (carve {})",
+            cluster.name,
+            l.aggregate_throughput,
+            e.aggregate_throughput,
+            l.partition.label(),
+        );
+        // An optimum is an upper bound for any heuristic answer.
+        assert!(
+            l.aggregate_throughput
+                <= e.aggregate_throughput + 1e-6 * e.aggregate_throughput,
+            "trial {trial}: local {} beat the exhaustive optimum {}",
+            l.aggregate_throughput,
+            e.aggregate_throughput,
+        );
+        assert!(verify_partition(&l.partition, &cluster).is_clean());
+    }
+}
+
+#[test]
+fn one_gpu_loss_relocates_at_most_the_affected_tenant() {
+    let service = PlanningService::new();
+    let base_req = fleet_of(ClusterSpec::a40_a100_demo(), 2);
+    let base = service
+        .plan_fleet(&base_req)
+        .expect("two S tenants fit the demo pool");
+
+    // The repair takes the lost device from the tenant holding the most
+    // of the lost group — that tenant is the only one allowed to change.
+    let affected = (0..2)
+        .max_by_key(|&t| base.partition.slices[t][0])
+        .unwrap();
+    let replan = service
+        .plan_fleet(
+            &base_req
+                .clone()
+                .warm_start(&base.partition)
+                .device_lost(0, 1),
+        )
+        .expect("the shrunk pool still hosts both tenants");
+
+    assert!(replan.provenance.warm_start);
+    assert_eq!(replan.provenance.search_mode, SearchMode::LocalSearch);
+    // Surgical carve repair: one group-0 device off the affected
+    // tenant's slice, everyone else's slice untouched.
+    for (t, slice) in replan.partition.slices.iter().enumerate() {
+        let mut want = base.partition.slices[t].clone();
+        if t == affected {
+            want[0] -= 1;
+        }
+        assert_eq!(
+            *slice,
+            want,
+            "tenant {t}: {} -> {}",
+            base.partition.label(),
+            replan.partition.label()
+        );
+    }
+    // The acceptance criterion: every unaffected tenant's PlanDiff
+    // against the pre-loss answer is empty.
+    let affected_name = base.tenants[affected].name.clone();
+    for (name, diff) in replan.diff_from(&base) {
+        if name != affected_name {
+            assert!(
+                diff.is_empty(),
+                "unaffected tenant {name} was re-planned:\n{}",
+                diff.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn elastic_replan_is_byte_deterministic() {
+    let service = PlanningService::new();
+    // Fresh per-call caches: both runs search from scratch, so even the
+    // provenance counters must come out identical.
+    let base_req = fleet_of(ClusterSpec::a40_a100_demo(), 2)
+        .cache_policy(CachePolicy::Fresh);
+    let base = service.plan_fleet(&base_req).expect("base fleet plans");
+    let elastic = base_req
+        .clone()
+        .warm_start(&base.partition)
+        .device_lost(1, 1);
+    let first = service.plan_fleet(&elastic).expect("first re-plan");
+    let second = service.plan_fleet(&elastic).expect("second re-plan");
+    assert_eq!(first.partition, second.partition);
+    assert_eq!(
+        first.render(),
+        second.render(),
+        "elastic re-planning must be byte-deterministic"
+    );
+}
+
+#[test]
+fn past_the_exact_cap_plans_heuristically_instead_of_refusing() {
+    // 3 groups x 8 devices, 3 tenants: C(10,2)^3 = 91,125 carves — past
+    // the exact cap, within the branch-and-bound window.
+    let cluster = ClusterSpec {
+        name: "pool-3x8".to_string(),
+        groups: vec![
+            DeviceGroup {
+                device: DeviceClass::a40(),
+                count: 8,
+                link_gbps: 32.0,
+            },
+            DeviceGroup {
+                device: DeviceClass::a100_80g(),
+                count: 8,
+                link_gbps: 300.0,
+            },
+            DeviceGroup {
+                device: DeviceClass::a40(),
+                count: 8,
+                link_gbps: 32.0,
+            },
+        ],
+    };
+    let carves = carve_count(&cluster, 3);
+    assert_eq!(carves, 45u128.pow(3), "C(10,2)^3 carve space");
+    assert!(carves > MAX_PARTITIONS as u128 && carves <= MAX_BNB_CARVES);
+
+    let freq = fleet_of(cluster.clone(), 3).search_evals(32);
+    let report = PlanningService::new().plan_fleet(&freq).expect(
+        "a past-cap pool must degrade to a heuristic engine, not refuse",
+    );
+    assert_eq!(
+        report.provenance.search_mode,
+        SearchMode::BranchAndBound,
+        "auto mode picks branch-and-bound inside the B&B window"
+    );
+    assert!(!report.provenance.warm_start);
+    assert!(report.provenance.partitions_considered > 0);
+    assert!(report.partition.respects(&cluster));
+    assert!(verify_partition(&report.partition, &cluster).is_clean());
+    assert!(
+        report.render().contains("branch_and_bound search"),
+        "provenance line names the engine:\n{}",
+        report.render()
+    );
+}

@@ -1,7 +1,7 @@
 //! Planning-as-a-service checks: the two-tier plan store, the in-flight
 //! dedupe table, and the `cornstarch serve` protocol under concurrency.
 //!
-//! Three properties the long-lived service depends on:
+//! Five properties the long-lived service depends on:
 //!   1. N threads hammering one cache file with mixed hits and misses
 //!      lose no entries — every workload's plan survives to disk.
 //!   2. K identical concurrent requests coalesce onto exactly one
@@ -9,13 +9,20 @@
 //!      `cache_miss` == 1, `cache_hit` == K-1).
 //!   3. A served report is byte-identical to what a one-shot `plan()`
 //!      renders for the same request — the wire adds nothing.
+//!   4. A served *fleet* report is byte-identical to a one-shot
+//!      `plan_fleet()` on the request the same line builds.
+//!   5. K identical concurrent fleet requests coalesce per sub-pool
+//!      signature: one fleet's worth of search, `cache_miss` unchanged
+//!      from the cold baseline, `cache_hit` == (K-1) × misses.
 
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::TcpStream;
 
-use cornstarch::api::{PlanRequest, PlanningService};
+use cornstarch::api::{ClusterSpec, PlanRequest, PlanningService};
 use cornstarch::model::{MllmSpec, Size};
-use cornstarch::serve::{ServeOpts, Server};
+use cornstarch::serve::{
+    build_fleet_request, respond_line, ServeOpts, Server,
+};
 use cornstarch::telemetry::{key as tkey, Scope};
 use cornstarch::tuner::PlanCache;
 use cornstarch::util::json::Json;
@@ -187,5 +194,126 @@ fn served_report_is_byte_identical_to_one_shot_plan() {
         served,
         warm.render(),
         "the wire must add nothing to (or lose nothing from) the report"
+    );
+}
+
+fn fleet_opts() -> ServeOpts {
+    ServeOpts {
+        cluster: ClusterSpec::a40_default().with_devices(8),
+        ..ServeOpts::default()
+    }
+}
+
+#[test]
+fn served_fleet_report_is_byte_identical_to_one_shot_plan_fleet() {
+    // Unique budget for this test's sub-pool signatures; the serve path
+    // and the one-shot path share the process-wide memory store, so
+    // compare warm against warm (a cold fleet call legitimately renders
+    // different search stats).
+    let line = r#"{"tenants":["VLM-S","ALM-S"],"llm":"S","floor":0.0,
+        "budget":9921,"threads":1}"#;
+    let opts = fleet_opts();
+    let cold = respond_line(line, &opts);
+    assert_eq!(
+        Json::parse(&cold).unwrap().get("ok").and_then(Json::as_bool),
+        Some(true),
+        "cold fill failed: {cold}"
+    );
+
+    let freq = build_fleet_request(line, &opts).expect("same request");
+    let warm = PlanningService::new()
+        .plan_fleet(&freq)
+        .expect("warm one-shot");
+
+    let resp = respond_line(line, &opts);
+    let j = Json::parse(&resp).expect("response is JSON");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("fleet").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        j.get("carve").and_then(Json::as_str),
+        Some(warm.partition.label().as_str())
+    );
+    assert_eq!(
+        j.get("search_mode").and_then(Json::as_str),
+        Some(warm.provenance.search_mode.name())
+    );
+    let served = j
+        .get("report")
+        .and_then(Json::as_str)
+        .expect("report field");
+    assert_eq!(
+        served,
+        warm.render(),
+        "a served fleet report must match the one-shot rendering"
+    );
+}
+
+#[test]
+fn identical_concurrent_fleet_requests_coalesce_per_subpool() {
+    const K: usize = 4;
+    let opts = fleet_opts();
+
+    // Cold baseline on its own unique budget: how much search and how
+    // many store misses one fleet call costs on this pool.
+    let baseline = Scope::new();
+    {
+        let _guard = baseline.attach();
+        let resp = respond_line(
+            r#"{"tenants":["VLM-S","ALM-S"],"llm":"S","floor":0.0,
+                "budget":9911,"threads":1}"#,
+            &opts,
+        );
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    }
+    let cold = baseline.snapshot();
+    let one_fleet_evaluated = cold.get(tkey::EVALUATED);
+    let one_fleet_misses = cold.get(tkey::CACHE_MISS);
+    assert!(one_fleet_evaluated > 0 && one_fleet_misses > 0);
+
+    // K identical concurrent fleet lines on a second unique budget.
+    let line = r#"{"tenants":["VLM-S","ALM-S"],"llm":"S","floor":0.0,
+        "budget":9912,"threads":1}"#;
+    let counters = Scope::new();
+    let carves: Vec<String> = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..K)
+            .map(|_| {
+                let counters = counters.clone();
+                let opts = opts.clone();
+                scope.spawn(move || {
+                    let _guard = counters.attach();
+                    let resp = respond_line(line, &opts);
+                    let j = Json::parse(&resp).expect("JSON response");
+                    assert_eq!(
+                        j.get("ok").and_then(Json::as_bool),
+                        Some(true),
+                        "{resp}"
+                    );
+                    j.get("carve")
+                        .and_then(Json::as_str)
+                        .expect("carve field")
+                        .to_string()
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().expect("worker")).collect()
+    });
+    for carve in &carves {
+        assert_eq!(carve, &carves[0], "all requests agree on the carve");
+    }
+
+    // One fleet's worth of search total; every repeated sub-pool query
+    // either joined the in-flight search or hit the warm map.
+    let totals = counters.snapshot();
+    assert_eq!(
+        totals.get(tkey::EVALUATED),
+        one_fleet_evaluated,
+        "sub-pool searches were not coalesced"
+    );
+    assert_eq!(totals.get(tkey::CACHE_MISS), one_fleet_misses);
+    assert_eq!(
+        totals.get(tkey::CACHE_HIT),
+        (K as u64 - 1) * one_fleet_misses,
+        "every repeat of a missed signature must come back as a hit"
     );
 }
